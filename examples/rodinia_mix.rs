@@ -1,0 +1,76 @@
+//! Rodinia batch scheduling across all four schedulers on one workload
+//! (paper §V-C/V-D for a single W): shows throughput, turnaround, crash
+//! and slowdown side by side.
+//!
+//! ```bash
+//! cargo run --release --example rodinia_mix [W1..W8]
+//! ```
+
+use mgb::bench_harness::{best_cg, mgb_workers, DEFAULT_SEED};
+use mgb::coordinator::{run_batch, RunConfig, SchedMode};
+use mgb::gpu::NodeSpec;
+use mgb::workloads::Workload;
+
+fn main() {
+    let wid = std::env::args().nth(1).unwrap_or_else(|| "W2".to_string());
+    let workload = Workload::by_id(&wid).unwrap_or_else(|| {
+        eprintln!("unknown workload {wid}, use W1..W8");
+        std::process::exit(2);
+    });
+    let node = NodeSpec::v100x4();
+    let jobs = workload.jobs(DEFAULT_SEED);
+    println!(
+        "{}: {} jobs ({} large : {} small) on {}",
+        workload.id,
+        jobs.len(),
+        jobs.iter().filter(|j| j.class == mgb::coordinator::JobClass::Large).count(),
+        jobs.iter().filter(|j| j.class == mgb::coordinator::JobClass::Small).count(),
+        node.name
+    );
+    println!(
+        "\n{:<10} {:>9} {:>12} {:>12} {:>9} {:>10}",
+        "scheduler", "workers", "makespan", "throughput", "crashed", "slowdown"
+    );
+
+    let sa = run_batch(RunConfig { node: node.clone(), mode: SchedMode::Sa, workers: 0 }, jobs.clone());
+    let (cg_w, cg) = best_cg(&node, &jobs);
+    let workers = mgb_workers(&node);
+    let rows = vec![
+        ("SA", sa.workers, sa),
+        ("CG", cg_w, cg),
+        (
+            "MGB-Alg2",
+            workers,
+            run_batch(
+                RunConfig { node: node.clone(), mode: SchedMode::Policy("mgb2"), workers },
+                jobs.clone(),
+            ),
+        ),
+        (
+            "MGB-Alg3",
+            workers,
+            run_batch(
+                RunConfig { node: node.clone(), mode: SchedMode::Policy("mgb3"), workers },
+                jobs.clone(),
+            ),
+        ),
+        (
+            "schedGPU",
+            workers,
+            run_batch(RunConfig { node, mode: SchedMode::Policy("schedgpu"), workers }, jobs),
+        ),
+    ];
+    let sa_tp = rows[0].2.throughput();
+    for (name, w, r) in rows {
+        println!(
+            "{:<10} {:>9} {:>10.1}s {:>8.4} j/s {:>8}% {:>9.2}%   ({:.2}x SA)",
+            name,
+            w,
+            r.makespan,
+            r.throughput(),
+            r.crash_pct() as u32,
+            r.kernel_slowdown_pct(),
+            r.throughput() / sa_tp
+        );
+    }
+}

@@ -1,0 +1,81 @@
+"""AOT: lower every L2 entry to HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the rust side uniformly unpacks result tuples.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (or via
+``make artifacts``). Also writes ``manifest.txt`` — one line per artifact:
+``name;in=<shape,shape,...>;out=<shape,...>`` — which the rust runtime
+uses to synthesise correctly-shaped inputs without a JSON dependency.
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shapes(avals) -> str:
+    return ",".join("x".join(str(d) for d in a.shape) for a in avals)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = args.only or sorted(model.ENTRIES)
+    manifest = []
+    for name in names:
+        lowered = model.lower_entry(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        in_shapes = _fmt_shapes(model.ENTRIES[name][1])
+        out_avals = lowered.out_info
+        out_shapes = ",".join(
+            "x".join(str(d) for d in o.shape) for o in jax_tree_leaves(out_avals)
+        )
+        manifest.append(f"{name};in={in_shapes};out={out_shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Merge with any existing manifest so `--only` refreshes single
+    # entries without dropping the rest.
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    merged = {}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            for line in f:
+                if line.strip():
+                    merged[line.split(";")[0]] = line.strip()
+    for line in manifest:
+        merged[line.split(";")[0]] = line
+    with open(mpath, "w") as f:
+        f.write("\n".join(merged[k] for k in sorted(merged)) + "\n")
+    print(f"wrote manifest for {len(merged)} artifacts ({len(names)} refreshed)")
+
+
+def jax_tree_leaves(x):
+    import jax
+
+    return jax.tree_util.tree_leaves(x)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: one level of a blocked 2-D Haar wavelet transform.
+
+Rodinia's dwt2d stages image tiles through shared memory, one CUDA
+threadblock per tile. TPU adaptation: a Pallas grid over (rows/2bh,
+cols/2bw) input tiles; each step holds one (2bh, 2bw) tile in VMEM,
+computes the four quarter-resolution subbands with strided VPU
+element-wise ops, and writes them to four separate output buffers (LL,
+LH, HL, HH) — the L2 wrapper lays them out in the standard
+[[LL, LH], [HL, HH]] quadrant arrangement to match ``ref.haar2d``.
+
+interpret=True only — see matmul_tiled.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _haar_kernel(x_ref, ll_ref, lh_ref, hl_ref, hh_ref):
+    x = x_ref[...]
+    a = x[0::2, 0::2]
+    b = x[0::2, 1::2]
+    c = x[1::2, 0::2]
+    d = x[1::2, 1::2]
+    ll_ref[...] = (a + b + c + d) * 0.5
+    lh_ref[...] = (a - b + c - d) * 0.5
+    hl_ref[...] = (a + b - c - d) * 0.5
+    hh_ref[...] = (a - b - c + d) * 0.5
+
+
+def haar2d_subbands(img, *, bh: int = 32, bw: int = 128):
+    """The four subbands of ``img`` (each half-resolution).
+
+    ``img`` must have even dims; tiles are clamped to the image and must
+    divide it evenly.
+    """
+    rows, cols = img.shape
+    assert rows % 2 == 0 and cols % 2 == 0, f"odd image {img.shape}"
+    bh, bw = min(bh, rows // 2), min(bw, cols // 2)
+    assert (rows // 2) % bh == 0 and (cols // 2) % bw == 0, (
+        f"{img.shape} does not tile by ({bh},{bw}) subband blocks"
+    )
+    grid = (rows // 2 // bh, cols // 2 // bw)
+    sub = jax.ShapeDtypeStruct((rows // 2, cols // 2), img.dtype)
+    return pl.pallas_call(
+        _haar_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2 * bh, 2 * bw), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((bh, bw), lambda i, j: (i, j))] * 4,
+        out_shape=[sub] * 4,
+        interpret=True,
+    )(img)
+
+
+def haar2d(img, *, bh: int = 32, bw: int = 128):
+    """Quadrant layout [[LL, LH], [HL, HH]], exactly like ``ref.haar2d``."""
+    ll, lh, hl, hh = haar2d_subbands(img, bh=bh, bw=bw)
+    top = jnp.concatenate([ll, lh], axis=1)
+    bot = jnp.concatenate([hl, hh], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def vmem_bytes(bh: int = 32, bw: int = 128, dtype_bytes: int = 4):
+    """Per-step VMEM: input tile + 4 subband tiles."""
+    return (4 * bh * bw + 4 * bh * bw) * dtype_bytes

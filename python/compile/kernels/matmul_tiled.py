@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: VMEM-tiled matmul targeting the MXU.
+
+Hardware adaptation (paper GPU -> TPU, see DESIGN.md §2): Rodinia/Darknet
+express their GEMMs with CUDA threadblocks staging through shared memory;
+here the HBM<->VMEM schedule is expressed with a Pallas grid over
+(M/bm, N/bn, K/bk) tiles. Each grid step keeps one (bm, bk) x (bk, bn)
+pair resident in VMEM and accumulates into a VMEM scratch tile in f32 —
+the MXU-native contraction — flushing to the output on the last K step.
+
+Runs under ``interpret=True`` everywhere in this repo: the CPU PJRT
+client cannot execute Mosaic custom-calls. Real-TPU efficiency for the
+chosen block shapes is estimated in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x_tile @ y_tile; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _div(d: int, target: int = 128) -> int:
+    """Largest divisor of ``d`` that is at most ``target``."""
+    if d % target == 0:
+        return target
+    for t in range(min(target, d), 0, -1):
+        if d % t == 0:
+            return t
+    return 1
+
+
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x @ y`` with (bm, bn, bk) VMEM tiles, f32 accumulation.
+
+    Differentiable: the VJP lowers to two more Pallas matmuls
+    (dL/dx = g @ y^T, dL/dy = x^T @ g) so train-step artifacts stay on
+    the L1 kernel path end to end.
+
+    Requested block sizes are shrunk to the largest divisor of the
+    corresponding dim when they do not divide it (e.g. n=192 with the
+    default bn=128 tiles as bn=96 or 64).
+    """
+    (m, k), (_, n) = x.shape, y.shape
+    return _matmul_vjp(x, y, _div(m, bm), _div(n, bn), _div(k, bk))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _matmul_vjp(x, y, bm, bn, bk):
+    return _matmul_impl(x, y, bm, bn, bk)
+
+
+def _matmul_vjp_fwd(x, y, bm, bn, bk):
+    return _matmul_impl(x, y, bm, bn, bk), (x, y)
+
+
+def _matmul_vjp_bwd(bm, bn, bk, res, g):
+    x, y = res
+    (m, k), (_, n) = x.shape, y.shape
+    dx = _matmul_impl(g, y.T, _div(m), _div(k), _div(n))
+    dy = _matmul_impl(x.T, g, _div(k), _div(n), _div(m))
+    return dx, dy
+
+
+_matmul_vjp.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def _matmul_impl(x, y, bm: int, bn: int, bk: int):
+    """The raw pallas_call; shapes must tile evenly by the block sizes."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k})x({k},{n}) does not tile by ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        # f32 accumulator tile resident in VMEM across the K loop.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm: int = 128, bn: int = 128, bk: int = 128, dtype_bytes: int = 4):
+    """VMEM footprint of one grid step (x tile + y tile + out + acc).
+
+    Used by the §Perf analysis: the default 128³ f32 config is
+    4 * 128 * 128 * 4B = 256 KiB, far under the ~16 MiB VMEM budget, and
+    feeds the 128x128 MXU with aligned, full-width tiles.
+    """
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes + bm * bn * 4

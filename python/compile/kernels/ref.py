@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact jnp counterpart here;
+pytest (python/tests/) asserts allclose between the two across a
+hypothesis-driven sweep of shapes and dtypes. These references are also
+what the L2 models in ``model.py`` were derived from, so kernel == ref ==
+model-semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain matmul in f32 accumulation (the MXU-friendly contract)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def srad_step(img, lam=0.05):
+    """One SRAD (speckle-reducing anisotropic diffusion) update.
+
+    Follows Rodinia's srad_v1 structure: 4-neighbour gradients, a
+    diffusion coefficient from the instantaneous coefficient of variation,
+    then a divergence update. Neumann (clamped) boundaries, like the
+    benchmark's edge handling.
+    """
+    n = jnp.roll(img, 1, axis=0).at[0, :].set(img[0, :])
+    s = jnp.roll(img, -1, axis=0).at[-1, :].set(img[-1, :])
+    w = jnp.roll(img, 1, axis=1).at[:, 0].set(img[:, 0])
+    e = jnp.roll(img, -1, axis=1).at[:, -1].set(img[:, -1])
+    dn, ds, dw, de = n - img, s - img, w - img, e - img
+    g2 = (dn * dn + ds * ds + dw * dw + de * de) / (img * img + 1e-8)
+    l_ = (dn + ds + dw + de) / (img + 1e-8)
+    num = 0.5 * g2 - 0.0625 * l_ * l_
+    den = (1.0 + 0.25 * l_) ** 2
+    q = num / (den + 1e-8)
+    c = 1.0 / (1.0 + q)
+    c = jnp.clip(c, 0.0, 1.0)
+    cs = jnp.roll(c, -1, axis=0).at[-1, :].set(c[-1, :])
+    ce = jnp.roll(c, -1, axis=1).at[:, -1].set(c[:, -1])
+    d = c * dn + cs * ds + c * dw + ce * de
+    return img + (lam / 4.0) * d
+
+
+def haar2d(img):
+    """One level of a 2-D Haar wavelet transform (dwt2d analogue).
+
+    Returns the four half-resolution subbands stacked as
+    [[LL, LH], [HL, HH]] in a single array of the input shape.
+    """
+    a = img[0::2, 0::2]
+    b = img[0::2, 1::2]
+    c = img[1::2, 0::2]
+    d = img[1::2, 1::2]
+    ll = (a + b + c + d) * 0.5
+    lh = (a - b + c - d) * 0.5
+    hl = (a + b - c - d) * 0.5
+    hh = (a - b - c + d) * 0.5
+    top = jnp.concatenate([ll, lh], axis=1)
+    bot = jnp.concatenate([hl, hh], axis=1)
+    return jnp.concatenate([top, bot], axis=0)

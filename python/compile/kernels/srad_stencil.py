@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: SRAD diffusion step as a VMEM-tiled 5-point stencil.
+
+Rodinia's srad_v1/srad_v2 launch one CUDA threadblock per image tile with
+halo loads staged through shared memory. TPU adaptation (DESIGN.md §2): a
+Pallas grid over row *bands*; each band plus a two-row halo is resident in
+VMEM per grid step, and both stencil passes (diffusion coefficient, then
+divergence) are computed in-register as VPU element-wise work — the
+second halo row exists precisely so the coefficient of the south
+neighbour can be recomputed locally instead of a second HBM round-trip.
+
+The kernel is numerically *exact* w.r.t. ``ref.srad_step`` (pytest
+asserts allclose over a hypothesis sweep). interpret=True only — the CPU
+PJRT client cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _srad_kernel(win_ref, o_ref, *, lam: float, rows_total: int, band: int):
+    """One row-band step. ``win_ref``: [1, band + 4, cols] haloed window."""
+    i = pl.program_id(0)
+    x = win_ref[0]
+    cols = x.shape[1]
+
+    # Centre rows for the coefficient pass: band + 2 rows (one halo row on
+    # each side of the output band), global ids i*band - 1 .. i*band + band.
+    xc = x[1:-1, :]
+    north = x[:-2, :]
+    south = x[2:, :]
+    west = jnp.concatenate([xc[:, :1], xc[:, :-1]], axis=1)
+    east = jnp.concatenate([xc[:, 1:], xc[:, -1:]], axis=1)
+
+    # Neumann boundaries at the global image edges.
+    ids = jax.lax.broadcasted_iota(jnp.int32, (band + 2, cols), 0) + i * band - 1
+    north = jnp.where(ids == 0, xc, north)
+    south = jnp.where(ids == rows_total - 1, xc, south)
+
+    dn, ds, dw, de = north - xc, south - xc, west - xc, east - xc
+    g2 = (dn * dn + ds * ds + dw * dw + de * de) / (xc * xc + 1e-8)
+    l_ = (dn + ds + dw + de) / (xc + 1e-8)
+    num = 0.5 * g2 - 0.0625 * l_ * l_
+    den = (1.0 + 0.25 * l_) ** 2
+    q = num / (den + 1e-8)
+    c = jnp.clip(1.0 / (1.0 + q), 0.0, 1.0)
+
+    # Divergence pass over the band rows proper (middle band rows of xc).
+    c_mid = c[1:-1, :]
+    cs = c[2:, :]  # south neighbour's coefficient — from the halo row.
+    ce = jnp.concatenate([c_mid[:, 1:], c_mid[:, -1:]], axis=1)
+    d = c_mid * dn[1:-1, :] + cs * ds[1:-1, :] + c_mid * dw[1:-1, :] + ce * de[1:-1, :]
+    o_ref[...] = xc[1:-1, :] + (lam / 4.0) * d
+
+
+def srad_step(img, lam: float = 0.05, band: int = 32):
+    """One SRAD update over ``img``; rows must tile by ``band``.
+
+    The overlapping haloed windows are materialised host-side here
+    because interpret-mode BlockSpecs index in block units; on real TPU
+    the same schedule is one element-indexed BlockSpec
+    (``pl.BlockSpec((band + 4, cols), lambda i: (i * band - 2, 0))``)
+    with no duplication.
+    """
+    rows, cols = img.shape
+    band = min(band, rows)
+    assert rows % band == 0, f"{rows} rows do not tile by band={band}"
+    grid = rows // band
+
+    padded = jnp.concatenate([img[:1], img[:1], img, img[-1:], img[-1:]], axis=0)
+    windows = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(padded, i * band, band + 4, 0) for i in range(grid)]
+    )
+
+    return pl.pallas_call(
+        functools.partial(_srad_kernel, lam=lam, rows_total=rows, band=band),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, band + 4, cols), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((band, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), img.dtype),
+        interpret=True,
+    )(windows)
+
+
+def vmem_bytes(band: int = 32, cols: int = 2048, dtype_bytes: int = 4):
+    """Per-step VMEM: haloed window + output band (+ ~10 temporaries)."""
+    return ((band + 4) * cols + band * cols) * dtype_bytes

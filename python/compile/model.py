@@ -1,0 +1,215 @@
+"""L2: JAX compute graphs for every workload kernel MGB schedules.
+
+One entry per Rodinia/Darknet analogue (DESIGN.md §1 substitution table).
+Each entry is a jit-able function plus example input shapes; ``aot.py``
+lowers each to HLO text in ``artifacts/`` and the rust runtime executes
+them via PJRT whenever the simulator runs in ``--compute real`` mode.
+
+The GEMM-shaped entries call the L1 Pallas kernels
+(``kernels.matmul_tiled``); the stencil entries call
+``kernels.srad_stencil``. Everything stays f32 and uses shapes small
+enough that the interpret-mode Pallas path is fast on CPU — the
+*simulated* problem sizes (GBs of footprint) live in the rust workload
+profiles, not here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.haar_dwt import haar2d
+from .kernels.matmul_tiled import matmul
+from .kernels.srad_stencil import srad_step
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Rodinia analogues
+# ---------------------------------------------------------------------------
+
+
+def backprop(x, w1, w2, y):
+    """Rodinia backprop: one fwd+bwd of a 2-layer MLP (layerforward +
+    adjust_weights kernels). Hidden activations via the Pallas matmul."""
+    h = jnp.tanh(matmul(x, w1))
+    out = jnp.tanh(matmul(h, w2))
+    err = out - y
+    # adjust_weights: manual backward pass (matches the CUDA kernel pair).
+    d_out = err * (1.0 - out * out)
+    d_w2 = matmul(h.T, d_out)
+    d_h = matmul(d_out, w2.T) * (1.0 - h * h)
+    d_w1 = matmul(x.T, d_h)
+    lr = 0.3
+    return (w1 - lr * d_w1, w2 - lr * d_w2, 0.5 * jnp.sum(err * err)[None])
+
+
+def srad(img):
+    """srad_v1/srad_v2: two diffusion iterations (2 kernel launches/iter
+    in the CUDA code; here one fused Pallas stencil per iteration)."""
+    img = srad_step(img, band=32)
+    img = srad_step(img, band=32)
+    return (img,)
+
+
+def lavamd(pos, charge):
+    """lavaMD: pairwise force accumulation inside a neighbourhood box.
+
+    pos: [n, 3], charge: [n]. O(n^2) distance/force kernel — the CUDA
+    version tiles by boxes; XLA fuses the broadcast-reduce chain.
+    """
+    diff = pos[:, None, :] - pos[None, :, :]  # [n, n, 3]
+    d2 = jnp.sum(diff * diff, axis=-1) + 1e-3
+    inv = charge[None, :] / (d2 * jnp.sqrt(d2))
+    force = jnp.sum(diff * inv[:, :, None], axis=1)
+    return (force,)
+
+
+def needle(seq_scores, penalty):
+    """needle (Needleman-Wunsch): wavefront DP over the score matrix.
+
+    seq_scores: [n, n] similarity matrix; penalty: scalar gap penalty.
+    The CUDA kernel sweeps anti-diagonals with one launch per diagonal;
+    here a row-wise lax.scan carries the DP frontier (same dependence
+    structure, one scan step per row).
+    """
+    n = seq_scores.shape[0]
+    gap = penalty[0]
+    init_row = jnp.arange(1, n + 1, dtype=jnp.float32) * gap  # h[0][1..n]
+
+    def row_step(prev_row, xs):
+        sim_row, row_idx = xs
+        left_init = row_idx * gap
+
+        def col_step(left, xs2):
+            up, diag, sim = xs2
+            best = jnp.maximum(jnp.maximum(diag + sim, up + gap), left + gap)
+            return best, best
+
+        diag_row = jnp.concatenate([jnp.array([left_init - gap]), prev_row[:-1]])
+        _, row = jax.lax.scan(col_step, left_init, (prev_row, diag_row, sim_row))
+        return row, row
+
+    rows_idx = jnp.arange(1, n + 1, dtype=jnp.float32)
+    last, _ = jax.lax.scan(row_step, init_row, (seq_scores, rows_idx))
+    return (last,)
+
+
+def dwt2d(img):
+    """dwt2d: one level of a 2-D Haar wavelet transform (L1 Pallas
+    kernel; `ref.haar2d` is the pytest oracle)."""
+    return (haar2d(img),)
+
+
+def bfs(adj, frontier):
+    """bfs: one level expansion as adj^T @ frontier with binarisation.
+
+    adj: [n, n] dense 0/1 adjacency (the simulated sizes use CSR cost
+    models in rust; numerics here validate the level semantics).
+    """
+    nxt = matmul(adj, frontier)
+    return ((nxt > 0).astype(jnp.float32),)
+
+
+def hotspot(temp, power):
+    """hotspot-style thermal stencil (extra workload for mixes): one
+    Jacobi step with source term."""
+    n_ = jnp.roll(temp, 1, 0).at[0, :].set(temp[0, :])
+    s_ = jnp.roll(temp, -1, 0).at[-1, :].set(temp[-1, :])
+    w_ = jnp.roll(temp, 1, 1).at[:, 0].set(temp[:, 0])
+    e_ = jnp.roll(temp, -1, 1).at[:, -1].set(temp[:, -1])
+    return (temp + 0.2 * (n_ + s_ + w_ + e_ - 4.0 * temp) + 0.01 * power,)
+
+
+# ---------------------------------------------------------------------------
+# Darknet analogues (§V-E neural-network workloads)
+# ---------------------------------------------------------------------------
+
+
+def _conv_as_matmul(x, w):
+    """3x3 same-conv via im2col + Pallas matmul. x: [h, w, cin] -> [h, w, cout],
+    weights: [9 * cin, cout]. h*w and channel dims padded to tile sizes by
+    the callers' shape choices."""
+    h, wd, cin = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    cols = [xp[i : i + h, j : j + wd, :] for i in range(3) for j in range(3)]
+    patches = jnp.concatenate(cols, axis=-1).reshape(h * wd, 9 * cin)
+    # 9*cin = 144 here: tile K by 72 (two K steps) — K tiles need not be
+    # 128-aligned for the MXU as long as the lane dim (bn) is.
+    out = matmul(patches, w, bm=128, bn=128, bk=72)
+    return out.reshape(h, wd, -1)
+
+
+def darknet_predict(img, w_conv, w_fc):
+    """Image classification fwd (Darknet19-style head): conv -> GAP -> fc
+    -> softmax logits."""
+    feat = jax.nn.relu(_conv_as_matmul(img, w_conv))
+    pooled = jnp.mean(feat, axis=(0, 1))[None, :]  # [1, c]
+    logits = matmul(jnp.tile(pooled, (128, 1)), w_fc)[:1]
+    return (jax.nn.softmax(logits, axis=-1),)
+
+
+def darknet_train(img, w_conv, w_fc, label):
+    """CIFAR-style train step: fwd, cross-entropy, SGD update on the fc
+    weights (conv treated as frozen backbone — keeps the artifact small
+    while exercising fwd+bwd)."""
+
+    def loss_fn(w_fc_):
+        feat = jax.nn.relu(_conv_as_matmul(img, w_conv))
+        pooled = jnp.mean(feat, axis=(0, 1))[None, :]
+        logits = matmul(jnp.tile(pooled, (128, 1)), w_fc_)[:1]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.sum(logp * label)
+
+    loss, grad = jax.value_and_grad(loss_fn)(w_fc)
+    return (w_fc - 0.01 * grad, loss[None])
+
+
+def darknet_detect(img, w_conv, w_box):
+    """yolov3-tiny-style detection fwd: conv backbone + 1x1 box head."""
+    feat = jax.nn.relu(_conv_as_matmul(img, w_conv))
+    h, wd, c = feat.shape
+    boxes = matmul(feat.reshape(h * wd, c), w_box)
+    return (jax.nn.sigmoid(boxes),)
+
+
+def darknet_rnn(h0, x_seq, w_xh, w_hh):
+    """char-RNN generate: scan a tanh RNN cell over the sequence."""
+
+    def cell(h, x):
+        h = jnp.tanh(matmul(x, w_xh) + matmul(h, w_hh))
+        return h, h
+
+    h_last, ys = jax.lax.scan(cell, h0, x_seq)
+    return (h_last, ys[-1])
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue: name -> (fn, example input ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+ENTRIES = {
+    "backprop": (backprop, [_s(128, 256), _s(256, 128), _s(128, 128), _s(128, 128)]),
+    "srad": (srad, [_s(128, 128)]),
+    "lavamd": (lavamd, [_s(192, 3), _s(192)]),
+    "needle": (needle, [_s(96, 96), _s(1)]),
+    "dwt2d": (dwt2d, [_s(128, 128)]),
+    "bfs": (bfs, [_s(128, 128), _s(128, 128)]),
+    "hotspot": (hotspot, [_s(128, 128), _s(128, 128)]),
+    "darknet_predict": (darknet_predict, [_s(16, 16, 16), _s(144, 128), _s(128, 128)]),
+    "darknet_train": (darknet_train, [_s(16, 16, 16), _s(144, 128), _s(128, 128), _s(1, 128)]),
+    "darknet_detect": (darknet_detect, [_s(16, 16, 16), _s(144, 128), _s(128, 128)]),
+    "darknet_rnn": (darknet_rnn, [_s(128, 128), _s(4, 128, 128), _s(128, 128), _s(128, 128)]),
+}
+
+
+def lower_entry(name):
+    """jit + lower one catalogue entry at its example shapes."""
+    fn, specs = ENTRIES[name]
+    return jax.jit(fn).lower(*specs)

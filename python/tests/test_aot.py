@@ -1,0 +1,66 @@
+"""AOT artifact contract: HLO text exists, parses, and the manifest is
+consistent with the catalogue. (The rust side re-checks executability in
+rust/tests/runtime_roundtrip.rs.)"""
+
+import os
+
+import jax
+import pytest
+
+from compile import model
+from compile.aot import to_hlo_text
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.txt")),
+    reason="run `make artifacts` first",
+)
+
+
+def test_hlo_text_has_entry_computation():
+    lowered = model.lower_entry("dwt2d")
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[128,128]" in text
+
+
+def test_hlo_text_returns_tuple():
+    """return_tuple=True is load-bearing for the rust unpacker."""
+    text = to_hlo_text(model.lower_entry("dwt2d"))
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "ENTRY" not in l]
+    assert any("tuple" in l or "(f32" in l for l in root_lines), root_lines
+
+
+@needs_artifacts
+def test_manifest_covers_all_entries():
+    with open(os.path.join(ARTIFACTS, "manifest.txt")) as f:
+        names = {line.split(";")[0] for line in f if line.strip()}
+    assert names == set(model.ENTRIES)
+
+
+@needs_artifacts
+def test_manifest_shapes_match_catalogue():
+    with open(os.path.join(ARTIFACTS, "manifest.txt")) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            name, ins, _outs = line.strip().split(";")
+            want = ",".join(
+                "x".join(str(d) for d in s.shape) for s in model.ENTRIES[name][1]
+            )
+            assert ins == f"in={want}", f"{name}: {ins} != in={want}"
+
+
+@needs_artifacts
+def test_artifact_files_nonempty():
+    for name in model.ENTRIES:
+        p = os.path.join(ARTIFACTS, f"{name}.hlo.txt")
+        assert os.path.getsize(p) > 500, name
+
+
+def test_pallas_kernel_lowered_into_hlo_not_custom_call():
+    """interpret=True must lower the Pallas kernels to plain HLO ops the
+    CPU PJRT client can run (no mosaic custom-calls)."""
+    text = to_hlo_text(model.lower_entry("srad"))
+    assert "custom-call" not in text or "mosaic" not in text.lower()

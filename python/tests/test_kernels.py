@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes/block sizes; this is the core correctness
+signal for the kernels the AOT artifacts embed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul_tiled import matmul, _matmul_impl, vmem_bytes
+from compile.kernels.srad_stencil import srad_step
+
+
+def rand(key, shape, dtype=jnp.float32, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, dtype, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([16, 32, 48, 64, 128, 192, 256])
+blocks = st.sampled_from([16, 32, 64, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref_across_shapes(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    got = matmul(x, y)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bm=blocks, bn=blocks, bk=blocks, seed=st.integers(0, 2**16))
+def test_matmul_block_shape_invariance(bm, bn, bk, seed):
+    """The result must not depend on the VMEM tiling."""
+    x = rand(seed, (128, 128))
+    y = rand(seed + 1, (128, 128))
+    got = _matmul_impl(x, y, bm, bn, bk)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_untileable_shapes():
+    x, y = jnp.ones((100, 128)), jnp.ones((128, 128))
+    with pytest.raises(AssertionError):
+        _matmul_impl(x, y, 64, 64, 64)
+
+
+def test_matmul_bf16_inputs_f32_accumulation():
+    x = rand(3, (128, 128)).astype(jnp.bfloat16)
+    y = rand(4, (128, 128)).astype(jnp.bfloat16)
+    got = matmul(x, y)
+    assert got.dtype == jnp.bfloat16
+    want = jnp.matmul(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(jnp.bfloat16)
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=2e-2
+    )
+
+
+def test_matmul_grad_matches_jnp_grad():
+    """custom_vjp (backward = two more Pallas matmuls) vs jnp autodiff."""
+    x = rand(5, (64, 64))
+    y = rand(6, (64, 64))
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.tanh(matmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.tanh(x @ y))
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gy, gy_r, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_vmem_budget():
+    """Default 128^3 f32 tiling stays far under a 16 MiB VMEM budget."""
+    assert vmem_bytes(128, 128, 128) < 1 << 20  # 256 KiB + acc
+
+
+# ---------------------------------------------------------------------------
+# srad stencil
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 96, 128]),
+    cols=st.sampled_from([16, 64, 128]),
+    band=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_srad_matches_ref_across_shapes(rows, cols, band, seed):
+    if rows % band:
+        band = rows
+    img = rand(seed, (rows, cols), lo=0.5, hi=1.5)
+    got = srad_step(img, band=band)
+    want = ref.srad_step(img)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_srad_band_invariance():
+    """Band decomposition must not change the numerics (exact halo)."""
+    img = rand(7, (128, 64), lo=0.5, hi=1.5)
+    a = srad_step(img, band=8)
+    b = srad_step(img, band=64)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_srad_constant_image_is_fixed_point():
+    img = jnp.full((64, 64), 2.0)
+    out = srad_step(img)
+    np.testing.assert_allclose(out, img, rtol=1e-6)
+
+
+def test_srad_smooths_noise():
+    """Diffusion must reduce total variation on a noisy image."""
+    img = rand(11, (64, 64), lo=0.5, hi=1.5)
+
+    def tv(a):
+        return float(jnp.sum(jnp.abs(jnp.diff(a, axis=0))) + jnp.sum(jnp.abs(jnp.diff(a, axis=1))))
+
+    out = img
+    for _ in range(4):
+        out = srad_step(out)
+    assert tv(out) < tv(img)
+
+
+# ---------------------------------------------------------------------------
+# haar (used by dwt2d model entry)
+# ---------------------------------------------------------------------------
+
+
+def test_haar_energy_preservation():
+    """Orthonormal Haar: total energy is preserved."""
+    img = rand(13, (64, 64))
+    out = ref.haar2d(img)
+    np.testing.assert_allclose(
+        jnp.sum(img * img), jnp.sum(out * out), rtol=1e-5
+    )
+
+
+def test_haar_constant_image_concentrates_in_ll():
+    img = jnp.full((32, 32), 1.0)
+    out = ref.haar2d(img)
+    np.testing.assert_allclose(out[:16, :16], 2.0, rtol=1e-6)
+    assert float(jnp.max(jnp.abs(out[16:, :]))) < 1e-6
+    assert float(jnp.max(jnp.abs(out[:, 16:]))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# haar dwt
+# ---------------------------------------------------------------------------
+
+from compile.kernels.haar_dwt import haar2d as haar2d_pallas, haar2d_subbands
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 128, 192]),
+    cols=st.sampled_from([32, 64, 128, 256]),
+    bh=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_haar_pallas_matches_ref_across_shapes(rows, cols, bh, seed):
+    if (rows // 2) % bh:
+        bh = rows // 2
+    img = rand(seed, (rows, cols))
+    got = haar2d_pallas(img, bh=bh)
+    np.testing.assert_allclose(got, ref.haar2d(img), rtol=1e-6, atol=1e-7)
+
+
+def test_haar_pallas_tile_invariance():
+    img = rand(21, (128, 128))
+    a = haar2d_pallas(img, bh=8, bw=16)
+    b = haar2d_pallas(img, bh=64, bw=64)
+    np.testing.assert_allclose(a, b, rtol=1e-7)
+
+
+def test_haar_pallas_subbands_energy_sums():
+    img = rand(22, (64, 64))
+    ll, lh, hl, hh = haar2d_subbands(img)
+    total = sum(float(jnp.sum(s * s)) for s in (ll, lh, hl, hh))
+    np.testing.assert_allclose(total, float(jnp.sum(img * img)), rtol=1e-5)
+
+
+def test_haar_pallas_rejects_odd_images():
+    with pytest.raises(AssertionError):
+        haar2d_pallas(jnp.ones((33, 64)))

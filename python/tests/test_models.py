@@ -1,0 +1,110 @@
+"""L2 model semantics + shape contracts for every artifact entry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+def args_for(name):
+    _, specs = model.ENTRIES[name]
+    return [rand(i + 1, s.shape) for i, s in enumerate(specs)]
+
+
+@pytest.mark.parametrize("name", sorted(model.ENTRIES))
+def test_entry_traces_and_output_shapes_stable(name):
+    """Every catalogue entry jits at its example shapes, and its outputs
+    match the abstract eval (what the manifest records)."""
+    fn, specs = model.ENTRIES[name]
+    abstract = jax.eval_shape(fn, *specs)
+    concrete = jax.jit(fn)(*args_for(name))
+    flat_a = jax.tree_util.tree_leaves(abstract)
+    flat_c = jax.tree_util.tree_leaves(concrete)
+    assert len(flat_a) == len(flat_c)
+    for a, c in zip(flat_a, flat_c):
+        assert a.shape == c.shape, f"{name}: {a.shape} != {c.shape}"
+        assert not bool(jnp.any(jnp.isnan(c))), f"{name}: NaNs in output"
+
+
+def test_backprop_reduces_loss():
+    x, w1, w2, y = args_for("backprop")
+    w1n, w2n, loss0 = model.backprop(x, w1, w2, y)
+    _, _, loss1 = model.backprop(x, w1n, w2n, y)
+    assert float(loss1[0]) < float(loss0[0])
+
+
+def test_needle_matches_dense_dp():
+    """Scan-based NW equals a straightforward O(n^2) python DP."""
+    n = 16
+    sim = np.asarray(rand(3, (n, n)))
+    gap = -0.4
+    h = np.zeros((n + 1, n + 1), np.float32)
+    h[0, :] = np.arange(n + 1) * gap
+    h[:, 0] = np.arange(n + 1) * gap
+    for i in range(1, n + 1):
+        for j in range(1, n + 1):
+            h[i, j] = max(h[i - 1, j - 1] + sim[i - 1, j - 1], h[i - 1, j] + gap, h[i, j - 1] + gap)
+    (last,) = model.needle(jnp.asarray(sim), jnp.asarray([gap], jnp.float32))
+    np.testing.assert_allclose(last, h[n, 1:], rtol=1e-5, atol=1e-6)
+
+
+def test_bfs_level_expansion():
+    n = 128
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 2] = adj[2, 3] = 1.0  # a path graph
+    frontier = np.zeros((n, n), np.float32)
+    frontier[1, 0] = 1.0  # frontier encoded in column 0
+    (nxt,) = model.bfs(jnp.asarray(adj).T, jnp.asarray(frontier))
+    # node 2 reachable from node 1
+    assert nxt[2, 0] == 1.0
+    assert nxt[3, 0] == 0.0
+
+
+def test_lavamd_forces_antisymmetric_for_pair():
+    pos = jnp.asarray([[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]] + [[10.0 + i, 0, 0] for i in range(190)])
+    charge = jnp.ones((192,))
+    (force,) = model.lavamd(pos, charge)
+    # pair 0-1 dominates; forces roughly opposite in x
+    assert float(force[0, 0]) * float(force[1, 0]) < 0.0
+
+
+def test_dwt2d_equals_ref():
+    (out,) = model.dwt2d(rand(5, (128, 128)))
+    np.testing.assert_allclose(out, ref.haar2d(rand(5, (128, 128))), rtol=1e-6)
+
+
+def test_darknet_predict_is_distribution():
+    (probs,) = model.darknet_predict(*args_for("darknet_predict"))
+    np.testing.assert_allclose(float(jnp.sum(probs)), 1.0, rtol=1e-5)
+    assert float(jnp.min(probs)) >= 0.0
+
+
+def test_darknet_train_reduces_loss():
+    img, w_conv, w_fc, label = args_for("darknet_train")
+    label = jax.nn.one_hot(jnp.array([3]), 128)[0][None, :]
+    w1, loss0 = model.darknet_train(img, w_conv, w_fc, label)
+    for _ in range(5):
+        w1, loss = model.darknet_train(img, w_conv, w1, label)
+    assert float(loss[0]) < float(loss0[0])
+
+
+def test_darknet_rnn_state_evolves_and_bounded():
+    h_last, y = model.darknet_rnn(*args_for("darknet_rnn"))
+    assert float(jnp.max(jnp.abs(h_last))) <= 1.0  # tanh cell
+    assert float(jnp.max(jnp.abs(h_last - args_for("darknet_rnn")[0]))) > 1e-3
+
+
+def test_hotspot_converges_toward_uniform():
+    temp = rand(9, (128, 128), lo=0.0, hi=1.0)
+    power = jnp.zeros((128, 128))
+    out = temp
+    for _ in range(10):
+        (out,) = model.hotspot(out, power)
+    assert float(jnp.std(out)) < float(jnp.std(temp))

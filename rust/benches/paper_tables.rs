@@ -1,0 +1,27 @@
+//! `cargo bench --bench paper_tables` — regenerates every table and
+//! figure of the paper's evaluation (§V) and times each experiment.
+//! The rows themselves are the deliverable; timings show the simulator
+//! keeps whole-paper sweeps interactive.
+
+use mgb::bench_harness::{self, time_it, DEFAULT_SEED};
+
+fn main() {
+    // `cargo bench` passes --bench; ignore argv beyond a seed override.
+    let seed = std::env::args()
+        .filter_map(|a| a.parse::<u64>().ok())
+        .next()
+        .unwrap_or(DEFAULT_SEED);
+    println!("== paper experiment regeneration (seed {seed}) ==\n");
+    let mut reports = Vec::new();
+    for exp in ["fig4", "fig5", "table2", "table3", "fig6", "nn128", "table4"] {
+        let mut last = None;
+        time_it(&format!("experiment {exp}"), 3, || {
+            last = bench_harness::run_experiment(exp, seed);
+        });
+        reports.push(last.unwrap());
+    }
+    println!();
+    for r in reports {
+        r.print();
+    }
+}

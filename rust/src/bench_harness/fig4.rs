@@ -1,0 +1,34 @@
+//! Fig. 4: throughput of MGB Alg. 2 vs Alg. 3 on W1–W8, 4×V100,
+//! normalised to Alg. 2. Paper: Alg. 3 averages 1.21× higher.
+
+use super::{mgb_workers, run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::WORKLOADS;
+
+pub fn fig4(seed: u64) -> Report {
+    let node = NodeSpec::v100x4();
+    let workers = mgb_workers(&node);
+    let mut lines = vec![format!(
+        "{:<4} {:>12} {:>12} {:>14}",
+        "W", "alg2 (j/s)", "alg3 (j/s)", "alg3/alg2"
+    )];
+    let mut ratios = Vec::new();
+    for w in WORKLOADS {
+        let jobs = w.jobs(seed);
+        let a2 = run(&node, SchedMode::Policy("mgb2"), workers, jobs.clone());
+        let a3 = run(&node, SchedMode::Policy("mgb3"), workers, jobs);
+        let ratio = a3.throughput() / a2.throughput();
+        ratios.push(ratio);
+        lines.push(format!(
+            "{:<4} {:>12.4} {:>12.4} {:>13.2}x",
+            w.id,
+            a2.throughput(),
+            a3.throughput(),
+            ratio
+        ));
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    lines.push(format!("avg alg3/alg2 = {avg:.2}x   (paper: 1.21x)"));
+    Report { title: "Fig. 4 — Alg2 vs Alg3 throughput, 4xV100".into(), lines }
+}

@@ -1,0 +1,52 @@
+//! Fig. 5: throughput of SA / CG / MGB on W1–W8, both nodes, normalised
+//! to SA. Paper: MGB 1.8–2.5× (avg 2.2×) on P100s, 1.4–2.5× (avg 2×) on
+//! V100s; MGB beats CG by 64% / 41% on average.
+
+use super::{best_cg, mgb_workers, run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::WORKLOADS;
+
+pub fn fig5(seed: u64) -> Report {
+    let mut lines = Vec::new();
+    for node in [NodeSpec::p100x2(), NodeSpec::v100x4()] {
+        lines.push(format!("--- {} ---", node.name));
+        lines.push(format!(
+            "{:<4} {:>10} {:>14} {:>10} {:>9} {:>9}",
+            "W", "SA (j/s)", "CG(best w)", "MGB", "CG/SA", "MGB/SA"
+        ));
+        let workers = mgb_workers(&node);
+        let (mut mgb_sum, mut cg_sum) = (0.0, 0.0);
+        for w in WORKLOADS {
+            let jobs = w.jobs(seed);
+            let sa = run(&node, SchedMode::Sa, 0, jobs.clone());
+            let (cg_w, cg) = best_cg(&node, &jobs);
+            let mgb = run(&node, SchedMode::Policy("mgb3"), workers, jobs);
+            let cg_n = cg.throughput() / sa.throughput();
+            let mgb_n = mgb.throughput() / sa.throughput();
+            cg_sum += cg_n;
+            mgb_sum += mgb_n;
+            lines.push(format!(
+                "{:<4} {:>10.4} {:>9.4}(w{:<2}) {:>10.4} {:>8.2}x {:>8.2}x",
+                w.id,
+                sa.throughput(),
+                cg.throughput(),
+                cg_w,
+                mgb.throughput(),
+                cg_n,
+                mgb_n,
+            ));
+        }
+        let n = WORKLOADS.len() as f64;
+        lines.push(format!(
+            "avg: CG/SA {:.2}x, MGB/SA {:.2}x, MGB/CG {:.2}x   (paper {}: MGB/SA {}, MGB/CG {})",
+            cg_sum / n,
+            mgb_sum / n,
+            (mgb_sum / n) / (cg_sum / n),
+            node.name,
+            if node.n_gpus() == 2 { "2.2x" } else { "2.0x" },
+            if node.n_gpus() == 2 { "1.64x" } else { "1.41x" },
+        ));
+    }
+    Report { title: "Fig. 5 — SA / CG / MGB throughput (normalised to SA)".into(), lines }
+}

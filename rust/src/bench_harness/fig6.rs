@@ -1,0 +1,36 @@
+//! Fig. 6: throughput of schedGPU vs MGB on homogeneous 8-job NN
+//! workloads, 4×V100. Paper: predict 1.4×, generate 2.2×, train 3.1×,
+//! detect ≈ 1× (MGB over schedGPU).
+
+use super::{run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::{nn_homogeneous, NN_TASKS};
+
+pub fn fig6() -> Report {
+    let node = NodeSpec::v100x4();
+    // §V-E: 32-core node, 1 in 4 cores creating GPU work -> 8 workers.
+    let workers = 8;
+    let mut lines = vec![format!(
+        "{:<12} {:>14} {:>12} {:>12}",
+        "task", "schedGPU (j/s)", "MGB (j/s)", "MGB/schedGPU"
+    )];
+    let paper = [("nn-predict", 1.4), ("nn-train", 3.1), ("nn-detect", 1.0), ("nn-generate", 2.2)];
+    for t in NN_TASKS {
+        let jobs = nn_homogeneous(t);
+        let name = t.profile().name;
+        let sg = run(&node, SchedMode::Policy("schedgpu"), workers, jobs.clone());
+        let mgb = run(&node, SchedMode::Policy("mgb3"), workers, jobs);
+        let ratio = mgb.throughput() / sg.throughput();
+        let p = paper.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or(0.0);
+        lines.push(format!(
+            "{:<12} {:>14.4} {:>12.4} {:>11.2}x  (paper {:.1}x)",
+            name,
+            sg.throughput(),
+            mgb.throughput(),
+            ratio,
+            p
+        ));
+    }
+    Report { title: "Fig. 6 — 8-job homogeneous NN workloads, 4xV100".into(), lines }
+}

@@ -1,0 +1,171 @@
+//! Regenerates every table and figure of the paper's evaluation (§V).
+//!
+//! Each experiment builds the same workloads, runs the batch coordinator
+//! under the schedulers the paper compares, and prints the same rows/
+//! series the paper reports (normalised the same way). Absolute numbers
+//! come from the simulator calibration (DESIGN.md §4); the *shape* —
+//! who wins, by what factor, where the crossovers are — is the
+//! reproduction target recorded in EXPERIMENTS.md.
+
+mod ablation;
+mod fig4;
+mod fig5;
+mod fig6;
+mod nn128;
+mod table2;
+mod table3;
+mod table4;
+
+use crate::coordinator::{run_batch, JobSpec, RunConfig, RunResult, SchedMode};
+use crate::gpu::NodeSpec;
+
+pub use ablation::ablation;
+pub use fig4::fig4;
+pub use fig5::fig5;
+pub use fig6::fig6;
+pub use nn128::nn128;
+pub use table2::table2;
+pub use table3::table3;
+pub use table4::table4;
+
+/// Default deterministic seed for workload mixes.
+pub const DEFAULT_SEED: u64 = 20210521;
+
+/// MGB worker-pool sizes the paper settled on (§V-A).
+pub fn mgb_workers(node: &NodeSpec) -> usize {
+    match node.n_gpus() {
+        2 => 10,
+        4 => 16,
+        n => 4 * n,
+    }
+}
+
+/// CG worker-count sweep per node (§V: 3–6 on the P100 node, 6–12 on
+/// the V100 node — Table II's rows).
+pub fn cg_worker_sweep(node: &NodeSpec) -> Vec<usize> {
+    match node.n_gpus() {
+        2 => vec![3, 4, 5, 6],
+        _ => vec![6, 8, 10, 12],
+    }
+}
+
+/// A text report: title + pre-formatted lines (also machine-parseable,
+/// `key=value` style where it matters).
+pub struct Report {
+    pub title: String,
+    pub lines: Vec<String>,
+}
+
+impl Report {
+    pub fn print(&self) {
+        println!("== {} ==", self.title);
+        for l in &self.lines {
+            println!("{l}");
+        }
+        println!();
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = format!("== {} ==\n", self.title);
+        for l in &self.lines {
+            s.push_str(l);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Run one batch under a mode.
+pub fn run(node: &NodeSpec, mode: SchedMode, workers: usize, jobs: Vec<JobSpec>) -> RunResult {
+    run_batch(RunConfig { node: node.clone(), mode, workers }, jobs)
+}
+
+/// CG at its best non-crashing worker count, as the paper does for
+/// Fig. 5 ("we swept different worker pool sizes for the CG scheduler
+/// and took the best performing runs that did not crash"). Returns the
+/// chosen worker count alongside the result; if every swept size
+/// crashes, the least-crashing one is returned (the paper notes CG
+/// crashed in some configurations — those rows show up in Table II).
+pub fn best_cg(node: &NodeSpec, jobs: &[JobSpec]) -> (usize, RunResult) {
+    let mut best: Option<(usize, RunResult)> = None;
+    for w in cg_worker_sweep(node) {
+        let r = run(node, SchedMode::Cg, w, jobs.to_vec());
+        let better = match &best {
+            None => true,
+            Some((_, b)) => {
+                let (bc, rc) = (b.crashed(), r.crashed());
+                (rc == 0 && bc > 0)
+                    || (rc == 0 && bc == 0 && r.throughput() > b.throughput())
+                    || (rc > 0 && bc > 0 && (rc < bc || (rc == bc && r.throughput() > b.throughput())))
+            }
+        };
+        if better {
+            best = Some((w, r));
+        }
+    }
+    best.expect("non-empty sweep")
+}
+
+/// Run all experiments, returning reports in paper order.
+pub fn run_all(seed: u64) -> Vec<Report> {
+    vec![
+        fig4(seed),
+        fig5(seed),
+        table2(seed),
+        table3(seed),
+        fig6(),
+        nn128(seed),
+        table4(seed),
+        ablation(seed),
+    ]
+}
+
+/// Dispatch by experiment id.
+pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
+    Some(match name {
+        "fig4" => fig4(seed),
+        "fig5" => fig5(seed),
+        "fig6" => fig6(),
+        "table2" => table2(seed),
+        "table3" => table3(seed),
+        "table4" => table4(seed),
+        "nn128" => nn128(seed),
+        "ablation" => ablation(seed),
+        _ => return None,
+    })
+}
+
+/// Minimal timing harness (no criterion in the offline crate set):
+/// warm up, run `iters` timed iterations, report mean / min / max in a
+/// criterion-like line. Returns mean seconds.
+pub fn time_it<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let fmt = |s: f64| {
+        if s < 1e-6 {
+            format!("{:.1} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:.2} us", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:.2} ms", s * 1e3)
+        } else {
+            format!("{s:.3} s")
+        }
+    };
+    println!(
+        "{name:<44} mean {:>10}   min {:>10}   max {:>10}   ({iters} iters)",
+        fmt(mean),
+        fmt(samples[0]),
+        fmt(*samples.last().unwrap())
+    );
+    mean
+}

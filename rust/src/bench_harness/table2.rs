@@ -1,0 +1,42 @@
+//! Table II: percentage of crashed jobs under CG, by worker count and
+//! mix ratio, on both nodes. Paper: erratic, growing with workers, up to
+//! 50% on V100s at 12 workers / 5:1.
+
+use super::{cg_worker_sweep, run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::{Workload, WORKLOADS};
+
+pub fn table2(seed: u64) -> Report {
+    let mut lines = Vec::new();
+    // Table II aggregates 16- and 32-job workloads per ratio; we report
+    // the mean crash % of the two sizes, like the paper's single cell.
+    for node in [NodeSpec::p100x2(), NodeSpec::v100x4()] {
+        lines.push(format!("--- {} ---", node.name));
+        lines.push(format!(
+            "{:<10} {:>8} {:>8} {:>8} {:>8}",
+            "# workers", "1:1", "2:1", "3:1", "5:1"
+        ));
+        for workers in cg_worker_sweep(&node) {
+            let mut cells = Vec::new();
+            for ratio_idx in 0..4 {
+                let pair: Vec<&Workload> = WORKLOADS
+                    .iter()
+                    .filter(|w| w.ratio == crate::workloads::RATIOS[ratio_idx])
+                    .collect();
+                let mut pct = 0.0;
+                for w in &pair {
+                    let r = run(&node, SchedMode::Cg, workers, w.jobs(seed));
+                    pct += r.crash_pct();
+                }
+                cells.push(pct / pair.len() as f64);
+            }
+            lines.push(format!(
+                "{:<10} {:>7.0}% {:>7.0}% {:>7.0}% {:>7.0}%",
+                workers, cells[0], cells[1], cells[2], cells[3]
+            ));
+        }
+    }
+    lines.push("(paper: 0-22% on P100s, 0-50% on V100s, rising with workers)".into());
+    Report { title: "Table II — CG crashed-job percentage".into(), lines }
+}

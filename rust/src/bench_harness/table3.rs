@@ -1,0 +1,44 @@
+//! Table III: MGB average job-turnaround speedup over SA, per node /
+//! job count / mix. Paper: avg 3.7× (P100s) and 2.8× (V100s), max 4.9×.
+
+use super::{mgb_workers, run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::WORKLOADS;
+
+pub fn table3(seed: u64) -> Report {
+    let mut lines = vec![format!(
+        "{:<8} {:<9} {:>8} {:>8} {:>8} {:>8}",
+        "GPUs", "# jobs", "1:1", "2:1", "3:1", "5:1"
+    )];
+    let mut alls = Vec::new();
+    for node in [NodeSpec::p100x2(), NodeSpec::v100x4()] {
+        let workers = mgb_workers(&node);
+        for n_jobs in [16usize, 32] {
+            let mut cells = Vec::new();
+            for w in WORKLOADS.iter().filter(|w| w.n_jobs == n_jobs) {
+                let jobs = w.jobs(seed);
+                let sa = run(&node, SchedMode::Sa, 0, jobs.clone());
+                let mgb = run(&node, SchedMode::Policy("mgb3"), workers, jobs);
+                let speedup = sa.mean_turnaround() / mgb.mean_turnaround();
+                cells.push(speedup);
+                alls.push((node.n_gpus(), speedup));
+            }
+            lines.push(format!(
+                "{:<8} {:<9} {:>7.1}x {:>7.1}x {:>7.1}x {:>7.1}x",
+                node.name, format!("{n_jobs} jobs"), cells[0], cells[1], cells[2], cells[3]
+            ));
+        }
+    }
+    let avg = |n: usize| {
+        let v: Vec<f64> = alls.iter().filter(|(g, _)| *g == n).map(|(_, s)| *s).collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    lines.push(format!(
+        "avg: P100s {:.1}x (paper 3.7x), V100s {:.1}x (paper 2.8x), max {:.1}x (paper 4.9x)",
+        avg(2),
+        avg(4),
+        alls.iter().map(|(_, s)| *s).fold(0.0, f64::max)
+    ));
+    Report { title: "Table III — MGB turnaround speedup over SA".into(), lines }
+}

@@ -1,0 +1,40 @@
+//! Table IV: per-kernel slowdown vs single-assignment for Alg. 2 and
+//! Alg. 3 on W1–W8, 4×V100, in percent. Paper: Alg2 avg 1.8%, Alg3 avg
+//! 2.5%, max 7%, occasionally negative (noise floor).
+
+use super::{mgb_workers, run, Report};
+use crate::coordinator::SchedMode;
+use crate::gpu::NodeSpec;
+use crate::workloads::WORKLOADS;
+
+pub fn table4(seed: u64) -> Report {
+    let node = NodeSpec::v100x4();
+    let workers = mgb_workers(&node);
+    let mut rows: Vec<(&str, Vec<f64>)> = vec![("Alg2", Vec::new()), ("Alg3", Vec::new())];
+    for w in WORKLOADS {
+        let jobs = w.jobs(seed);
+        let a2 = run(&node, SchedMode::Policy("mgb2"), workers, jobs.clone());
+        let a3 = run(&node, SchedMode::Policy("mgb3"), workers, jobs);
+        rows[0].1.push(a2.kernel_slowdown_pct());
+        rows[1].1.push(a3.kernel_slowdown_pct());
+    }
+    let mut lines = vec![{
+        let mut h = format!("{:<6}", "Sched");
+        for w in WORKLOADS {
+            h.push_str(&format!("{:>7}", w.id));
+        }
+        h.push_str(&format!("{:>7}", "Avg"));
+        h
+    }];
+    for (name, vals) in &rows {
+        let mut l = format!("{name:<6}");
+        for v in vals {
+            l.push_str(&format!("{v:>6.1} "));
+        }
+        let avg = vals.iter().sum::<f64>() / vals.len() as f64;
+        l.push_str(&format!("{avg:>6.1}"));
+        lines.push(l);
+    }
+    lines.push("(percent slowdown; paper: Alg2 avg 1.8, Alg3 avg 2.5, max 7.0)".into());
+    Report { title: "Table IV — kernel slowdown vs dedicated (%)".into(), lines }
+}

@@ -1,0 +1,100 @@
+//! Control-flow graph over a function's basic blocks.
+
+use crate::ir::{BlockId, Function, Terminator};
+
+/// Successor/predecessor lists for each block.
+#[derive(Debug)]
+pub struct Cfg {
+    pub succs: Vec<Vec<BlockId>>,
+    pub preds: Vec<Vec<BlockId>>,
+    /// Blocks ending in `Ret` (the exits).
+    pub exits: Vec<BlockId>,
+}
+
+impl Cfg {
+    pub fn build(f: &Function) -> Self {
+        let n = f.blocks.len();
+        let mut succs = vec![Vec::new(); n];
+        let mut preds = vec![Vec::new(); n];
+        let mut exits = Vec::new();
+        for (b, blk) in f.blocks.iter().enumerate() {
+            let b = b as BlockId;
+            match &blk.term {
+                Terminator::Br(t) => succs[b as usize].push(*t),
+                Terminator::CondBr { taken, fallthrough, .. } => {
+                    succs[b as usize].push(*taken);
+                    if taken != fallthrough {
+                        succs[b as usize].push(*fallthrough);
+                    }
+                }
+                Terminator::Ret => exits.push(b),
+            }
+        }
+        for (b, ss) in succs.iter().enumerate() {
+            for &s in ss {
+                preds[s as usize].push(b as BlockId);
+            }
+        }
+        Cfg { succs, preds, exits }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.succs.len()
+    }
+
+    /// Blocks reachable from the entry (block 0), in RPO-ish DFS order.
+    pub fn reachable(&self) -> Vec<BlockId> {
+        let mut seen = vec![false; self.n_blocks()];
+        let mut order = Vec::new();
+        let mut stack = vec![0 as BlockId];
+        seen[0] = true;
+        while let Some(b) = stack.pop() {
+            order.push(b);
+            for &s in &self.succs[b as usize] {
+                if !seen[s as usize] {
+                    seen[s as usize] = true;
+                    stack.push(s);
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Expr, ProgramBuilder};
+
+    #[test]
+    fn diamond_cfg_shape() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let c = f.assign(Expr::c(1));
+            f.diamond(c, |_| {}, |_| {});
+        });
+        let p = pb.finish();
+        let cfg = Cfg::build(p.main());
+        assert_eq!(cfg.succs[0], vec![1, 2]); // entry -> then, else
+        assert_eq!(cfg.succs[1], vec![3]); // then -> join
+        assert_eq!(cfg.succs[2], vec![3]); // else -> join
+        assert_eq!(cfg.preds[3], vec![1, 2]);
+        assert_eq!(cfg.exits, vec![3]);
+    }
+
+    #[test]
+    fn loop_cfg_has_backedge() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            f.loop_n(n, |_| {});
+        });
+        let p = pb.finish();
+        let cfg = Cfg::build(p.main());
+        // entry(0) -> header(1); header -> {body(2), exit(3)}; body -> header
+        assert_eq!(cfg.succs[0], vec![1]);
+        assert_eq!(cfg.succs[1], vec![2, 3]);
+        assert_eq!(cfg.succs[2], vec![1]);
+        assert!(cfg.preds[1].contains(&0) && cfg.preds[1].contains(&2));
+    }
+}

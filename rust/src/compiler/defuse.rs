@@ -1,0 +1,115 @@
+//! Def-use chains over IR values, and memory-object discovery.
+//!
+//! The paper extracts the memory objects (pointer variables) a kernel
+//! accesses, then uses LLVM def-use chains of those values to find all
+//! related GPU operations (§III-A1). Here a memory object is any value
+//! defined by `Malloc`; uses are every op whose operand list mentions it.
+
+use crate::ir::{op_operands, Function, OpId, OpKind, ValueId};
+use std::collections::HashMap;
+
+/// Def-use index for one function.
+#[derive(Debug)]
+pub struct DefUse {
+    /// Defining op of each value (params have none).
+    pub def: HashMap<ValueId, OpId>,
+    /// Ops using each value, in layout order.
+    pub uses: HashMap<ValueId, Vec<OpId>>,
+    /// Values defined by `Malloc` (the memory objects).
+    pub mem_objs: Vec<ValueId>,
+}
+
+impl DefUse {
+    pub fn build(f: &Function) -> Self {
+        let mut def = HashMap::new();
+        let mut uses: HashMap<ValueId, Vec<OpId>> = HashMap::new();
+        let mut mem_objs = Vec::new();
+        for (_, _, op) in f.ops() {
+            if let Some(r) = op.result {
+                def.insert(r, op.id);
+                if matches!(op.kind, OpKind::Malloc { .. }) {
+                    mem_objs.push(r);
+                }
+            }
+            for v in op_operands(&op.kind) {
+                uses.entry(v).or_default().push(op.id);
+            }
+        }
+        DefUse { def, uses, mem_objs }
+    }
+
+    /// The transitive closure of scalar values feeding `v` (for locating
+    /// every symbol definition a probe must wait for).
+    pub fn scalar_deps(&self, f: &Function, v: ValueId, out: &mut Vec<ValueId>) {
+        if out.contains(&v) {
+            return;
+        }
+        out.push(v);
+        if let Some(&d) = self.def.get(&v) {
+            if let Some((op, _, _)) = f.op(d) {
+                for dep in op_operands(&op.kind) {
+                    self.scalar_deps(f, dep, out);
+                }
+            }
+        }
+    }
+
+    /// All GPU ops related to a memory object: its malloc plus every
+    /// memcpy/memset/free/launch that uses it.
+    pub fn gpu_ops_of(&self, f: &Function, obj: ValueId) -> Vec<OpId> {
+        let mut ops = Vec::new();
+        if let Some(&d) = self.def.get(&obj) {
+            ops.push(d);
+        }
+        for &u in self.uses.get(&obj).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if let Some((op, _, _)) = f.op(u) {
+                match op.kind {
+                    OpKind::Memcpy { .. }
+                    | OpKind::Memset { .. }
+                    | OpKind::Free { .. }
+                    | OpKind::Launch { .. } => ops.push(u),
+                    _ => {}
+                }
+            }
+        }
+        ops.sort_unstable();
+        ops.dedup();
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Expr, ProgramBuilder};
+
+    #[test]
+    fn mallocs_become_mem_objs_and_uses_chain() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.assign(Expr::v(n).ceil_div(Expr::c(128)));
+            let blk = f.c(256);
+            let w = f.c(1000);
+            f.launch("k", g, blk, &[a], w);
+            f.d2h(a, sz);
+            f.free(a);
+        });
+        let p = pb.finish();
+        let f = p.main();
+        let du = DefUse::build(f);
+        assert_eq!(du.mem_objs.len(), 1);
+        let obj = du.mem_objs[0];
+        let ops = du.gpu_ops_of(f, obj);
+        // malloc, h2d, launch, d2h, free = 5 GPU ops
+        assert_eq!(ops.len(), 5);
+        // scalar deps of the size value reach the parameter
+        let sz_val = obj - 1;
+        let mut deps = Vec::new();
+        du.scalar_deps(f, sz_val, &mut deps);
+        assert!(deps.contains(&0));
+    }
+}

@@ -1,0 +1,219 @@
+//! Dominator / post-dominator analysis (iterative bit-set dataflow).
+//!
+//! The paper places `cudaMalloc`/H2D ops in a task using *dominator*
+//! information relative to the kernel launch, and `cudaFree`/D2H using
+//! *post-dominator* information (§III-A1); probes are inserted at a point
+//! that post-dominates all symbol definitions and dominates every op of
+//! the task. Op-granular queries are derived from the block-level sets.
+
+use super::cfg::Cfg;
+use crate::ir::{BlockId, Function};
+
+/// Block-level dominator sets as bit vectors (`doms[b]` = set of blocks
+/// dominating `b`, including `b` itself).
+#[derive(Debug)]
+pub struct Dominators {
+    doms: Vec<Vec<u64>>,
+    words: usize,
+}
+
+fn bit_get(set: &[u64], i: usize) -> bool {
+    set[i / 64] >> (i % 64) & 1 == 1
+}
+
+impl Dominators {
+    /// Forward dominators from the entry block.
+    pub fn dominators(f: &Function, cfg: &Cfg) -> Self {
+        let n = f.blocks.len();
+        Self::solve(n, 0, &cfg.preds, &cfg.reachable())
+    }
+
+    /// Post-dominators: dominators on the reversed CFG from a virtual
+    /// exit that joins every `Ret` block. Block indices are unchanged;
+    /// the virtual exit is index `n`.
+    pub fn post_dominators(f: &Function, cfg: &Cfg) -> Self {
+        let n = f.blocks.len();
+        // Reversed edges, plus virtual exit n with preds = exits.
+        let mut preds: Vec<Vec<BlockId>> = vec![Vec::new(); n + 1];
+        for (b, ss) in cfg.succs.iter().enumerate() {
+            for &s in ss {
+                preds[b].push(s); // reversed: pred of b in reverse graph = succ of b
+            }
+        }
+        for &e in &cfg.exits {
+            preds[e as usize].push(n as BlockId); // exit blocks are preceded by virtual exit
+        }
+        // Reachability in the reverse graph from the virtual exit.
+        let mut seen = vec![false; n + 1];
+        let mut stack = vec![n];
+        seen[n] = true;
+        let mut order = vec![n as BlockId];
+        // successors in reverse graph = preds in forward graph
+        let mut rev_succs: Vec<Vec<BlockId>> = vec![Vec::new(); n + 1];
+        for &e in &cfg.exits {
+            rev_succs[n].push(e);
+        }
+        for (b, ps) in cfg.preds.iter().enumerate() {
+            for &p in ps {
+                rev_succs[b].push(p);
+            }
+        }
+        while let Some(b) = stack.pop() {
+            for &s in &rev_succs[b] {
+                if !seen[s as usize] {
+                    seen[s as usize] = true;
+                    stack.push(s as usize);
+                    order.push(s);
+                }
+            }
+        }
+        Self::solve(n + 1, n, &preds, &order)
+    }
+
+    /// Standard iterative intersection: dom(entry) = {entry};
+    /// dom(b) = {b} ∪ ⋂ dom(preds). Unreachable blocks keep full sets.
+    fn solve(n: usize, entry: usize, preds: &[Vec<BlockId>], reachable: &[BlockId]) -> Self {
+        let words = n.div_ceil(64);
+        let full = vec![u64::MAX; words];
+        let mut doms = vec![full; n];
+        doms[entry] = vec![0u64; words];
+        doms[entry][entry / 64] |= 1 << (entry % 64);
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in reachable {
+                let b = b as usize;
+                if b == entry {
+                    continue;
+                }
+                let mut new = vec![u64::MAX; words];
+                for &p in &preds[b] {
+                    for (w, d) in new.iter_mut().zip(&doms[p as usize]) {
+                        *w &= d;
+                    }
+                }
+                new[b / 64] |= 1 << (b % 64);
+                if new != doms[b] {
+                    doms[b] = new;
+                    changed = true;
+                }
+            }
+        }
+        Dominators { doms, words }
+    }
+
+    /// Does block `a` dominate block `b`?
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        let _ = self.words;
+        bit_get(&self.doms[b as usize], a as usize)
+    }
+}
+
+/// Op-granular dominance built on block dominance: op at (ba, ia)
+/// dominates op at (bb, ib) iff (same block and ia <= ib) or
+/// (ba != bb and ba dominates bb).
+pub fn op_dominates(doms: &Dominators, a: (BlockId, usize), b: (BlockId, usize)) -> bool {
+    if a.0 == b.0 {
+        a.1 <= b.1
+    } else {
+        doms.dominates(a.0, b.0)
+    }
+}
+
+/// Op-granular post-dominance: op at `a` post-dominates op at `b` iff
+/// (same block and a comes at-or-after b) or block(a) post-dominates
+/// block(b).
+pub fn op_post_dominates(pdoms: &Dominators, a: (BlockId, usize), b: (BlockId, usize)) -> bool {
+    if a.0 == b.0 {
+        a.1 >= b.1
+    } else {
+        pdoms.dominates(a.0, b.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Expr, ProgramBuilder};
+
+    fn diamond() -> crate::ir::Program {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let c = f.assign(Expr::c(1));
+            f.diamond(c, |f| { f.c(10); }, |f| { f.c(20); });
+            f.c(30);
+        });
+        pb.finish()
+    }
+
+    #[test]
+    fn diamond_dominators() {
+        let p = diamond();
+        let f = p.main();
+        let cfg = Cfg::build(f);
+        let dom = Dominators::dominators(f, &cfg);
+        // entry (0) dominates everything
+        for b in 0..4 {
+            assert!(dom.dominates(0, b));
+        }
+        // branches don't dominate the join
+        assert!(!dom.dominates(1, 3));
+        assert!(!dom.dominates(2, 3));
+        // every block dominates itself
+        for b in 0..4 {
+            assert!(dom.dominates(b, b));
+        }
+    }
+
+    #[test]
+    fn diamond_post_dominators() {
+        let p = diamond();
+        let f = p.main();
+        let cfg = Cfg::build(f);
+        let pdom = Dominators::post_dominators(f, &cfg);
+        // join (3) post-dominates everything
+        for b in 0..4 {
+            assert!(pdom.dominates(3, b));
+        }
+        // branches don't post-dominate the entry
+        assert!(!pdom.dominates(1, 0));
+        assert!(!pdom.dominates(2, 0));
+    }
+
+    #[test]
+    fn loop_dominance() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            f.loop_n(n, |f| { f.c(1); });
+            f.c(2);
+        });
+        let p = pb.finish();
+        let f = p.main();
+        let cfg = Cfg::build(f);
+        let dom = Dominators::dominators(f, &cfg);
+        let pdom = Dominators::post_dominators(f, &cfg);
+        // header (1) dominates body (2) and exit (3)
+        assert!(dom.dominates(1, 2));
+        assert!(dom.dominates(1, 3));
+        // body doesn't dominate exit
+        assert!(!dom.dominates(2, 3));
+        // exit post-dominates header and body... body is on a path that
+        // must re-enter the header, and the only Ret is in exit.
+        assert!(pdom.dominates(3, 1));
+        assert!(pdom.dominates(3, 2));
+        // body does NOT post-dominate the header (can skip on zero trips)
+        assert!(!pdom.dominates(2, 1));
+    }
+
+    #[test]
+    fn op_level_same_block_ordering() {
+        let p = diamond();
+        let f = p.main();
+        let cfg = Cfg::build(f);
+        let dom = Dominators::dominators(f, &cfg);
+        assert!(op_dominates(&dom, (0, 0), (0, 0)));
+        assert!(op_dominates(&dom, (0, 0), (0, 1)));
+        assert!(!op_dominates(&dom, (0, 1), (0, 0)));
+    }
+}

@@ -1,0 +1,304 @@
+//! The paper's compiler pass: task construction + probe instrumentation.
+//!
+//! Pipeline (§III-A): inline → CFG/dominators/def-use over the entry →
+//! Algorithm 1 unit-task construction and merge → resource analysis →
+//! probe placement. The output is a [`CompiledProgram`]: the inlined IR
+//! plus one [`tasks::GpuTask`] per schedulable unit, each carrying its
+//! symbolic resource vector and probe point. The lazy runtime
+//! (`crate::lazy`) consumes this to drive execution; GPU ops that could
+//! not be statically bound (lazy tasks, ops inside un-inlined calls) are
+//! bound there at `kernelLaunchPrepare` time.
+
+pub mod cfg;
+pub mod defuse;
+pub mod dominators;
+pub mod inline;
+pub mod tasks;
+
+pub use tasks::{build_gpu_tasks, GpuTask};
+
+use crate::ir::{OpId, Program};
+use std::collections::HashMap;
+
+/// Result of compiling one application.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    /// The program after inlining (what the analyses ran over).
+    pub program: Program,
+    /// GPU tasks over the entry function, in discovery order.
+    pub tasks: Vec<GpuTask>,
+    /// op id (in the inlined entry) -> owning task index.
+    pub op_task: HashMap<OpId, usize>,
+}
+
+/// Run the full pass.
+pub fn compile(p: &Program) -> CompiledProgram {
+    let inlined = inline::inline_program(p);
+    let tasks = build_gpu_tasks(inlined.main());
+    let mut op_task = HashMap::new();
+    for t in &tasks {
+        for &o in &t.ops {
+            op_task.insert(o, t.id);
+        }
+    }
+    CompiledProgram { program: inlined, tasks, op_task }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Expr, OpKind, ProgramBuilder};
+
+    /// vecadd from the paper's Fig. 3: three mallocs, two H2D copies, a
+    /// launch, a D2H, three frees — one task.
+    fn vecadd() -> Program {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let da = f.malloc(sz);
+            let db = f.malloc(sz);
+            let dc = f.malloc(sz);
+            f.h2d(da, sz);
+            f.h2d(db, sz);
+            let grid = f.assign(Expr::v(n).ceil_div(Expr::c(128)));
+            let block = f.c(128);
+            let work = f.c(1_000);
+            f.launch("VecAdd", grid, block, &[da, db, dc], work);
+            f.d2h(dc, sz);
+            f.free(da);
+            f.free(db);
+            f.free(dc);
+        });
+        pb.finish()
+    }
+
+    #[test]
+    fn vecadd_forms_one_static_task() {
+        let c = compile(&vecadd());
+        assert_eq!(c.tasks.len(), 1);
+        let t = &c.tasks[0];
+        assert!(!t.lazy);
+        assert_eq!(t.mem_objs.len(), 3);
+        assert_eq!(t.ops.len(), 10); // 3 malloc + 2 h2d + launch + d2h + 3 free
+        // probe lands on the first malloc
+        let probe = t.probe_at.expect("static probe");
+        let f = c.program.main();
+        let (op, _, _) = f.op(t.ops[0]).unwrap();
+        assert!(matches!(op.kind, OpKind::Malloc { .. }));
+        assert_eq!(probe, f.loc(t.ops[0]));
+        // resource expressions evaluate correctly: N=1024 -> 3*4096 bytes
+        let env = |v: u32| match v {
+            0 => 1024,
+            1 => 4096,  // sz
+            5 => 8,     // grid
+            6 => 128,   // block
+            _ => 0,
+        };
+        assert_eq!(t.mem_bytes.eval(&env), 3 * 4096);
+        assert_eq!(t.grid.eval(&env), 8);
+        assert_eq!(t.block.eval(&env), 128);
+        assert_eq!(t.heap_bytes.eval(&env), tasks::DEFAULT_DEVICE_HEAP);
+    }
+
+    #[test]
+    fn shared_memobj_merges_launches_into_one_task() {
+        // k1 writes C, k2 reads C: paper's motivating merge example.
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let c = f.malloc(sz);
+            let d = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.launch("k1", g, b, &[a, c], w);
+            f.launch("k2", g, b, &[c, d], w);
+            f.d2h(d, sz);
+            f.free(a);
+            f.free(c);
+            f.free(d);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 1, "k1/k2 share C and must merge");
+        assert_eq!(c.tasks[0].launches.len(), 2);
+        assert_eq!(c.tasks[0].mem_objs.len(), 3);
+    }
+
+    #[test]
+    fn disjoint_launches_form_separate_tasks() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            f.launch("k1", g, b, &[a], w);
+            f.free(a);
+            let x = f.malloc(sz);
+            f.h2d(x, sz);
+            f.launch("k2", g, b, &[x], w);
+            f.free(x);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 2);
+        assert!(c.tasks.iter().all(|t| !t.lazy));
+    }
+
+    #[test]
+    fn transitive_sharing_merges_chain() {
+        // {A,B}, {B,C}, {C,D} must merge into one task (fixpoint).
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            let va = f.malloc(sz);
+            let vb = f.malloc(sz);
+            let vc = f.malloc(sz);
+            let vd = f.malloc(sz);
+            f.launch("k1", g, b, &[va, vb], w);
+            f.launch("k2", g, b, &[vb, vc], w);
+            f.launch("k3", g, b, &[vc, vd], w);
+            f.free(va);
+            f.free(vb);
+            f.free(vc);
+            f.free(vd);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 1);
+        assert_eq!(c.tasks[0].launches.len(), 3);
+    }
+
+    #[test]
+    fn branch_guarded_copy_makes_task_lazy() {
+        // A D2H in only one arm of a diamond neither dominates nor
+        // post-dominates the launch: static binding must fail.
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.launch("k", g, b, &[a], w);
+            let cond = f.c(1);
+            f.diamond(cond, |f| f.d2h(a, sz), |_| {});
+            f.free(a);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 1);
+        assert!(c.tasks[0].lazy);
+        assert!(c.tasks[0].probe_at.is_none());
+    }
+
+    #[test]
+    fn launch_inside_loop_with_hoisted_buffers_stays_static() {
+        // srad-style: malloc outside, launches in a loop, free after.
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 2, |f| {
+            let n = f.param(0);
+            let iters = f.param(1);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let img = f.malloc(sz);
+            f.h2d(img, sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.loop_n(iters, |f| {
+                f.launch("srad1", g, b, &[img], w);
+                f.launch("srad2", g, b, &[img], w);
+            });
+            f.d2h(img, sz);
+            f.free(img);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 1);
+        let t = &c.tasks[0];
+        assert!(!t.lazy, "hoisted buffers are statically bindable");
+        assert_eq!(t.launches.len(), 2);
+        // probe precedes the malloc, outside the loop
+        let f = c.program.main();
+        let malloc_loc = f.loc(t.ops[0]);
+        assert_eq!(t.probe_at, Some(malloc_loc));
+        assert_eq!(malloc_loc.0, 0, "probe in entry block");
+    }
+
+    #[test]
+    fn device_heap_limit_is_picked_up() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let heap = f.c(64 << 20);
+            f.set_heap_limit(heap);
+            let a = f.malloc(sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.launch("k", g, b, &[a], w);
+            f.free(a);
+        });
+        let c = compile(&pb.finish());
+        let t = &c.tasks[0];
+        let f = c.program.main();
+        let heap_vid = f
+            .ops()
+            .find_map(|(_, _, o)| match &o.kind {
+                OpKind::DeviceSetLimit { bytes } => Some(*bytes),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(t.heap_bytes, Expr::v(heap_vid));
+    }
+
+    #[test]
+    fn gpu_ops_in_helper_functions_bind_after_inline() {
+        // Paper's init()/execute() split: malloc+h2d in init, launch in
+        // execute. After inlining, one static task.
+        let mut pb = ProgramBuilder::new();
+        let init = pb.declare("init", 2);
+        let exec = pb.declare("execute", 4);
+        pb.define(exec, |f| {
+            let obj = f.param(0);
+            let g = f.param(1);
+            let b = f.param(2);
+            let w = f.param(3);
+            f.launch("k", g, b, &[obj], w);
+        });
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            f.call(init, &[sz, sz]);
+            let _ = init; // init allocates internally; see note below
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            // In real code the pointer flows out of init; our IR has no
+            // out-params, so model the common pattern where main owns the
+            // object and helpers operate on it:
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            f.call(exec, &[a, g, b, w]);
+            f.free(a);
+        });
+        pb.define(init, |f| {
+            let micros = f.param(0);
+            f.host_compute(micros);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 1);
+        assert!(!c.tasks[0].lazy);
+    }
+}
+

@@ -1,0 +1,283 @@
+//! GPU-task construction — Algorithm 1 of the paper, plus the
+//! dominance-based static-bindability test and resource analysis.
+//!
+//! A *unit task* is built around each kernel launch: the memory objects
+//! it touches, their allocs, and the grid/block configuration. Unit
+//! tasks sharing memory objects are merged into one GPU task (it would
+//! be incorrect — or at least require cross-device copies — to schedule
+//! them apart). Ops that cannot be placed relative to the launch by
+//! dominance (malloc/H2D must dominate, free/D2H must post-dominate) or
+//! whose memory objects are not visible intra-procedurally make the task
+//! *lazy*: the lazy runtime binds them at `kernelLaunchPrepare` time.
+
+use super::cfg::Cfg;
+use super::defuse::DefUse;
+use super::dominators::{op_dominates, op_post_dominates, Dominators};
+use crate::ir::{BlockId, CopyDir, Expr, Function, OpId, OpKind, ValueId};
+
+pub use crate::ir::op::CopyDir as Dir;
+
+/// Default CUDA on-device malloc heap (8 MiB on the devices the paper
+/// tested; overridden by `DeviceSetLimit`).
+pub const DEFAULT_DEVICE_HEAP: i64 = 8 << 20;
+
+/// One kernel launch plus its related GPU operations (pre-merge).
+#[derive(Clone, Debug)]
+pub struct UnitTask {
+    pub launch: OpId,
+    pub mem_objs: Vec<ValueId>,
+    pub ops: Vec<OpId>,
+    pub grid: ValueId,
+    pub block: ValueId,
+    /// Ops (or whole-object bindings) that failed the dominance test.
+    pub lazy: bool,
+}
+
+/// A schedulable GPU task (post-merge) with symbolic resource needs.
+#[derive(Clone, Debug)]
+pub struct GpuTask {
+    pub id: usize,
+    pub launches: Vec<OpId>,
+    pub mem_objs: Vec<ValueId>,
+    /// Every member GPU op, sorted by op id (== program order here).
+    pub ops: Vec<OpId>,
+    /// Total device-memory requirement (sum of member malloc sizes),
+    /// symbolic until the probe interprets it.
+    pub mem_bytes: Expr,
+    /// On-device heap requirement (DeviceSetLimit or the 8 MiB default).
+    pub heap_bytes: Expr,
+    /// Max thread-blocks over member launches.
+    pub grid: Expr,
+    /// Max threads-per-block over member launches.
+    pub block: Expr,
+    /// Probe insertion point: (block, op-index) immediately before which
+    /// `task_begin` runs. `None` when the task is lazy (the lazy runtime
+    /// conveys resources at kernelLaunchPrepare instead).
+    pub probe_at: Option<(BlockId, usize)>,
+    pub lazy: bool,
+}
+
+/// Build unit tasks for every launch in `f` (paper Alg. 1, first loop).
+pub fn build_unit_tasks(f: &Function, du: &DefUse, dom: &Dominators, pdom: &Dominators) -> Vec<UnitTask> {
+    let mut units = Vec::new();
+    for (_, _, op) in f.ops() {
+        let OpKind::Launch { args, grid, block, .. } = &op.kind else {
+            continue;
+        };
+        let launch_loc = f.loc(op.id);
+        let mut mem_objs = Vec::new();
+        let mut ops = vec![op.id];
+        let mut lazy = false;
+        for &a in args {
+            // GETMEMARGS: launch args must be malloc-defined to be
+            // statically analyzable.
+            if !du.mem_objs.contains(&a) {
+                lazy = true;
+                continue;
+            }
+            mem_objs.push(a);
+            for o in du.gpu_ops_of(f, a) {
+                let loc = f.loc(o);
+                let (Some((o_op, _, _)),) = (f.op(o),) else { continue };
+                let ok = match &o_op.kind {
+                    OpKind::Malloc { .. } | OpKind::Memset { .. } => op_dominates(dom, loc, launch_loc),
+                    OpKind::Memcpy { dir: CopyDir::HostToDevice, .. } => {
+                        op_dominates(dom, loc, launch_loc)
+                    }
+                    OpKind::Memcpy { dir: CopyDir::DeviceToHost, .. } | OpKind::Free { .. } => {
+                        op_post_dominates(pdom, loc, launch_loc)
+                    }
+                    OpKind::Launch { .. } => true, // co-member launch; merged below
+                    _ => true,
+                };
+                if ok {
+                    ops.push(o);
+                } else {
+                    // Operation exists on the object but can't be bound
+                    // to this launch statically (e.g. branch-guarded
+                    // memcpy): defer the whole object to the lazy runtime.
+                    lazy = true;
+                }
+            }
+        }
+        ops.sort_unstable();
+        ops.dedup();
+        units.push(UnitTask {
+            launch: op.id,
+            mem_objs,
+            ops,
+            grid: *grid,
+            block: *block,
+            lazy,
+        });
+    }
+    units
+}
+
+/// Merge unit tasks sharing memory objects (paper Alg. 1, second loop —
+/// run to a fixpoint: the paper's single pass misses transitive overlap
+/// chains like {A,B}, {B,C}, {C,D}).
+pub fn merge_unit_tasks(units: Vec<UnitTask>) -> Vec<Vec<UnitTask>> {
+    let n = units.len();
+    // Union-find over unit indices.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, i: usize) -> usize {
+        if parent[i] != i {
+            let r = find(parent, parent[i]);
+            parent[i] = r;
+        }
+        parent[i]
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            if units[i].mem_objs.iter().any(|m| units[j].mem_objs.contains(m)) {
+                let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                if ri != rj {
+                    parent[ri] = rj;
+                }
+            }
+        }
+    }
+    let mut groups: std::collections::BTreeMap<usize, Vec<UnitTask>> = Default::default();
+    for (i, u) in units.into_iter().enumerate() {
+        let r = find(&mut parent, i);
+        groups.entry(r).or_default().push(u);
+    }
+    groups.into_values().collect()
+}
+
+/// Resource analysis + probe placement for one merged group.
+pub fn finalize_task(
+    id: usize,
+    f: &Function,
+    du: &DefUse,
+    dom: &Dominators,
+    _pdom: &Dominators,
+    group: Vec<UnitTask>,
+) -> GpuTask {
+    let mut lazy = group.iter().any(|u| u.lazy);
+    let mut launches: Vec<OpId> = group.iter().map(|u| u.launch).collect();
+    launches.sort_unstable();
+    let mut mem_objs: Vec<ValueId> = group.iter().flat_map(|u| u.mem_objs.clone()).collect();
+    mem_objs.sort_unstable();
+    mem_objs.dedup();
+    let mut ops: Vec<OpId> = group.iter().flat_map(|u| u.ops.clone()).collect();
+    ops.sort_unstable();
+    ops.dedup();
+
+    // Memory requirement: sum of the byte expressions of member mallocs.
+    let mut mem_expr: Option<Expr> = None;
+    for &obj in &mem_objs {
+        if let Some(&d) = du.def.get(&obj) {
+            if let Some((op, _, _)) = f.op(d) {
+                if let OpKind::Malloc { bytes } = op.kind {
+                    let e = Expr::v(bytes);
+                    mem_expr = Some(match mem_expr.take() {
+                        None => e,
+                        Some(acc) => acc.add(e),
+                    });
+                }
+            }
+        }
+    }
+    let mem_bytes = mem_expr.unwrap_or(Expr::Const(0));
+
+    // Grid/block: max over member launches.
+    let (mut grid_expr, mut block_expr): (Option<Expr>, Option<Expr>) = (None, None);
+    for u in &group {
+        let g = Expr::v(u.grid);
+        let b = Expr::v(u.block);
+        grid_expr = Some(match grid_expr.take() {
+            None => g,
+            Some(acc) => acc.max(g),
+        });
+        block_expr = Some(match block_expr.take() {
+            None => b,
+            Some(acc) => acc.max(b),
+        });
+    }
+
+    // Heap: any DeviceSetLimit dominating a member launch.
+    let mut heap = Expr::Const(DEFAULT_DEVICE_HEAP);
+    for (_, _, op) in f.ops() {
+        if let OpKind::DeviceSetLimit { bytes } = op.kind {
+            let loc = f.loc(op.id);
+            if launches
+                .iter()
+                .all(|&l| op_dominates(dom, loc, f.loc(l)))
+            {
+                heap = Expr::v(bytes);
+            }
+        }
+    }
+
+    // Probe placement: immediately before the first member op, if that
+    // point dominates every member op and every symbol definition the
+    // resource expressions read dominates *it*.
+    let probe_at = if lazy {
+        None
+    } else {
+        let first = ops
+            .iter()
+            .map(|&o| f.loc(o))
+            .min_by_key(|&(b, i)| (b, i))
+            .expect("task with no ops");
+        let dominates_all = ops.iter().all(|&o| op_dominates(dom, first, f.loc(o)));
+        // post-dominate all symbol defs == all defs dominate the probe
+        // (defs are straight-line Assigns in practice; dominance is the
+        // executable condition).
+        let mut symbols = Vec::new();
+        for e in [&mem_bytes, grid_expr.as_ref().unwrap(), block_expr.as_ref().unwrap(), &heap] {
+            e.referenced_values(&mut symbols);
+        }
+        let mut sym_scalars = Vec::new();
+        for &s in &symbols {
+            du.scalar_deps(f, s, &mut sym_scalars);
+        }
+        // Pure scalar Assigns are hoistable: the probe *interprets* the
+        // symbolic expressions (paper Fig. 3: `task_begin(N*3, 128,
+        // N/128)` precedes the ops that would define those temps), so
+        // only non-pure defs must actually dominate the probe point.
+        let defs_ok = sym_scalars.iter().all(|&v| match du.def.get(&v) {
+            None => true, // parameter: defined at entry
+            Some(&d) => {
+                let (op, _, _) = f.op(d).unwrap();
+                matches!(op.kind, crate::ir::OpKind::Assign { .. })
+                    || op_dominates(dom, f.loc(d), first)
+            }
+        });
+        if dominates_all && defs_ok {
+            Some(first)
+        } else {
+            lazy = true;
+            None
+        }
+    };
+
+    GpuTask {
+        id,
+        launches,
+        mem_objs,
+        ops,
+        mem_bytes,
+        heap_bytes: heap,
+        grid: grid_expr.unwrap_or(Expr::Const(0)),
+        block: block_expr.unwrap_or(Expr::Const(0)),
+        probe_at,
+        lazy,
+    }
+}
+
+/// BUILDGPUTASKS (paper Alg. 1): unit construction, merge, finalize.
+pub fn build_gpu_tasks(f: &Function) -> Vec<GpuTask> {
+    let cfg = Cfg::build(f);
+    let dom = Dominators::dominators(f, &cfg);
+    let pdom = Dominators::post_dominators(f, &cfg);
+    let du = DefUse::build(f);
+    let units = build_unit_tasks(f, &du, &dom, &pdom);
+    merge_unit_tasks(units)
+        .into_iter()
+        .enumerate()
+        .map(|(i, g)| finalize_task(i, f, &du, &dom, &pdom, g))
+        .collect()
+}

@@ -1,0 +1,575 @@
+//! The batch coordinator: a discrete-event simulation of the paper's
+//! deployment — a queue of jobs, a worker pool, the probe protocol, a
+//! scheduling policy, and the multi-GPU node.
+//!
+//! Jobs are [`JobTrace`]s (produced by the compiler + lazy runtime).
+//! A pool of workers drains the queue (§V-A: "each worker dequeues a
+//! job, runs it, and then pulls another"); the worker count and its
+//! device pinning encode the baseline schedulers:
+//!
+//! * **SA** — one worker per GPU, pinned: each job gets a dedicated
+//!   device for its lifetime (Slurm-style, memory-safe, underutilised).
+//! * **CG** — N workers pinned round-robin across GPUs (the CG ratio =
+//!   workers / GPUs): MPS-style packing with *no* knowledge of memory
+//!   needs, so `cudaMalloc` can OOM and crash the job.
+//! * **MGB / schedGPU** — unpinned workers; every `TaskBegin` probe asks
+//!   the [`Policy`] for a device, reserving the task's memory up front
+//!   (memory-safe by construction); tasks wait when nothing fits.
+//!
+//! Virtual time is f64 seconds. Kernel execution uses the device model's
+//! processor sharing; completions are tracked with one pending event per
+//! device plus a generation counter (membership changes invalidate the
+//! stale event).
+
+use super::metrics::{JobClass, JobOutcome, RunResult};
+use crate::gpu::{Device, NodeSpec, PCIE_BYTES_PER_SEC};
+use crate::lazy::{JobTrace, TraceEvent};
+use crate::sched::{make_policy, DeviceView, Policy, TaskReq};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+/// Scheduler selection for a batch run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Single-assignment: workers == GPUs, worker i pinned to device i.
+    Sa,
+    /// Core-to-GPU with `workers` total workers pinned round-robin.
+    Cg,
+    /// Task-granular policy by name: "mgb3" (default MGB), "mgb2",
+    /// "schedgpu".
+    Policy(&'static str),
+    /// Honour the application's own cudaSetDevice bindings (device 0
+    /// when it never called it — the CUDA default, §II-B). No memory
+    /// management at all: the unmanaged-sharing baseline.
+    Static,
+}
+
+/// Batch-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub node: NodeSpec,
+    pub mode: SchedMode,
+    /// Worker-pool size (ignored for SA, which always uses one per GPU).
+    pub workers: usize,
+}
+
+/// One job of the batch.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub class: JobClass,
+    pub trace: JobTrace,
+    /// Queue-arrival time. The paper's batch experiments queue all jobs
+    /// at t = 0 (§V-A); open-system experiments (ablation) stagger it.
+    pub arrival: f64,
+}
+
+/// Called on every kernel launch that names a PJRT artifact — the
+/// `--compute real` hook (validates numerics; virtual time is modeled).
+pub type LaunchHook<'a> = &'a mut dyn FnMut(&str);
+
+/// Compact, `Copy` trace event for the hot loop: artifact names are
+/// interned at batch start so stepping a job never clones a String.
+/// (EXPERIMENTS.md §Perf: the naive `TraceEvent::clone()` per step cost
+/// two heap allocations per kernel launch.)
+#[derive(Clone, Copy, Debug)]
+enum CEv {
+    TaskBegin { task: usize, res: crate::lazy::TaskResources },
+    Malloc { task: usize, bytes: u64 },
+    Xfer { bytes: u64 },
+    Launch { task: usize, artifact: u32, grid: u64, block: u64, work_us: u64 },
+    Free { task: usize, bytes: u64 },
+    TaskEnd { task: usize },
+    Host { micros: u64 },
+    Nop,
+}
+
+const NO_ARTIFACT: u32 = u32::MAX;
+
+fn compact_trace(trace: &JobTrace, intern: &mut Vec<String>) -> Vec<CEv> {
+    trace
+        .events
+        .iter()
+        .map(|e| match e {
+            TraceEvent::TaskBegin { task, res } => CEv::TaskBegin { task: *task, res: *res },
+            TraceEvent::Malloc { task, bytes } => CEv::Malloc { task: *task, bytes: *bytes },
+            TraceEvent::H2D { bytes, .. } | TraceEvent::D2H { bytes, .. } => {
+                CEv::Xfer { bytes: *bytes }
+            }
+            TraceEvent::Memset { .. } => CEv::Nop,
+            TraceEvent::Launch { task, artifact, grid, block, work_us, .. } => {
+                let a = match artifact {
+                    None => NO_ARTIFACT,
+                    Some(name) => match intern.iter().position(|n| n == name) {
+                        Some(i) => i as u32,
+                        None => {
+                            intern.push(name.clone());
+                            (intern.len() - 1) as u32
+                        }
+                    },
+                };
+                CEv::Launch { task: *task, artifact: a, grid: *grid, block: *block, work_us: *work_us }
+            }
+            TraceEvent::Free { task, bytes } => CEv::Free { task: *task, bytes: *bytes },
+            TraceEvent::TaskEnd { task } => CEv::TaskEnd { task: *task },
+            TraceEvent::Host { micros } => CEv::Host { micros: *micros },
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EvKind {
+    Wake { job: usize },
+    DevCompletion { dev: usize, gen: u64 },
+    /// A job enters the queue (open-system arrivals).
+    Arrive { job: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        // Min-heap via reverse: earliest time, then FIFO by seq.
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Default)]
+struct JobRt {
+    pc: usize,
+    /// runtime task id -> device.
+    task_dev: HashMap<usize, usize>,
+    /// task -> (device, bytes) reserved via probe (policy modes).
+    reserved: HashMap<usize, (usize, u64)>,
+    /// task -> (device, bytes) raw-allocated (pinned modes).
+    alloc: HashMap<usize, (usize, u64)>,
+    pinned_dev: Option<usize>,
+    worker: usize,
+    started: f64,
+    ended: f64,
+    crashed: bool,
+    done: bool,
+    waiting_placement: bool,
+    ded_s: f64,
+    act_s: f64,
+    n_kernels: u64,
+    kernel_started: f64,
+    kernel_ded: f64,
+}
+
+struct Engine<'h> {
+    cfg: RunConfig,
+    jobs: Vec<JobSpec>,
+    /// Compacted traces (one per job) + interned artifact names.
+    compact: Vec<Vec<CEv>>,
+    artifact_names: Vec<String>,
+    rt: Vec<JobRt>,
+    devices: Vec<Device>,
+    dev_gen: Vec<u64>,
+    /// (device, kernel handle) -> job.
+    kernel_owner: HashMap<(usize, usize), usize>,
+    policy: Option<Box<dyn Policy>>,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    job_q: VecDeque<usize>,
+    wait_q: Vec<usize>,
+    worker_pin: Vec<Option<usize>>,
+    idle_workers: Vec<usize>,
+    /// cudaSetDevice semantics: place on res.static_dev.unwrap_or(0),
+    /// raw (crashable) memory accounting.
+    static_mode: bool,
+    hook: Option<LaunchHook<'h>>,
+}
+
+/// Run a batch of jobs under `cfg`; all jobs are queued at t = 0.
+pub fn run_batch(cfg: RunConfig, jobs: Vec<JobSpec>) -> RunResult {
+    run_batch_with_hook(cfg, jobs, None)
+}
+
+/// `run_batch` plus a real-compute hook invoked per artifact launch.
+pub fn run_batch_with_hook(
+    cfg: RunConfig,
+    jobs: Vec<JobSpec>,
+    hook: Option<LaunchHook<'_>>,
+) -> RunResult {
+    let n_gpus = cfg.node.n_gpus();
+    let workers = match cfg.mode {
+        SchedMode::Sa => n_gpus,
+        _ => cfg.workers.max(1),
+    };
+    let worker_pin: Vec<Option<usize>> = (0..workers)
+        .map(|w| match cfg.mode {
+            SchedMode::Sa | SchedMode::Cg => Some(w % n_gpus),
+            SchedMode::Policy(_) | SchedMode::Static => None,
+        })
+        .collect();
+    let policy = match cfg.mode {
+        SchedMode::Policy(name) => Some(make_policy(name, n_gpus)),
+        _ => None,
+    };
+    let static_mode = cfg.mode == SchedMode::Static;
+    let devices: Vec<Device> = cfg.node.gpus.iter().map(|&g| Device::new(g)).collect();
+    let n_jobs = jobs.len();
+    let mut artifact_names = Vec::new();
+    let compact: Vec<Vec<CEv>> =
+        jobs.iter().map(|j| compact_trace(&j.trace, &mut artifact_names)).collect();
+    let mut eng = Engine {
+        compact,
+        artifact_names,
+        rt: (0..n_jobs).map(|_| JobRt::default()).collect(),
+        dev_gen: vec![0; n_gpus],
+        kernel_owner: HashMap::new(),
+        policy,
+        events: BinaryHeap::new(),
+        seq: 0,
+        job_q: VecDeque::new(),
+        wait_q: Vec::new(),
+        worker_pin,
+        idle_workers: Vec::new(),
+        static_mode,
+        devices,
+        cfg,
+        jobs,
+        hook,
+    };
+    eng.run()
+}
+
+impl<'h> Engine<'h> {
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.events.push(Event { t, seq: self.seq, kind });
+    }
+
+    fn run(&mut self) -> RunResult {
+        for j in 0..self.jobs.len() {
+            let arr = self.jobs[j].arrival;
+            if arr <= 0.0 {
+                self.job_q.push_back(j);
+            } else {
+                self.push(arr, EvKind::Arrive { job: j });
+            }
+        }
+        let workers = self.worker_pin.len();
+        for w in 0..workers {
+            self.start_next_job(w, 0.0);
+        }
+        let mut last_t = 0.0f64;
+        loop {
+            while let Some(ev) = self.events.pop() {
+                last_t = ev.t;
+                match ev.kind {
+                    EvKind::Wake { job } => {
+                        if !self.rt[job].done {
+                            self.step_job(job, ev.t);
+                        }
+                    }
+                    EvKind::DevCompletion { dev, gen } => {
+                        if gen == self.dev_gen[dev] {
+                            self.handle_completions(dev, ev.t);
+                        }
+                    }
+                    EvKind::Arrive { job } => {
+                        self.job_q.push_back(job);
+                        if let Some(w) = self.idle_workers.pop() {
+                            self.start_next_job(w, ev.t);
+                        }
+                    }
+                }
+            }
+            // Queue drained but some jobs never finished: their resource
+            // requests can never be satisfied on this node (e.g. a task
+            // bigger than any GPU). Fail one and keep draining — the
+            // real scheduler would reject such a request up front; the
+            // failure may unblock (or start) other jobs.
+            match (0..self.rt.len()).find(|&j| !self.rt[j].done) {
+                Some(j) => self.finish_job(j, last_t, true),
+                None => break,
+            }
+        }
+        self.collect()
+    }
+
+    fn start_next_job(&mut self, worker: usize, t: f64) {
+        let Some(job) = self.job_q.pop_front() else {
+            if !self.idle_workers.contains(&worker) {
+                self.idle_workers.push(worker);
+            }
+            return;
+        };
+        let rt = &mut self.rt[job];
+        rt.worker = worker;
+        rt.started = t;
+        rt.pinned_dev = self.worker_pin[worker];
+        self.step_job(job, t);
+    }
+
+    /// Process the job's trace from its pc until it blocks or finishes.
+    fn step_job(&mut self, job: usize, t: f64) {
+        loop {
+            if self.rt[job].done {
+                return;
+            }
+            if self.rt[job].pc >= self.compact[job].len() {
+                self.finish_job(job, t, false);
+                return;
+            }
+            let ev = self.compact[job][self.rt[job].pc];
+            match ev {
+                CEv::Nop => {
+                    self.rt[job].pc += 1;
+                }
+                CEv::TaskBegin { task, res } => {
+                    if self.static_mode {
+                        // §II-B: the app's cudaSetDevice (or device 0).
+                        let dev = (res.static_dev.unwrap_or(0) as usize)
+                            .min(self.devices.len() - 1);
+                        self.rt[job].task_dev.insert(task, dev);
+                        self.rt[job].pc += 1;
+                        continue;
+                    }
+                    if let Some(dev) = self.rt[job].pinned_dev {
+                        self.rt[job].task_dev.insert(task, dev);
+                        self.rt[job].pc += 1;
+                        continue;
+                    }
+                    let req = TaskReq {
+                        mem_bytes: res.reserve_bytes(),
+                        tbs: res.thread_blocks(),
+                        warps_per_tb: res.warps_per_tb(),
+                    };
+                    let views: Vec<DeviceView> = self
+                        .devices
+                        .iter()
+                        .map(|d| DeviceView { spec: d.spec, free_mem: d.free_mem })
+                        .collect();
+                    let policy = self.policy.as_mut().expect("policy mode");
+                    match policy.place((job, task), &req, &views) {
+                        Some(dev) => {
+                            self.devices[dev]
+                                .alloc(req.mem_bytes)
+                                .expect("policy admitted within free_mem");
+                            let rt = &mut self.rt[job];
+                            rt.reserved.insert(task, (dev, req.mem_bytes));
+                            rt.task_dev.insert(task, dev);
+                            rt.waiting_placement = false;
+                            rt.pc += 1;
+                        }
+                        None => {
+                            if !self.rt[job].waiting_placement {
+                                self.rt[job].waiting_placement = true;
+                                self.wait_q.push(job);
+                            } else if !self.wait_q.contains(&job) {
+                                self.wait_q.push(job);
+                            }
+                            return;
+                        }
+                    }
+                }
+                CEv::Malloc { task, bytes } => {
+                    let rt = &mut self.rt[job];
+                    if rt.reserved.contains_key(&task) {
+                        rt.pc += 1; // covered by the probe's reservation
+                        continue;
+                    }
+                    let dev = *rt.task_dev.get(&task).expect("task placed");
+                    match self.devices[dev].alloc(bytes) {
+                        Ok(()) => {
+                            let e = self.rt[job].alloc.entry(task).or_insert((dev, 0));
+                            e.1 += bytes;
+                            self.rt[job].pc += 1;
+                        }
+                        Err(_avail) => {
+                            // OOM: the CUDA runtime returns an error the
+                            // (unmodified) app does not handle — crash.
+                            self.finish_job(job, t, true);
+                            return;
+                        }
+                    }
+                }
+                CEv::Xfer { bytes } => {
+                    self.rt[job].pc += 1;
+                    let dt = bytes as f64 / PCIE_BYTES_PER_SEC;
+                    self.push(t + dt, EvKind::Wake { job });
+                    return;
+                }
+                CEv::Launch { task, artifact, grid, block, work_us } => {
+                    let dev = *self.rt[job].task_dev.get(&task).expect("task placed");
+                    if artifact != NO_ARTIFACT {
+                        if let Some(hook) = self.hook.as_mut() {
+                            hook(&self.artifact_names[artifact as usize]);
+                        }
+                    }
+                    let warps = grid * block.div_ceil(32);
+                    let work_s = work_us as f64 * 1e-6;
+                    self.devices[dev].advance_to(t);
+                    let h = self.devices[dev].start_kernel(t, work_s, warps);
+                    self.kernel_owner.insert((dev, h), job);
+                    let rt = &mut self.rt[job];
+                    rt.kernel_started = t;
+                    rt.kernel_ded = work_s / self.devices[dev].spec.speed;
+                    self.resched_dev(dev, t);
+                    return; // job sleeps until DevCompletion wakes it
+                }
+                CEv::Free { task, bytes } => {
+                    let rt = &mut self.rt[job];
+                    if !rt.reserved.contains_key(&task) {
+                        if let Some(e) = rt.alloc.get_mut(&task) {
+                            let dev = e.0;
+                            e.1 = e.1.saturating_sub(bytes);
+                            self.devices[dev].release(bytes);
+                        }
+                    }
+                    self.rt[job].pc += 1;
+                }
+                CEv::TaskEnd { task } => {
+                    self.release_task(job, task, t);
+                    self.rt[job].pc += 1;
+                }
+                CEv::Host { micros } => {
+                    self.rt[job].pc += 1;
+                    self.push(t + micros as f64 * 1e-6, EvKind::Wake { job });
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Release a task's reservation / leftover allocations and let the
+    /// policy + waiters know capacity freed up.
+    fn release_task(&mut self, job: usize, task: usize, t: f64) {
+        let mut released = false;
+        if let Some((dev, bytes)) = self.rt[job].reserved.remove(&task) {
+            self.devices[dev].release(bytes);
+            released = true;
+        }
+        if let Some((dev, bytes)) = self.rt[job].alloc.remove(&task) {
+            if bytes > 0 {
+                self.devices[dev].release(bytes);
+                released = true;
+            }
+        }
+        if let Some(p) = self.policy.as_mut() {
+            p.release((job, task));
+        }
+        if released || self.policy.is_some() {
+            self.wake_waiters(t);
+        }
+    }
+
+    fn wake_waiters(&mut self, t: f64) {
+        let waiters = std::mem::take(&mut self.wait_q);
+        for j in waiters {
+            self.push(t, EvKind::Wake { job: j });
+        }
+    }
+
+    /// Kernel completions on `dev` at time `t`.
+    fn handle_completions(&mut self, dev: usize, t: f64) {
+        self.devices[dev].advance_to(t);
+        // Collect all kernels that are done (remaining ~ 0).
+        let mut finished = Vec::new();
+        while let Some((tf, h)) = self.devices[dev].next_completion(t) {
+            if tf - t > 1e-9 {
+                break;
+            }
+            self.devices[dev].remove_kernel(t, h);
+            finished.push(h);
+        }
+        for h in finished {
+            let job = self.kernel_owner.remove(&(dev, h)).expect("owned kernel");
+            let rt = &mut self.rt[job];
+            rt.act_s += t - rt.kernel_started;
+            rt.ded_s += rt.kernel_ded;
+            rt.n_kernels += 1;
+            rt.pc += 1; // past the Launch event
+            self.step_job(job, t);
+        }
+        self.resched_dev(dev, t);
+    }
+
+    /// Invalidate the device's pending completion event and push a fresh
+    /// one for the (new) earliest finisher.
+    fn resched_dev(&mut self, dev: usize, t: f64) {
+        self.dev_gen[dev] += 1;
+        let gen = self.dev_gen[dev];
+        if let Some((tf, _)) = self.devices[dev].next_completion(t) {
+            self.push(tf.max(t), EvKind::DevCompletion { dev, gen });
+        }
+    }
+
+    fn finish_job(&mut self, job: usize, t: f64, crashed: bool) {
+        {
+            let rt = &mut self.rt[job];
+            if rt.done {
+                return;
+            }
+            rt.done = true;
+            rt.crashed = crashed;
+            rt.ended = t;
+        }
+        // Release everything the job still holds.
+        let tasks: Vec<usize> = self.rt[job]
+            .reserved
+            .keys()
+            .chain(self.rt[job].alloc.keys())
+            .copied()
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        for task in tasks {
+            self.release_task(job, task, t);
+        }
+        self.wake_waiters(t);
+        let worker = self.rt[job].worker;
+        self.start_next_job(worker, t);
+    }
+
+    fn collect(&mut self) -> RunResult {
+        let jobs: Vec<JobOutcome> = self
+            .jobs
+            .iter()
+            .zip(&self.rt)
+            .map(|(spec, rt)| JobOutcome {
+                name: spec.name.clone(),
+                class: spec.class,
+                arrival: spec.arrival,
+                started: rt.started,
+                ended: rt.ended,
+                crashed: rt.crashed,
+                kernel_dedicated_s: rt.ded_s,
+                kernel_actual_s: rt.act_s,
+                n_kernels: rt.n_kernels,
+            })
+            .collect();
+        let makespan = jobs.iter().map(|j| j.ended).fold(0.0, f64::max);
+        let scheduler = match self.cfg.mode {
+            SchedMode::Sa => "sa".to_string(),
+            SchedMode::Cg => "cg".to_string(),
+            SchedMode::Static => "static".to_string(),
+            SchedMode::Policy(p) => p.to_string(),
+        };
+        RunResult {
+            scheduler,
+            node: self.cfg.node.name.clone(),
+            workers: self.worker_pin.len(),
+            jobs,
+            makespan,
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Batch-run outcomes and the paper's macro-measures (§V-A): system
+//! throughput, job turnaround, crash percentage, kernel slowdown.
+
+/// Workload class, for mix bookkeeping (large: >4 GB footprint).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobClass {
+    Large,
+    Small,
+    Nn,
+}
+
+/// Per-job result.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    pub class: JobClass,
+    /// Queue-arrival time (0 for the paper's batch experiments).
+    pub arrival: f64,
+    /// Virtual time the job left the queue (a worker picked it up).
+    pub started: f64,
+    /// Virtual completion (or crash) time; jobs arrive at t = 0.
+    pub ended: f64,
+    pub crashed: bool,
+    /// Sum of dedicated kernel durations on the assigned device type.
+    pub kernel_dedicated_s: f64,
+    /// Sum of actual (co-scheduled) kernel durations.
+    pub kernel_actual_s: f64,
+    pub n_kernels: u64,
+}
+
+impl JobOutcome {
+    /// Interval between completion and queue arrival (arrival is t=0
+    /// for the paper's batch experiments).
+    pub fn turnaround(&self) -> f64 {
+        self.ended - self.arrival
+    }
+
+    /// Per-job kernel slowdown fraction (0.01 == 1% slower than
+    /// dedicated execution).
+    pub fn kernel_slowdown(&self) -> f64 {
+        if self.kernel_dedicated_s <= 0.0 {
+            0.0
+        } else {
+            self.kernel_actual_s / self.kernel_dedicated_s - 1.0
+        }
+    }
+}
+
+/// Whole-batch result.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub scheduler: String,
+    pub node: String,
+    pub workers: usize,
+    pub jobs: Vec<JobOutcome>,
+    /// Time the last job finished (the batch makespan).
+    pub makespan: f64,
+}
+
+impl RunResult {
+    pub fn completed(&self) -> usize {
+        self.jobs.iter().filter(|j| !j.crashed).count()
+    }
+
+    pub fn crashed(&self) -> usize {
+        self.jobs.iter().filter(|j| j.crashed).count()
+    }
+
+    pub fn crash_pct(&self) -> f64 {
+        100.0 * self.crashed() as f64 / self.jobs.len().max(1) as f64
+    }
+
+    /// Jobs completed per second of makespan — the figure the paper
+    /// normalises against SA.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.makespan
+        }
+    }
+
+    /// Mean turnaround over *completed* jobs.
+    pub fn mean_turnaround(&self) -> f64 {
+        let done: Vec<&JobOutcome> = self.jobs.iter().filter(|j| !j.crashed).collect();
+        if done.is_empty() {
+            return 0.0;
+        }
+        done.iter().map(|j| j.turnaround()).sum::<f64>() / done.len() as f64
+    }
+
+    /// Kernel slowdown (%) vs dedicated execution, weighted by each
+    /// job's dedicated kernel time (macro-measure of Table IV).
+    pub fn kernel_slowdown_pct(&self) -> f64 {
+        let (mut ded, mut act) = (0.0, 0.0);
+        for j in self.jobs.iter().filter(|j| !j.crashed) {
+            ded += j.kernel_dedicated_s;
+            act += j.kernel_actual_s;
+        }
+        if ded <= 0.0 {
+            0.0
+        } else {
+            100.0 * (act / ded - 1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(ended: f64, crashed: bool, ded: f64, act: f64) -> JobOutcome {
+        JobOutcome {
+            name: "j".into(),
+            class: JobClass::Small,
+            arrival: 0.0,
+            started: 0.0,
+            ended,
+            crashed,
+            kernel_dedicated_s: ded,
+            kernel_actual_s: act,
+            n_kernels: 1,
+        }
+    }
+
+    fn rr(jobs: Vec<JobOutcome>, makespan: f64) -> RunResult {
+        RunResult { scheduler: "t".into(), node: "n".into(), workers: 1, jobs, makespan }
+    }
+
+    #[test]
+    fn throughput_excludes_crashes() {
+        let r = rr(vec![job(10.0, false, 1.0, 1.0), job(5.0, true, 1.0, 1.0)], 10.0);
+        assert_eq!(r.completed(), 1);
+        assert!((r.throughput() - 0.1).abs() < 1e-12);
+        assert!((r.crash_pct() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_is_time_weighted() {
+        let r = rr(
+            vec![job(1.0, false, 10.0, 11.0), job(1.0, false, 1.0, 1.0)],
+            1.0,
+        );
+        // (12 / 11 - 1) ≈ 9.09%
+        assert!((r.kernel_slowdown_pct() - 100.0 * (12.0 / 11.0 - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn turnaround_mean_over_completed() {
+        let r = rr(vec![job(4.0, false, 0.0, 0.0), job(8.0, false, 0.0, 0.0)], 8.0);
+        assert!((r.mean_turnaround() - 6.0).abs() < 1e-12);
+    }
+}

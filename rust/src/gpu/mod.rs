@@ -1,0 +1,18 @@
+//! Multi-GPU node simulator — the execution substrate the paper ran on
+//! real P100/V100 nodes.
+//!
+//! Models, per device: global-memory accounting with OOM **crash**
+//! semantics (memory is the hard constraint), MPS-style co-residency of
+//! kernels from independent jobs, the hardware thread-block dispatcher's
+//! capacity limits (SMs × TB/warp caps), and compute interference as
+//! work-conserving processor sharing — co-resident kernels whose summed
+//! resident warps exceed the device's warp capacity all slow down by the
+//! oversubscription factor, kernels under capacity run at full speed.
+//! That asymmetry (memory crashes, compute degrades) is exactly what
+//! separates the paper's Alg. 2 / Alg. 3 / CG / schedGPU behaviours.
+
+pub mod device;
+pub mod spec;
+
+pub use device::{Device, KernelHandle};
+pub use spec::{GpuSpec, NodeSpec, PCIE_BYTES_PER_SEC};

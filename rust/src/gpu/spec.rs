@@ -1,0 +1,89 @@
+//! Device and node specifications (P100 / V100 presets from §V).
+
+/// Static description of one GPU.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// Max resident warps per SM (2048 threads / 32).
+    pub warps_per_sm: u32,
+    /// Max resident thread blocks per SM.
+    pub tbs_per_sm: u32,
+    /// Global memory, bytes.
+    pub mem_bytes: u64,
+    /// Relative compute speed; 1.0 = V100 (the `work_us` reference).
+    pub speed: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA P100: 56 SMs, 3584 cores, 16 GB.
+    pub fn p100() -> Self {
+        GpuSpec {
+            sms: 56,
+            warps_per_sm: 64,
+            tbs_per_sm: 32,
+            mem_bytes: 16 << 30,
+            speed: 3584.0 / 5120.0,
+        }
+    }
+
+    /// NVIDIA V100: 80 SMs, 5120 cores, 16 GB (the work-unit reference).
+    pub fn v100() -> Self {
+        GpuSpec {
+            sms: 80,
+            warps_per_sm: 64,
+            tbs_per_sm: 32,
+            mem_bytes: 16 << 30,
+            speed: 1.0,
+        }
+    }
+
+    /// Total warp slots (the compute capacity the schedulers reason in).
+    pub fn warp_capacity(&self) -> u64 {
+        self.sms as u64 * self.warps_per_sm as u64
+    }
+
+    /// Total thread-block slots.
+    pub fn tb_capacity(&self) -> u64 {
+        self.sms as u64 * self.tbs_per_sm as u64
+    }
+
+    /// Max thread blocks of `warps_per_tb`-warp TBs resident at once on
+    /// an otherwise-empty device (both TB-slot and warp limited).
+    pub fn resident_tb_limit(&self, warps_per_tb: u64) -> u64 {
+        if warps_per_tb == 0 {
+            return self.tb_capacity();
+        }
+        let per_sm = (self.warps_per_sm as u64 / warps_per_tb).min(self.tbs_per_sm as u64);
+        per_sm * self.sms as u64
+    }
+}
+
+/// One multi-GPU compute node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub gpus: Vec<GpuSpec>,
+    /// Host CPU worker slots available for the worker pool sweep (the
+    /// paper's nodes: 12-core Xeon for 2×P100, 32-core for 4×V100).
+    pub cpu_cores: u32,
+    pub name: String,
+}
+
+impl NodeSpec {
+    /// The paper's Chameleon node: 2×P100 + 12-core Xeon E5-2670.
+    pub fn p100x2() -> Self {
+        NodeSpec { gpus: vec![GpuSpec::p100(); 2], cpu_cores: 12, name: "2xP100".into() }
+    }
+
+    /// The paper's AWS p3.8xlarge: 4×V100 + 32 vCPU.
+    pub fn v100x4() -> Self {
+        NodeSpec { gpus: vec![GpuSpec::v100(); 4], cpu_cores: 32, name: "4xV100".into() }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+}
+
+/// PCIe gen3 x16 effective host<->device bandwidth (B/s).
+pub const PCIE_BYTES_PER_SEC: f64 = 12.0e9;

@@ -1,0 +1,264 @@
+//! Fluent builders for authoring IR programs (used by `workloads` and
+//! by tests; mirrors what clang would emit for the host-side code).
+
+use super::op::{CopyDir, Expr, Op, OpId, OpKind, Terminator, ValueId};
+use super::program::{Block, BlockId, FuncId, Function, Program};
+
+/// Builds a whole program; functions are appended in creation order and
+/// `main` must be created (it becomes the entry).
+pub struct ProgramBuilder {
+    funcs: Vec<Function>,
+    entry: Option<FuncId>,
+}
+
+impl Default for ProgramBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self { funcs: Vec::new(), entry: None }
+    }
+
+    /// Reserve a function id before building it (for forward calls).
+    pub fn declare(&mut self, name: &str, n_params: u32) -> FuncId {
+        let id = self.funcs.len() as FuncId;
+        self.funcs.push(Function {
+            name: name.to_string(),
+            n_params,
+            n_values: n_params,
+            blocks: vec![Block { ops: Vec::new(), term: Terminator::Ret }],
+        });
+        id
+    }
+
+    /// Build (or rebuild) the body of a declared function.
+    pub fn define<Fb>(&mut self, id: FuncId, body: Fb)
+    where
+        Fb: FnOnce(&mut FuncBuilder),
+    {
+        let n_params = self.funcs[id as usize].n_params;
+        let name = self.funcs[id as usize].name.clone();
+        let mut fb = FuncBuilder::new(name, n_params);
+        body(&mut fb);
+        self.funcs[id as usize] = fb.finish();
+        if self.funcs[id as usize].name == "main" {
+            self.entry = Some(id);
+        }
+    }
+
+    /// Declare + define in one step.
+    pub fn func<Fb>(&mut self, name: &str, n_params: u32, body: Fb) -> FuncId
+    where
+        Fb: FnOnce(&mut FuncBuilder),
+    {
+        let id = self.declare(name, n_params);
+        self.define(id, body);
+        id
+    }
+
+    pub fn finish(self) -> Program {
+        let entry = self.entry.expect("program has no `main`");
+        let p = Program { funcs: self.funcs, entry };
+        if let Err(e) = p.validate() {
+            panic!("built invalid program: {e}");
+        }
+        p
+    }
+}
+
+/// Builds one function. Keeps a current block; `loop_n` creates the
+/// back-edge structure for bounded loops.
+pub struct FuncBuilder {
+    name: String,
+    n_params: u32,
+    next_value: ValueId,
+    next_op: OpId,
+    blocks: Vec<Block>,
+    cur: BlockId,
+}
+
+impl FuncBuilder {
+    fn new(name: String, n_params: u32) -> Self {
+        Self {
+            name,
+            n_params,
+            next_value: n_params,
+            next_op: 0,
+            blocks: vec![Block { ops: Vec::new(), term: Terminator::Ret }],
+            cur: 0,
+        }
+    }
+
+    pub fn param(&self, i: u32) -> ValueId {
+        assert!(i < self.n_params, "param {i} out of range");
+        i
+    }
+
+    fn push(&mut self, result: Option<ValueId>, kind: OpKind) -> OpId {
+        let id = self.next_op;
+        self.next_op += 1;
+        self.blocks[self.cur as usize].ops.push(Op { id, result, kind });
+        id
+    }
+
+    fn fresh(&mut self) -> ValueId {
+        let v = self.next_value;
+        self.next_value += 1;
+        v
+    }
+
+    /// Define a scalar from an expression.
+    pub fn assign(&mut self, expr: Expr) -> ValueId {
+        let v = self.fresh();
+        self.push(Some(v), OpKind::Assign { expr });
+        v
+    }
+
+    /// Convenience: a constant scalar.
+    pub fn c(&mut self, v: i64) -> ValueId {
+        self.assign(Expr::c(v))
+    }
+
+    pub fn malloc(&mut self, bytes: ValueId) -> ValueId {
+        let v = self.fresh();
+        self.push(Some(v), OpKind::Malloc { bytes });
+        v
+    }
+
+    pub fn h2d(&mut self, obj: ValueId, bytes: ValueId) {
+        self.push(None, OpKind::Memcpy { obj, bytes, dir: CopyDir::HostToDevice });
+    }
+
+    pub fn d2h(&mut self, obj: ValueId, bytes: ValueId) {
+        self.push(None, OpKind::Memcpy { obj, bytes, dir: CopyDir::DeviceToHost });
+    }
+
+    pub fn memset(&mut self, obj: ValueId, bytes: ValueId) {
+        self.push(None, OpKind::Memset { obj, bytes });
+    }
+
+    pub fn free(&mut self, obj: ValueId) {
+        self.push(None, OpKind::Free { obj });
+    }
+
+    pub fn launch(
+        &mut self,
+        kernel: &str,
+        grid: ValueId,
+        block: ValueId,
+        args: &[ValueId],
+        work: ValueId,
+    ) {
+        self.push(
+            None,
+            OpKind::Launch {
+                kernel: kernel.to_string(),
+                grid,
+                block,
+                args: args.to_vec(),
+                work,
+                artifact: None,
+            },
+        );
+    }
+
+    /// Launch bound to a PJRT artifact for `--compute real` runs.
+    pub fn launch_artifact(
+        &mut self,
+        kernel: &str,
+        artifact: &str,
+        grid: ValueId,
+        block: ValueId,
+        args: &[ValueId],
+        work: ValueId,
+    ) {
+        self.push(
+            None,
+            OpKind::Launch {
+                kernel: kernel.to_string(),
+                grid,
+                block,
+                args: args.to_vec(),
+                work,
+                artifact: Some(artifact.to_string()),
+            },
+        );
+    }
+
+    pub fn set_heap_limit(&mut self, bytes: ValueId) {
+        self.push(None, OpKind::DeviceSetLimit { bytes });
+    }
+
+    /// cudaSetDevice(dev) — static device binding (§II-B).
+    pub fn set_device(&mut self, dev: ValueId) {
+        self.push(None, OpKind::SetDevice { dev });
+    }
+
+    pub fn call(&mut self, callee: FuncId, args: &[ValueId]) {
+        self.push(None, OpKind::Call { callee, args: args.to_vec() });
+    }
+
+    pub fn host_compute(&mut self, micros: ValueId) {
+        self.push(None, OpKind::HostCompute { micros });
+    }
+
+    /// A bounded loop executing `body` `trips` times: emits
+    /// header -> body -> header, then continues in the exit block.
+    pub fn loop_n<Fb>(&mut self, trips: ValueId, body: Fb)
+    where
+        Fb: FnOnce(&mut FuncBuilder),
+    {
+        let header = self.new_block();
+        let body_b = self.new_block();
+        let exit = self.new_block();
+        self.blocks[self.cur as usize].term = Terminator::Br(header);
+        self.blocks[header as usize].term =
+            Terminator::CondBr { trips, taken: body_b, fallthrough: exit };
+        self.cur = body_b;
+        body(self);
+        // `body` may have moved the current block (nested loops).
+        self.blocks[self.cur as usize].term = Terminator::Br(header);
+        self.cur = exit;
+    }
+
+    /// An if-like diamond that always executes `then` (the analyses see a
+    /// two-way branch; used by compiler tests for non-trivial CFGs).
+    pub fn diamond<Ft, Fe>(&mut self, cond_trips: ValueId, then_b: Ft, else_b: Fe)
+    where
+        Ft: FnOnce(&mut FuncBuilder),
+        Fe: FnOnce(&mut FuncBuilder),
+    {
+        let t = self.new_block();
+        let e = self.new_block();
+        let join = self.new_block();
+        self.blocks[self.cur as usize].term =
+            Terminator::CondBr { trips: cond_trips, taken: t, fallthrough: e };
+        self.cur = t;
+        then_b(self);
+        self.blocks[self.cur as usize].term = Terminator::Br(join);
+        self.cur = e;
+        else_b(self);
+        self.blocks[self.cur as usize].term = Terminator::Br(join);
+        self.cur = join;
+    }
+
+    fn new_block(&mut self) -> BlockId {
+        let id = self.blocks.len() as BlockId;
+        self.blocks.push(Block { ops: Vec::new(), term: Terminator::Ret });
+        id
+    }
+
+    fn finish(mut self) -> Function {
+        // The current block keeps its default Ret terminator.
+        let _ = &mut self;
+        Function {
+            name: self.name,
+            n_params: self.n_params,
+            n_values: self.next_value,
+            blocks: self.blocks,
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Mini-CUDA host IR — the substrate the paper's compiler pass analyses.
+//!
+//! The paper's pass works on LLVM IR of the *host-side* code of CUDA
+//! applications: kernel-launch configuration calls, `cudaMalloc`/
+//! `cudaMemcpy`/`cudaFree`, and the scalar dataflow that feeds their
+//! arguments. This module reproduces exactly that slice of LLVM IR:
+//! SSA-ish scalar values with symbolic expressions, GPU API operations
+//! over memory-object values, functions with basic blocks and branches,
+//! and host compute phases (everything between GPU calls that costs
+//! time). Workloads (`crate::workloads`) are authored against
+//! [`build::ProgramBuilder`], tests and the CLI can also parse the
+//! textual form (`parse`).
+
+pub mod build;
+pub mod op;
+pub mod parse;
+pub mod program;
+
+pub use build::{FuncBuilder, ProgramBuilder};
+pub use op::{CopyDir, Expr, Op, OpId, OpKind, Terminator, ValueId};
+pub use program::{op_operands, Block, BlockId, FuncId, Function, Program};

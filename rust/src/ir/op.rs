@@ -1,0 +1,187 @@
+//! Operations, values and symbolic scalar expressions.
+
+use std::fmt;
+
+/// Index of an SSA value within its function. Values `0..nparams` are the
+/// function parameters; the rest are defined by ops (`Op::result`).
+pub type ValueId = u32;
+
+/// Stable identity of an op within its function: (block, index-in-block)
+/// flattened by the function at construction time.
+pub type OpId = u32;
+
+/// Symbolic scalar expression over parameters and previously-defined
+/// values. This is what the compiler's probes carry: resource
+/// requirements stay symbolic until the probe interprets them at runtime
+/// (paper §III-A1: "all of the analyzed information is in the form of
+/// symbols").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Const(i64),
+    /// Reference to a value (parameter or op result).
+    Value(ValueId),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    /// Integer division, rounding up (grid-size math is ceil-div).
+    CeilDiv(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+    Min(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn c(v: i64) -> Self {
+        Expr::Const(v)
+    }
+    pub fn v(id: ValueId) -> Self {
+        Expr::Value(id)
+    }
+    pub fn add(self, rhs: Expr) -> Self {
+        Expr::Add(Box::new(self), Box::new(rhs))
+    }
+    pub fn sub(self, rhs: Expr) -> Self {
+        Expr::Sub(Box::new(self), Box::new(rhs))
+    }
+    pub fn mul(self, rhs: Expr) -> Self {
+        Expr::Mul(Box::new(self), Box::new(rhs))
+    }
+    pub fn ceil_div(self, rhs: Expr) -> Self {
+        Expr::CeilDiv(Box::new(self), Box::new(rhs))
+    }
+    pub fn max(self, rhs: Expr) -> Self {
+        Expr::Max(Box::new(self), Box::new(rhs))
+    }
+    pub fn min(self, rhs: Expr) -> Self {
+        Expr::Min(Box::new(self), Box::new(rhs))
+    }
+
+    /// Evaluate under an environment mapping value ids to concrete i64s.
+    pub fn eval(&self, env: &dyn Fn(ValueId) -> i64) -> i64 {
+        match self {
+            Expr::Const(c) => *c,
+            Expr::Value(v) => env(*v),
+            Expr::Add(a, b) => a.eval(env) + b.eval(env),
+            Expr::Sub(a, b) => a.eval(env) - b.eval(env),
+            Expr::Mul(a, b) => a.eval(env) * b.eval(env),
+            Expr::CeilDiv(a, b) => {
+                let (a, b) = (a.eval(env), b.eval(env));
+                if b == 0 {
+                    0
+                } else {
+                    (a + b - 1) / b
+                }
+            }
+            Expr::Max(a, b) => a.eval(env).max(b.eval(env)),
+            Expr::Min(a, b) => a.eval(env).min(b.eval(env)),
+        }
+    }
+
+    /// Every value id this expression reads.
+    pub fn referenced_values(&self, out: &mut Vec<ValueId>) {
+        match self {
+            Expr::Const(_) => {}
+            Expr::Value(v) => out.push(*v),
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::CeilDiv(a, b)
+            | Expr::Max(a, b)
+            | Expr::Min(a, b) => {
+                a.referenced_values(out);
+                b.referenced_values(out);
+            }
+        }
+    }
+}
+
+/// Direction of a memcpy, relative to the device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyDir {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// GPU API / host operations. Memory objects are `ValueId`s defined by
+/// `Malloc`; scalar operands are `ValueId`s defined by `Assign` or
+/// parameters.
+#[derive(Clone, Debug)]
+pub enum OpKind {
+    /// Define a scalar value from a symbolic expression.
+    Assign { expr: Expr },
+    /// cudaMalloc: defines a memory-object value; `bytes` is a scalar.
+    Malloc { bytes: ValueId },
+    /// cudaMemcpy / cudaMemset touching a device memory object.
+    Memcpy { obj: ValueId, bytes: ValueId, dir: CopyDir },
+    Memset { obj: ValueId, bytes: ValueId },
+    /// cudaFree.
+    Free { obj: ValueId },
+    /// `__cudaPushCallConfiguration` + kernel stub call. `grid`/`block`
+    /// are scalar values (blocks, threads-per-block); `args` are memory
+    /// objects; `work` is a scalar in device work-units (1.0 unit == 1
+    /// second dedicated on the reference V100 / 1e6 scale, see
+    /// `workloads::calib`); `artifact` names the PJRT executable that
+    /// carries this kernel's real numerics.
+    Launch {
+        kernel: String,
+        grid: ValueId,
+        block: ValueId,
+        args: Vec<ValueId>,
+        work: ValueId,
+        artifact: Option<String>,
+    },
+    /// cudaDeviceSetLimit(cudaLimitMallocHeapSize, bytes).
+    DeviceSetLimit { bytes: ValueId },
+    /// cudaSetDevice: statically binds subsequent GPU operations to a
+    /// device index (the paper's §II-B default programming model; MGB
+    /// replaces these bindings with its own placement, the `static`
+    /// scheduler mode honours them).
+    SetDevice { dev: ValueId },
+    /// Call a host function (may contain GPU ops — inlined or lazy).
+    Call { callee: super::FuncId, args: Vec<ValueId> },
+    /// Host-side compute phase taking `micros` microseconds of wall time
+    /// (scalar value), e.g. file loading or CPU pre/post-processing.
+    HostCompute { micros: ValueId },
+}
+
+/// One IR operation; `result` is the value it defines (Assign, Malloc,
+/// Call-with-result unsupported — calls are void).
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: OpId,
+    pub result: Option<ValueId>,
+    pub kind: OpKind,
+}
+
+/// Block terminators.
+#[derive(Clone, Debug)]
+pub enum Terminator {
+    /// Unconditional branch.
+    Br(super::BlockId),
+    /// Conditional: branch to `taken` while the scalar `cond` (re-evaluated
+    /// each arrival, monotone counters modelled via `TripCount`) is
+    /// non-zero. Used for bounded loops.
+    CondBr {
+        /// Remaining-trips counter: the interpreter decrements a trip
+        /// budget seeded from this scalar; the analyses treat it as an
+        /// opaque condition.
+        trips: ValueId,
+        taken: super::BlockId,
+        fallthrough: super::BlockId,
+    },
+    Ret,
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(c) => write!(f, "{c}"),
+            Expr::Value(v) => write!(f, "v{v}"),
+            Expr::Add(a, b) => write!(f, "({a} + {b})"),
+            Expr::Sub(a, b) => write!(f, "({a} - {b})"),
+            Expr::Mul(a, b) => write!(f, "({a} * {b})"),
+            Expr::CeilDiv(a, b) => write!(f, "ceil({a} / {b})"),
+            Expr::Max(a, b) => write!(f, "max({a}, {b})"),
+            Expr::Min(a, b) => write!(f, "min({a}, {b})"),
+        }
+    }
+}

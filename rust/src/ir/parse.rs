@@ -1,0 +1,381 @@
+//! Text parser for the IR — the inverse of `Program`'s `Display`.
+//!
+//! Accepts exactly the fully-parenthesised form the pretty-printer
+//! emits, so `parse(program.to_string())` round-trips (property-tested
+//! in `compiler::tests`). Used by the CLI (`mgb compile <file.gir>`) and
+//! by tests that keep fixture programs as text.
+
+use super::op::{CopyDir, Expr, Op, OpId, OpKind, Terminator, ValueId};
+use super::program::{Block, FuncId, Function, Program};
+use anyhow::{anyhow, bail, Context, Result};
+
+pub fn parse_program(text: &str) -> Result<Program> {
+    let mut funcs: Vec<Function> = Vec::new();
+    let mut entry: Option<FuncId> = None;
+    // First pass: collect function names so calls can resolve forward.
+    let mut names: Vec<String> = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("func ") {
+            let name = rest.split('(').next().unwrap_or("").trim().to_string();
+            names.push(name);
+        }
+    }
+
+    let mut lines = text.lines().peekable();
+    while let Some(line) = lines.next() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with("//") {
+            continue;
+        }
+        let Some(rest) = t.strip_prefix("func ") else {
+            bail!("expected `func`, got: {t}");
+        };
+        let name = rest.split('(').next().unwrap().trim().to_string();
+        let n_params: u32 = rest
+            .split('(')
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .context("func header params")?
+            .parse()
+            .context("param count")?;
+        if rest.contains("[entry]") {
+            entry = Some(funcs.len() as FuncId);
+        }
+        let mut blocks: Vec<Block> = Vec::new();
+        let mut cur: Option<Block> = None;
+        let mut next_op: OpId = 0;
+        let mut max_value: ValueId = n_params.saturating_sub(1);
+        loop {
+            let Some(line) = lines.next() else {
+                bail!("unexpected EOF in func {name}")
+            };
+            let t = line.trim();
+            if t == "}" {
+                if let Some(b) = cur.take() {
+                    blocks.push(b);
+                }
+                break;
+            }
+            if t.is_empty() || t.starts_with("//") {
+                continue;
+            }
+            if t.starts_with('b') && t.ends_with(':') {
+                if let Some(b) = cur.take() {
+                    blocks.push(b);
+                }
+                cur = Some(Block { ops: Vec::new(), term: Terminator::Ret });
+                continue;
+            }
+            let blk = cur.as_mut().context("op before first block label")?;
+            if let Some(term) = parse_terminator(t)? {
+                blk.term = term;
+                continue;
+            }
+            let (op, vmax) = parse_op(t, next_op, &names)?;
+            next_op += 1;
+            max_value = max_value.max(vmax);
+            blk.ops.push(op);
+        }
+        funcs.push(Function {
+            name,
+            n_params,
+            n_values: max_value + 1,
+            blocks,
+        });
+    }
+    let entry = entry
+        .or_else(|| {
+            funcs
+                .iter()
+                .position(|f| f.name == "main")
+                .map(|i| i as FuncId)
+        })
+        .context("no [entry] function and no `main`")?;
+    let p = Program { funcs, entry };
+    p.validate().map_err(|e| anyhow!("invalid program: {e}"))?;
+    Ok(p)
+}
+
+fn parse_terminator(t: &str) -> Result<Option<Terminator>> {
+    if t == "ret" {
+        return Ok(Some(Terminator::Ret));
+    }
+    if let Some(rest) = t.strip_prefix("br ") {
+        return Ok(Some(Terminator::Br(parse_block_ref(rest.trim())?)));
+    }
+    if let Some(rest) = t.strip_prefix("loop ") {
+        let parts: Vec<&str> = rest.split_whitespace().collect();
+        if parts.len() != 3 {
+            bail!("loop needs `loop vN bT bF`: {t}");
+        }
+        return Ok(Some(Terminator::CondBr {
+            trips: parse_value_ref(parts[0])?,
+            taken: parse_block_ref(parts[1])?,
+            fallthrough: parse_block_ref(parts[2])?,
+        }));
+    }
+    Ok(None)
+}
+
+fn parse_op(t: &str, id: OpId, names: &[String]) -> Result<(Op, ValueId)> {
+    let mut result = None;
+    let mut body = t;
+    if let Some(eq) = t.find(" = ") {
+        result = Some(parse_value_ref(&t[..eq])?);
+        body = &t[eq + 3..];
+    }
+    let mut max_v = result.unwrap_or(0);
+    let mut track = |v: ValueId| {
+        max_v = max_v.max(v);
+        v
+    };
+    let kind = if let Some(rest) = body.strip_prefix("assign ") {
+        let expr = ExprParser::new(rest.trim()).parse()?;
+        let mut refs = Vec::new();
+        expr.referenced_values(&mut refs);
+        for r in refs {
+            track(r);
+        }
+        OpKind::Assign { expr }
+    } else if let Some(rest) = body.strip_prefix("malloc ") {
+        OpKind::Malloc { bytes: track(parse_value_ref(rest.trim())?) }
+    } else if let Some(rest) = body.strip_prefix("h2d ") {
+        let (a, b) = two_values(rest)?;
+        OpKind::Memcpy { obj: track(a), bytes: track(b), dir: CopyDir::HostToDevice }
+    } else if let Some(rest) = body.strip_prefix("d2h ") {
+        let (a, b) = two_values(rest)?;
+        OpKind::Memcpy { obj: track(a), bytes: track(b), dir: CopyDir::DeviceToHost }
+    } else if let Some(rest) = body.strip_prefix("memset ") {
+        let (a, b) = two_values(rest)?;
+        OpKind::Memset { obj: track(a), bytes: track(b) }
+    } else if let Some(rest) = body.strip_prefix("free ") {
+        OpKind::Free { obj: track(parse_value_ref(rest.trim())?) }
+    } else if let Some(rest) = body.strip_prefix("set_heap_limit ") {
+        OpKind::DeviceSetLimit { bytes: track(parse_value_ref(rest.trim())?) }
+    } else if let Some(rest) = body.strip_prefix("set_device ") {
+        OpKind::SetDevice { dev: track(parse_value_ref(rest.trim())?) }
+    } else if let Some(rest) = body.strip_prefix("host_compute ") {
+        OpKind::HostCompute { micros: track(parse_value_ref(rest.trim())?) }
+    } else if let Some(rest) = body.strip_prefix("call ") {
+        let (fname, args_s) = rest.split_once('[').context("call args")?;
+        let callee = names
+            .iter()
+            .position(|n| n == fname.trim())
+            .with_context(|| format!("unknown function {fname}"))? as FuncId;
+        let args = parse_value_list(args_s.trim_end_matches(']'))?;
+        for &a in &args {
+            track(a);
+        }
+        OpKind::Call { callee, args }
+    } else if let Some(rest) = body.strip_prefix("launch ") {
+        let mut kernel = String::new();
+        let (mut grid, mut block, mut work) = (None, None, None);
+        let mut args = Vec::new();
+        for (i, tok) in rest.split_whitespace().enumerate() {
+            if i == 0 {
+                kernel = tok.to_string();
+            } else if let Some(v) = tok.strip_prefix("grid=") {
+                grid = Some(parse_value_ref(v)?);
+            } else if let Some(v) = tok.strip_prefix("block=") {
+                block = Some(parse_value_ref(v)?);
+            } else if let Some(v) = tok.strip_prefix("work=") {
+                work = Some(parse_value_ref(v)?);
+            } else if let Some(v) = tok.strip_prefix("args=[") {
+                args = parse_value_list(v.trim_end_matches(']'))?;
+            }
+        }
+        for &a in &args {
+            track(a);
+        }
+        OpKind::Launch {
+            kernel,
+            grid: track(grid.context("launch grid")?),
+            block: track(block.context("launch block")?),
+            args,
+            work: track(work.context("launch work")?),
+            artifact: None,
+        }
+    } else {
+        bail!("unknown op: {t}");
+    };
+    Ok((Op { id, result, kind }, max_v))
+}
+
+fn two_values(rest: &str) -> Result<(ValueId, ValueId)> {
+    let parts: Vec<&str> = rest.split_whitespace().collect();
+    if parts.len() != 2 {
+        bail!("expected two values: {rest}");
+    }
+    Ok((parse_value_ref(parts[0])?, parse_value_ref(parts[1])?))
+}
+
+fn parse_value_list(s: &str) -> Result<Vec<ValueId>> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',').map(|p| parse_value_ref(p.trim())).collect()
+}
+
+fn parse_value_ref(s: &str) -> Result<ValueId> {
+    s.trim()
+        .strip_prefix('v')
+        .with_context(|| format!("expected vN, got {s}"))?
+        .parse()
+        .with_context(|| format!("bad value ref {s}"))
+}
+
+fn parse_block_ref(s: &str) -> Result<super::program::BlockId> {
+    s.trim()
+        .strip_prefix('b')
+        .with_context(|| format!("expected bN, got {s}"))?
+        .parse()
+        .with_context(|| format!("bad block ref {s}"))
+}
+
+/// Recursive-descent parser for the fully-parenthesised Expr form.
+struct ExprParser<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ExprParser<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { s: s.as_bytes(), pos: 0 }
+    }
+
+    fn parse(&mut self) -> Result<Expr> {
+        let e = self.expr()?;
+        self.skip_ws();
+        if self.pos != self.s.len() {
+            bail!("trailing input in expr at {}", self.pos);
+        }
+        Ok(e)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'(') => {
+                self.pos += 1;
+                let lhs = self.expr()?;
+                self.skip_ws();
+                let op = self.next().context("binop")?;
+                let rhs = self.expr()?;
+                self.skip_ws();
+                self.expect(b')')?;
+                Ok(match op {
+                    b'+' => lhs.add(rhs),
+                    b'-' => lhs.sub(rhs),
+                    b'*' => lhs.mul(rhs),
+                    o => bail!("unknown binop '{}'", o as char),
+                })
+            }
+            Some(b'c') if self.starts_with("ceil(") => {
+                self.pos += 5;
+                let a = self.expr()?;
+                self.skip_ws();
+                self.expect(b'/')?;
+                let b = self.expr()?;
+                self.skip_ws();
+                self.expect(b')')?;
+                Ok(a.ceil_div(b))
+            }
+            Some(b'm') if self.starts_with("max(") || self.starts_with("min(") => {
+                let is_max = self.starts_with("max(");
+                self.pos += 4;
+                let a = self.expr()?;
+                self.skip_ws();
+                self.expect(b',')?;
+                let b = self.expr()?;
+                self.skip_ws();
+                self.expect(b')')?;
+                Ok(if is_max { a.max(b) } else { a.min(b) })
+            }
+            Some(b'v') => {
+                self.pos += 1;
+                Ok(Expr::v(self.number()? as ValueId))
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Expr::c(self.number()?)),
+            other => bail!("unexpected expr start: {other:?}"),
+        }
+    }
+
+    fn starts_with(&self, p: &str) -> bool {
+        self.s[self.pos..].starts_with(p.as_bytes())
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        Some(c)
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.skip_ws();
+        if self.next() != Some(c) {
+            bail!("expected '{}' at {}", c as char, self.pos);
+        }
+        Ok(())
+    }
+
+    fn number(&mut self) -> Result<i64> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.pos])?
+            .parse()
+            .context("number")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_roundtrip() {
+        let e = Expr::v(3).mul(Expr::c(4)).add(Expr::c(7).ceil_div(Expr::v(1)));
+        let s = e.to_string();
+        let p = ExprParser::new(&s).parse().unwrap();
+        assert_eq!(p.to_string(), s);
+    }
+
+    #[test]
+    fn parse_simple_program() {
+        let text = "\
+func main(1 params) [entry] {
+b0:
+  v1 = assign (v0 * 4)
+  v2 = malloc v1
+  h2d v2 v1
+  v3 = assign ceil(v0 / 128)
+  v4 = assign 256
+  v5 = assign 1000
+  launch vadd grid=v3 block=v4 args=[v2] work=v5
+  d2h v2 v1
+  free v2
+  ret
+}
+";
+        let p = parse_program(text).unwrap();
+        assert_eq!(p.main().n_ops(), 9);
+        // Round-trip through Display.
+        let p2 = parse_program(&p.to_string()).unwrap();
+        assert_eq!(p.to_string(), p2.to_string());
+    }
+}

@@ -1,0 +1,199 @@
+//! Functions, basic blocks and whole programs.
+
+use super::op::{Op, OpId, OpKind, Terminator, ValueId};
+use std::collections::HashMap;
+use std::fmt;
+
+pub type BlockId = u32;
+pub type FuncId = u32;
+
+/// A basic block: straight-line ops plus one terminator.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ops: Vec<Op>,
+    pub term: Terminator,
+}
+
+/// A host function. Values `0..n_params` are parameters; further values
+/// are op results. Block 0 is the entry.
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    pub n_params: u32,
+    pub n_values: u32,
+    pub blocks: Vec<Block>,
+}
+
+impl Function {
+    /// Iterate `(block, position, &op)` in layout order.
+    pub fn ops(&self) -> impl Iterator<Item = (BlockId, usize, &Op)> {
+        self.blocks.iter().enumerate().flat_map(|(b, blk)| {
+            blk.ops
+                .iter()
+                .enumerate()
+                .map(move |(i, op)| (b as BlockId, i, op))
+        })
+    }
+
+    /// Find an op by id.
+    pub fn op(&self, id: OpId) -> Option<(&Op, BlockId, usize)> {
+        for (b, i, op) in self.ops() {
+            if op.id == id {
+                return Some((op, b, i));
+            }
+        }
+        None
+    }
+
+    /// Location (block, index) of an op id; panics if absent.
+    pub fn loc(&self, id: OpId) -> (BlockId, usize) {
+        let (_, b, i) = self.op(id).unwrap_or_else(|| panic!("no op {id}"));
+        (b, i)
+    }
+
+    /// Total op count.
+    pub fn n_ops(&self) -> usize {
+        self.blocks.iter().map(|b| b.ops.len()).sum()
+    }
+}
+
+/// A whole application: functions plus the entry (`main`) id.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub funcs: Vec<Function>,
+    pub entry: FuncId,
+}
+
+impl Program {
+    pub fn main(&self) -> &Function {
+        &self.funcs[self.entry as usize]
+    }
+
+    pub fn func_by_name(&self, name: &str) -> Option<(FuncId, &Function)> {
+        self.funcs
+            .iter()
+            .enumerate()
+            .find(|(_, f)| f.name == name)
+            .map(|(i, f)| (i as FuncId, f))
+    }
+
+    /// Validate structural invariants: terminator targets in range,
+    /// operand values defined before use within a block-order walk
+    /// (approximate SSA check), op ids unique.
+    pub fn validate(&self) -> Result<(), String> {
+        for f in &self.funcs {
+            let mut seen_ops = HashMap::new();
+            for (b, i, op) in f.ops() {
+                if let Some(prev) = seen_ops.insert(op.id, (b, i)) {
+                    return Err(format!("{}: duplicate op id {} at {:?}", f.name, op.id, prev));
+                }
+                if let Some(r) = op.result {
+                    if r < f.n_params || r >= f.n_values {
+                        return Err(format!("{}: op {} result v{} out of range", f.name, op.id, r));
+                    }
+                }
+                for v in op_operands(&op.kind) {
+                    if v >= f.n_values {
+                        return Err(format!("{}: op {} reads undefined v{}", f.name, op.id, v));
+                    }
+                }
+                if let OpKind::Call { callee, .. } = &op.kind {
+                    if *callee as usize >= self.funcs.len() {
+                        return Err(format!("{}: call to missing func {}", f.name, callee));
+                    }
+                }
+            }
+            for blk in &f.blocks {
+                let targets: Vec<BlockId> = match &blk.term {
+                    Terminator::Br(t) => vec![*t],
+                    Terminator::CondBr { taken, fallthrough, .. } => vec![*taken, *fallthrough],
+                    Terminator::Ret => vec![],
+                };
+                for t in targets {
+                    if t as usize >= f.blocks.len() {
+                        return Err(format!("{}: branch to missing block {t}", f.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All scalar/memobj value operands an op reads (not its result).
+pub fn op_operands(kind: &OpKind) -> Vec<ValueId> {
+    match kind {
+        OpKind::Assign { expr } => {
+            let mut v = Vec::new();
+            expr.referenced_values(&mut v);
+            v
+        }
+        OpKind::Malloc { bytes } => vec![*bytes],
+        OpKind::Memcpy { obj, bytes, .. } | OpKind::Memset { obj, bytes } => vec![*obj, *bytes],
+        OpKind::Free { obj } => vec![*obj],
+        OpKind::Launch { grid, block, args, work, .. } => {
+            let mut v = vec![*grid, *block, *work];
+            v.extend(args.iter().copied());
+            v
+        }
+        OpKind::DeviceSetLimit { bytes } => vec![*bytes],
+        OpKind::SetDevice { dev } => vec![*dev],
+        OpKind::Call { args, .. } => args.clone(),
+        OpKind::HostCompute { micros } => vec![*micros],
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (fi, func) in self.funcs.iter().enumerate() {
+            let entry = if fi as FuncId == self.entry { " [entry]" } else { "" };
+            writeln!(f, "func {}({} params){entry} {{", func.name, func.n_params)?;
+            for (b, blk) in func.blocks.iter().enumerate() {
+                writeln!(f, "b{b}:")?;
+                for op in &blk.ops {
+                    write!(f, "  ")?;
+                    if let Some(r) = op.result {
+                        write!(f, "v{r} = ")?;
+                    }
+                    match &op.kind {
+                        OpKind::Assign { expr } => writeln!(f, "assign {expr}")?,
+                        OpKind::Malloc { bytes } => writeln!(f, "malloc v{bytes}")?,
+                        OpKind::Memcpy { obj, bytes, dir } => {
+                            let d = match dir {
+                                super::op::CopyDir::HostToDevice => "h2d",
+                                super::op::CopyDir::DeviceToHost => "d2h",
+                            };
+                            writeln!(f, "{d} v{obj} v{bytes}")?
+                        }
+                        OpKind::Memset { obj, bytes } => writeln!(f, "memset v{obj} v{bytes}")?,
+                        OpKind::Free { obj } => writeln!(f, "free v{obj}")?,
+                        OpKind::Launch { kernel, grid, block, args, work, .. } => {
+                            let a: Vec<String> = args.iter().map(|v| format!("v{v}")).collect();
+                            writeln!(
+                                f,
+                                "launch {kernel} grid=v{grid} block=v{block} args=[{}] work=v{work}",
+                                a.join(",")
+                            )?
+                        }
+                        OpKind::DeviceSetLimit { bytes } => writeln!(f, "set_heap_limit v{bytes}")?,
+                        OpKind::SetDevice { dev } => writeln!(f, "set_device v{dev}")?,
+                        OpKind::Call { callee, args } => {
+                            let a: Vec<String> = args.iter().map(|v| format!("v{v}")).collect();
+                            writeln!(f, "call {} [{}]", self.funcs[*callee as usize].name, a.join(","))?
+                        }
+                        OpKind::HostCompute { micros } => writeln!(f, "host_compute v{micros}")?,
+                    }
+                }
+                match &blk.term {
+                    Terminator::Br(t) => writeln!(f, "  br b{t}")?,
+                    Terminator::CondBr { trips, taken, fallthrough } => {
+                        writeln!(f, "  loop v{trips} b{taken} b{fallthrough}")?
+                    }
+                    Terminator::Ret => writeln!(f, "  ret")?,
+                }
+            }
+            writeln!(f, "}}")?;
+        }
+        Ok(())
+    }
+}

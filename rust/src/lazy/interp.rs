@@ -1,0 +1,710 @@
+//! The interpreter + lazy runtime proper.
+
+use super::trace::{JobTrace, TaskResources, TraceEvent};
+use crate::compiler::CompiledProgram;
+use crate::ir::{CopyDir, Expr, Function, Op, OpKind, Terminator, ValueId};
+use std::collections::HashMap;
+
+/// Default on-device heap (matches `compiler::tasks::DEFAULT_DEVICE_HEAP`).
+const DEFAULT_HEAP: u64 = 8 << 20;
+
+#[derive(Debug)]
+pub enum InterpError {
+    /// A scalar expression referenced a memory object or vice versa.
+    TypeConfusion(String),
+    /// Value read before any definition executed (invalid program).
+    Undefined(ValueId),
+    /// Run-away execution guard tripped.
+    StepLimit,
+}
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpError::TypeConfusion(s) => write!(f, "type confusion: {s}"),
+            InterpError::Undefined(v) => write!(f, "undefined value v{v}"),
+            InterpError::StepLimit => write!(f, "step limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for InterpError {}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Value {
+    Scalar(i64),
+    Obj(usize),
+}
+
+/// Queued (lazily bound) GPU operation on one pseudo-addressed object.
+#[derive(Clone, Debug)]
+enum Queued {
+    Malloc { bytes: u64 },
+    H2D { bytes: u64 },
+    D2H { bytes: u64 },
+    Memset { bytes: u64 },
+}
+
+#[derive(Debug, Default)]
+struct ObjState {
+    bytes: u64,
+    queued: Vec<Queued>,
+    /// Owning runtime task once bound (static task id or dynamic id).
+    task: Option<usize>,
+    allocated: bool,
+    freed: bool,
+}
+
+#[derive(Debug, Default)]
+struct TaskState {
+    began: bool,
+    launches: usize,
+    open_objs: usize,
+    ended: bool,
+}
+
+struct Interp<'a> {
+    c: &'a CompiledProgram,
+    trace: JobTrace,
+    objs: Vec<ObjState>,
+    tasks: HashMap<usize, TaskState>,
+    next_dyn_task: usize,
+    heap_limit: u64,
+    /// Last cudaSetDevice value (None until the app calls it).
+    cur_device: Option<u32>,
+    steps: usize,
+    /// op id -> static task id, for non-lazy tasks only.
+    static_op_task: HashMap<u32, usize>,
+    /// probe location (block, idx) -> static task id (entry function).
+    probes: HashMap<(u32, usize), usize>,
+}
+
+const STEP_LIMIT: usize = 50_000_000;
+
+/// Execute the compiled program's entry with `params`, producing the
+/// job's device-independent operation trace.
+pub fn interpret(c: &CompiledProgram, params: &[i64]) -> Result<JobTrace, InterpError> {
+    let mut static_op_task = HashMap::new();
+    let mut probes = HashMap::new();
+    for t in &c.tasks {
+        if t.lazy {
+            continue;
+        }
+        for &o in &t.ops {
+            static_op_task.insert(o, t.id);
+        }
+        if let Some(loc) = t.probe_at {
+            probes.insert(loc, t.id);
+        }
+    }
+    let mut it = Interp {
+        c,
+        trace: JobTrace::default(),
+        objs: Vec::new(),
+        tasks: HashMap::new(),
+        next_dyn_task: c.tasks.len(),
+        heap_limit: DEFAULT_HEAP,
+        cur_device: None,
+        steps: 0,
+        static_op_task,
+        probes,
+    };
+    let main = c.program.main();
+    let env: Vec<Option<Value>> = params
+        .iter()
+        .map(|&p| Some(Value::Scalar(p)))
+        .chain((params.len()..main.n_values as usize).map(|_| None))
+        .collect();
+    it.run_function(main, env, true)?;
+    it.finish();
+    Ok(it.trace)
+}
+
+impl<'a> Interp<'a> {
+    fn run_function(
+        &mut self,
+        f: &Function,
+        mut env: Vec<Option<Value>>,
+        is_entry: bool,
+    ) -> Result<(), InterpError> {
+        let mut block = 0u32;
+        // Loop trip budgets keyed by block; re-initialised after exit.
+        let mut trips: HashMap<u32, i64> = HashMap::new();
+        loop {
+            let blk = &f.blocks[block as usize];
+            for (i, op) in blk.ops.iter().enumerate() {
+                self.steps += 1;
+                if self.steps > STEP_LIMIT {
+                    return Err(InterpError::StepLimit);
+                }
+                if is_entry {
+                    if let Some(&task) = self.probes.get(&(block, i)) {
+                        self.fire_probe(f, &env, task)?;
+                    }
+                }
+                self.exec_op(f, &mut env, op)?;
+            }
+            match &blk.term {
+                Terminator::Br(t) => block = *t,
+                Terminator::CondBr { trips: tv, taken, fallthrough } => {
+                    let remaining = match trips.get(&block) {
+                        Some(&r) => r,
+                        None => {
+                            let n = self.eval_scalar(f, &env, &Expr::v(*tv))?;
+                            trips.insert(block, n);
+                            n
+                        }
+                    };
+                    if remaining > 0 {
+                        trips.insert(block, remaining - 1);
+                        block = *taken;
+                    } else {
+                        trips.remove(&block);
+                        block = *fallthrough;
+                    }
+                }
+                Terminator::Ret => return Ok(()),
+            }
+        }
+    }
+
+    fn exec_op(
+        &mut self,
+        f: &Function,
+        env: &mut Vec<Option<Value>>,
+        op: &Op,
+    ) -> Result<(), InterpError> {
+        match &op.kind {
+            OpKind::Assign { expr } => {
+                let v = self.eval_expr(f, env, expr)?;
+                env[op.result.unwrap() as usize] = Some(Value::Scalar(v));
+            }
+            OpKind::Malloc { bytes } => {
+                let bytes = self.eval_scalar(f, env, &Expr::v(*bytes))? as u64;
+                let obj = self.objs.len();
+                self.objs.push(ObjState { bytes, ..Default::default() });
+                env[op.result.unwrap() as usize] = Some(Value::Obj(obj));
+                if let Some(&task) = self.static_op_task.get(&op.id) {
+                    self.bind_obj(obj, task);
+                    self.objs[obj].allocated = true;
+                    self.tasks.entry(task).or_default().open_objs += 1;
+                    self.emit(TraceEvent::Malloc { task, bytes });
+                } else {
+                    self.objs[obj].queued.push(Queued::Malloc { bytes });
+                }
+            }
+            OpKind::Memcpy { obj, bytes, dir } => {
+                let o = self.obj_of(env, *obj)?;
+                let bytes = self.eval_scalar(f, env, &Expr::v(*bytes))? as u64;
+                let ev = |task| match dir {
+                    CopyDir::HostToDevice => TraceEvent::H2D { task, bytes },
+                    CopyDir::DeviceToHost => TraceEvent::D2H { task, bytes },
+                };
+                match self.owning_task(op.id, o) {
+                    Some(task) => self.emit(ev(task)),
+                    None => self.objs[o].queued.push(match dir {
+                        CopyDir::HostToDevice => Queued::H2D { bytes },
+                        CopyDir::DeviceToHost => Queued::D2H { bytes },
+                    }),
+                }
+            }
+            OpKind::Memset { obj, bytes } => {
+                let o = self.obj_of(env, *obj)?;
+                let bytes = self.eval_scalar(f, env, &Expr::v(*bytes))? as u64;
+                match self.owning_task(op.id, o) {
+                    Some(task) => self.emit(TraceEvent::Memset { task, bytes }),
+                    None => self.objs[o].queued.push(Queued::Memset { bytes }),
+                }
+            }
+            OpKind::Free { obj } => {
+                let o = self.obj_of(env, *obj)?;
+                match self.owning_task(op.id, o) {
+                    Some(task) => {
+                        let bytes = self.objs[o].bytes;
+                        if self.objs[o].allocated && !self.objs[o].freed {
+                            self.objs[o].freed = true;
+                            self.emit(TraceEvent::Free { task, bytes });
+                            let st = self.tasks.entry(task).or_default();
+                            st.open_objs = st.open_objs.saturating_sub(1);
+                            if st.open_objs == 0 && st.launches > 0 && st.began && !st.ended {
+                                st.ended = true;
+                                self.emit(TraceEvent::TaskEnd { task });
+                            }
+                        }
+                    }
+                    None => {
+                        // Freed before any launch bound it: drop the
+                        // queued ops — the computation never touched a
+                        // device (dead allocation).
+                        self.objs[o].queued.clear();
+                        self.objs[o].freed = true;
+                    }
+                }
+            }
+            OpKind::Launch { kernel, grid, block, args, work, artifact } => {
+                let grid_v = self.eval_scalar(f, env, &Expr::v(*grid))? as u64;
+                let block_v = self.eval_scalar(f, env, &Expr::v(*block))? as u64;
+                let work_v = self.eval_scalar(f, env, &Expr::v(*work))? as u64;
+                let task = if let Some(&t) = self.static_op_task.get(&op.id) {
+                    t
+                } else {
+                    self.kernel_launch_prepare(env, args, grid_v, block_v)?
+                };
+                let st = self.tasks.entry(task).or_default();
+                st.launches += 1;
+                self.emit(TraceEvent::Launch {
+                    task,
+                    kernel: kernel.clone(),
+                    artifact: artifact.clone(),
+                    grid: grid_v,
+                    block: block_v,
+                    work_us: work_v,
+                });
+            }
+            OpKind::DeviceSetLimit { bytes } => {
+                self.heap_limit = self.eval_scalar(f, env, &Expr::v(*bytes))? as u64;
+            }
+            OpKind::SetDevice { dev } => {
+                self.cur_device = Some(self.eval_scalar(f, env, &Expr::v(*dev))? as u32);
+            }
+            OpKind::Call { callee, args } => {
+                let callee_f = &self.c.program.funcs[*callee as usize];
+                let mut cenv: Vec<Option<Value>> = Vec::with_capacity(callee_f.n_values as usize);
+                for &a in args {
+                    cenv.push(Some(self.value(env, a)?));
+                }
+                cenv.resize(callee_f.n_values as usize, None);
+                self.run_function(callee_f, cenv, false)?;
+            }
+            OpKind::HostCompute { micros } => {
+                let us = self.eval_scalar(f, env, &Expr::v(*micros))? as u64;
+                self.emit(TraceEvent::Host { micros: us });
+            }
+        }
+        Ok(())
+    }
+
+    /// kernelLaunchPrepare: bind queued ops of the launch's memory
+    /// objects to a task, emitting TaskBegin + the replayed queue.
+    fn kernel_launch_prepare(
+        &mut self,
+        env: &[Option<Value>],
+        args: &[ValueId],
+        grid: u64,
+        block: u64,
+    ) -> Result<usize, InterpError> {
+        let mut objs = Vec::new();
+        for &a in args {
+            objs.push(self.obj_of(env, a)?);
+        }
+        // Reuse an open task already owning one of the objects.
+        let existing = objs.iter().find_map(|&o| {
+            self.objs[o]
+                .task
+                .filter(|t| self.tasks.get(t).map(|s| !s.ended).unwrap_or(false))
+        });
+        let task = existing.unwrap_or_else(|| {
+            let t = self.next_dyn_task;
+            self.next_dyn_task += 1;
+            t
+        });
+        if existing.is_none() {
+            // Resource vector from the pending allocations.
+            let mem: u64 = objs
+                .iter()
+                .map(|&o| {
+                    self.objs[o]
+                        .queued
+                        .iter()
+                        .map(|q| match q {
+                            Queued::Malloc { bytes } => *bytes,
+                            _ => 0,
+                        })
+                        .sum::<u64>()
+                })
+                .sum();
+            let res = TaskResources {
+                static_dev: self.cur_device,
+                mem_bytes: mem,
+                heap_bytes: self.heap_limit,
+                grid,
+                block,
+            };
+            self.emit(TraceEvent::TaskBegin { task, res });
+            self.tasks.entry(task).or_default().began = true;
+        }
+        // Replay queues of newly-bound objects.
+        for &o in &objs {
+            if self.objs[o].task.is_some() {
+                continue;
+            }
+            self.bind_obj(o, task);
+            let queued = std::mem::take(&mut self.objs[o].queued);
+            for q in queued {
+                match q {
+                    Queued::Malloc { bytes } => {
+                        self.objs[o].allocated = true;
+                        self.tasks.entry(task).or_default().open_objs += 1;
+                        self.emit(TraceEvent::Malloc { task, bytes });
+                    }
+                    Queued::H2D { bytes } => self.emit(TraceEvent::H2D { task, bytes }),
+                    Queued::D2H { bytes } => self.emit(TraceEvent::D2H { task, bytes }),
+                    Queued::Memset { bytes } => self.emit(TraceEvent::Memset { task, bytes }),
+                }
+            }
+        }
+        Ok(task)
+    }
+
+    /// The task an op on object `o` belongs to right now, if bound.
+    fn owning_task(&mut self, op_id: u32, o: usize) -> Option<usize> {
+        if let Some(&t) = self.static_op_task.get(&op_id) {
+            // Static op: its object is (or will be) bound to this task.
+            if self.objs[o].task.is_none() {
+                self.bind_obj(o, t);
+            }
+            return Some(t);
+        }
+        self.objs[o]
+            .task
+            .filter(|t| self.tasks.get(t).map(|s| !s.ended).unwrap_or(false))
+    }
+
+    fn bind_obj(&mut self, o: usize, task: usize) {
+        self.objs[o].task = Some(task);
+    }
+
+    /// Fire a static probe: interpret the task's symbolic resources.
+    fn fire_probe(
+        &mut self,
+        f: &Function,
+        env: &[Option<Value>],
+        task: usize,
+    ) -> Result<(), InterpError> {
+        let st = self.tasks.entry(task).or_default();
+        if st.began {
+            return Ok(());
+        }
+        st.began = true;
+        let t = &self.c.tasks[task];
+        let res = TaskResources {
+            static_dev: self.cur_device,
+            mem_bytes: self.eval_expr(f, env, &t.mem_bytes)? as u64,
+            heap_bytes: self.eval_expr(f, env, &t.heap_bytes)? as u64,
+            grid: self.eval_expr(f, env, &t.grid)? as u64,
+            block: self.eval_expr(f, env, &t.block)? as u64,
+        };
+        self.emit(TraceEvent::TaskBegin { task, res });
+        Ok(())
+    }
+
+    /// Close any still-open tasks at process exit (CUDA frees device
+    /// state when the process ends).
+    fn finish(&mut self) {
+        let mut open: Vec<usize> = self
+            .tasks
+            .iter()
+            .filter(|(_, s)| s.began && !s.ended)
+            .map(|(&t, _)| t)
+            .collect();
+        open.sort_unstable();
+        for t in open {
+            self.tasks.get_mut(&t).unwrap().ended = true;
+            self.emit(TraceEvent::TaskEnd { task: t });
+        }
+    }
+
+    fn emit(&mut self, e: TraceEvent) {
+        self.trace.events.push(e);
+    }
+
+    fn value(&self, env: &[Option<Value>], v: ValueId) -> Result<Value, InterpError> {
+        env.get(v as usize)
+            .copied()
+            .flatten()
+            .ok_or(InterpError::Undefined(v))
+    }
+
+    fn obj_of(&self, env: &[Option<Value>], v: ValueId) -> Result<usize, InterpError> {
+        match self.value(env, v)? {
+            Value::Obj(o) => Ok(o),
+            Value::Scalar(_) => Err(InterpError::TypeConfusion(format!(
+                "v{v} used as memory object but holds a scalar"
+            ))),
+        }
+    }
+
+    /// Evaluate an expression; values not yet executed are computed
+    /// on demand through their (pure Assign) defs — this is exactly the
+    /// probe "interpreting symbols" (§III-A1).
+    fn eval_expr(
+        &self,
+        f: &Function,
+        env: &[Option<Value>],
+        e: &Expr,
+    ) -> Result<i64, InterpError> {
+        Ok(match e {
+            Expr::Const(c) => *c,
+            Expr::Value(v) => match env.get(*v as usize).copied().flatten() {
+                Some(Value::Scalar(s)) => s,
+                Some(Value::Obj(_)) => {
+                    return Err(InterpError::TypeConfusion(format!(
+                        "v{v} used as scalar but holds an object"
+                    )))
+                }
+                None => {
+                    // Hoisted evaluation through the pure def.
+                    let (op, _, _) = f
+                        .ops()
+                        .find(|(_, _, o)| o.result == Some(*v))
+                        .map(|(_, _, o)| (o, 0, 0))
+                        .ok_or(InterpError::Undefined(*v))?;
+                    match &op.kind {
+                        OpKind::Assign { expr } => self.eval_expr(f, env, expr)?,
+                        _ => return Err(InterpError::Undefined(*v)),
+                    }
+                }
+            },
+            Expr::Add(a, b) => self.eval_expr(f, env, a)? + self.eval_expr(f, env, b)?,
+            Expr::Sub(a, b) => self.eval_expr(f, env, a)? - self.eval_expr(f, env, b)?,
+            Expr::Mul(a, b) => self.eval_expr(f, env, a)? * self.eval_expr(f, env, b)?,
+            Expr::CeilDiv(a, b) => {
+                let (a, b) = (self.eval_expr(f, env, a)?, self.eval_expr(f, env, b)?);
+                if b == 0 {
+                    0
+                } else {
+                    (a + b - 1) / b
+                }
+            }
+            Expr::Max(a, b) => self.eval_expr(f, env, a)?.max(self.eval_expr(f, env, b)?),
+            Expr::Min(a, b) => self.eval_expr(f, env, a)?.min(self.eval_expr(f, env, b)?),
+        })
+    }
+
+    fn eval_scalar(
+        &self,
+        f: &Function,
+        env: &[Option<Value>],
+        e: &Expr,
+    ) -> Result<i64, InterpError> {
+        self.eval_expr(f, env, e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::ir::{Expr, ProgramBuilder};
+
+    fn vecadd() -> CompiledProgram {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let da = f.malloc(sz);
+            let db = f.malloc(sz);
+            let dc = f.malloc(sz);
+            f.h2d(da, sz);
+            f.h2d(db, sz);
+            let grid = f.assign(Expr::v(n).ceil_div(Expr::c(128)));
+            let block = f.c(128);
+            let work = f.c(1_000);
+            f.launch("VecAdd", grid, block, &[da, db, dc], work);
+            f.d2h(dc, sz);
+            f.free(da);
+            f.free(db);
+            f.free(dc);
+        });
+        compile(&pb.finish())
+    }
+
+    #[test]
+    fn static_vecadd_trace_is_well_formed() {
+        let trace = interpret(&vecadd(), &[1 << 20]).unwrap();
+        trace.check_well_formed().unwrap();
+        assert_eq!(trace.n_tasks(), 1);
+        // probe fires before any device op
+        assert!(matches!(trace.events[0], TraceEvent::TaskBegin { .. }));
+        let TraceEvent::TaskBegin { res, .. } = trace.events[0] else {
+            unreachable!()
+        };
+        assert_eq!(res.mem_bytes, 3 * 4 * (1 << 20));
+        assert_eq!(res.grid, (1 << 20) / 128);
+        assert_eq!(res.block, 128);
+        assert_eq!(res.warps(), ((1 << 20) / 128) * 4);
+        // 3 mallocs, 2 h2d, 1 launch, 1 d2h, 3 free, end
+        assert_eq!(trace.events.len(), 1 + 3 + 2 + 1 + 1 + 3 + 1);
+        assert!(matches!(trace.events.last(), Some(TraceEvent::TaskEnd { .. })));
+    }
+
+    #[test]
+    fn lazy_branch_guarded_task_binds_at_launch() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.launch("k", g, b, &[a], w);
+            let cond = f.c(1);
+            f.diamond(cond, |f| f.d2h(a, sz), |_| {});
+            f.free(a);
+        });
+        let c = compile(&pb.finish());
+        assert!(c.tasks[0].lazy);
+        let trace = interpret(&c, &[4096]).unwrap();
+        trace.check_well_formed().unwrap();
+        assert_eq!(trace.n_tasks(), 1);
+        // TaskBegin arrives before the launch, carrying the malloc bytes
+        let begin_pos = trace
+            .events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::TaskBegin { .. }))
+            .unwrap();
+        let launch_pos = trace
+            .events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::Launch { .. }))
+            .unwrap();
+        assert!(begin_pos < launch_pos);
+        let TraceEvent::TaskBegin { res, .. } = trace.events[begin_pos] else {
+            unreachable!()
+        };
+        assert_eq!(res.mem_bytes, 4096 * 4);
+        // the branch-guarded d2h executed and landed in the open task
+        assert!(trace.events.iter().any(|e| matches!(e, TraceEvent::D2H { .. })));
+    }
+
+    #[test]
+    fn loop_task_launches_per_iteration() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 2, |f| {
+            let n = f.param(0);
+            let iters = f.param(1);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let img = f.malloc(sz);
+            f.h2d(img, sz);
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            f.loop_n(iters, |f| {
+                f.launch("srad1", g, b, &[img], w);
+                f.launch("srad2", g, b, &[img], w);
+            });
+            f.d2h(img, sz);
+            f.free(img);
+        });
+        let trace = interpret(&compile(&pb.finish()), &[4096, 10]).unwrap();
+        trace.check_well_formed().unwrap();
+        assert_eq!(trace.n_tasks(), 1);
+        let launches = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Launch { .. }))
+            .count();
+        assert_eq!(launches, 20);
+        assert_eq!(trace.total_work_us(), 20 * 500);
+    }
+
+    #[test]
+    fn gpu_ops_inside_uninlined_callee_go_lazy_and_bind() {
+        // A looping helper that mallocs + launches internally: inlining
+        // skips it, the lazy runtime binds everything at launch time.
+        let mut pb = ProgramBuilder::new();
+        let helper = pb.declare("helper", 2);
+        pb.define(helper, |f| {
+            let sz = f.param(0);
+            let iters = f.param(1);
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.c(32);
+            let b = f.c(128);
+            let w = f.c(250);
+            f.loop_n(iters, |f| {
+                f.launch("inner", g, b, &[a], w);
+            });
+            f.free(a);
+        });
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(8)));
+            let it = f.c(3);
+            f.call(helper, &[sz, it]);
+        });
+        let c = compile(&pb.finish());
+        assert_eq!(c.tasks.len(), 0, "no static task visible in main");
+        let trace = interpret(&c, &[1024]).unwrap();
+        trace.check_well_formed().unwrap();
+        assert_eq!(trace.n_tasks(), 1, "dynamic task formed at launch");
+        let TraceEvent::TaskBegin { res, .. } = trace.events[0] else {
+            panic!("expected dynamic TaskBegin first, got {:?}", trace.events[0])
+        };
+        assert_eq!(res.mem_bytes, 1024 * 8);
+        assert_eq!(
+            trace
+                .events
+                .iter()
+                .filter(|e| matches!(e, TraceEvent::Launch { .. }))
+                .count(),
+            3
+        );
+    }
+
+    #[test]
+    fn two_disjoint_tasks_end_independently() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let g = f.c(64);
+            let b = f.c(256);
+            let w = f.c(500);
+            let a = f.malloc(sz);
+            f.launch("k1", g, b, &[a], w);
+            f.free(a);
+            let x = f.malloc(sz);
+            f.launch("k2", g, b, &[x], w);
+            f.free(x);
+        });
+        let trace = interpret(&compile(&pb.finish()), &[4096]).unwrap();
+        trace.check_well_formed().unwrap();
+        assert_eq!(trace.n_tasks(), 2);
+        // first task must END before the second BEGINS
+        let end1 = trace
+            .events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::TaskEnd { .. }))
+            .unwrap();
+        let begin2 = trace
+            .events
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e, TraceEvent::TaskBegin { .. }))
+            .nth(1)
+            .unwrap()
+            .0;
+        assert!(end1 < begin2);
+    }
+
+    #[test]
+    fn peak_reserved_accounts_heap() {
+        let trace = interpret(&vecadd(), &[1024]).unwrap();
+        let expected = 3 * 4 * 1024 + super::DEFAULT_HEAP;
+        assert_eq!(trace.peak_reserved_bytes(), expected);
+    }
+
+    #[test]
+    fn host_compute_passes_through() {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let us = f.c(12_345);
+            f.host_compute(us);
+        });
+        let trace = interpret(&compile(&pb.finish()), &[0]).unwrap();
+        assert_eq!(trace.total_host_us(), 12_345);
+    }
+}

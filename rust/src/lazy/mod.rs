@@ -1,0 +1,20 @@
+//! The lazy runtime (paper §III-A2) — and the bridge from compiled
+//! programs to schedulable traces.
+//!
+//! The interpreter executes a [`CompiledProgram`] with concrete
+//! parameters and produces a [`JobTrace`]: the exact stream of probe
+//! firings and GPU operations the application would issue. Statically
+//! bound tasks fire `TaskBegin` at their probe point with resources
+//! interpreted from the compiler's symbolic expressions. Everything else
+//! flows through the lazy machinery: GPU operations get *pseudo
+//! addresses* and are queued per memory object; at the first kernel
+//! launch touching those objects (`kernelLaunchPrepare`), the queues are
+//! replayed behind a freshly-minted dynamic task whose resource vector
+//! is computed from the replayed allocations — so the scheduler always
+//! learns a task's full needs before any device op executes.
+
+mod interp;
+mod trace;
+
+pub use interp::{interpret, InterpError};
+pub use trace::{JobTrace, TaskResources, TraceEvent};

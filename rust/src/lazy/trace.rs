@@ -1,0 +1,178 @@
+//! Trace events: the device-independent operation stream of one job.
+
+/// Resource vector a probe conveys to the scheduler (`task_begin`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskResources {
+    /// Device the application statically bound this task to via
+    /// cudaSetDevice, if any (honoured only by the `static` scheduler
+    /// mode; MGB overrides it — that is the paper's point).
+    pub static_dev: Option<u32>,
+    /// Global-memory footprint in bytes (sum of the task's allocations).
+    pub mem_bytes: u64,
+    /// On-device malloc heap (DeviceSetLimit or the 8 MiB default).
+    pub heap_bytes: u64,
+    /// Thread blocks of the widest member launch.
+    pub grid: u64,
+    /// Threads per block of the widest member launch.
+    pub block: u64,
+}
+
+impl TaskResources {
+    /// Total device memory the scheduler must reserve.
+    pub fn reserve_bytes(&self) -> u64 {
+        self.mem_bytes + self.heap_bytes
+    }
+
+    /// Warps needed when fully resident: grid * ceil(block / 32).
+    pub fn warps(&self) -> u64 {
+        self.grid * self.block.div_ceil(32)
+    }
+
+    /// Thread blocks requested.
+    pub fn thread_blocks(&self) -> u64 {
+        self.grid
+    }
+
+    /// Warps per thread block.
+    pub fn warps_per_tb(&self) -> u64 {
+        self.block.div_ceil(32)
+    }
+}
+
+/// One step of a job's execution, in issue order.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// Probe firing: the scheduler is asked to place task `task`.
+    TaskBegin { task: usize, res: TaskResources },
+    /// Device memory allocation (bytes) within the current placement.
+    Malloc { task: usize, bytes: u64 },
+    /// Host-to-device transfer.
+    H2D { task: usize, bytes: u64 },
+    /// Device-to-host transfer.
+    D2H { task: usize, bytes: u64 },
+    /// On-device memset.
+    Memset { task: usize, bytes: u64 },
+    /// Kernel launch. `work_us` is the dedicated-execution time on the
+    /// reference device (V100) in microseconds; `artifact` optionally
+    /// names a PJRT executable carrying the kernel's real numerics.
+    Launch {
+        task: usize,
+        kernel: String,
+        artifact: Option<String>,
+        grid: u64,
+        block: u64,
+        work_us: u64,
+    },
+    /// Device memory release.
+    Free { task: usize, bytes: u64 },
+    /// Task complete: scheduler may hand the freed capacity to waiters.
+    TaskEnd { task: usize },
+    /// Host-side compute phase (no device involvement), microseconds.
+    Host { micros: u64 },
+}
+
+/// The full trace of one job, plus derived summary numbers.
+#[derive(Clone, Debug, Default)]
+pub struct JobTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl JobTrace {
+    /// Number of distinct tasks in the trace.
+    pub fn n_tasks(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::TaskBegin { .. }))
+            .count()
+    }
+
+    /// Total dedicated kernel time (microseconds) across all launches.
+    pub fn total_work_us(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Launch { work_us, .. } => *work_us,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total host time (microseconds).
+    pub fn total_host_us(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Host { micros } => *micros,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Peak simultaneous reserved memory implied by the trace, assuming
+    /// each task's reservation is held from TaskBegin to TaskEnd.
+    pub fn peak_reserved_bytes(&self) -> u64 {
+        let mut cur = 0u64;
+        let mut peak = 0u64;
+        let mut held: std::collections::HashMap<usize, u64> = Default::default();
+        for e in &self.events {
+            match e {
+                TraceEvent::TaskBegin { task, res } => {
+                    held.insert(*task, res.reserve_bytes());
+                    cur += res.reserve_bytes();
+                    peak = peak.max(cur);
+                }
+                TraceEvent::TaskEnd { task } => {
+                    cur -= held.remove(task).unwrap_or(0);
+                }
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Structural sanity: every task begins once, ends once, and all its
+    /// ops sit between the two. Used by tests and debug assertions.
+    pub fn check_well_formed(&self) -> Result<(), String> {
+        use std::collections::HashMap;
+        #[derive(PartialEq)]
+        enum S {
+            Open,
+            Closed,
+        }
+        let mut state: HashMap<usize, S> = HashMap::new();
+        for (i, e) in self.events.iter().enumerate() {
+            let t = match e {
+                TraceEvent::TaskBegin { task, .. } => {
+                    if state.contains_key(task) {
+                        return Err(format!("event {i}: task {task} begins twice"));
+                    }
+                    state.insert(*task, S::Open);
+                    continue;
+                }
+                TraceEvent::TaskEnd { task } => {
+                    match state.get(task) {
+                        Some(S::Open) => state.insert(*task, S::Closed),
+                        _ => return Err(format!("event {i}: end of non-open task {task}")),
+                    };
+                    continue;
+                }
+                TraceEvent::Malloc { task, .. }
+                | TraceEvent::H2D { task, .. }
+                | TraceEvent::D2H { task, .. }
+                | TraceEvent::Memset { task, .. }
+                | TraceEvent::Launch { task, .. }
+                | TraceEvent::Free { task, .. } => *task,
+                TraceEvent::Host { .. } => continue,
+            };
+            if !matches!(state.get(&t), Some(S::Open)) {
+                return Err(format!("event {i}: op on non-open task {t}"));
+            }
+        }
+        for (t, s) in &state {
+            if *s == S::Open {
+                return Err(format!("task {t} never ends"));
+            }
+        }
+        Ok(())
+    }
+}

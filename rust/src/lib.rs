@@ -1,0 +1,20 @@
+//! MGB — *Effective GPU Sharing Under Compiler Guidance* (Chen, Porter,
+//! Pande; 2021), reproduced as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) implements the paper's contribution: a compiler
+//! pass over a mini-CUDA host IR that constructs **GPU tasks**, a lazy
+//! runtime that binds resource needs to tasks, and a user-level scheduler
+//! that places tasks onto the devices of a simulated multi-GPU node.
+//! Layers 2/1 (JAX models + Pallas kernels, `python/compile/`) are
+//! AOT-lowered to HLO text once and executed from Rust via PJRT
+//! (`runtime`), so every simulated kernel launch can run real numerics.
+
+pub mod bench_harness;
+pub mod compiler;
+pub mod coordinator;
+pub mod gpu;
+pub mod sched;
+pub mod workloads;
+pub mod lazy;
+pub mod ir;
+pub mod runtime;

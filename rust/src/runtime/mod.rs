@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`), compile once
+//! on the CPU PJRT client, execute from the coordinator's hot path.
+//!
+//! Interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids. See `/opt/xla-example`.
+
+mod client;
+pub mod registry;
+
+pub use client::{Executable, PjrtRuntime};
+pub use registry::KernelRegistry;

@@ -1,0 +1,121 @@
+//! Kernel registry: maps workload kernel names to compiled executables.
+//!
+//! The coordinator resolves each simulated kernel launch to an artifact
+//! by name; artifacts are compiled lazily on first use and cached, so the
+//! request path never recompiles.
+
+use super::{Executable, PjrtRuntime};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Lazily-compiled, name-addressed store of PJRT executables.
+pub struct KernelRegistry {
+    runtime: PjrtRuntime,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl KernelRegistry {
+    /// A registry over `dir` (usually `artifacts/`).
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self {
+            runtime: PjrtRuntime::cpu()?,
+            dir: dir.into(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact names available on disk (sorted).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                let p = e.path();
+                let s = p.file_name()?.to_str()?;
+                s.strip_suffix(".hlo.txt").map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Parse `manifest.txt` into (name -> input shapes).
+    pub fn manifest(&self) -> Result<Vec<(String, Vec<Vec<usize>>)>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.txt"))
+            .context("reading manifest.txt (run `make artifacts`)")?;
+        let mut out = Vec::new();
+        for line in text.lines() {
+            let mut parts = line.trim().split(';');
+            let (Some(name), Some(ins)) = (parts.next(), parts.next()) else {
+                continue;
+            };
+            let shapes: Vec<Vec<usize>> = ins
+                .trim_start_matches("in=")
+                .split(',')
+                .map(|s| s.split('x').filter_map(|d| d.parse().ok()).collect())
+                .collect();
+            out.push((name.to_string(), shapes));
+        }
+        Ok(out)
+    }
+
+    /// Execute artifact `name` with synthetic (deterministic, smooth)
+    /// inputs of the manifest's shapes; checks every output is finite.
+    /// Returns the flattened outputs. This is the real-compute path the
+    /// end-to-end example drives for every kernel the scheduler places.
+    pub fn run_synthetic(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        let manifest = self.manifest()?;
+        let shapes = manifest
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.clone())
+            .with_context(|| format!("{name} not in manifest"))?;
+        let exe = self.get(name)?;
+        let data: Vec<Vec<f32>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.iter().product();
+                // Smooth, bounded, non-constant inputs; offset per arg.
+                (0..n)
+                    .map(|j| 0.55 + 0.4 * ((j as f32 * 0.137 + i as f32).sin()))
+                    .collect()
+            })
+            .collect();
+        let inputs: Vec<(&[f32], &[usize])> = data
+            .iter()
+            .zip(shapes.iter())
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let outs = exe.run_f32(&inputs)?;
+        for (k, o) in outs.iter().enumerate() {
+            anyhow::ensure!(
+                o.iter().all(|v| v.is_finite()),
+                "{name}: output {k} contains non-finite values"
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "no artifact '{}' in {} (run `make artifacts`)",
+                name,
+                self.dir.display()
+            );
+        }
+        let exe = std::sync::Arc::new(self.runtime.load_hlo_text(&path)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}

@@ -1,0 +1,261 @@
+//! Algorithm 2: hardware-emulating placement, memory AND compute hard.
+//!
+//! Mirrors each device's per-SM occupancy (resident thread blocks and
+//! warps, against the device's per-SM caps) and walks SMs round-robin
+//! exactly like the hardware dispatcher. A task is placed only if *all*
+//! of its (residency-capped) thread blocks fit right now; otherwise the
+//! next device is tried, and if none fits the task waits. This is the
+//! conservative end of the design space: no kernel ever oversubscribes
+//! compute, at the price of longer queue waits (Fig. 4 / Table IV).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): placement walks SMs, not thread
+//! blocks — each SM absorbs `min(tb_slots_left, warps_left / wptb)` TBs
+//! in one step, with deltas in a reusable scratch vector. The original
+//! TB-at-a-time walk with hashed deltas cost ~21–57 µs per decision;
+//! this form is ~50x cheaper while placing TBs in the same round-robin
+//! order the hardware (and the paper's pseudo-code) uses.
+
+use super::{DeviceView, Policy, TaskKey, TaskReq};
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct SmState {
+    tbs: u32,
+    warps: u32,
+}
+
+struct DevState {
+    sms: Vec<SmState>,
+    /// Round-robin cursor (persists across placements, like hardware).
+    cursor: usize,
+}
+
+/// Per-placement record for undo at release: (sm index, tbs, warps).
+type Placement = Vec<(u32, u32, u32)>;
+
+pub struct MgbAlg2 {
+    devs: Vec<DevState>,
+    placed: HashMap<TaskKey, (usize, Placement)>,
+    /// Scratch per-SM deltas, reused across placement attempts.
+    scratch: Vec<(u32, u32)>,
+}
+
+impl MgbAlg2 {
+    pub fn new(n_devices: usize) -> Self {
+        MgbAlg2 {
+            devs: (0..n_devices)
+                .map(|_| DevState { sms: Vec::new(), cursor: 0 })
+                .collect(),
+            placed: HashMap::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    fn ensure_sms(&mut self, d: usize, view: &DeviceView) {
+        if self.devs[d].sms.is_empty() {
+            self.devs[d].sms = vec![SmState::default(); view.spec.sms as usize];
+        }
+    }
+
+    /// Try to place all `tbs` thread blocks on device `d`, round-robin
+    /// across SMs like the hardware dispatcher, but absorbing as many
+    /// TBs per SM visit as its caps allow. Returns per-SM deltas, or
+    /// None — with no state change — if the task does not fully fit.
+    fn try_fit(
+        &mut self,
+        d: usize,
+        view: &DeviceView,
+        mut tbs: u64,
+        warps_per_tb: u64,
+    ) -> Option<Placement> {
+        self.ensure_sms(d, view);
+        let spec = view.spec;
+        let dev = &mut self.devs[d];
+        let n = dev.sms.len();
+        self.scratch.clear();
+        self.scratch.resize(n, (0, 0));
+        let mut cursor = dev.cursor;
+        // One TB per SM visit, exactly like the hardware dispatcher; a
+        // full lap with no placement means the device cannot take the
+        // task. Deltas accumulate in the flat scratch vector.
+        let mut scanned_without_fit = 0usize;
+        while tbs > 0 {
+            if scanned_without_fit >= n {
+                return None; // full lap, nothing placed: no capacity
+            }
+            let sm = &dev.sms[cursor];
+            let extra = self.scratch[cursor];
+            let tb_used = (sm.tbs + extra.0) as u64;
+            let warp_used = (sm.warps + extra.1) as u64;
+            let fits = tb_used < spec.tbs_per_sm as u64
+                && warp_used + warps_per_tb <= spec.warps_per_sm as u64;
+            if fits {
+                self.scratch[cursor].0 += 1;
+                self.scratch[cursor].1 += warps_per_tb as u32;
+                tbs -= 1;
+                scanned_without_fit = 0;
+            } else {
+                scanned_without_fit += 1;
+            }
+            cursor = (cursor + 1) % n;
+        }
+        dev.cursor = cursor;
+        let placement: Placement = self
+            .scratch
+            .iter()
+            .enumerate()
+            .filter(|(_, &(t, _))| t > 0)
+            .map(|(sm, &(t, w))| (sm as u32, t, w))
+            .collect();
+        for &(sm, t, w) in &placement {
+            let s = &mut dev.sms[sm as usize];
+            s.tbs += t;
+            s.warps += w;
+        }
+        Some(placement)
+    }
+}
+
+impl Policy for MgbAlg2 {
+    fn name(&self) -> &'static str {
+        "mgb-alg2"
+    }
+
+    fn place(&mut self, key: TaskKey, req: &TaskReq, devices: &[DeviceView]) -> Option<usize> {
+        for (d, view) in devices.iter().enumerate() {
+            // Memory: hard constraint, checked first (paper Alg. 2).
+            if req.mem_bytes > view.free_mem {
+                continue;
+            }
+            // Compute: demand capped at what an empty device could keep
+            // resident (bigger kernels run in waves on real hardware;
+            // requiring more than one wave's residency would never fit).
+            let demand = req.tbs.min(view.spec.resident_tb_limit(req.warps_per_tb));
+            if let Some(placement) = self.try_fit(d, view, demand, req.warps_per_tb) {
+                self.placed.insert(key, (d, placement));
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    fn release(&mut self, key: TaskKey) {
+        if let Some((d, placement)) = self.placed.remove(&key) {
+            for (sm, t, w) in placement {
+                let s = &mut self.devs[d].sms[sm as usize];
+                s.tbs -= t;
+                s.warps -= w;
+            }
+        }
+    }
+
+    fn load_warps(&self, d: usize) -> u64 {
+        self.devs[d].sms.iter().map(|s| s.warps as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+
+    fn views(n: usize, free: u64) -> Vec<DeviceView> {
+        (0..n)
+            .map(|_| DeviceView { spec: GpuSpec::v100(), free_mem: free })
+            .collect()
+    }
+
+    fn req(mem: u64, tbs: u64, wptb: u64) -> TaskReq {
+        TaskReq { mem_bytes: mem, tbs, warps_per_tb: wptb }
+    }
+
+    #[test]
+    fn memory_is_a_hard_constraint() {
+        let mut p = MgbAlg2::new(2);
+        let mut v = views(2, 16 << 30);
+        v[0].free_mem = 1 << 30;
+        let r = req(2 << 30, 10, 8);
+        assert_eq!(p.place((0, 0), &r, &v), Some(1), "dev0 lacks memory");
+    }
+
+    #[test]
+    fn full_device_rejects_and_release_readmits() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        let cap_tbs = v[0].spec.resident_tb_limit(8); // 8 warps/tb
+        let r = req(1 << 30, cap_tbs, 8);
+        assert_eq!(p.place((0, 0), &r, &v), Some(0));
+        assert_eq!(p.place((1, 0), &r, &v), None, "no compute left");
+        p.release((0, 0));
+        assert_eq!(p.place((1, 0), &r, &v), Some(0));
+    }
+
+    #[test]
+    fn load_tracks_placed_warps_exactly() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        p.place((0, 0), &req(1 << 20, 100, 4), &v).unwrap();
+        assert_eq!(p.load_warps(0), 400);
+        p.place((0, 1), &req(1 << 20, 50, 2), &v).unwrap();
+        assert_eq!(p.load_warps(0), 500);
+        p.release((0, 0));
+        assert_eq!(p.load_warps(0), 100);
+        p.release((0, 1));
+        assert_eq!(p.load_warps(0), 0);
+    }
+
+    #[test]
+    fn never_exceeds_per_sm_caps() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        // Saturate with many medium tasks; per-SM caps must hold.
+        let mut placed = 0;
+        for i in 0..100 {
+            if p.place((i, 0), &req(1 << 20, 200, 8), &v).is_some() {
+                placed += 1;
+            }
+        }
+        let spec = v[0].spec;
+        for sm in &p.devs[0].sms {
+            assert!(sm.tbs <= spec.tbs_per_sm);
+            assert!(sm.warps <= spec.warps_per_sm);
+        }
+        // 80 SMs * 64 warps = 5120 warp slots; each task wants 1600.
+        assert_eq!(placed, 3, "3*1600 = 4800 fits, 4th doesn't");
+    }
+
+    #[test]
+    fn oversized_kernel_needs_empty_device() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        let cap = v[0].spec.warp_capacity();
+        // A kernel demanding 4x device capacity is capped to one full wave.
+        let huge = req(1 << 30, cap * 4 / 8, 8);
+        assert_eq!(p.place((0, 0), &huge, &v), Some(0));
+        // Device now completely full: even a 1-TB task fails.
+        assert_eq!(p.place((1, 0), &req(1, 1, 1), &v), None);
+    }
+
+    #[test]
+    fn failed_fit_leaves_no_residue() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        let cap_tbs = v[0].spec.resident_tb_limit(8);
+        p.place((0, 0), &req(1, cap_tbs / 2, 8), &v).unwrap();
+        let before = p.load_warps(0);
+        // This cannot fully fit; state must be untouched afterwards.
+        assert_eq!(p.place((1, 0), &req(1, cap_tbs, 8), &v), None);
+        assert_eq!(p.load_warps(0), before);
+        // And a task that does fit still goes through.
+        assert_eq!(p.place((2, 0), &req(1, cap_tbs / 2, 8), &v), Some(0));
+    }
+
+    #[test]
+    fn round_robin_spreads_across_sms() {
+        let mut p = MgbAlg2::new(1);
+        let v = views(1, 16 << 30);
+        // 80 TBs of 1 warp each: exactly one per SM.
+        p.place((0, 0), &req(1, 80, 1), &v).unwrap();
+        assert!(p.devs[0].sms.iter().all(|s| s.tbs == 1));
+    }
+}

@@ -1,0 +1,79 @@
+//! Scheduling policies (paper §III-B, §IV).
+//!
+//! Task-granular policies implement [`Policy`]: the probe protocol hands
+//! them a [`TaskReq`] resource vector and the current device memory
+//! views; they answer with a device or `None` (the task waits until a
+//! release). [`MgbAlg2`] emulates the hardware's per-SM round-robin
+//! placement with memory *and* compute as hard constraints;
+//! [`MgbAlg3`] keeps memory hard but compute soft (min-warp-load pick);
+//! [`SchedGpu`] reproduces Reaño et al.'s memory-only intra-node
+//! scheduler. The process-granular baselines — single-assignment (SA)
+//! and core-to-GPU (CG) — are worker-pinning modes of the coordinator
+//! (`crate::coordinator`), matching how the paper deploys them.
+
+pub mod alg2;
+pub mod alg3;
+pub mod schedgpu;
+
+pub use alg2::MgbAlg2;
+pub use alg3::MgbAlg3;
+pub use schedgpu::SchedGpu;
+
+use crate::gpu::GpuSpec;
+
+/// Resource vector conveyed by a probe (`task_begin`).
+#[derive(Clone, Copy, Debug)]
+pub struct TaskReq {
+    /// Memory to reserve (allocations + on-device heap), bytes.
+    pub mem_bytes: u64,
+    /// Thread blocks of the widest member kernel.
+    pub tbs: u64,
+    /// Warps per thread block.
+    pub warps_per_tb: u64,
+}
+
+impl TaskReq {
+    pub fn warps(&self) -> u64 {
+        self.tbs * self.warps_per_tb
+    }
+}
+
+/// Key identifying a placed task for later release.
+pub type TaskKey = (usize, usize); // (job id, runtime task id)
+
+/// Scheduler's read-only view of one device at decision time.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceView {
+    pub spec: GpuSpec,
+    /// Free memory *after* existing reservations/allocations.
+    pub free_mem: u64,
+}
+
+/// A task-granular scheduling policy. Implementations keep their own
+/// compute bookkeeping (warp counts, SM mirrors); the coordinator owns
+/// memory accounting and passes it in through [`DeviceView`].
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a device for `req`, recording internal load under `key`.
+    /// `None` = no device fits; the coordinator queues the task and
+    /// retries after the next release.
+    fn place(&mut self, key: TaskKey, req: &TaskReq, devices: &[DeviceView]) -> Option<usize>;
+
+    /// A previously-placed task finished; drop its load.
+    fn release(&mut self, key: TaskKey);
+
+    /// Current compute load (warps) the policy believes device `d`
+    /// carries — exposed for tests and metrics.
+    fn load_warps(&self, d: usize) -> u64;
+}
+
+/// Construct the policy for a node.
+pub fn make_policy(name: &str, n_devices: usize) -> Box<dyn Policy> {
+    match name {
+        "mgb2" | "alg2" => Box::new(MgbAlg2::new(n_devices)),
+        "mgb3" | "alg3" | "mgb" => Box::new(MgbAlg3::new(n_devices)),
+        "schedgpu" => Box::new(SchedGpu::new(n_devices)),
+        other => panic!("unknown task-granular policy '{other}'"),
+    }
+}

@@ -1,0 +1,89 @@
+//! schedGPU (Reaño et al., TPDS'18) — the §V-E comparison baseline.
+//!
+//! Memory capacity is the *only* resource criterion: a task is admitted
+//! onto the first device whose free memory covers it, with no compute
+//! awareness at all, and suspended (queued) when no memory is free.
+//! schedGPU is a single-device design — it cannot reassign work across
+//! GPUs — so admission is first-fit from device 0, which concentrates
+//! co-located jobs exactly the way the paper describes ("schedGPU would
+//! schedule all jobs to run on one device, since the memory capacity is
+//! not exceeded").
+
+use super::{DeviceView, Policy, TaskKey, TaskReq};
+use std::collections::HashMap;
+
+pub struct SchedGpu {
+    placed: HashMap<TaskKey, usize>,
+    n_devices: usize,
+}
+
+impl SchedGpu {
+    pub fn new(n_devices: usize) -> Self {
+        SchedGpu { placed: HashMap::new(), n_devices }
+    }
+}
+
+impl Policy for SchedGpu {
+    fn name(&self) -> &'static str {
+        "schedgpu"
+    }
+
+    fn place(&mut self, key: TaskKey, req: &TaskReq, devices: &[DeviceView]) -> Option<usize> {
+        let _ = self.n_devices;
+        for (d, view) in devices.iter().enumerate() {
+            if req.mem_bytes <= view.free_mem {
+                self.placed.insert(key, d);
+                return Some(d);
+            }
+        }
+        None // suspend until memory frees up
+    }
+
+    fn release(&mut self, key: TaskKey) {
+        self.placed.remove(&key);
+    }
+
+    fn load_warps(&self, _d: usize) -> u64 {
+        0 // schedGPU tracks no compute state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+
+    fn views(frees: &[u64]) -> Vec<DeviceView> {
+        frees
+            .iter()
+            .map(|&f| DeviceView { spec: GpuSpec::v100(), free_mem: f })
+            .collect()
+    }
+
+    #[test]
+    fn piles_onto_device0_while_memory_lasts() {
+        let mut p = SchedGpu::new(4);
+        let v = views(&[16 << 30; 4]);
+        let r = TaskReq { mem_bytes: 1 << 30, tbs: 10_000, warps_per_tb: 8 };
+        for i in 0..8 {
+            // 8 x 1.5GB-class NN jobs all fit on one V100: all on dev 0.
+            assert_eq!(p.place((i, 0), &r, &v), Some(0));
+        }
+    }
+
+    #[test]
+    fn spills_only_on_memory_pressure() {
+        let mut p = SchedGpu::new(2);
+        let v = views(&[1 << 30, 16 << 30]);
+        let r = TaskReq { mem_bytes: 2 << 30, tbs: 1, warps_per_tb: 1 };
+        assert_eq!(p.place((0, 0), &r, &v), Some(1));
+    }
+
+    #[test]
+    fn suspends_with_no_memory_anywhere() {
+        let mut p = SchedGpu::new(2);
+        let v = views(&[1 << 20, 1 << 20]);
+        let r = TaskReq { mem_bytes: 1 << 30, tbs: 1, warps_per_tb: 1 };
+        assert_eq!(p.place((0, 0), &r, &v), None);
+    }
+}

@@ -1,0 +1,204 @@
+//! Darknet neural-network workloads (§V-E) as mini-CUDA IR programs.
+//!
+//! Four task types, as in the paper: ImageNet classification with
+//! pretrained Darknet19/Darknet53 (*predict*), CIFAR-10 training
+//! (*train*), yolov3-tiny real-time object detection (*detect*), and
+//! Shakespeare char-RNN text generation (*generate*). Networks are
+//! 0.5–1.5 GB so 8 jobs always fit in one V100's memory — which is
+//! exactly why memory-only scheduling (schedGPU) piles them on one
+//! device. Compute demand separates the tasks: training nearly
+//! saturates a device, detection uses ~25% or less (nvidia-smi per the
+//! paper), so compute-aware spreading is where MGB wins.
+
+use crate::compiler::compile;
+use crate::coordinator::{JobClass, JobSpec};
+use crate::ir::{Expr, Program, ProgramBuilder};
+use crate::lazy::interpret;
+
+const V100_WARPS: u64 = 80 * 64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NnTask {
+    Predict,
+    Train,
+    Detect,
+    Generate,
+}
+
+pub const NN_TASKS: [NnTask; 4] = [NnTask::Predict, NnTask::Train, NnTask::Detect, NnTask::Generate];
+
+/// Profile: (network bytes, gpu seconds, host seconds, occupancy,
+/// batches, launches per batch, artifact).
+#[derive(Clone, Copy, Debug)]
+pub struct NnProfile {
+    pub name: &'static str,
+    pub mem_mib: u64,
+    pub gpu_s: f64,
+    pub host_s: f64,
+    pub occupancy: f64,
+    pub batches: i64,
+    pub launches_per_batch: i64,
+    pub artifact: &'static str,
+}
+
+impl NnTask {
+    pub fn profile(&self) -> NnProfile {
+        match self {
+            // Darknet19/53 fwd over an image batch: moderate occupancy.
+            NnTask::Predict => NnProfile {
+                name: "nn-predict",
+                mem_mib: 1024,
+                gpu_s: 10.0,
+                host_s: 4.0,
+                occupancy: 0.30,
+                batches: 60,
+                launches_per_batch: 1,
+                artifact: "darknet_predict",
+            },
+            // CIFAR train: fwd+bwd, compute-hungry.
+            NnTask::Train => NnProfile {
+                name: "nn-train",
+                mem_mib: 1536,
+                gpu_s: 20.0,
+                host_s: 8.0,
+                occupancy: 0.62,
+                batches: 100,
+                launches_per_batch: 2,
+                artifact: "darknet_train",
+            },
+            // yolov3-tiny at 200+ FPS: GPU mostly idle (video I/O bound).
+            NnTask::Detect => NnProfile {
+                name: "nn-detect",
+                mem_mib: 819,
+                gpu_s: 4.0,
+                host_s: 12.0,
+                occupancy: 0.12,
+                batches: 200,
+                launches_per_batch: 1,
+                artifact: "darknet_detect",
+            },
+            // char-RNN generation: sequential cell steps, mid occupancy.
+            NnTask::Generate => NnProfile {
+                name: "nn-generate",
+                mem_mib: 614,
+                gpu_s: 12.0,
+                host_s: 3.0,
+                occupancy: 0.42,
+                batches: 250,
+                launches_per_batch: 1,
+                artifact: "darknet_rnn",
+            },
+        }
+    }
+
+    /// Host IR: load weights, one buffer set, batch loop of launches.
+    pub fn program(&self) -> Program {
+        let p = self.profile();
+        let mem_bytes = (p.mem_mib as i64) << 20;
+        let total_launches = p.batches * p.launches_per_batch;
+        let per_launch = ((p.gpu_s * 1e6) as i64 / total_launches).max(1);
+        let host_us = (p.host_s * 1e6) as i64;
+        let block = 128i64;
+        let warps = (p.occupancy * V100_WARPS as f64) as i64;
+        let grid = (warps / 4).max(1);
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 0, |f| {
+            let us = f.c(host_us / 2); // parse cfg + load weights
+            f.host_compute(us);
+            let sz_w = f.assign(Expr::c(mem_bytes * 3 / 4));
+            let sz_a = f.assign(Expr::c(mem_bytes / 4));
+            let weights = f.malloc(sz_w);
+            let acts = f.malloc(sz_a);
+            f.h2d(weights, sz_w);
+            let g = f.c(grid);
+            let b = f.c(block);
+            let w = f.c(per_launch);
+            let it = f.c(p.batches);
+            let lpb = p.launches_per_batch;
+            let art = p.artifact;
+            f.loop_n(it, |f| {
+                for i in 0..lpb {
+                    let kname = if i == 0 { "forward" } else { "backward" };
+                    f.launch_artifact(kname, art, g, b, &[weights, acts], w);
+                }
+            });
+            f.d2h(acts, sz_a);
+            f.free(weights);
+            f.free(acts);
+            let us2 = f.c(host_us / 2);
+            f.host_compute(us2);
+        });
+        pb.finish()
+    }
+
+    pub fn job_spec(&self) -> JobSpec {
+        let compiled = compile(&self.program());
+        let trace = interpret(&compiled, &[]).expect("nn workload interprets");
+        debug_assert!(trace.check_well_formed().is_ok());
+        JobSpec { name: self.profile().name.to_string(), class: JobClass::Nn, trace, arrival: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lazy::TraceEvent;
+
+    #[test]
+    fn networks_fit_eight_to_a_device() {
+        // §V-E: "each task's network is between 0.5-1.5GB, so 8 jobs can
+        // always fit within a single V100's memory".
+        for t in NN_TASKS {
+            let p = t.profile();
+            assert!(p.mem_mib >= 512 && p.mem_mib <= 1536, "{}", p.name);
+        }
+        let worst: u64 = NN_TASKS.iter().map(|t| t.profile().mem_mib).max().unwrap();
+        assert!(8 * worst < 16 * 1024, "8 x worst-case fits 16 GB");
+    }
+
+    #[test]
+    fn train_is_compute_hungry_detect_is_not() {
+        let occs: Vec<f64> = NN_TASKS.iter().map(|t| t.profile().occupancy).collect();
+        let max = occs.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(max, NnTask::Train.profile().occupancy, "train dominates");
+        assert!(NnTask::Detect.profile().occupancy <= 0.25);
+        assert!(NnTask::Train.profile().occupancy / NnTask::Detect.profile().occupancy > 4.0);
+    }
+
+    #[test]
+    fn every_task_compiles_static_and_well_formed() {
+        for t in NN_TASKS {
+            let c = compile(&t.program());
+            assert_eq!(c.tasks.len(), 1);
+            assert!(!c.tasks[0].lazy);
+            let spec = t.job_spec();
+            spec.trace.check_well_formed().unwrap();
+        }
+    }
+
+    #[test]
+    fn launch_counts_match_profiles() {
+        for t in NN_TASKS {
+            let p = t.profile();
+            let spec = t.job_spec();
+            let launches = spec
+                .trace
+                .events
+                .iter()
+                .filter(|e| matches!(e, TraceEvent::Launch { .. }))
+                .count() as i64;
+            assert_eq!(launches, p.batches * p.launches_per_batch, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn artifacts_reference_real_models() {
+        for t in NN_TASKS {
+            let spec = t.job_spec();
+            let named = spec.trace.events.iter().any(|e| {
+                matches!(e, TraceEvent::Launch { artifact: Some(a), .. } if a == t.profile().artifact)
+            });
+            assert!(named, "{} launches must bind artifacts", t.profile().name);
+        }
+    }
+}

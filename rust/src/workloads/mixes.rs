@@ -1,0 +1,146 @@
+//! Workload mixes: the paper's W1–W8 (Table I) and the NN mixes (§V-E).
+
+use super::darknet::{NnTask, NN_TASKS};
+use super::rng::Rng;
+use super::rodinia::COMBOS;
+use crate::coordinator::JobSpec;
+
+/// A large:small mix ratio (Table I: 1:1, 2:1, 3:1, 5:1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MixRatio {
+    pub large: u32,
+    pub small: u32,
+}
+
+pub const RATIOS: [MixRatio; 4] = [
+    MixRatio { large: 1, small: 1 },
+    MixRatio { large: 2, small: 1 },
+    MixRatio { large: 3, small: 1 },
+    MixRatio { large: 5, small: 1 },
+];
+
+/// Table I: W1–W4 = 16 jobs at the four ratios, W5–W8 = 32 jobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub id: &'static str,
+    pub n_jobs: usize,
+    pub ratio: MixRatio,
+}
+
+pub const WORKLOADS: [Workload; 8] = [
+    Workload { id: "W1", n_jobs: 16, ratio: RATIOS[0] },
+    Workload { id: "W2", n_jobs: 16, ratio: RATIOS[1] },
+    Workload { id: "W3", n_jobs: 16, ratio: RATIOS[2] },
+    Workload { id: "W4", n_jobs: 16, ratio: RATIOS[3] },
+    Workload { id: "W5", n_jobs: 32, ratio: RATIOS[0] },
+    Workload { id: "W6", n_jobs: 32, ratio: RATIOS[1] },
+    Workload { id: "W7", n_jobs: 32, ratio: RATIOS[2] },
+    Workload { id: "W8", n_jobs: 32, ratio: RATIOS[3] },
+];
+
+impl Workload {
+    pub fn by_id(id: &str) -> Option<Workload> {
+        WORKLOADS.iter().copied().find(|w| w.id == id)
+    }
+
+    /// Generate the job batch: jobs drawn at the large:small ratio,
+    /// uniformly from the respective pools, then shuffled (paper: "jobs
+    /// are randomly chosen from their respective sets").
+    pub fn jobs(&self, seed: u64) -> Vec<JobSpec> {
+        let mut rng = Rng::new(seed ^ fxhash(self.id));
+        let large_pool: Vec<usize> =
+            (0..COMBOS.len()).filter(|&i| COMBOS[i].is_large()).collect();
+        let small_pool: Vec<usize> =
+            (0..COMBOS.len()).filter(|&i| !COMBOS[i].is_large()).collect();
+        let cycle = (self.ratio.large + self.ratio.small) as usize;
+        let mut picks = Vec::with_capacity(self.n_jobs);
+        for j in 0..self.n_jobs {
+            let in_cycle = j % cycle;
+            let pool = if in_cycle < self.ratio.large as usize {
+                &large_pool
+            } else {
+                &small_pool
+            };
+            picks.push(pool[rng.below(pool.len())]);
+        }
+        rng.shuffle(&mut picks);
+        picks
+            .into_iter()
+            .enumerate()
+            .map(|(j, i)| {
+                let mut spec = COMBOS[i].job_spec();
+                spec.name = format!("{}#{:02}-{}", self.id, j, spec.name);
+                spec
+            })
+            .collect()
+    }
+}
+
+/// §V-E first experiment: 8-job homogeneous workload per NN task type.
+pub fn nn_homogeneous(task: NnTask) -> Vec<JobSpec> {
+    (0..8)
+        .map(|j| {
+            let mut s = task.job_spec();
+            s.name = format!("{}#{j}", s.name);
+            s
+        })
+        .collect()
+}
+
+/// §V-E large-scale: a 128-job random mix of the 4 NN task types.
+pub fn nn_mix(n_jobs: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n_jobs)
+        .map(|j| {
+            let t = NN_TASKS[rng.below(NN_TASKS.len())];
+            let mut s = t.job_spec();
+            s.name = format!("mix#{j:03}-{}", s.name);
+            s
+        })
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobClass;
+
+    #[test]
+    fn ratios_hold_exactly() {
+        for w in WORKLOADS {
+            let jobs = w.jobs(1);
+            assert_eq!(jobs.len(), w.n_jobs);
+            let large = jobs.iter().filter(|j| j.class == JobClass::Large).count();
+            let cycle = (w.ratio.large + w.ratio.small) as usize;
+            let want_large =
+                (w.n_jobs / cycle) * w.ratio.large as usize + (w.n_jobs % cycle).min(w.ratio.large as usize);
+            assert_eq!(large, want_large, "{}", w.id);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_mix_different_seed_differs() {
+        let a = WORKLOADS[0].jobs(7);
+        let b = WORKLOADS[0].jobs(7);
+        let c = WORKLOADS[0].jobs(8);
+        let names = |v: &[JobSpec]| v.iter().map(|j| j.name.clone()).collect::<Vec<_>>();
+        assert_eq!(names(&a), names(&b));
+        assert_ne!(names(&a), names(&c));
+    }
+
+    #[test]
+    fn nn_mix_covers_all_types() {
+        let jobs = nn_mix(128, 3);
+        assert_eq!(jobs.len(), 128);
+        for t in NN_TASKS {
+            let name = t.profile().name;
+            assert!(jobs.iter().any(|j| j.name.contains(name)), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload factories: Rodinia combos, Darknet NN tasks, and the
+//! paper's W1–W8 / NN mixes. Every job is produced by authoring its
+//! host-side IR, running the compiler pass, and interpreting it through
+//! the lazy runtime — so each batch run exercises the whole front half
+//! of the system before any scheduling happens.
+
+pub mod darknet;
+pub mod mixes;
+pub mod rng;
+pub mod rodinia;
+
+pub use darknet::{NnTask, NN_TASKS};
+pub use mixes::{nn_homogeneous, nn_mix, MixRatio, Workload, RATIOS, WORKLOADS};
+pub use rodinia::{Bench, Combo, COMBOS};

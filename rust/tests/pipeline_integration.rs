@@ -1,0 +1,394 @@
+//! Integration across the whole front half: IR authoring → compiler →
+//! lazy runtime → batch coordinator under every scheduler, plus bench
+//! harness smoke runs. (The offline crate set has no criterion/proptest;
+//! rust/tests/property.rs carries the randomized invariants.)
+
+use mgb::bench_harness;
+use mgb::coordinator::{run_batch, RunConfig, SchedMode};
+use mgb::gpu::NodeSpec;
+use mgb::workloads::{nn_mix, Workload, COMBOS, NN_TASKS, WORKLOADS};
+
+#[test]
+fn every_workload_trace_is_well_formed() {
+    for c in &COMBOS {
+        c.job_spec().trace.check_well_formed().unwrap();
+    }
+    for t in NN_TASKS {
+        t.job_spec().trace.check_well_formed().unwrap();
+    }
+}
+
+#[test]
+fn jobs_are_conserved_under_every_scheduler() {
+    let jobs = Workload::by_id("W1").unwrap().jobs(7);
+    let node = NodeSpec::v100x4();
+    for mode in [
+        SchedMode::Sa,
+        SchedMode::Cg,
+        SchedMode::Policy("mgb2"),
+        SchedMode::Policy("mgb3"),
+        SchedMode::Policy("schedgpu"),
+    ] {
+        let r = run_batch(RunConfig { node: node.clone(), mode: mode.clone(), workers: 8 }, jobs.clone());
+        assert_eq!(
+            r.completed() + r.crashed(),
+            jobs.len(),
+            "{mode:?}: done+crashed must equal submitted"
+        );
+        for j in &r.jobs {
+            assert!(j.ended >= j.started, "{mode:?}: causality");
+            assert!(j.ended <= r.makespan + 1e-9, "{mode:?}: makespan covers all jobs");
+        }
+    }
+}
+
+#[test]
+fn probe_carrying_schedulers_never_crash() {
+    // Memory safety is MGB's core guarantee (§III-B): across all eight
+    // paper workloads and both nodes, no MGB/schedGPU job may OOM.
+    for node in [NodeSpec::p100x2(), NodeSpec::v100x4()] {
+        for w in WORKLOADS {
+            let jobs = w.jobs(3);
+            for policy in ["mgb2", "mgb3", "schedgpu"] {
+                let r = run_batch(
+                    RunConfig {
+                        node: node.clone(),
+                        mode: SchedMode::Policy(policy),
+                        workers: bench_harness::mgb_workers(&node),
+                    },
+                    jobs.clone(),
+                );
+                assert_eq!(r.crashed(), 0, "{policy} crashed on {} {}", node.name, w.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn sa_never_crashes_and_never_slows_kernels() {
+    for w in WORKLOADS.iter().take(4) {
+        let r = run_batch(
+            RunConfig { node: NodeSpec::p100x2(), mode: SchedMode::Sa, workers: 0 },
+            w.jobs(11),
+        );
+        assert_eq!(r.crashed(), 0);
+        assert!(r.kernel_slowdown_pct().abs() < 0.01, "dedicated devices: no interference");
+    }
+}
+
+#[test]
+fn turnaround_at_least_dedicated_wall_time() {
+    let jobs = Workload::by_id("W2").unwrap().jobs(5);
+    let r = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 16 },
+        jobs,
+    );
+    for j in &r.jobs {
+        assert!(
+            j.turnaround() + 1e-9 >= j.kernel_dedicated_s,
+            "{}: turnaround {} < dedicated kernel time {}",
+            j.name,
+            j.turnaround(),
+            j.kernel_dedicated_s
+        );
+    }
+}
+
+#[test]
+fn nn_mix_scales_to_128_jobs_deterministically() {
+    let jobs = nn_mix(128, 9);
+    let cfg = RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 32 };
+    let a = run_batch(cfg.clone(), jobs.clone());
+    let b = run_batch(cfg, jobs);
+    assert_eq!(a.completed(), 128);
+    assert_eq!(a.makespan, b.makespan, "replays must be bit-identical");
+}
+
+#[test]
+fn bench_harness_experiments_all_run() {
+    for exp in ["fig4", "fig6", "nn128"] {
+        let r = bench_harness::run_experiment(exp, 1).unwrap();
+        assert!(!r.lines.is_empty(), "{exp} produced no rows");
+    }
+    assert!(bench_harness::run_experiment("nonsense", 1).is_none());
+}
+
+#[test]
+fn paper_shapes_hold_end_to_end() {
+    // The coarse reproduction claims, asserted as a regression net:
+    // MGB beats SA on throughput on every 16-job workload; Alg3's
+    // kernel slowdown stays single-digit.
+    let node = NodeSpec::v100x4();
+    for w in WORKLOADS.iter().filter(|w| w.n_jobs == 16) {
+        let jobs = w.jobs(bench_harness::DEFAULT_SEED);
+        let sa = run_batch(RunConfig { node: node.clone(), mode: SchedMode::Sa, workers: 0 }, jobs.clone());
+        let mgb = run_batch(
+            RunConfig { node: node.clone(), mode: SchedMode::Policy("mgb3"), workers: 16 },
+            jobs,
+        );
+        let speedup = mgb.throughput() / sa.throughput();
+        assert!(speedup > 1.3, "{}: MGB only {speedup:.2}x SA", w.id);
+        assert!(mgb.kernel_slowdown_pct() < 10.0, "{}: slowdown too high", w.id);
+    }
+}
+
+#[test]
+fn cg_crash_cleanup_releases_memory_for_survivors() {
+    // Failure injection: an OOM-crashing CG batch must still complete
+    // every job that survives, and later jobs must be able to use the
+    // memory the crashed ones released (no leak: the batch drains).
+    use mgb::coordinator::JobClass;
+    use mgb::lazy::{JobTrace, TaskResources, TraceEvent};
+    let mk = |mem: u64| {
+        let res = TaskResources { static_dev: None, mem_bytes: mem, heap_bytes: 0, grid: 100, block: 32 };
+        JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res },
+                TraceEvent::Malloc { task: 0, bytes: mem },
+                TraceEvent::Launch {
+                    task: 0,
+                    kernel: "k".into(),
+                    artifact: None,
+                    grid: 100,
+                    block: 32,
+                    work_us: 1_000_000,
+                },
+                TraceEvent::Free { task: 0, bytes: mem },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        }
+    };
+    // 8 jobs of 9 GB on ONE 16 GB device, 4 pinned workers: first two
+    // co-resident jobs fit 9+? -> second malloc OOMs; survivors keep
+    // draining the queue afterwards.
+    let node = NodeSpec {
+        gpus: vec![mgb::gpu::GpuSpec::v100()],
+        cpu_cores: 8,
+        name: "1xV100".into(),
+    };
+    let jobs: Vec<_> = (0..8)
+        .map(|i| mgb::coordinator::JobSpec {
+            name: format!("j{i}"),
+            class: JobClass::Large,
+            trace: mk(9 << 30),
+            arrival: 0.0,
+        })
+        .collect();
+    let r = run_batch(RunConfig { node, mode: SchedMode::Cg, workers: 4 }, jobs);
+    assert_eq!(r.completed() + r.crashed(), 8);
+    assert!(r.crashed() > 0, "9+9 GB co-resident must OOM");
+    assert!(r.completed() > 0, "survivors must finish after crashes free memory");
+    // Every completed job actually ran its kernel.
+    for j in r.jobs.iter().filter(|j| !j.crashed) {
+        assert_eq!(j.n_kernels, 1, "{}", j.name);
+    }
+}
+
+#[test]
+fn dead_allocation_never_reaches_a_device() {
+    // Lazy-runtime edge: a buffer malloc'd and freed without any launch
+    // binds to no task and must not appear in the trace at all.
+    use mgb::compiler::compile;
+    use mgb::ir::{Expr, ProgramBuilder};
+    use mgb::lazy::interpret;
+    let mut pb = ProgramBuilder::new();
+    let dead = pb.declare("dead_alloc", 1);
+    pb.define(dead, |f| {
+        let n = f.param(0);
+        // a loop so the helper is NOT inlined -> lazy path
+        f.loop_n(n, |f| {
+            f.c(0);
+        });
+        let sz = f.assign(Expr::v(n).mul(Expr::c(1024)));
+        let b = f.malloc(sz);
+        f.h2d(b, sz);
+        f.free(b);
+    });
+    pb.func("main", 1, |f| {
+        let n = f.param(0);
+        f.call(dead, &[n]);
+    });
+    let trace = interpret(&compile(&pb.finish()), &[16]).unwrap();
+    trace.check_well_formed().unwrap();
+    assert_eq!(trace.n_tasks(), 0, "no kernel launch -> no GPU task");
+    assert!(trace.events.is_empty(), "nothing to execute: {:?}", trace.events);
+}
+
+#[test]
+fn zero_worker_config_still_terminates() {
+    let jobs = Workload::by_id("W1").unwrap().jobs(1);
+    // workers clamps to >= 1 — the batch must drain, not hang.
+    let r = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 0 },
+        jobs,
+    );
+    assert_eq!(r.completed(), 16);
+}
+
+#[test]
+fn empty_batch_is_a_clean_noop() {
+    let r = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 4 },
+        vec![],
+    );
+    assert_eq!(r.completed(), 0);
+    assert_eq!(r.makespan, 0.0);
+}
+
+#[test]
+fn single_job_larger_than_any_gpu_crashes_everywhere() {
+    // A 20 GB job cannot run on 16 GB devices: CG/SA crash it; MGB's
+    // probe can never place it — the coordinator must fail it rather
+    // than deadlock the batch.
+    use mgb::coordinator::JobClass;
+    use mgb::lazy::{JobTrace, TaskResources, TraceEvent};
+    let res = TaskResources { static_dev: None, mem_bytes: 20 << 30, heap_bytes: 0, grid: 10, block: 32 };
+    let job = mgb::coordinator::JobSpec {
+        name: "whale".into(),
+        class: JobClass::Large,
+        arrival: 0.0,
+        trace: JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res },
+                TraceEvent::Malloc { task: 0, bytes: res.mem_bytes },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        },
+    };
+    let cg = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Cg, workers: 4 },
+        vec![job.clone()],
+    );
+    assert_eq!(cg.crashed(), 1);
+    let mgb = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 4 },
+        vec![job],
+    );
+    assert_eq!(mgb.crashed(), 1, "unplaceable job must be failed, not reported done");
+}
+
+#[test]
+fn arrivals_gate_job_starts() {
+    // Open-system extension: a job must not start before it arrives,
+    // and idle workers must pick it up when it does.
+    let mut jobs = Workload::by_id("W1").unwrap().jobs(2);
+    jobs.truncate(4);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.arrival = 50.0 * i as f64;
+    }
+    let r = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 8 },
+        jobs,
+    );
+    assert_eq!(r.completed(), 4);
+    for (i, j) in r.jobs.iter().enumerate() {
+        let arrival = 50.0 * i as f64;
+        assert!(j.started + 1e-9 >= arrival, "{}: started {} before arrival {arrival}", j.name, j.started);
+        // plenty of idle workers: pickup is immediate on arrival
+        assert!(j.started - arrival < 1e-6, "{}: pickup delayed", j.name);
+        assert!(j.turnaround() > 0.0 && j.turnaround() <= j.ended + 1e-9);
+    }
+}
+
+#[test]
+fn static_mapping_honours_set_device_and_can_oom() {
+    // Paper §II-B / Fig. 1: two apps statically map their memory-heavy
+    // kernels to device 1 via cudaSetDevice; co-executing them OOMs,
+    // while MGB ignores the static binding and packs safely.
+    use mgb::compiler::compile;
+    use mgb::coordinator::JobClass;
+    use mgb::ir::{Expr, ProgramBuilder};
+    use mgb::lazy::interpret;
+    let app = |mem_gib: i64| {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 0, |f| {
+            let d1 = f.c(1);
+            f.set_device(d1); // "my memory-heavy kernel goes to device 1"
+            let sz = f.assign(Expr::c(mem_gib << 30));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let g = f.c(64);
+            let b = f.c(128);
+            let w = f.c(3_000_000);
+            f.launch("heavy", g, b, &[a], w);
+            f.free(a);
+        });
+        let trace = interpret(&compile(&pb.finish()), &[]).unwrap();
+        // the probe must carry the static binding
+        let begin = trace.events.iter().find_map(|e| match e {
+            mgb::lazy::TraceEvent::TaskBegin { res, .. } => Some(*res),
+            _ => None,
+        });
+        assert_eq!(begin.unwrap().static_dev, Some(1));
+        mgb::coordinator::JobSpec {
+            name: format!("app-{mem_gib}g"),
+            class: JobClass::Large,
+            trace,
+            arrival: 0.0,
+        }
+    };
+    let jobs = vec![app(10), app(9)];
+    let st = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Static, workers: 2 },
+        jobs.clone(),
+    );
+    assert_eq!(st.crashed(), 1, "10+9 GB both statically on device 1: OOM");
+    let mgb = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 2 },
+        jobs,
+    );
+    assert_eq!(mgb.crashed(), 0, "MGB overrides the static binding");
+}
+
+#[test]
+fn default_device0_without_set_device() {
+    use mgb::compiler::compile;
+    use mgb::coordinator::JobClass;
+    use mgb::ir::{Expr, ProgramBuilder};
+    use mgb::lazy::interpret;
+    // Two 9 GB apps that never call cudaSetDevice: CUDA defaults both
+    // to device 0 -> OOM under static mode even on a 4-GPU node.
+    let app = |i: usize| {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 0, |f| {
+            let sz = f.assign(Expr::c(9i64 << 30));
+            let a = f.malloc(sz);
+            let g = f.c(64);
+            let b = f.c(128);
+            let w = f.c(1_000_000);
+            f.launch("k", g, b, &[a], w);
+            f.free(a);
+        });
+        mgb::coordinator::JobSpec {
+            name: format!("app{i}"),
+            class: JobClass::Large,
+            trace: interpret(&compile(&pb.finish()), &[]).unwrap(),
+            arrival: 0.0,
+        }
+    };
+    let r = run_batch(
+        RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Static, workers: 2 },
+        vec![app(0), app(1)],
+    );
+    assert_eq!(r.crashed(), 1, "both default to device0");
+}
+
+#[test]
+fn gir_fixtures_parse_compile_and_run() {
+    use mgb::compiler::compile;
+    use mgb::ir::parse::parse_program;
+    use mgb::lazy::interpret;
+    for (path, text) in [
+        ("vecadd.gir", include_str!("../../examples/ir/vecadd.gir")),
+        ("static_mapping.gir", include_str!("../../examples/ir/static_mapping.gir")),
+    ] {
+        let p = parse_program(text).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        let c = compile(&p);
+        assert!(!c.tasks.is_empty(), "{path}: no tasks");
+        let trace = interpret(&c, &[1 << 20]).unwrap();
+        trace.check_well_formed().unwrap();
+        // Display -> parse round-trip
+        let p2 = parse_program(&p.to_string()).unwrap();
+        assert_eq!(p.to_string(), p2.to_string(), "{path}: display round-trip");
+    }
+}

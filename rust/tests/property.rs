@@ -1,0 +1,299 @@
+//! Randomized property tests over the compiler, lazy runtime, engine and
+//! schedulers. The offline crate set has no proptest, so this uses the
+//! in-tree deterministic PRNG and a small check-many-cases helper — each
+//! property runs across hundreds of seeded random cases and reports the
+//! first failing seed for replay.
+
+use mgb::compiler::{compile, CompiledProgram};
+use mgb::coordinator::{run_batch, JobClass, JobSpec, RunConfig, SchedMode};
+use mgb::gpu::{GpuSpec, NodeSpec};
+use mgb::ir::{Expr, OpKind, Program, ProgramBuilder};
+use mgb::lazy::{interpret, TraceEvent};
+use mgb::sched::{make_policy, DeviceView, TaskReq};
+use mgb::workloads::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panic with the seed on first failure.
+fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// A random host program: 1-4 task groups, each with 1-4 buffers, 1-3
+/// launches, optional loop, optional shared buffer with the previous
+/// group, optional branch-guarded D2H (which forces laziness).
+fn random_program(rng: &mut Rng) -> Program {
+    let n_groups = 1 + rng.below(4);
+    let mut pb = ProgramBuilder::new();
+    let groups: Vec<(usize, usize, bool, bool, bool)> = (0..n_groups)
+        .map(|_| {
+            (
+                1 + rng.below(4),     // buffers
+                1 + rng.below(3),     // launches
+                rng.below(3) == 0,    // loop?
+                rng.below(4) == 0,    // branch-guarded d2h?
+                rng.below(3) == 0,    // share a buffer with previous group?
+            )
+        })
+        .collect();
+    let sizes: Vec<i64> = (0..n_groups).map(|_| (1 + rng.below(64)) as i64 * (1 << 20)).collect();
+    pb.func("main", 1, |f| {
+        let mut prev_buf = None;
+        for (g, &(n_bufs, n_launches, looped, branchy, share)) in groups.iter().enumerate() {
+            let sz = f.assign(Expr::c(sizes[g]));
+            let mut bufs: Vec<_> = (0..n_bufs).map(|_| f.malloc(sz)).collect();
+            if share {
+                if let Some(p) = prev_buf {
+                    bufs.push(p);
+                }
+            }
+            f.h2d(bufs[0], sz);
+            let grid = f.c(64 + (sizes[g] % 512));
+            let block = f.c(128);
+            let work = f.c(1000 + sizes[g] % 9000);
+            if looped {
+                let trips = f.c(2 + (sizes[g] % 5));
+                let args = bufs.clone();
+                f.loop_n(trips, |f| {
+                    for l in 0..n_launches {
+                        f.launch(&format!("k{g}_{l}"), grid, block, &args, work);
+                    }
+                });
+            } else {
+                for l in 0..n_launches {
+                    f.launch(&format!("k{g}_{l}"), grid, block, &bufs, work);
+                }
+            }
+            if branchy {
+                let cond = f.c(1);
+                let b0 = bufs[0];
+                f.diamond(cond, |f| f.d2h(b0, sz), |_| {});
+            } else {
+                f.d2h(bufs[0], sz);
+            }
+            // Free only the buffers this group allocated (a shared one
+            // belongs to the earlier group and was already freed there —
+            // double frees are invalid IR we don't generate).
+            for &b in bufs.iter().take(n_bufs) {
+                f.free(b);
+            }
+            prev_buf = Some(bufs[0]);
+        }
+    });
+    pb.finish()
+}
+
+fn compiled(rng: &mut Rng) -> CompiledProgram {
+    compile(&random_program(rng))
+}
+
+#[test]
+fn prop_every_launch_lands_in_exactly_one_task() {
+    check(300, |rng| {
+        let c = compiled(rng);
+        let f = c.program.main();
+        for (_, _, op) in f.ops() {
+            if matches!(op.kind, OpKind::Launch { .. }) {
+                let owners = c.tasks.iter().filter(|t| t.launches.contains(&op.id)).count();
+                assert_eq!(owners, 1, "launch {} owned by {owners} tasks", op.id);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merged_tasks_have_disjoint_mem_objs() {
+    check(300, |rng| {
+        let c = compiled(rng);
+        for (i, a) in c.tasks.iter().enumerate() {
+            for b in c.tasks.iter().skip(i + 1) {
+                for m in &a.mem_objs {
+                    assert!(
+                        !b.mem_objs.contains(m),
+                        "tasks {} and {} share memobj v{m} but were not merged",
+                        a.id,
+                        b.id
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_static_probe_dominates_every_task_op() {
+    check(300, |rng| {
+        let c = compiled(rng);
+        let f = c.program.main();
+        for t in &c.tasks {
+            let Some(probe) = t.probe_at else { continue };
+            for &o in &t.ops {
+                let loc = f.loc(o);
+                // The probe is at-or-before the first op in the entry
+                // block ordering; every op must not precede it in its
+                // own block if same block.
+                if loc.0 == probe.0 {
+                    assert!(probe.1 <= loc.1, "probe after op {o} in same block");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_interpreted_traces_are_well_formed() {
+    check(300, |rng| {
+        let c = compiled(rng);
+        let trace = interpret(&c, &[1 << 20]).expect("interprets");
+        trace.check_well_formed().unwrap();
+        // Every launch in the IR shows up in the trace at least once.
+        let ir_launches = c
+            .program
+            .main()
+            .ops()
+            .filter(|(_, _, o)| matches!(o.kind, OpKind::Launch { .. }))
+            .count();
+        let trace_launches = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Launch { .. }))
+            .count();
+        assert!(trace_launches >= ir_launches, "{trace_launches} < {ir_launches}");
+    });
+}
+
+#[test]
+fn prop_task_begin_precedes_all_its_device_ops() {
+    check(200, |rng| {
+        let c = compiled(rng);
+        let trace = interpret(&c, &[1 << 20]).expect("interprets");
+        let mut begun = std::collections::HashSet::new();
+        for e in &trace.events {
+            match e {
+                TraceEvent::TaskBegin { task, .. } => {
+                    begun.insert(*task);
+                }
+                TraceEvent::Malloc { task, .. }
+                | TraceEvent::Launch { task, .. }
+                | TraceEvent::H2D { task, .. }
+                | TraceEvent::D2H { task, .. }
+                | TraceEvent::Free { task, .. } => {
+                    assert!(begun.contains(task), "op before TaskBegin of {task}");
+                }
+                _ => {}
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_probe_resources_cover_interpreted_allocations() {
+    // The probe's memory figure must cover every byte the task actually
+    // allocates (memory safety hinges on this).
+    check(200, |rng| {
+        let c = compiled(rng);
+        let trace = interpret(&c, &[1 << 20]).expect("interprets");
+        let mut reserved: std::collections::HashMap<usize, u64> = Default::default();
+        let mut allocated: std::collections::HashMap<usize, u64> = Default::default();
+        for e in &trace.events {
+            match e {
+                TraceEvent::TaskBegin { task, res } => {
+                    reserved.insert(*task, res.mem_bytes);
+                }
+                TraceEvent::Malloc { task, bytes } => {
+                    *allocated.entry(*task).or_insert(0) += bytes;
+                }
+                _ => {}
+            }
+        }
+        for (task, alloc) in allocated {
+            let res = reserved.get(&task).copied().unwrap_or(0);
+            assert!(res >= alloc, "task {task}: reserved {res} < allocated {alloc}");
+        }
+    });
+}
+
+#[test]
+fn prop_random_batches_conserve_jobs_and_memory_safety() {
+    check(60, |rng| {
+        let n_jobs = 4 + rng.below(12);
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                let c = compiled(rng);
+                let trace = interpret(&c, &[1 << 20]).expect("interprets");
+                JobSpec { name: format!("rand-{i}"), class: JobClass::Small, trace, arrival: 0.0 }
+            })
+            .collect();
+        let workers = 1 + rng.below(12);
+        let policy = ["mgb2", "mgb3", "schedgpu"][rng.below(3)];
+        let r = run_batch(
+            RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy(policy), workers },
+            jobs,
+        );
+        assert_eq!(r.completed() + r.crashed(), n_jobs);
+        assert_eq!(r.crashed(), 0, "{policy} must be memory-safe");
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+    });
+}
+
+#[test]
+fn prop_placements_always_fit_free_memory() {
+    check(300, |rng| {
+        let n_dev = 1 + rng.below(4);
+        let policy_name = ["mgb2", "mgb3", "schedgpu"][rng.below(3)];
+        let mut policy = make_policy(policy_name, n_dev);
+        let mut free: Vec<u64> = (0..n_dev).map(|_| ((1 + rng.below(16)) as u64) << 30).collect();
+        for i in 0..30 {
+            let views: Vec<DeviceView> = free
+                .iter()
+                .map(|&f| DeviceView { spec: GpuSpec::v100(), free_mem: f })
+                .collect();
+            let req = TaskReq {
+                mem_bytes: (rng.below(18) as u64) << 30,
+                tbs: 1 + rng.below(2000) as u64,
+                warps_per_tb: 1 + rng.below(8) as u64,
+            };
+            if let Some(d) = policy.place((i, 0), &req, &views) {
+                assert!(
+                    req.mem_bytes <= free[d],
+                    "{policy_name} placed {} bytes on device with {} free",
+                    req.mem_bytes,
+                    free[d]
+                );
+                free[d] -= req.mem_bytes;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_display_parse_roundtrip() {
+    // The textual IR form is a faithful serialization: printing any
+    // random program and re-parsing it reproduces the same text.
+    check(300, |rng| {
+        let p = random_program(rng);
+        let text = p.to_string();
+        let p2 = mgb::ir::parse::parse_program(&text)
+            .unwrap_or_else(|e| panic!("reparse failed: {e:#}\n{text}"));
+        assert_eq!(text, p2.to_string());
+        // And the reparsed program compiles to the same task structure.
+        let (a, b) = (compile(&p), compile(&p2));
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.lazy, y.lazy);
+            assert_eq!(x.launches.len(), y.launches.len());
+            assert_eq!(x.mem_objs, y.mem_objs);
+        }
+    });
+}

@@ -1,0 +1,67 @@
+//! Integration: AOT artifacts (python -m compile.aot) load, compile and
+//! execute on the rust PJRT client with correct numerics.
+//!
+//! Requires `make artifacts` to have been run (skips, loudly, otherwise).
+
+use mgb::runtime::{KernelRegistry, PjrtRuntime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_client_comes_up() {
+    let rt = PjrtRuntime::cpu().expect("cpu client");
+    assert_eq!(rt.platform_name(), "cpu");
+    assert!(rt.device_count() >= 1);
+}
+
+#[test]
+fn dwt2d_executes_with_correct_numerics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = KernelRegistry::new(dir).unwrap();
+    let exe = reg.get("dwt2d").unwrap();
+    // Constant image: Haar LL subband = 2*c, other subbands = 0.
+    let img = vec![3.0f32; 128 * 128];
+    let out = exe.run_f32(&[(&img, &[128, 128])]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 128 * 128);
+    // LL occupies rows 0..64, cols 0..64 of the output layout.
+    let ll = out[0][0];
+    assert!((ll - 6.0).abs() < 1e-5, "LL={ll}");
+    let hh = out[0][64 * 128 + 64];
+    assert!(hh.abs() < 1e-5, "HH={hh}");
+}
+
+#[test]
+fn pallas_lowered_srad_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = KernelRegistry::new(dir).unwrap();
+    let exe = reg.get("srad").unwrap();
+    // Constant image: all gradients zero => diffusion is a no-op.
+    let img = vec![1.5f32; 128 * 128];
+    let out = exe.run_f32(&[(&img, &[128, 128])]).unwrap();
+    for (i, v) in out[0].iter().enumerate() {
+        assert!((v - 1.5).abs() < 1e-4, "pixel {i} = {v}");
+    }
+}
+
+#[test]
+fn every_manifest_artifact_compiles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    let reg = KernelRegistry::new(dir).unwrap();
+    let mut n = 0;
+    for line in manifest.lines() {
+        let name = line.split(';').next().unwrap();
+        reg.get(name).unwrap_or_else(|e| panic!("compiling {name}: {e}"));
+        n += 1;
+    }
+    assert!(n >= 11, "expected >= 11 artifacts, saw {n}");
+}
