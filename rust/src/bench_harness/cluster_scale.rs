@@ -1,0 +1,56 @@
+//! Beyond-paper scale-out: the same probe-driven per-node scheduling
+//! (MGB Alg. 3), replicated across an N-node cluster and driven by
+//! sustained Poisson traffic instead of a batch at t = 0. Rows compare
+//! the cluster dispatchers (round-robin, least-loaded, memory-headroom)
+//! at 1, 2, and 4 nodes; the arrival rate scales with cluster capacity
+//! so per-node offered load stays comparable across rows.
+
+use super::{mgb_workers, Report};
+use crate::coordinator::{run_cluster, ClusterConfig, SchedMode};
+use crate::gpu::{ClusterSpec, NodeSpec};
+use crate::workloads::{poisson_arrivals, Workload};
+
+pub fn cluster_scale(seed: u64) -> Report {
+    let node = NodeSpec::v100x4();
+    let w5 = Workload::by_id("W5").expect("W5 exists");
+    let mut lines = Vec::new();
+    for &n in &[1usize, 2, 4] {
+        // n copies of the W5 mix, drawn with distinct seeds so the
+        // stream stays heterogeneous, then stamped with Poisson
+        // arrivals at 0.35 jobs/s per node.
+        let mut jobs = Vec::new();
+        for k in 0..n as u64 {
+            jobs.extend(w5.jobs(seed.wrapping_add(k)));
+        }
+        poisson_arrivals(&mut jobs, 0.35 * n as f64, seed);
+        // On one node every dispatcher routes identically (see the
+        // single_node_cluster_matches_run_batch_exactly test); skip
+        // the redundant rows.
+        let dispatchers: &[&'static str] =
+            if n == 1 { &["rr"] } else { &["rr", "least", "mem"] };
+        for &dispatch in dispatchers {
+            let cfg = ClusterConfig {
+                cluster: ClusterSpec::homogeneous(node.clone(), n),
+                mode: SchedMode::Policy("mgb3"),
+                workers_per_node: mgb_workers(&node),
+                dispatch,
+            };
+            let r = run_cluster(cfg, jobs.clone());
+            lines.push(format!(
+                "nodes={n} dispatch={dispatch:<5} jobs={} completed={} crashed={} \
+                 makespan={:.1}s throughput={:.4}j/s mean_turnaround={:.1}s",
+                r.jobs.len(),
+                r.completed(),
+                r.crashed(),
+                r.makespan,
+                r.throughput(),
+                r.mean_turnaround()
+            ));
+        }
+    }
+    Report {
+        title: "Cluster scale-out (beyond-paper): dispatch policy x node count, open-system W5 traffic"
+            .into(),
+        lines,
+    }
+}

@@ -8,6 +8,7 @@
 //! reproduction target recorded in EXPERIMENTS.md.
 
 mod ablation;
+mod cluster_scale;
 mod fig4;
 mod fig5;
 mod fig6;
@@ -20,6 +21,7 @@ use crate::coordinator::{run_batch, JobSpec, RunConfig, RunResult, SchedMode};
 use crate::gpu::NodeSpec;
 
 pub use ablation::ablation;
+pub use cluster_scale::cluster_scale;
 pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
@@ -117,6 +119,7 @@ pub fn run_all(seed: u64) -> Vec<Report> {
         nn128(seed),
         table4(seed),
         ablation(seed),
+        cluster_scale(seed),
     ]
 }
 
@@ -131,6 +134,7 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         "table4" => table4(seed),
         "nn128" => nn128(seed),
         "ablation" => ablation(seed),
+        "cluster" => cluster_scale(seed),
         _ => return None,
     })
 }

@@ -1,11 +1,21 @@
-//! The batch coordinator: a discrete-event simulation of the paper's
-//! deployment — a queue of jobs, a worker pool, the probe protocol, a
-//! scheduling policy, and the multi-GPU node.
+//! The batch coordinator engine: a discrete-event simulation of the
+//! paper's deployment — a queue of jobs, a worker pool, the probe
+//! protocol, a scheduling policy, and one or more multi-GPU nodes.
+//!
+//! The engine is the thin stepping layer over three modules:
+//!
+//! * `events` — the virtual clock, the event heap, and per-device
+//!   generation counters (nothing job- or memory-aware);
+//! * `placement` — per-node devices, probe reservations, raw
+//!   allocations, wait queues, and worker idleness;
+//! * `sched::dispatch` — the cluster layer routing each arriving job
+//!   to a node; per-node [`Policy`](crate::sched::Policy) instances
+//!   place tasks beneath it.
 //!
 //! Jobs are [`JobTrace`]s (produced by the compiler + lazy runtime).
-//! A pool of workers drains the queue (§V-A: "each worker dequeues a
-//! job, runs it, and then pulls another"); the worker count and its
-//! device pinning encode the baseline schedulers:
+//! A pool of workers per node drains that node's queue (§V-A: "each
+//! worker dequeues a job, runs it, and then pulls another"); the worker
+//! count and its device pinning encode the baseline schedulers:
 //!
 //! * **SA** — one worker per GPU, pinned: each job gets a dedicated
 //!   device for its lifetime (Slurm-style, memory-safe, underutilised).
@@ -13,19 +23,22 @@
 //!   workers / GPUs): MPS-style packing with *no* knowledge of memory
 //!   needs, so `cudaMalloc` can OOM and crash the job.
 //! * **MGB / schedGPU** — unpinned workers; every `TaskBegin` probe asks
-//!   the [`Policy`] for a device, reserving the task's memory up front
+//!   the policy for a device, reserving the task's memory up front
 //!   (memory-safe by construction); tasks wait when nothing fits.
 //!
 //! Virtual time is f64 seconds. Kernel execution uses the device model's
 //! processor sharing; completions are tracked with one pending event per
 //! device plus a generation counter (membership changes invalidate the
-//! stale event).
+//! stale event). A single-node cluster reproduces the paper's setup
+//! bit-for-bit; `run_cluster` scales the same engine to N nodes.
 
+use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
-use crate::gpu::{Device, NodeSpec, PCIE_BYTES_PER_SEC};
+use super::placement::{NodePlacement, TaskLedger};
+use crate::gpu::{ClusterSpec, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
-use crate::sched::{make_policy, DeviceView, Policy, TaskReq};
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use crate::sched::{make_dispatcher, Dispatcher, JobInfo, NodeLoadView, TaskReq};
+use std::collections::HashMap;
 
 /// Scheduler selection for a batch run.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -43,13 +56,25 @@ pub enum SchedMode {
     Static,
 }
 
-/// Batch-run configuration.
+/// Single-node batch-run configuration (the paper's deployments).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub node: NodeSpec,
     pub mode: SchedMode,
     /// Worker-pool size (ignored for SA, which always uses one per GPU).
     pub workers: usize,
+}
+
+/// Multi-node batch-run configuration: the same per-node machinery,
+/// replicated across a [`ClusterSpec`], with a dispatcher on top.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub cluster: ClusterSpec,
+    pub mode: SchedMode,
+    /// Worker-pool size per node (ignored for SA: one per GPU).
+    pub workers_per_node: usize,
+    /// Dispatcher name: "rr" | "least" | "mem" (see `sched::dispatch`).
+    pub dispatch: &'static str,
 }
 
 /// One job of the batch.
@@ -59,7 +84,8 @@ pub struct JobSpec {
     pub class: JobClass,
     pub trace: JobTrace,
     /// Queue-arrival time. The paper's batch experiments queue all jobs
-    /// at t = 0 (§V-A); open-system experiments (ablation) stagger it.
+    /// at t = 0 (§V-A); open-system experiments (Poisson arrivals via
+    /// `workloads::poisson_arrivals`) stagger it.
     pub arrival: f64,
 }
 
@@ -85,7 +111,13 @@ enum CEv {
 
 const NO_ARTIFACT: u32 = u32::MAX;
 
-fn compact_trace(trace: &JobTrace, intern: &mut Vec<String>) -> Vec<CEv> {
+/// Compact one trace, interning artifact names through a hash map (a
+/// linear rescan of `names` per launch was O(n²) across a batch).
+fn compact_trace(
+    trace: &JobTrace,
+    names: &mut Vec<String>,
+    intern: &mut HashMap<String, u32>,
+) -> Vec<CEv> {
     trace
         .events
         .iter()
@@ -99,11 +131,13 @@ fn compact_trace(trace: &JobTrace, intern: &mut Vec<String>) -> Vec<CEv> {
             TraceEvent::Launch { task, artifact, grid, block, work_us, .. } => {
                 let a = match artifact {
                     None => NO_ARTIFACT,
-                    Some(name) => match intern.iter().position(|n| n == name) {
-                        Some(i) => i as u32,
+                    Some(name) => match intern.get(name) {
+                        Some(&i) => i,
                         None => {
-                            intern.push(name.clone());
-                            (intern.len() - 1) as u32
+                            let i = names.len() as u32;
+                            names.push(name.clone());
+                            intern.insert(name.clone(), i);
+                            i
                         }
                     },
                 };
@@ -116,55 +150,24 @@ fn compact_trace(trace: &JobTrace, intern: &mut Vec<String>) -> Vec<CEv> {
         .collect()
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum EvKind {
-    Wake { job: usize },
-    DevCompletion { dev: usize, gen: u64 },
-    /// A job enters the queue (open-system arrivals).
-    Arrive { job: usize },
-}
-
-#[derive(Clone, Copy, Debug)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, o: &Self) -> bool {
-        self.t == o.t && self.seq == o.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(o))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-        // Min-heap via reverse: earliest time, then FIFO by seq.
-        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
-    }
-}
-
 #[derive(Debug, Default)]
 struct JobRt {
     pc: usize,
-    /// runtime task id -> device.
+    /// Cluster node the dispatcher routed this job to.
+    node: usize,
+    /// runtime task id -> device (on the job's node).
     task_dev: HashMap<usize, usize>,
-    /// task -> (device, bytes) reserved via probe (policy modes).
-    reserved: HashMap<usize, (usize, u64)>,
-    /// task -> (device, bytes) raw-allocated (pinned modes).
-    alloc: HashMap<usize, (usize, u64)>,
+    /// Memory held per open task (reservations + raw allocations).
+    ledger: TaskLedger,
     pinned_dev: Option<usize>,
     worker: usize,
     started: f64,
     ended: f64,
     crashed: bool,
     done: bool,
-    waiting_placement: bool,
+    /// Dispatch-time load estimates (kernel + host us, peak bytes).
+    est_work_us: u64,
+    est_mem_bytes: u64,
     ded_s: f64,
     act_s: f64,
     n_kernels: u64,
@@ -173,26 +176,22 @@ struct JobRt {
 }
 
 struct Engine<'h> {
-    cfg: RunConfig,
+    mode: SchedMode,
+    cluster_name: String,
     jobs: Vec<JobSpec>,
     /// Compacted traces (one per job) + interned artifact names.
     compact: Vec<Vec<CEv>>,
     artifact_names: Vec<String>,
     rt: Vec<JobRt>,
-    devices: Vec<Device>,
-    dev_gen: Vec<u64>,
-    /// (device, kernel handle) -> job.
-    kernel_owner: HashMap<(usize, usize), usize>,
-    policy: Option<Box<dyn Policy>>,
-    events: BinaryHeap<Event>,
-    seq: u64,
-    job_q: VecDeque<usize>,
-    wait_q: Vec<usize>,
-    worker_pin: Vec<Option<usize>>,
-    idle_workers: Vec<usize>,
-    /// cudaSetDevice semantics: place on res.static_dev.unwrap_or(0),
-    /// raw (crashable) memory accounting.
-    static_mode: bool,
+    nodes: Vec<NodePlacement>,
+    gens: DevGens,
+    /// (node, device, kernel handle) -> job.
+    kernel_owner: HashMap<(usize, usize, usize), usize>,
+    evq: EventQueue,
+    dispatcher: Box<dyn Dispatcher>,
+    /// Per-node dispatched-but-unfinished load (dispatcher bookkeeping).
+    outstanding_us: Vec<u64>,
+    outstanding_mem: Vec<u64>,
     hook: Option<LaunchHook<'h>>,
 }
 
@@ -207,43 +206,63 @@ pub fn run_batch_with_hook(
     jobs: Vec<JobSpec>,
     hook: Option<LaunchHook<'_>>,
 ) -> RunResult {
-    let n_gpus = cfg.node.n_gpus();
-    let workers = match cfg.mode {
-        SchedMode::Sa => n_gpus,
-        _ => cfg.workers.max(1),
+    let cluster_cfg = ClusterConfig {
+        cluster: ClusterSpec::single(cfg.node),
+        mode: cfg.mode,
+        workers_per_node: cfg.workers,
+        dispatch: "rr",
     };
-    let worker_pin: Vec<Option<usize>> = (0..workers)
-        .map(|w| match cfg.mode {
-            SchedMode::Sa | SchedMode::Cg => Some(w % n_gpus),
-            SchedMode::Policy(_) | SchedMode::Static => None,
+    run_cluster_with_hook(cluster_cfg, jobs, hook)
+}
+
+/// Run a batch across a multi-node cluster: the dispatcher routes each
+/// job to a node at arrival; per-node policies place its tasks. With a
+/// single-node cluster this is exactly `run_batch`.
+pub fn run_cluster(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> RunResult {
+    run_cluster_with_hook(cfg, jobs, None)
+}
+
+/// `run_cluster` plus a real-compute hook invoked per artifact launch.
+pub fn run_cluster_with_hook(
+    cfg: ClusterConfig,
+    jobs: Vec<JobSpec>,
+    hook: Option<LaunchHook<'_>>,
+) -> RunResult {
+    let nodes: Vec<NodePlacement> = cfg
+        .cluster
+        .nodes
+        .iter()
+        .map(|n| NodePlacement::new(n, &cfg.mode, cfg.workers_per_node))
+        .collect();
+    let devs_per_node: Vec<usize> = nodes.iter().map(|n| n.devices.len()).collect();
+    let mut artifact_names = Vec::new();
+    let mut intern: HashMap<String, u32> = HashMap::new();
+    let compact: Vec<Vec<CEv>> = jobs
+        .iter()
+        .map(|j| compact_trace(&j.trace, &mut artifact_names, &mut intern))
+        .collect();
+    let rt: Vec<JobRt> = jobs
+        .iter()
+        .map(|j| JobRt {
+            est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
+            est_mem_bytes: j.trace.peak_reserved_bytes(),
+            ..JobRt::default()
         })
         .collect();
-    let policy = match cfg.mode {
-        SchedMode::Policy(name) => Some(make_policy(name, n_gpus)),
-        _ => None,
-    };
-    let static_mode = cfg.mode == SchedMode::Static;
-    let devices: Vec<Device> = cfg.node.gpus.iter().map(|&g| Device::new(g)).collect();
-    let n_jobs = jobs.len();
-    let mut artifact_names = Vec::new();
-    let compact: Vec<Vec<CEv>> =
-        jobs.iter().map(|j| compact_trace(&j.trace, &mut artifact_names)).collect();
+    let n_nodes = nodes.len();
     let mut eng = Engine {
+        mode: cfg.mode,
+        cluster_name: cfg.cluster.name.clone(),
         compact,
         artifact_names,
-        rt: (0..n_jobs).map(|_| JobRt::default()).collect(),
-        dev_gen: vec![0; n_gpus],
+        rt,
+        gens: DevGens::new(&devs_per_node),
         kernel_owner: HashMap::new(),
-        policy,
-        events: BinaryHeap::new(),
-        seq: 0,
-        job_q: VecDeque::new(),
-        wait_q: Vec::new(),
-        worker_pin,
-        idle_workers: Vec::new(),
-        static_mode,
-        devices,
-        cfg,
+        evq: EventQueue::new(),
+        dispatcher: make_dispatcher(cfg.dispatch),
+        outstanding_us: vec![0; n_nodes],
+        outstanding_mem: vec![0; n_nodes],
+        nodes,
         jobs,
         hook,
     };
@@ -251,71 +270,94 @@ pub fn run_batch_with_hook(
 }
 
 impl<'h> Engine<'h> {
-    fn push(&mut self, t: f64, kind: EvKind) {
-        self.seq += 1;
-        self.events.push(Event { t, seq: self.seq, kind });
+    /// Route `job` to a node (cluster layer) and record its estimated
+    /// load against that node. Returns the node index.
+    fn dispatch_job(&mut self, job: usize) -> usize {
+        let views: Vec<NodeLoadView> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nd)| NodeLoadView {
+                queued_jobs: nd.job_q.len(),
+                outstanding_work_us: self.outstanding_us[i],
+                outstanding_mem_bytes: self.outstanding_mem[i],
+                free_mem: nd.free_mem(),
+                total_mem: nd.total_mem(),
+                n_gpus: nd.devices.len(),
+            })
+            .collect();
+        let info = JobInfo {
+            est_work_us: self.rt[job].est_work_us,
+            peak_mem_bytes: self.rt[job].est_mem_bytes,
+        };
+        let node = self.dispatcher.route(&info, &views);
+        debug_assert!(node < self.nodes.len(), "dispatcher routed off-cluster");
+        self.rt[job].node = node;
+        self.outstanding_us[node] += self.rt[job].est_work_us;
+        self.outstanding_mem[node] += self.rt[job].est_mem_bytes;
+        node
     }
 
     fn run(&mut self) -> RunResult {
         for j in 0..self.jobs.len() {
             let arr = self.jobs[j].arrival;
             if arr <= 0.0 {
-                self.job_q.push_back(j);
+                let n = self.dispatch_job(j);
+                self.nodes[n].job_q.push_back(j);
             } else {
-                self.push(arr, EvKind::Arrive { job: j });
+                self.evq.push(arr, EvKind::Arrive { job: j });
             }
         }
-        let workers = self.worker_pin.len();
-        for w in 0..workers {
-            self.start_next_job(w, 0.0);
+        for n in 0..self.nodes.len() {
+            for w in 0..self.nodes[n].n_workers() {
+                self.start_next_job(n, w, 0.0);
+            }
         }
-        let mut last_t = 0.0f64;
         loop {
-            while let Some(ev) = self.events.pop() {
-                last_t = ev.t;
+            while let Some(ev) = self.evq.pop() {
                 match ev.kind {
                     EvKind::Wake { job } => {
                         if !self.rt[job].done {
                             self.step_job(job, ev.t);
                         }
                     }
-                    EvKind::DevCompletion { dev, gen } => {
-                        if gen == self.dev_gen[dev] {
-                            self.handle_completions(dev, ev.t);
+                    EvKind::DevCompletion { node, dev, gen } => {
+                        if gen == self.gens.current(node, dev) {
+                            self.handle_completions(node, dev, ev.t);
                         }
                     }
                     EvKind::Arrive { job } => {
-                        self.job_q.push_back(job);
-                        if let Some(w) = self.idle_workers.pop() {
-                            self.start_next_job(w, ev.t);
+                        let n = self.dispatch_job(job);
+                        self.nodes[n].job_q.push_back(job);
+                        if let Some(w) = self.nodes[n].pop_idle() {
+                            self.start_next_job(n, w, ev.t);
                         }
                     }
                 }
             }
             // Queue drained but some jobs never finished: their resource
-            // requests can never be satisfied on this node (e.g. a task
+            // requests can never be satisfied on their node (e.g. a task
             // bigger than any GPU). Fail one and keep draining — the
             // real scheduler would reject such a request up front; the
             // failure may unblock (or start) other jobs.
             match (0..self.rt.len()).find(|&j| !self.rt[j].done) {
-                Some(j) => self.finish_job(j, last_t, true),
+                Some(j) => self.finish_job(j, self.evq.now(), true),
                 None => break,
             }
         }
         self.collect()
     }
 
-    fn start_next_job(&mut self, worker: usize, t: f64) {
-        let Some(job) = self.job_q.pop_front() else {
-            if !self.idle_workers.contains(&worker) {
-                self.idle_workers.push(worker);
-            }
+    fn start_next_job(&mut self, node: usize, worker: usize, t: f64) {
+        let Some(job) = self.nodes[node].job_q.pop_front() else {
+            self.nodes[node].mark_idle(worker);
             return;
         };
+        let pin = self.nodes[node].worker_pin[worker];
         let rt = &mut self.rt[job];
         rt.worker = worker;
         rt.started = t;
-        rt.pinned_dev = self.worker_pin[worker];
+        rt.pinned_dev = pin;
         self.step_job(job, t);
     }
 
@@ -329,23 +371,26 @@ impl<'h> Engine<'h> {
                 self.finish_job(job, t, false);
                 return;
             }
+            let node = self.rt[job].node;
             let ev = self.compact[job][self.rt[job].pc];
             match ev {
                 CEv::Nop => {
                     self.rt[job].pc += 1;
                 }
                 CEv::TaskBegin { task, res } => {
-                    if self.static_mode {
+                    if self.nodes[node].static_mode {
                         // §II-B: the app's cudaSetDevice (or device 0).
                         let dev = (res.static_dev.unwrap_or(0) as usize)
-                            .min(self.devices.len() - 1);
-                        self.rt[job].task_dev.insert(task, dev);
-                        self.rt[job].pc += 1;
+                            .min(self.nodes[node].devices.len() - 1);
+                        let rt = &mut self.rt[job];
+                        rt.task_dev.insert(task, dev);
+                        rt.pc += 1;
                         continue;
                     }
                     if let Some(dev) = self.rt[job].pinned_dev {
-                        self.rt[job].task_dev.insert(task, dev);
-                        self.rt[job].pc += 1;
+                        let rt = &mut self.rt[job];
+                        rt.task_dev.insert(task, dev);
+                        rt.pc += 1;
                         continue;
                     }
                     let req = TaskReq {
@@ -353,46 +398,32 @@ impl<'h> Engine<'h> {
                         tbs: res.thread_blocks(),
                         warps_per_tb: res.warps_per_tb(),
                     };
-                    let views: Vec<DeviceView> = self
-                        .devices
-                        .iter()
-                        .map(|d| DeviceView { spec: d.spec, free_mem: d.free_mem })
-                        .collect();
-                    let policy = self.policy.as_mut().expect("policy mode");
-                    match policy.place((job, task), &req, &views) {
+                    match self.nodes[node].place((job, task), &req) {
                         Some(dev) => {
-                            self.devices[dev]
-                                .alloc(req.mem_bytes)
-                                .expect("policy admitted within free_mem");
                             let rt = &mut self.rt[job];
-                            rt.reserved.insert(task, (dev, req.mem_bytes));
+                            rt.ledger.reserved.insert(task, (dev, req.mem_bytes));
                             rt.task_dev.insert(task, dev);
-                            rt.waiting_placement = false;
                             rt.pc += 1;
                         }
                         None => {
-                            if !self.rt[job].waiting_placement {
-                                self.rt[job].waiting_placement = true;
-                                self.wait_q.push(job);
-                            } else if !self.wait_q.contains(&job) {
-                                self.wait_q.push(job);
-                            }
+                            self.nodes[node].push_waiter(job);
                             return;
                         }
                     }
                 }
                 CEv::Malloc { task, bytes } => {
                     let rt = &mut self.rt[job];
-                    if rt.reserved.contains_key(&task) {
+                    if rt.ledger.reserved.contains_key(&task) {
                         rt.pc += 1; // covered by the probe's reservation
                         continue;
                     }
                     let dev = *rt.task_dev.get(&task).expect("task placed");
-                    match self.devices[dev].alloc(bytes) {
+                    match self.nodes[node].devices[dev].alloc(bytes) {
                         Ok(()) => {
-                            let e = self.rt[job].alloc.entry(task).or_insert((dev, 0));
+                            let rt = &mut self.rt[job];
+                            let e = rt.ledger.alloc.entry(task).or_insert((dev, 0));
                             e.1 += bytes;
-                            self.rt[job].pc += 1;
+                            rt.pc += 1;
                         }
                         Err(_avail) => {
                             // OOM: the CUDA runtime returns an error the
@@ -405,7 +436,7 @@ impl<'h> Engine<'h> {
                 CEv::Xfer { bytes } => {
                     self.rt[job].pc += 1;
                     let dt = bytes as f64 / PCIE_BYTES_PER_SEC;
-                    self.push(t + dt, EvKind::Wake { job });
+                    self.evq.push(t + dt, EvKind::Wake { job });
                     return;
                 }
                 CEv::Launch { task, artifact, grid, block, work_us } => {
@@ -417,22 +448,24 @@ impl<'h> Engine<'h> {
                     }
                     let warps = grid * block.div_ceil(32);
                     let work_s = work_us as f64 * 1e-6;
-                    self.devices[dev].advance_to(t);
-                    let h = self.devices[dev].start_kernel(t, work_s, warps);
-                    self.kernel_owner.insert((dev, h), job);
+                    let d = &mut self.nodes[node].devices[dev];
+                    d.advance_to(t);
+                    let h = d.start_kernel(t, work_s, warps);
+                    let speed = d.spec.speed;
+                    self.kernel_owner.insert((node, dev, h), job);
                     let rt = &mut self.rt[job];
                     rt.kernel_started = t;
-                    rt.kernel_ded = work_s / self.devices[dev].spec.speed;
-                    self.resched_dev(dev, t);
+                    rt.kernel_ded = work_s / speed;
+                    self.resched_dev(node, dev, t);
                     return; // job sleeps until DevCompletion wakes it
                 }
                 CEv::Free { task, bytes } => {
                     let rt = &mut self.rt[job];
-                    if !rt.reserved.contains_key(&task) {
-                        if let Some(e) = rt.alloc.get_mut(&task) {
+                    if !rt.ledger.reserved.contains_key(&task) {
+                        if let Some(e) = rt.ledger.alloc.get_mut(&task) {
                             let dev = e.0;
                             e.1 = e.1.saturating_sub(bytes);
-                            self.devices[dev].release(bytes);
+                            self.nodes[node].devices[dev].release(bytes);
                         }
                     }
                     self.rt[job].pc += 1;
@@ -443,7 +476,7 @@ impl<'h> Engine<'h> {
                 }
                 CEv::Host { micros } => {
                     self.rt[job].pc += 1;
-                    self.push(t + micros as f64 * 1e-6, EvKind::Wake { job });
+                    self.evq.push(t + micros as f64 * 1e-6, EvKind::Wake { job });
                     return;
                 }
             }
@@ -451,48 +484,40 @@ impl<'h> Engine<'h> {
     }
 
     /// Release a task's reservation / leftover allocations and let the
-    /// policy + waiters know capacity freed up.
+    /// node's policy + waiters know capacity freed up.
     fn release_task(&mut self, job: usize, task: usize, t: f64) {
-        let mut released = false;
-        if let Some((dev, bytes)) = self.rt[job].reserved.remove(&task) {
-            self.devices[dev].release(bytes);
-            released = true;
-        }
-        if let Some((dev, bytes)) = self.rt[job].alloc.remove(&task) {
-            if bytes > 0 {
-                self.devices[dev].release(bytes);
-                released = true;
-            }
-        }
-        if let Some(p) = self.policy.as_mut() {
-            p.release((job, task));
-        }
-        if released || self.policy.is_some() {
-            self.wake_waiters(t);
+        let node = self.rt[job].node;
+        let nd = &mut self.nodes[node];
+        let released = self.rt[job].ledger.release_task(&mut nd.devices, task);
+        nd.release_policy((job, task));
+        if released || nd.has_policy() {
+            self.wake_waiters(node, t);
         }
     }
 
-    fn wake_waiters(&mut self, t: f64) {
-        let waiters = std::mem::take(&mut self.wait_q);
-        for j in waiters {
-            self.push(t, EvKind::Wake { job: j });
+    fn wake_waiters(&mut self, node: usize, t: f64) {
+        for j in self.nodes[node].take_waiters() {
+            self.evq.push(t, EvKind::Wake { job: j });
         }
     }
 
-    /// Kernel completions on `dev` at time `t`.
-    fn handle_completions(&mut self, dev: usize, t: f64) {
-        self.devices[dev].advance_to(t);
-        // Collect all kernels that are done (remaining ~ 0).
+    /// Kernel completions on `(node, dev)` at time `t`.
+    fn handle_completions(&mut self, node: usize, dev: usize, t: f64) {
         let mut finished = Vec::new();
-        while let Some((tf, h)) = self.devices[dev].next_completion(t) {
-            if tf - t > 1e-9 {
-                break;
+        {
+            let d = &mut self.nodes[node].devices[dev];
+            d.advance_to(t);
+            // Collect all kernels that are done (remaining ~ 0).
+            while let Some((tf, h)) = d.next_completion(t) {
+                if tf - t > 1e-9 {
+                    break;
+                }
+                d.remove_kernel(t, h);
+                finished.push(h);
             }
-            self.devices[dev].remove_kernel(t, h);
-            finished.push(h);
         }
         for h in finished {
-            let job = self.kernel_owner.remove(&(dev, h)).expect("owned kernel");
+            let job = self.kernel_owner.remove(&(node, dev, h)).expect("owned kernel");
             let rt = &mut self.rt[job];
             rt.act_s += t - rt.kernel_started;
             rt.ded_s += rt.kernel_ded;
@@ -500,16 +525,15 @@ impl<'h> Engine<'h> {
             rt.pc += 1; // past the Launch event
             self.step_job(job, t);
         }
-        self.resched_dev(dev, t);
+        self.resched_dev(node, dev, t);
     }
 
     /// Invalidate the device's pending completion event and push a fresh
     /// one for the (new) earliest finisher.
-    fn resched_dev(&mut self, dev: usize, t: f64) {
-        self.dev_gen[dev] += 1;
-        let gen = self.dev_gen[dev];
-        if let Some((tf, _)) = self.devices[dev].next_completion(t) {
-            self.push(tf.max(t), EvKind::DevCompletion { dev, gen });
+    fn resched_dev(&mut self, node: usize, dev: usize, t: f64) {
+        let gen = self.gens.bump(node, dev);
+        if let Some((tf, _)) = self.nodes[node].devices[dev].next_completion(t) {
+            self.evq.push(tf.max(t), EvKind::DevCompletion { node, dev, gen });
         }
     }
 
@@ -524,20 +548,17 @@ impl<'h> Engine<'h> {
             rt.ended = t;
         }
         // Release everything the job still holds.
-        let tasks: Vec<usize> = self.rt[job]
-            .reserved
-            .keys()
-            .chain(self.rt[job].alloc.keys())
-            .copied()
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect();
-        for task in tasks {
+        for task in self.rt[job].ledger.open_tasks() {
             self.release_task(job, task, t);
         }
-        self.wake_waiters(t);
+        let node = self.rt[job].node;
+        self.wake_waiters(node, t);
+        self.outstanding_us[node] =
+            self.outstanding_us[node].saturating_sub(self.rt[job].est_work_us);
+        self.outstanding_mem[node] =
+            self.outstanding_mem[node].saturating_sub(self.rt[job].est_mem_bytes);
         let worker = self.rt[job].worker;
-        self.start_next_job(worker, t);
+        self.start_next_job(node, worker, t);
     }
 
     fn collect(&mut self) -> RunResult {
@@ -549,6 +570,7 @@ impl<'h> Engine<'h> {
                 name: spec.name.clone(),
                 class: spec.class,
                 arrival: spec.arrival,
+                node: rt.node,
                 started: rt.started,
                 ended: rt.ended,
                 crashed: rt.crashed,
@@ -558,7 +580,7 @@ impl<'h> Engine<'h> {
             })
             .collect();
         let makespan = jobs.iter().map(|j| j.ended).fold(0.0, f64::max);
-        let scheduler = match self.cfg.mode {
+        let scheduler = match &self.mode {
             SchedMode::Sa => "sa".to_string(),
             SchedMode::Cg => "cg".to_string(),
             SchedMode::Static => "static".to_string(),
@@ -566,8 +588,10 @@ impl<'h> Engine<'h> {
         };
         RunResult {
             scheduler,
-            node: self.cfg.node.name.clone(),
-            workers: self.worker_pin.len(),
+            node: self.cluster_name.clone(),
+            workers: self.nodes.iter().map(|n| n.n_workers()).sum(),
+            n_nodes: self.nodes.len(),
+            dispatcher: self.dispatcher.name().to_string(),
             jobs,
             makespan,
         }

@@ -16,6 +16,8 @@ pub struct JobOutcome {
     pub class: JobClass,
     /// Queue-arrival time (0 for the paper's batch experiments).
     pub arrival: f64,
+    /// Cluster node the dispatcher routed the job to (0 on one node).
+    pub node: usize,
     /// Virtual time the job left the queue (a worker picked it up).
     pub started: f64,
     /// Virtual completion (or crash) time; jobs arrive at t = 0.
@@ -50,8 +52,15 @@ impl JobOutcome {
 #[derive(Clone, Debug)]
 pub struct RunResult {
     pub scheduler: String,
+    /// Node name (single node) or cluster name (multi-node runs).
     pub node: String,
+    /// Total workers across the cluster.
     pub workers: usize,
+    /// Cluster size (1 for the paper's single-node deployments).
+    pub n_nodes: usize,
+    /// Dispatcher that routed jobs to nodes ("rr" on a single node,
+    /// where routing is trivial).
+    pub dispatcher: String,
     pub jobs: Vec<JobOutcome>,
     /// Time the last job finished (the batch makespan).
     pub makespan: f64,
@@ -78,6 +87,17 @@ impl RunResult {
         } else {
             self.completed() as f64 / self.makespan
         }
+    }
+
+    /// Jobs dispatched to each node (len == `n_nodes`).
+    pub fn jobs_per_node(&self) -> Vec<usize> {
+        let mut v = vec![0; self.n_nodes];
+        for j in &self.jobs {
+            if j.node < v.len() {
+                v[j.node] += 1;
+            }
+        }
+        v
     }
 
     /// Mean turnaround over *completed* jobs.
@@ -114,6 +134,7 @@ mod tests {
             name: "j".into(),
             class: JobClass::Small,
             arrival: 0.0,
+            node: 0,
             started: 0.0,
             ended,
             crashed,
@@ -124,7 +145,15 @@ mod tests {
     }
 
     fn rr(jobs: Vec<JobOutcome>, makespan: f64) -> RunResult {
-        RunResult { scheduler: "t".into(), node: "n".into(), workers: 1, jobs, makespan }
+        RunResult {
+            scheduler: "t".into(),
+            node: "n".into(),
+            workers: 1,
+            n_nodes: 1,
+            dispatcher: "rr".into(),
+            jobs,
+            makespan,
+        }
     }
 
     #[test]
@@ -143,6 +172,18 @@ mod tests {
         );
         // (12 / 11 - 1) ≈ 9.09%
         assert!((r.kernel_slowdown_pct() - 100.0 * (12.0 / 11.0 - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jobs_per_node_counts_dispatch() {
+        let mut a = job(1.0, false, 0.0, 0.0);
+        let mut b = job(2.0, false, 0.0, 0.0);
+        let c = job(3.0, false, 0.0, 0.0);
+        a.node = 1;
+        b.node = 1;
+        let mut r = rr(vec![a, b, c], 3.0);
+        r.n_nodes = 2;
+        assert_eq!(r.jobs_per_node(), vec![1, 2]);
     }
 
     #[test]

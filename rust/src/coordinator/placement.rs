@@ -1,0 +1,243 @@
+//! Placement & accounting layer of the coordinator: per-node device
+//! state, probe-driven reservations, raw (crashable) allocations, the
+//! placement wait queue, and the worker pool's idle bookkeeping.
+//!
+//! One [`NodePlacement`] exists per cluster node. It owns the node's
+//! simulated [`Device`]s and its task-granular [`Policy`] instance (in
+//! policy modes), and exposes the memory-safety contract the paper
+//! builds on: `place` reserves a task's memory up front and can say
+//! "wait", while `raw allocations` (pinned/static modes) go straight to
+//! the device and crash the job on OOM — that asymmetry is enforced by
+//! the engine via [`TaskLedger`].
+
+use super::engine::SchedMode;
+use crate::gpu::{Device, NodeSpec};
+use crate::sched::{make_policy, DeviceView, Policy, TaskKey, TaskReq};
+use std::collections::{HashMap, VecDeque};
+
+/// Per-job memory ledger: what each open task holds, split into the
+/// probe's up-front reservation (memory-safe) and raw allocations
+/// (crashable). Owned by the engine's per-job runtime state; the
+/// release path lives here so reservation/allocation semantics stay in
+/// one module.
+#[derive(Debug, Default)]
+pub(crate) struct TaskLedger {
+    /// task -> (device, bytes) reserved via probe (policy modes).
+    pub reserved: HashMap<usize, (usize, u64)>,
+    /// task -> (device, bytes) raw-allocated (pinned/static modes).
+    pub alloc: HashMap<usize, (usize, u64)>,
+}
+
+impl TaskLedger {
+    /// Distinct tasks still holding memory, in stable (sorted) order.
+    pub fn open_tasks(&self) -> Vec<usize> {
+        self.reserved
+            .keys()
+            .chain(self.alloc.keys())
+            .copied()
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect()
+    }
+
+    /// Drop `task`'s reservation and leftover raw allocations back into
+    /// the node's devices. Returns whether any bytes were released.
+    pub fn release_task(&mut self, devices: &mut [Device], task: usize) -> bool {
+        let mut released = false;
+        if let Some((dev, bytes)) = self.reserved.remove(&task) {
+            devices[dev].release(bytes);
+            released = true;
+        }
+        if let Some((dev, bytes)) = self.alloc.remove(&task) {
+            if bytes > 0 {
+                devices[dev].release(bytes);
+                released = true;
+            }
+        }
+        released
+    }
+}
+
+/// One cluster node's placement state: devices, policy, job/wait
+/// queues, and the worker pool.
+pub(crate) struct NodePlacement {
+    pub devices: Vec<Device>,
+    pub policy: Option<Box<dyn Policy>>,
+    /// Jobs dispatched to this node, waiting for a worker.
+    pub job_q: VecDeque<usize>,
+    /// Jobs whose pending task placement did not fit; retried after the
+    /// next release on this node.
+    wait_q: Vec<usize>,
+    /// Worker -> pinned device (SA/CG) or None (policy/static modes).
+    pub worker_pin: Vec<Option<usize>>,
+    /// Idle workers, most recently idled on top (wakeup pops the top).
+    idle_stack: Vec<usize>,
+    /// O(1) idleness flags mirroring `idle_stack` membership.
+    is_idle: Vec<bool>,
+    /// cudaSetDevice semantics: place on res.static_dev.unwrap_or(0),
+    /// raw (crashable) memory accounting.
+    pub static_mode: bool,
+}
+
+impl NodePlacement {
+    pub fn new(spec: &NodeSpec, mode: &SchedMode, workers_per_node: usize) -> Self {
+        let n_gpus = spec.n_gpus();
+        let workers = match mode {
+            SchedMode::Sa => n_gpus,
+            _ => workers_per_node.max(1),
+        };
+        let worker_pin: Vec<Option<usize>> = (0..workers)
+            .map(|w| match mode {
+                SchedMode::Sa | SchedMode::Cg => Some(w % n_gpus),
+                SchedMode::Policy(_) | SchedMode::Static => None,
+            })
+            .collect();
+        let policy = match mode {
+            SchedMode::Policy(name) => Some(make_policy(name, n_gpus)),
+            _ => None,
+        };
+        NodePlacement {
+            devices: spec.gpus.iter().map(|&g| Device::new(g)).collect(),
+            policy,
+            job_q: VecDeque::new(),
+            wait_q: Vec::new(),
+            worker_pin,
+            idle_stack: Vec::new(),
+            is_idle: vec![false; workers],
+            static_mode: matches!(mode, SchedMode::Static),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.worker_pin.len()
+    }
+
+    /// Probe placement: ask the policy for a device and reserve the
+    /// task's memory on it. `None` = nothing fits; the caller queues
+    /// the job as a waiter.
+    pub fn place(&mut self, key: TaskKey, req: &TaskReq) -> Option<usize> {
+        let views: Vec<DeviceView> = self
+            .devices
+            .iter()
+            .map(|d| DeviceView { spec: d.spec, free_mem: d.free_mem })
+            .collect();
+        let policy = self.policy.as_mut().expect("policy mode");
+        let dev = policy.place(key, req, &views)?;
+        self.devices[dev]
+            .alloc(req.mem_bytes)
+            .expect("policy admitted within free_mem");
+        Some(dev)
+    }
+
+    /// Tell the policy a placed task finished (no-op in pinned modes).
+    pub fn release_policy(&mut self, key: TaskKey) {
+        if let Some(p) = self.policy.as_mut() {
+            p.release(key);
+        }
+    }
+
+    pub fn has_policy(&self) -> bool {
+        self.policy.is_some()
+    }
+
+    /// Queue `job` to retry placement after the next release here.
+    pub fn push_waiter(&mut self, job: usize) {
+        if !self.wait_q.contains(&job) {
+            self.wait_q.push(job);
+        }
+    }
+
+    /// Drain the wait queue (the engine turns these into Wake events).
+    pub fn take_waiters(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.wait_q)
+    }
+
+    /// Mark a worker idle; O(1) via the `is_idle` flags (no scan).
+    pub fn mark_idle(&mut self, worker: usize) {
+        if !self.is_idle[worker] {
+            self.is_idle[worker] = true;
+            self.idle_stack.push(worker);
+        }
+    }
+
+    /// Pop the most recently idled worker, if any.
+    pub fn pop_idle(&mut self) -> Option<usize> {
+        let w = self.idle_stack.pop()?;
+        self.is_idle[w] = false;
+        Some(w)
+    }
+
+    /// Free memory summed across the node's devices.
+    pub fn free_mem(&self) -> u64 {
+        self.devices.iter().map(|d| d.free_mem).sum()
+    }
+
+    /// Total memory summed across the node's devices.
+    pub fn total_mem(&self) -> u64 {
+        self.devices.iter().map(|d| d.spec.mem_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> NodePlacement {
+        NodePlacement::new(&NodeSpec::v100x4(), &SchedMode::Policy("mgb3"), 4)
+    }
+
+    #[test]
+    fn idle_tracking_is_duplicate_free_lifo() {
+        let mut n = node();
+        n.mark_idle(1);
+        n.mark_idle(3);
+        n.mark_idle(1); // duplicate ignored
+        assert_eq!(n.pop_idle(), Some(3), "most recently idled first");
+        assert_eq!(n.pop_idle(), Some(1));
+        assert_eq!(n.pop_idle(), None);
+        // Re-idling after a pop works again.
+        n.mark_idle(1);
+        assert_eq!(n.pop_idle(), Some(1));
+    }
+
+    #[test]
+    fn waiters_are_deduplicated_and_drained() {
+        let mut n = node();
+        n.push_waiter(7);
+        n.push_waiter(7);
+        n.push_waiter(2);
+        assert_eq!(n.take_waiters(), vec![7, 2]);
+        assert!(n.take_waiters().is_empty());
+    }
+
+    #[test]
+    fn place_reserves_memory_on_the_chosen_device() {
+        let mut n = node();
+        let req = TaskReq { mem_bytes: 4 << 30, tbs: 100, warps_per_tb: 4 };
+        let dev = n.place((0, 0), &req).expect("fits");
+        assert_eq!(n.devices[dev].free_mem, (16u64 << 30) - (4 << 30));
+        let before = n.free_mem();
+        n.release_policy((0, 0));
+        assert_eq!(n.free_mem(), before, "policy release does not free device bytes");
+    }
+
+    #[test]
+    fn ledger_release_returns_bytes_once() {
+        let mut n = node();
+        let mut ledger = TaskLedger::default();
+        n.devices[0].alloc(1 << 30).unwrap();
+        ledger.alloc.insert(0, (0, 1 << 30));
+        assert!(ledger.release_task(&mut n.devices, 0));
+        assert_eq!(n.devices[0].free_mem, 16 << 30);
+        assert!(!ledger.release_task(&mut n.devices, 0), "second release is a no-op");
+        assert_eq!(ledger.open_tasks(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn sa_mode_pins_one_worker_per_gpu() {
+        let n = NodePlacement::new(&NodeSpec::v100x4(), &SchedMode::Sa, 99);
+        assert_eq!(n.n_workers(), 4);
+        assert_eq!(n.worker_pin, vec![Some(0), Some(1), Some(2), Some(3)]);
+        assert!(!n.has_policy());
+    }
+}

@@ -85,5 +85,60 @@ impl NodeSpec {
     }
 }
 
+/// A cluster of compute nodes — the beyond-paper scale-out target. The
+/// dispatcher layer (`sched::dispatch`) routes jobs across `nodes`;
+/// each node keeps its own devices, worker pool, and policy instance.
+/// Nodes may be heterogeneous (e.g. a P100 node next to V100 nodes).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    pub name: String,
+}
+
+impl ClusterSpec {
+    /// A one-node cluster: the paper's deployments. Keeps the node's
+    /// name so single-node results read identically to `run_batch`.
+    pub fn single(node: NodeSpec) -> Self {
+        let name = node.name.clone();
+        ClusterSpec { nodes: vec![node], name }
+    }
+
+    /// `n` identical nodes.
+    pub fn homogeneous(node: NodeSpec, n: usize) -> Self {
+        assert!(n > 0, "a cluster needs at least one node");
+        let name = format!("{}x[{}]", n, node.name);
+        ClusterSpec { nodes: vec![node; n], name }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.n_gpus()).sum()
+    }
+}
+
 /// PCIe gen3 x16 effective host<->device bandwidth (B/s).
 pub const PCIE_BYTES_PER_SEC: f64 = 12.0e9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_cluster_keeps_node_name() {
+        let c = ClusterSpec::single(NodeSpec::v100x4());
+        assert_eq!(c.n_nodes(), 1);
+        assert_eq!(c.name, "4xV100");
+        assert_eq!(c.total_gpus(), 4);
+    }
+
+    #[test]
+    fn homogeneous_cluster_replicates_nodes() {
+        let c = ClusterSpec::homogeneous(NodeSpec::p100x2(), 3);
+        assert_eq!(c.n_nodes(), 3);
+        assert_eq!(c.total_gpus(), 6);
+        assert!(c.name.contains("2xP100"));
+    }
+}

@@ -3,21 +3,25 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|cluster|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
+//!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
+//!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
 //! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
 //! ```
 
 use mgb::bench_harness;
 use mgb::compiler::compile;
-use mgb::coordinator::{run_batch, run_batch_with_hook, RunConfig, RunResult, SchedMode};
-use mgb::gpu::NodeSpec;
+use mgb::coordinator::{
+    run_cluster, run_cluster_with_hook, ClusterConfig, RunResult, SchedMode,
+};
+use mgb::gpu::{ClusterSpec, NodeSpec};
 use mgb::ir::parse::parse_program;
 use mgb::runtime::KernelRegistry;
-use mgb::workloads::{nn_homogeneous, nn_mix, NnTask, Workload};
+use mgb::workloads::{nn_homogeneous, nn_mix, poisson_arrivals, NnTask, Workload};
 use std::collections::HashMap;
 
 fn main() {
@@ -37,10 +41,12 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|cluster|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
+        [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
+        [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
   compile <file.gir>
   artifacts [--dir DIR]";
 
@@ -89,6 +95,38 @@ fn parse_sched(f: &HashMap<String, String>) -> SchedMode {
     }
 }
 
+/// `--nodes N` scales the chosen node preset to an N-node cluster.
+fn parse_cluster(f: &HashMap<String, String>) -> ClusterSpec {
+    let node = parse_node(f);
+    let n = f.get("nodes").and_then(|s| s.parse::<usize>().ok()).unwrap_or(1);
+    if n <= 1 {
+        ClusterSpec::single(node)
+    } else {
+        ClusterSpec::homogeneous(node, n)
+    }
+}
+
+fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
+    match f.get("dispatch") {
+        None => "rr",
+        Some(s) => mgb::sched::canonical_dispatch(s).unwrap_or_else(|| {
+            eprintln!("unknown dispatcher '{s}', using rr");
+            "rr"
+        }),
+    }
+}
+
+/// `--rate R` stamps Poisson arrivals over the batch (open system).
+fn apply_rate(f: &HashMap<String, String>, jobs: &mut [mgb::coordinator::JobSpec], seed: u64) {
+    if let Some(rate) = f.get("rate").and_then(|s| s.parse::<f64>().ok()) {
+        if rate > 0.0 {
+            poisson_arrivals(jobs, rate, seed);
+        } else {
+            eprintln!("--rate must be positive; running batch-at-0");
+        }
+    }
+}
+
 fn seed_of(f: &HashMap<String, String>) -> u64 {
     f.get("seed")
         .and_then(|s| s.parse().ok())
@@ -96,11 +134,17 @@ fn seed_of(f: &HashMap<String, String>) -> u64 {
 }
 
 fn print_result(r: &RunResult) {
+    let cluster = if r.n_nodes > 1 {
+        format!(" nodes={} dispatch={}", r.n_nodes, r.dispatcher)
+    } else {
+        String::new()
+    };
     println!(
-        "scheduler={} node={} workers={} jobs={} completed={} crashed={} \
+        "scheduler={} node={}{} workers={} jobs={} completed={} crashed={} \
          makespan={:.1}s throughput={:.4}j/s mean_turnaround={:.1}s kernel_slowdown={:.2}%",
         r.scheduler,
         r.node,
+        cluster,
         r.workers,
         r.jobs.len(),
         r.completed(),
@@ -135,7 +179,7 @@ fn cmd_bench(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_run(f: &HashMap<String, String>) -> i32 {
-    let node = parse_node(f);
+    let cluster = parse_cluster(f);
     let mode = parse_sched(f);
     let seed = seed_of(f);
     let wl = f.get("workload").map(String::as_str).unwrap_or("W1");
@@ -146,9 +190,15 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
     let workers = f
         .get("workers")
         .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| bench_harness::mgb_workers(&node));
-    let jobs = workload.jobs(seed);
-    let cfg = RunConfig { node, mode, workers };
+        .unwrap_or_else(|| bench_harness::mgb_workers(&cluster.nodes[0]));
+    let mut jobs = workload.jobs(seed);
+    apply_rate(f, &mut jobs, seed);
+    let cfg = ClusterConfig {
+        cluster,
+        mode,
+        workers_per_node: workers,
+        dispatch: parse_dispatch(f),
+    };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
         let reg = match KernelRegistry::new(&dir) {
@@ -165,18 +215,20 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
                 executed += 1;
             }
         };
-        let r = run_batch_with_hook(cfg, jobs, Some(&mut hook));
+        let r = run_cluster_with_hook(cfg, jobs, Some(&mut hook));
         println!("real-compute launches resolved: {executed}");
         r
     } else {
-        run_batch(cfg, jobs)
+        run_cluster(cfg, jobs)
     };
     print_result(&r);
     for j in &r.jobs {
+        let node = if r.n_nodes > 1 { format!(" node={}", j.node) } else { String::new() };
         println!(
-            "  {:<24} {} start={:>7.1}s end={:>7.1}s kernels={} slowdown={:+.2}%",
+            "  {:<24} {}{} start={:>7.1}s end={:>7.1}s kernels={} slowdown={:+.2}%",
             j.name,
             if j.crashed { "CRASH" } else { "ok   " },
+            node,
             j.started,
             j.ended,
             j.n_kernels,
@@ -187,11 +239,11 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
-    let node = parse_node(f);
+    let cluster = parse_cluster(f);
     let mode = parse_sched(f);
     let seed = seed_of(f);
     let workers = f.get("workers").and_then(|s| s.parse().ok()).unwrap_or(8);
-    let jobs = match f.get("task").map(String::as_str).unwrap_or("mix") {
+    let mut jobs = match f.get("task").map(String::as_str).unwrap_or("mix") {
         "predict" => nn_homogeneous(NnTask::Predict),
         "train" => nn_homogeneous(NnTask::Train),
         "detect" => nn_homogeneous(NnTask::Detect),
@@ -205,7 +257,14 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let r = run_batch(RunConfig { node, mode, workers }, jobs);
+    apply_rate(f, &mut jobs, seed);
+    let cfg = ClusterConfig {
+        cluster,
+        mode,
+        workers_per_node: workers,
+        dispatch: parse_dispatch(f),
+    };
+    let r = run_cluster(cfg, jobs);
     print_result(&r);
     0
 }

@@ -1,0 +1,194 @@
+//! Cluster-level dispatch (beyond the paper's single node): route each
+//! arriving job to a node; the per-node [`Policy`](super::Policy) then
+//! places its tasks onto devices beneath the dispatcher.
+//!
+//! Dispatchers see only aggregate per-node load ([`NodeLoadView`]) and
+//! a cheap estimate of the arriving job ([`JobInfo`]) — mirroring a
+//! real cluster frontend, which knows queue depths and advertised
+//! capacity but not the future. All three built-ins are deterministic
+//! (ties break toward the lower node index) so batch runs replay
+//! exactly.
+
+/// Aggregate load of one node at dispatch time.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeLoadView {
+    /// Jobs dispatched to the node and still waiting for a worker.
+    pub queued_jobs: usize,
+    /// Estimated kernel + host microseconds of every job dispatched to
+    /// the node and not yet finished.
+    pub outstanding_work_us: u64,
+    /// Estimated peak reserved bytes of every dispatched-but-unfinished
+    /// job (dispatcher-level bookkeeping, not live device state).
+    pub outstanding_mem_bytes: u64,
+    /// Current free device memory summed over the node's GPUs.
+    pub free_mem: u64,
+    /// Total device memory summed over the node's GPUs.
+    pub total_mem: u64,
+    pub n_gpus: usize,
+}
+
+/// What the dispatcher may know about the arriving job.
+#[derive(Clone, Copy, Debug)]
+pub struct JobInfo {
+    /// Estimated kernel + host microseconds (from the compiled trace).
+    pub est_work_us: u64,
+    /// Estimated peak simultaneous reservation, bytes.
+    pub peak_mem_bytes: u64,
+}
+
+/// A cluster-level job router. Stateful (round-robin keeps a cursor);
+/// one instance lives for the whole batch run.
+pub trait Dispatcher: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick the node for an arriving job. `nodes` is never empty.
+    fn route(&mut self, job: &JobInfo, nodes: &[NodeLoadView]) -> usize;
+}
+
+/// Ignore load entirely; cycle through the nodes.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Dispatcher for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        let n = self.next % nodes.len();
+        self.next = self.next.wrapping_add(1);
+        n
+    }
+}
+
+/// Least outstanding estimated work; ties broken by queue depth, then
+/// node index.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Dispatcher for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least"
+    }
+
+    fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        let mut best = 0;
+        for (i, v) in nodes.iter().enumerate().skip(1) {
+            let b = &nodes[best];
+            if (v.outstanding_work_us, v.queued_jobs) < (b.outstanding_work_us, b.queued_jobs) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Largest memory headroom: total capacity minus the estimated peak
+/// memory of dispatched-but-unfinished jobs. Sends memory-hungry
+/// streams where they are least likely to wait on reservations.
+#[derive(Debug, Default)]
+pub struct MemHeadroom;
+
+impl Dispatcher for MemHeadroom {
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+
+    fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        let headroom =
+            |v: &NodeLoadView| v.total_mem.saturating_sub(v.outstanding_mem_bytes);
+        let mut best = 0;
+        for (i, v) in nodes.iter().enumerate().skip(1) {
+            if headroom(v) > headroom(&nodes[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Canonical short name for a dispatcher alias, or `None` if the name
+/// is not recognised. The single alias table shared by the CLI parser
+/// and [`make_dispatcher`].
+pub fn canonical_dispatch(name: &str) -> Option<&'static str> {
+    match name {
+        "rr" | "round-robin" => Some("rr"),
+        "least" | "least-loaded" => Some("least"),
+        "mem" | "headroom" => Some("mem"),
+        _ => None,
+    }
+}
+
+/// Construct a dispatcher by name: "rr" | "least" | "mem".
+pub fn make_dispatcher(name: &str) -> Box<dyn Dispatcher> {
+    match canonical_dispatch(name) {
+        Some("rr") => Box::new(RoundRobin::default()),
+        Some("least") => Box::new(LeastLoaded),
+        Some("mem") => Box::new(MemHeadroom),
+        _ => panic!("unknown dispatcher '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(outstanding_work_us: u64, queued: usize, outstanding_mem: u64) -> NodeLoadView {
+        NodeLoadView {
+            queued_jobs: queued,
+            outstanding_work_us,
+            outstanding_mem_bytes: outstanding_mem,
+            free_mem: 64 << 30,
+            total_mem: 64 << 30,
+            n_gpus: 4,
+        }
+    }
+
+    fn job() -> JobInfo {
+        JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 1 << 30 }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut d = make_dispatcher("rr");
+        let nodes = vec![view(0, 0, 0); 3];
+        let picks: Vec<usize> = (0..6).map(|_| d.route(&job(), &nodes)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_outstanding_work() {
+        let mut d = make_dispatcher("least");
+        let nodes = vec![view(30, 1, 0), view(10, 5, 0), view(20, 0, 0)];
+        assert_eq!(d.route(&job(), &nodes), 1);
+        // Equal work: fewer queued jobs wins, then lower index.
+        let nodes = vec![view(10, 3, 0), view(10, 1, 0), view(10, 1, 0)];
+        assert_eq!(d.route(&job(), &nodes), 1);
+    }
+
+    #[test]
+    fn mem_headroom_picks_max_capacity_minus_outstanding() {
+        let mut d = make_dispatcher("mem");
+        let nodes = vec![view(0, 0, 60 << 30), view(0, 0, 8 << 30), view(0, 0, 8 << 30)];
+        assert_eq!(d.route(&job(), &nodes), 1, "lower index wins ties");
+        // Outstanding beyond capacity saturates to zero headroom.
+        let nodes = vec![view(0, 0, 100 << 30), view(0, 0, 63 << 30)];
+        assert_eq!(d.route(&job(), &nodes), 1);
+    }
+
+    #[test]
+    fn aliases_normalise_to_canonical_names() {
+        assert_eq!(canonical_dispatch("round-robin"), Some("rr"));
+        assert_eq!(canonical_dispatch("least-loaded"), Some("least"));
+        assert_eq!(canonical_dispatch("headroom"), Some("mem"));
+        assert_eq!(canonical_dispatch("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dispatcher")]
+    fn unknown_name_panics() {
+        make_dispatcher("nope");
+    }
+}

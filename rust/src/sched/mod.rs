@@ -1,22 +1,36 @@
-//! Scheduling policies (paper §III-B, §IV).
+//! Scheduling, in two layers: cluster-level dispatch and per-node
+//! task-granular policies (paper §III-B, §IV; dispatch is beyond-paper).
 //!
-//! Task-granular policies implement [`Policy`]: the probe protocol hands
-//! them a [`TaskReq`] resource vector and the current device memory
-//! views; they answer with a device or `None` (the task waits until a
-//! release). [`MgbAlg2`] emulates the hardware's per-SM round-robin
-//! placement with memory *and* compute as hard constraints;
-//! [`MgbAlg3`] keeps memory hard but compute soft (min-warp-load pick);
-//! [`SchedGpu`] reproduces Reaño et al.'s memory-only intra-node
-//! scheduler. The process-granular baselines — single-assignment (SA)
-//! and core-to-GPU (CG) — are worker-pinning modes of the coordinator
-//! (`crate::coordinator`), matching how the paper deploys them.
+//! **Node layer.** Task-granular policies implement [`Policy`]: the
+//! probe protocol hands them a [`TaskReq`] resource vector and the
+//! current device memory views; they answer with a device or `None`
+//! (the task waits until a release). [`MgbAlg2`] emulates the
+//! hardware's per-SM round-robin placement with memory *and* compute as
+//! hard constraints; [`MgbAlg3`] keeps memory hard but compute soft
+//! (min-warp-load pick); [`SchedGpu`] reproduces Reaño et al.'s
+//! memory-only intra-node scheduler. The process-granular baselines —
+//! single-assignment (SA) and core-to-GPU (CG) — are worker-pinning
+//! modes of the coordinator (`crate::coordinator`), matching how the
+//! paper deploys them.
+//!
+//! **Cluster layer.** A [`Dispatcher`] routes each *arriving job* to a
+//! node of a `gpu::ClusterSpec` (round-robin, least-loaded, or
+//! memory-headroom — see [`dispatch`]); the chosen node's own policy
+//! instance then places the job's tasks on its devices. The two layers
+//! are deliberately decoupled: dispatchers see only aggregate
+//! [`NodeLoadView`]s, policies only their node's [`DeviceView`]s.
 
 pub mod alg2;
 pub mod alg3;
+pub mod dispatch;
 pub mod schedgpu;
 
 pub use alg2::MgbAlg2;
 pub use alg3::MgbAlg3;
+pub use dispatch::{
+    canonical_dispatch, make_dispatcher, Dispatcher, JobInfo, LeastLoaded, MemHeadroom,
+    NodeLoadView, RoundRobin,
+};
 pub use schedgpu::SchedGpu;
 
 use crate::gpu::GpuSpec;

@@ -76,6 +76,27 @@ impl Workload {
     }
 }
 
+/// Open-system traffic: overwrite each job's `arrival` with a Poisson
+/// process of `rate_per_s` jobs/second (i.i.d. exponential
+/// inter-arrivals), in job order. Turns any batch mix into sustained
+/// traffic for the cluster dispatcher; deterministic per seed.
+pub fn poisson_arrivals(jobs: &mut [JobSpec], rate_per_s: f64, seed: u64) {
+    assert!(rate_per_s > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed ^ 0xA11C0DE);
+    let mut t = 0.0;
+    for j in jobs.iter_mut() {
+        t += rng.exp(1.0 / rate_per_s);
+        j.arrival = t;
+    }
+}
+
+/// A workload mix driven as open-system traffic rather than batch-at-0.
+pub fn open_system(workload: &Workload, rate_per_s: f64, seed: u64) -> Vec<JobSpec> {
+    let mut jobs = workload.jobs(seed);
+    poisson_arrivals(&mut jobs, rate_per_s, seed);
+    jobs
+}
+
 /// §V-E first experiment: 8-job homogeneous workload per NN task type.
 pub fn nn_homogeneous(task: NnTask) -> Vec<JobSpec> {
     (0..8)
@@ -132,6 +153,32 @@ mod tests {
         let names = |v: &[JobSpec]| v.iter().map(|j| j.name.clone()).collect::<Vec<_>>();
         assert_eq!(names(&a), names(&b));
         assert_ne!(names(&a), names(&c));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_and_deterministic() {
+        let mut a = WORKLOADS[0].jobs(5);
+        poisson_arrivals(&mut a, 0.5, 42);
+        let mut prev = 0.0;
+        for j in &a {
+            assert!(j.arrival > prev, "strictly increasing arrivals");
+            prev = j.arrival;
+        }
+        let b = open_system(&WORKLOADS[0], 0.5, 42);
+        // open_system with the same workload seed regenerates the same
+        // jobs; poisson_arrivals with the same seed stamps the same
+        // times... but here the workload seed differs (42 vs 5), so
+        // only compare the arrival stamps on a fresh copy.
+        let mut c = WORKLOADS[0].jobs(5);
+        poisson_arrivals(&mut c, 0.5, 42);
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+        // Different seed, different process.
+        let mut d = WORKLOADS[0].jobs(5);
+        poisson_arrivals(&mut d, 0.5, 43);
+        assert!(a.iter().zip(&d).any(|(x, y)| x.arrival != y.arrival));
+        assert_eq!(b.len(), a.len());
     }
 
     #[test]

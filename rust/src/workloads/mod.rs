@@ -10,5 +10,7 @@ pub mod rng;
 pub mod rodinia;
 
 pub use darknet::{NnTask, NN_TASKS};
-pub use mixes::{nn_homogeneous, nn_mix, MixRatio, Workload, RATIOS, WORKLOADS};
+pub use mixes::{
+    nn_homogeneous, nn_mix, open_system, poisson_arrivals, MixRatio, Workload, RATIOS, WORKLOADS,
+};
 pub use rodinia::{Bench, Combo, COMBOS};

@@ -27,6 +27,16 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Exponentially distributed sample with the given `mean` (inverse
+    /// CDF; the inter-arrival law of a Poisson process). Strictly
+    /// positive.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        // Midpoint sample in (0, 1): never 0 (ln undefined) nor 1
+        // (ln = 0), so the result can't collapse to zero.
+        let u = ((self.next_u64() >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+        -mean * u.ln()
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -59,6 +69,20 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exp_is_positive_with_the_requested_mean() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.exp(2.0);
+            assert!(x > 0.0 && x.is_finite());
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "sample mean {mean}");
     }
 
     #[test]

@@ -106,7 +106,7 @@ fn nn_mix_scales_to_128_jobs_deterministically() {
 
 #[test]
 fn bench_harness_experiments_all_run() {
-    for exp in ["fig4", "fig6", "nn128"] {
+    for exp in ["fig4", "fig6", "nn128", "cluster"] {
         let r = bench_harness::run_experiment(exp, 1).unwrap();
         assert!(!r.lines.is_empty(), "{exp} produced no rows");
     }
