@@ -46,6 +46,7 @@ fn main() {
             mode: SchedMode::Policy("mgb3"),
             workers_per_node: mgb_workers(&node),
             dispatch,
+            preempt: None,
         };
         let r = run_cluster(cfg, jobs.clone());
         println!(

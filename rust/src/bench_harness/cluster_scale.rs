@@ -34,6 +34,7 @@ pub fn cluster_scale(seed: u64) -> Report {
                 mode: SchedMode::Policy("mgb3"),
                 workers_per_node: mgb_workers(&node),
                 dispatch,
+                preempt: None,
             };
             let r = run_cluster(cfg, jobs.clone());
             lines.push(format!(

@@ -13,6 +13,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod nn128;
+mod preempt;
 mod table2;
 mod table3;
 mod table4;
@@ -26,6 +27,7 @@ pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
 pub use nn128::nn128;
+pub use preempt::preempt;
 pub use table2::table2;
 pub use table3::table3;
 pub use table4::table4;
@@ -120,6 +122,7 @@ pub fn run_all(seed: u64) -> Vec<Report> {
         table4(seed),
         ablation(seed),
         cluster_scale(seed),
+        preempt(seed),
     ]
 }
 
@@ -135,6 +138,7 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         "nn128" => nn128(seed),
         "ablation" => ablation(seed),
         "cluster" => cluster_scale(seed),
+        "preempt" => preempt(seed),
         _ => return None,
     })
 }

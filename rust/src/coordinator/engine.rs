@@ -31,13 +31,37 @@
 //! device plus a generation counter (membership changes invalidate the
 //! stale event). A single-node cluster reproduces the paper's setup
 //! bit-for-bit; `run_cluster` scales the same engine to N nodes.
+//!
+//! Paper map: the worker pool, probe protocol, and the SA/CG/static
+//! baselines realise §V-A's deployment; the policy layer beneath is
+//! §IV. Clusters, open-system arrivals, and preemption are beyond-paper
+//! scale-out (ROADMAP).
+//!
+//! **Checkpoint/restart preemption** (opt-in via
+//! [`ClusterConfig::preempt`]; policy modes only). When a probe finds
+//! no device for a task, the engine — in addition to queueing the job
+//! as a waiter exactly as before — offers the configured
+//! `sched::PreemptPolicy` the running victims whose eviction would make
+//! the request fit. Preempting a victim kills its in-flight kernel
+//! (the lost progress is the *wasted work* metric), writes a checkpoint
+//! image of its reservations at the configured cost model
+//! (`CkptBegin`→`CkptDone`), releases its memory to the waiters, and
+//! re-queues it; on its next worker pickup the victim re-places its
+//! saved reservations all-or-nothing, pays the symmetric restore cost,
+//! and resumes from the killed kernel (`Restart`). With `preempt: None`
+//! no preemption event is ever pushed and every decision point is
+//! unchanged, so disabled runs stay bit-identical to the admit-or-wait
+//! engine — enforced by exact-equality regression tests.
 
 use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
 use super::placement::{NodePlacement, TaskLedger};
 use crate::gpu::{ClusterSpec, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
-use crate::sched::{make_dispatcher, Dispatcher, JobInfo, NodeLoadView, TaskReq};
+use crate::sched::{
+    make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView, PreemptConfig,
+    PreemptPolicy, TaskReq, VictimView,
+};
 use std::collections::HashMap;
 
 /// Scheduler selection for a batch run.
@@ -75,6 +99,10 @@ pub struct ClusterConfig {
     pub workers_per_node: usize,
     /// Dispatcher name: "rr" | "least" | "mem" (see `sched::dispatch`).
     pub dispatch: &'static str,
+    /// Checkpoint/restart preemption (see `sched::preempt`). `None`
+    /// disables it and keeps the run bit-identical to the admit-or-wait
+    /// engine; only policy modes honour it.
+    pub preempt: Option<PreemptConfig>,
 }
 
 /// One job of the batch.
@@ -150,6 +178,23 @@ fn compact_trace(
         .collect()
 }
 
+/// Checkpoint/restart lifecycle of one job. Always `Normal` when
+/// preemption is disabled — the other states are only ever entered from
+/// `try_preempt`, which requires `Engine::preempt`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+enum JPhase {
+    #[default]
+    Normal,
+    /// Selected as a victim; kernel killed (or about to be), image copy
+    /// in flight. Quiesced: step_job ignores it until `CkptDone`.
+    Checkpointing,
+    /// Image written, reservations released, re-queued. The next step
+    /// attempt routes into `try_restore`.
+    Preempted,
+    /// Reservations re-placed; sleeping out the restore cost.
+    Restoring,
+}
+
 #[derive(Debug, Default)]
 struct JobRt {
     pc: usize,
@@ -173,6 +218,22 @@ struct JobRt {
     n_kernels: u64,
     kernel_started: f64,
     kernel_ded: f64,
+    /// (device, handle) of the in-flight kernel, if any.
+    inflight: Option<(usize, usize)>,
+    /// Dedicated-V100 work of the in-flight kernel (for wasted-work
+    /// accounting when it is killed).
+    kernel_work_s: f64,
+    /// Checkpoint/restart lifecycle (Normal unless preemption fires).
+    phase: JPhase,
+    /// Probe resource vectors of open placed tasks — kept only in
+    /// preemption mode, so a checkpointed task can be re-placed.
+    task_req: HashMap<usize, TaskReq>,
+    /// Checkpointed open tasks awaiting restore.
+    saved: Vec<(usize, TaskReq)>,
+    /// Times this job has been preempted (bounds cascading).
+    n_preempted: u32,
+    /// Dedicated-work seconds lost to killed kernels.
+    wasted_s: f64,
 }
 
 struct Engine<'h> {
@@ -192,7 +253,23 @@ struct Engine<'h> {
     /// Per-node dispatched-but-unfinished load (dispatcher bookkeeping).
     outstanding_us: Vec<u64>,
     outstanding_mem: Vec<u64>,
+    /// Checkpoint/restart machinery; `None` = preemption disabled.
+    preempt: Option<PreemptRt>,
+    /// Checkpoints currently in flight per node (mirrors the set of
+    /// jobs in `JPhase::Checkpointing`): O(1) eviction-storm guard for
+    /// `try_preempt`, which runs on every failed probe retry.
+    ckpt_inflight: Vec<u32>,
     hook: Option<LaunchHook<'h>>,
+}
+
+/// Runtime state of the preemption layer.
+struct PreemptRt {
+    cfg: PreemptConfig,
+    policy: Box<dyn PreemptPolicy>,
+    /// Evictions actually performed (aborted checkpoints not counted).
+    preemptions: u64,
+    /// Virtual seconds spent writing + restoring checkpoint images.
+    overhead_s: f64,
 }
 
 /// Run a batch of jobs under `cfg`; all jobs are queued at t = 0.
@@ -211,6 +288,7 @@ pub fn run_batch_with_hook(
         mode: cfg.mode,
         workers_per_node: cfg.workers,
         dispatch: "rr",
+        preempt: None,
     };
     run_cluster_with_hook(cluster_cfg, jobs, hook)
 }
@@ -262,6 +340,13 @@ pub fn run_cluster_with_hook(
         dispatcher: make_dispatcher(cfg.dispatch),
         outstanding_us: vec![0; n_nodes],
         outstanding_mem: vec![0; n_nodes],
+        preempt: cfg.preempt.map(|c| PreemptRt {
+            policy: make_preempt_policy(c.policy),
+            cfg: c,
+            preemptions: 0,
+            overhead_s: 0.0,
+        }),
+        ckpt_inflight: vec![0; n_nodes],
         nodes,
         jobs,
         hook,
@@ -284,6 +369,7 @@ impl<'h> Engine<'h> {
                 free_mem: nd.free_mem(),
                 total_mem: nd.total_mem(),
                 n_gpus: nd.devices.len(),
+                compute_capacity: nd.compute_capacity,
             })
             .collect();
         let info = JobInfo {
@@ -333,6 +419,20 @@ impl<'h> Engine<'h> {
                             self.start_next_job(n, w, ev.t);
                         }
                     }
+                    EvKind::CkptBegin { job } => self.handle_ckpt_begin(job, ev.t),
+                    EvKind::CkptDone { job } => self.handle_ckpt_done(job, ev.t),
+                    EvKind::Restart { job, worker } => {
+                        // Recycle the worker the victim held at CkptDone
+                        // now that the waiters it unblocked have
+                        // re-placed. The payload carries the worker: a
+                        // same-instant pickup may already have assigned
+                        // the victim a different one. If the victim was
+                        // force-failed meanwhile, finish_job recycled it.
+                        if !self.rt[job].done {
+                            let node = self.rt[job].node;
+                            self.start_next_job(node, worker, ev.t);
+                        }
+                    }
                 }
             }
             // Queue drained but some jobs never finished: their resource
@@ -356,6 +456,12 @@ impl<'h> Engine<'h> {
         let pin = self.nodes[node].worker_pin[worker];
         let rt = &mut self.rt[job];
         rt.worker = worker;
+        if rt.phase == JPhase::Preempted {
+            // Re-queued by checkpoint/restart: keep the original start
+            // time and saved pc; step_job routes into the restore path.
+            self.step_job(job, t);
+            return;
+        }
         rt.started = t;
         rt.pinned_dev = pin;
         self.step_job(job, t);
@@ -363,6 +469,24 @@ impl<'h> Engine<'h> {
 
     /// Process the job's trace from its pc until it blocks or finishes.
     fn step_job(&mut self, job: usize, t: f64) {
+        if self.rt[job].done {
+            // A force-failed job can still be popped from job_q; it must
+            // not restore (or step) — a dead job re-placing its saved
+            // reservations would leak them forever.
+            return;
+        }
+        match self.rt[job].phase {
+            JPhase::Normal => {}
+            // Quiesced mid-checkpoint; CkptDone re-queues it.
+            JPhase::Checkpointing => return,
+            // Checkpointed: re-place reservations before any stepping.
+            JPhase::Preempted => {
+                self.try_restore(job, t);
+                return;
+            }
+            // Restore cost paid — resume from the killed kernel.
+            JPhase::Restoring => self.rt[job].phase = JPhase::Normal,
+        }
         loop {
             if self.rt[job].done {
                 return;
@@ -400,13 +524,20 @@ impl<'h> Engine<'h> {
                     };
                     match self.nodes[node].place((job, task), &req) {
                         Some(dev) => {
+                            let preempt_on = self.preempt.is_some();
                             let rt = &mut self.rt[job];
                             rt.ledger.reserved.insert(task, (dev, req.mem_bytes));
                             rt.task_dev.insert(task, dev);
+                            if preempt_on {
+                                rt.task_req.insert(task, req);
+                            }
                             rt.pc += 1;
                         }
                         None => {
                             self.nodes[node].push_waiter(job);
+                            if self.preempt.is_some() {
+                                self.try_preempt(node, job, &req, t);
+                            }
                             return;
                         }
                     }
@@ -456,7 +587,17 @@ impl<'h> Engine<'h> {
                     let rt = &mut self.rt[job];
                     rt.kernel_started = t;
                     rt.kernel_ded = work_s / speed;
+                    rt.kernel_work_s = work_s;
+                    rt.inflight = Some((dev, h));
                     self.resched_dev(node, dev, t);
+                    // A launch creates an eviction opportunity (only
+                    // kernel-running jobs are checkpointable): let any
+                    // blocked probe on the node reconsider. Skipped
+                    // entirely with preemption off, so the disabled
+                    // path pushes no extra events.
+                    if self.preempt.is_some() {
+                        self.wake_waiters(node, t);
+                    }
                     return; // job sleeps until DevCompletion wakes it
                 }
                 CEv::Free { task, bytes } => {
@@ -490,6 +631,7 @@ impl<'h> Engine<'h> {
         let nd = &mut self.nodes[node];
         let released = self.rt[job].ledger.release_task(&mut nd.devices, task);
         nd.release_policy((job, task));
+        self.rt[job].task_req.remove(&task);
         if released || nd.has_policy() {
             self.wake_waiters(node, t);
         }
@@ -499,6 +641,209 @@ impl<'h> Engine<'h> {
         for j in self.nodes[node].take_waiters() {
             self.evq.push(t, EvKind::Wake { job: j });
         }
+    }
+
+    /// `blocked`'s probe found no device on `node`: offer the preempt
+    /// policy the running victims whose eviction would make `req` fit.
+    /// Selecting one starts its checkpoint; the blocked job is already
+    /// queued as a waiter and is woken by the eviction's `CkptDone`.
+    fn try_preempt(&mut self, node: usize, blocked: usize, req: &TaskReq, t: f64) {
+        if !self.nodes[node].has_policy() {
+            return; // checkpoint/restart is defined for probe modes only
+        }
+        // One eviction in flight per node: blocked probes retry on every
+        // release, and stacking checkpoints before the first image
+        // finishes would over-evict (unbounded wasted work).
+        if self.ckpt_inflight[node] > 0 {
+            return;
+        }
+        // Eviction reclaims *memory*; preempt only memory-blocked waits.
+        // If some device already has room, the probe failed on another
+        // constraint (alg2's compute fit) and evicting a memory holder
+        // would burn checkpoints without unblocking the task.
+        if self.nodes[node].devices.iter().any(|d| d.free_mem >= req.mem_bytes) {
+            return;
+        }
+        let cfg = self.preempt.as_ref().expect("try_preempt needs preempt cfg").cfg;
+        // O(jobs) candidate scan — acceptable because the guards above
+        // make this the cold path (memory-blocked probes with no
+        // checkpoint in flight on the node).
+        let mut victims: Vec<VictimView> = Vec::new();
+        for v in 0..self.rt.len() {
+            let rt = &self.rt[v];
+            if v == blocked || rt.done || rt.node != node || rt.phase != JPhase::Normal {
+                continue;
+            }
+            if rt.n_preempted >= cfg.max_preemptions {
+                continue; // preemption budget spent: no cascades
+            }
+            let Some((dev, handle)) = rt.inflight else {
+                continue; // only kernel-running jobs are checkpointable
+            };
+            // Bytes the eviction would hand back, per device.
+            let mut freed = vec![0u64; self.nodes[node].devices.len()];
+            for &(d, bytes) in rt.ledger.reserved.values() {
+                freed[d] += bytes;
+            }
+            let held_bytes: u64 = freed.iter().sum();
+            let free_after_best = self.nodes[node]
+                .devices
+                .iter()
+                .zip(&freed)
+                .map(|(dv, &f)| dv.free_mem + f)
+                .max()
+                .unwrap_or(0);
+            if free_after_best < req.mem_bytes {
+                continue; // evicting this job still would not fit the task
+            }
+            let d = &self.nodes[node].devices[dev];
+            let remaining_s = d.remaining_at(t, handle).unwrap_or(0.0);
+            let eta_s = d.eta_at(t, handle).unwrap_or(0.0);
+            victims.push(VictimView {
+                job: v,
+                dev,
+                held_bytes,
+                free_after_best,
+                progress_s: (rt.kernel_work_s - remaining_s).max(0.0),
+                remaining_s,
+                eta_s,
+                est_ckpt_s: cfg.ckpt_seconds(held_bytes),
+                times_preempted: rt.n_preempted,
+            });
+        }
+        if victims.is_empty() {
+            return;
+        }
+        let p = self.preempt.as_mut().expect("preempt cfg");
+        let Some(i) = p.policy.select_victim(req, &victims) else {
+            return;
+        };
+        let victim = victims[i].job;
+        // Mark immediately so a second blocked probe in the same cascade
+        // cannot select the same victim twice.
+        self.rt[victim].phase = JPhase::Checkpointing;
+        self.ckpt_inflight[node] += 1;
+        self.evq.push(t, EvKind::CkptBegin { job: victim });
+    }
+
+    /// Checkpoint start: kill the victim's in-flight kernel (its partial
+    /// progress is the wasted work) and schedule `CkptDone` after the
+    /// image-copy cost. Aborts if the kernel completed in this same
+    /// instant (its `DevCompletion` carried an earlier sequence number).
+    fn handle_ckpt_begin(&mut self, victim: usize, t: f64) {
+        if self.rt[victim].done || self.rt[victim].phase != JPhase::Checkpointing {
+            return;
+        }
+        let Some((dev, handle)) = self.rt[victim].inflight else {
+            // "Checkpointing exactly when it would complete": the kernel
+            // finished first, so there is nothing to evict. Cancel, and
+            // re-step the victim — its completion step was swallowed by
+            // the Checkpointing quiesce.
+            self.rt[victim].phase = JPhase::Normal;
+            self.ckpt_inflight[self.rt[victim].node] -= 1;
+            self.step_job(victim, t);
+            return;
+        };
+        let node = self.rt[victim].node;
+        let lost = {
+            let d = &mut self.nodes[node].devices[dev];
+            d.advance_to(t);
+            let rem = d.remaining(handle).unwrap_or(0.0);
+            d.remove_kernel(t, handle);
+            (self.rt[victim].kernel_work_s - rem).max(0.0)
+        };
+        self.kernel_owner.remove(&(node, dev, handle));
+        self.resched_dev(node, dev, t);
+        let held: u64 = self.rt[victim].ledger.reserved.values().map(|&(_, b)| b).sum();
+        let rt = &mut self.rt[victim];
+        rt.inflight = None;
+        rt.wasted_s += lost;
+        rt.n_preempted += 1;
+        let p = self.preempt.as_mut().expect("ckpt in preempt mode");
+        p.preemptions += 1;
+        let ckpt_s = p.cfg.ckpt_seconds(held);
+        p.overhead_s += ckpt_s;
+        self.evq.push(t + ckpt_s, EvKind::CkptDone { job: victim });
+    }
+
+    /// Checkpoint image written: release every reservation the victim
+    /// holds (saving enough to re-place it), hand the freed memory to
+    /// the node's waiters, and re-queue the victim for a worker.
+    fn handle_ckpt_done(&mut self, victim: usize, t: f64) {
+        if self.rt[victim].done || self.rt[victim].phase != JPhase::Checkpointing {
+            return; // force-failed while the image was being written
+        }
+        let node = self.rt[victim].node;
+        let open = self.rt[victim].ledger.open_tasks();
+        let mut saved = Vec::with_capacity(open.len());
+        for task in open {
+            if let Some(req) = self.rt[victim].task_req.remove(&task) {
+                saved.push((task, req));
+            }
+            let nd = &mut self.nodes[node];
+            self.rt[victim].ledger.release_task(&mut nd.devices, task);
+            nd.release_policy((victim, task));
+            self.rt[victim].task_dev.remove(&task);
+        }
+        let rt = &mut self.rt[victim];
+        rt.saved = saved;
+        rt.phase = JPhase::Preempted;
+        // Capture the worker slot now: a same-instant pickup can assign
+        // the victim a different worker before the Restart fires.
+        let worker = rt.worker;
+        self.ckpt_inflight[node] -= 1;
+        // Waiters first (their Wake events carry earlier sequence
+        // numbers than the Restart below), so the job the eviction was
+        // for re-places before the victim can reclaim its memory.
+        self.wake_waiters(node, t);
+        self.nodes[node].job_q.push_back(victim);
+        self.evq.push(t, EvKind::Restart { job: victim, worker });
+    }
+
+    /// Re-place a checkpointed job's saved reservations all-or-nothing,
+    /// then sleep out the restore cost before resuming from the killed
+    /// kernel. On failure the job waits for the next release — it never
+    /// preempts anybody itself (the other half of the no-cascade rule).
+    fn try_restore(&mut self, job: usize, t: f64) {
+        let node = self.rt[job].node;
+        let saved = std::mem::take(&mut self.rt[job].saved);
+        let mut placed: Vec<(usize, usize, u64)> = Vec::new(); // (task, dev, bytes)
+        let mut all_fit = true;
+        for &(task, req) in &saved {
+            match self.nodes[node].place((job, task), &req) {
+                Some(dev) => placed.push((task, dev, req.mem_bytes)),
+                None => {
+                    all_fit = false;
+                    break;
+                }
+            }
+        }
+        if !all_fit {
+            // Roll back this attempt so a half-restored job cannot
+            // deadlock another; retry after the next release here.
+            for &(task, dev, bytes) in &placed {
+                self.nodes[node].devices[dev].release(bytes);
+                self.nodes[node].release_policy((job, task));
+            }
+            self.rt[job].saved = saved;
+            self.nodes[node].push_waiter(job);
+            return;
+        }
+        let mut held = 0u64;
+        let rt = &mut self.rt[job];
+        for &(task, dev, bytes) in &placed {
+            rt.ledger.reserved.insert(task, (dev, bytes));
+            rt.task_dev.insert(task, dev);
+            held += bytes;
+        }
+        for &(task, req) in &saved {
+            rt.task_req.insert(task, req);
+        }
+        rt.phase = JPhase::Restoring;
+        let p = self.preempt.as_mut().expect("restore in preempt mode");
+        let restore_s = p.cfg.ckpt_seconds(held);
+        p.overhead_s += restore_s;
+        self.evq.push(t + restore_s, EvKind::Wake { job });
     }
 
     /// Kernel completions on `(node, dev)` at time `t`.
@@ -522,6 +867,7 @@ impl<'h> Engine<'h> {
             rt.act_s += t - rt.kernel_started;
             rt.ded_s += rt.kernel_ded;
             rt.n_kernels += 1;
+            rt.inflight = None;
             rt.pc += 1; // past the Launch event
             self.step_job(job, t);
         }
@@ -546,6 +892,12 @@ impl<'h> Engine<'h> {
             rt.done = true;
             rt.crashed = crashed;
             rt.ended = t;
+        }
+        if self.rt[job].phase == JPhase::Checkpointing {
+            // Force-failed mid-checkpoint (drain fallback): the pending
+            // CkptDone will see `done` and bail, so release the per-node
+            // in-flight slot here.
+            self.ckpt_inflight[self.rt[job].node] -= 1;
         }
         // Release everything the job still holds.
         for task in self.rt[job].ledger.open_tasks() {
@@ -577,6 +929,8 @@ impl<'h> Engine<'h> {
                 kernel_dedicated_s: rt.ded_s,
                 kernel_actual_s: rt.act_s,
                 n_kernels: rt.n_kernels,
+                preemptions: rt.n_preempted,
+                wasted_s: rt.wasted_s,
             })
             .collect();
         let makespan = jobs.iter().map(|j| j.ended).fold(0.0, f64::max);
@@ -594,6 +948,9 @@ impl<'h> Engine<'h> {
             dispatcher: self.dispatcher.name().to_string(),
             jobs,
             makespan,
+            preemptions: self.preempt.as_ref().map_or(0, |p| p.preemptions),
+            wasted_work_s: self.rt.iter().map(|r| r.wasted_s).sum(),
+            ckpt_overhead_s: self.preempt.as_ref().map_or(0.0, |p| p.overhead_s),
         }
     }
 }

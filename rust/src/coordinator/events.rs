@@ -6,6 +6,14 @@
 //! tie-breaking, and tracks one generation counter per (node, device)
 //! so a stale completion event (pushed before a membership change on
 //! the device) can be recognised and dropped by the engine.
+//!
+//! Paper map: the discrete-event clock realises the virtual timeline of
+//! the §V-A deployments (batch at t=0, Poisson arrivals beyond-paper).
+//! The checkpoint/restart kinds ([`EvKind::CkptBegin`] /
+//! [`EvKind::CkptDone`] / [`EvKind::Restart`]) carry the beyond-paper
+//! preemption protocol (ROADMAP "Job preemption"); none of them is ever
+//! pushed unless preemption is enabled, which keeps disabled runs
+//! bit-identical.
 
 use std::collections::BinaryHeap;
 
@@ -22,6 +30,21 @@ pub(crate) enum EvKind {
     /// A job enters the system (open-system arrivals): the dispatcher
     /// routes it to a node when this fires.
     Arrive { job: usize },
+    /// Checkpoint of preemption victim `job` begins: its in-flight
+    /// kernel is killed (partial progress becomes wasted work) and the
+    /// image copy starts. Aborts harmlessly if the kernel completed in
+    /// the same instant under an earlier sequence number.
+    CkptBegin { job: usize },
+    /// Victim `job`'s checkpoint image is written: its reservations are
+    /// released to the node's waiters, its progress saved, and it
+    /// re-queues for a worker.
+    CkptDone { job: usize },
+    /// Recycle the checkpointed job's worker slot (captured at
+    /// `CkptDone`, since a same-instant pickup can re-assign the job a
+    /// different worker before this fires). Fired after `CkptDone`'s
+    /// waiter wake-ups so the job the eviction unblocked re-places
+    /// first.
+    Restart { job: usize, worker: usize },
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -133,6 +156,28 @@ mod tests {
         assert_eq!(q.now(), 3.5);
         assert!(q.pop().is_none());
         assert_eq!(q.now(), 3.5, "draining does not rewind the clock");
+    }
+
+    #[test]
+    fn checkpoint_events_interleave_fifo_with_completions() {
+        // The protocol relies on FIFO tie-breaking: a completion pushed
+        // before a same-instant CkptBegin must fire first (the "victim
+        // finishes exactly when checkpointed" race), and CkptDone's
+        // waiter Wake must fire before the victim's Restart.
+        let mut q = EventQueue::new();
+        q.push(5.0, EvKind::DevCompletion { node: 0, dev: 0, gen: 1 });
+        q.push(5.0, EvKind::CkptBegin { job: 3 });
+        q.push(5.0, EvKind::Wake { job: 9 });
+        q.push(5.0, EvKind::Restart { job: 3, worker: 1 });
+        assert!(matches!(q.pop().unwrap().kind, EvKind::DevCompletion { .. }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::CkptBegin { job: 3 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 9 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Restart { job: 3, worker: 1 }));
+        // CkptDone is ordered by its (cost-model) time like any event.
+        q.push(7.0, EvKind::CkptDone { job: 3 });
+        q.push(6.0, EvKind::Wake { job: 1 });
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 1 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::CkptDone { job: 3 }));
     }
 
     #[test]

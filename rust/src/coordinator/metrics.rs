@@ -1,5 +1,7 @@
 //! Batch-run outcomes and the paper's macro-measures (§V-A): system
-//! throughput, job turnaround, crash percentage, kernel slowdown.
+//! throughput, job turnaround, crash percentage, kernel slowdown —
+//! plus the beyond-paper preemption measures (preemption count, wasted
+//! work, checkpoint overhead) the `bench preempt` experiment reports.
 
 /// Workload class, for mix bookkeeping (large: >4 GB footprint).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +30,11 @@ pub struct JobOutcome {
     /// Sum of actual (co-scheduled) kernel durations.
     pub kernel_actual_s: f64,
     pub n_kernels: u64,
+    /// Times this job was checkpoint/restart-preempted (0 unless
+    /// preemption is enabled).
+    pub preemptions: u32,
+    /// Dedicated-work seconds lost to killed in-flight kernels.
+    pub wasted_s: f64,
 }
 
 impl JobOutcome {
@@ -64,6 +71,12 @@ pub struct RunResult {
     pub jobs: Vec<JobOutcome>,
     /// Time the last job finished (the batch makespan).
     pub makespan: f64,
+    /// Checkpoint/restart evictions performed (0 with preemption off).
+    pub preemptions: u64,
+    /// Dedicated-work seconds lost across all killed in-flight kernels.
+    pub wasted_work_s: f64,
+    /// Virtual seconds spent writing/restoring checkpoint images.
+    pub ckpt_overhead_s: f64,
 }
 
 impl RunResult {
@@ -102,11 +115,28 @@ impl RunResult {
 
     /// Mean turnaround over *completed* jobs.
     pub fn mean_turnaround(&self) -> f64 {
-        let done: Vec<&JobOutcome> = self.jobs.iter().filter(|j| !j.crashed).collect();
-        if done.is_empty() {
-            return 0.0;
+        self.mean_turnaround_where(|_| true)
+    }
+
+    /// Mean turnaround over completed jobs of one class — how `bench
+    /// preempt` separates the heavy late arrivals from the light hogs.
+    pub fn mean_turnaround_of(&self, class: JobClass) -> f64 {
+        self.mean_turnaround_where(|j| j.class == class)
+    }
+
+    /// Mean turnaround over completed jobs matching `keep`; 0.0 when
+    /// none match (the shared crash-filter/empty-set convention).
+    fn mean_turnaround_where(&self, keep: impl Fn(&JobOutcome) -> bool) -> f64 {
+        let (mut sum, mut n) = (0.0, 0u32);
+        for j in self.jobs.iter().filter(|&j| !j.crashed && keep(j)) {
+            sum += j.turnaround();
+            n += 1;
         }
-        done.iter().map(|j| j.turnaround()).sum::<f64>() / done.len() as f64
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
     }
 
     /// Kernel slowdown (%) vs dedicated execution, weighted by each
@@ -141,6 +171,8 @@ mod tests {
             kernel_dedicated_s: ded,
             kernel_actual_s: act,
             n_kernels: 1,
+            preemptions: 0,
+            wasted_s: 0.0,
         }
     }
 
@@ -153,6 +185,9 @@ mod tests {
             dispatcher: "rr".into(),
             jobs,
             makespan,
+            preemptions: 0,
+            wasted_work_s: 0.0,
+            ckpt_overhead_s: 0.0,
         }
     }
 
@@ -190,5 +225,18 @@ mod tests {
     fn turnaround_mean_over_completed() {
         let r = rr(vec![job(4.0, false, 0.0, 0.0), job(8.0, false, 0.0, 0.0)], 8.0);
         assert!((r.mean_turnaround() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_turnaround_filters_crashes_and_classes() {
+        let mut heavy = job(30.0, false, 0.0, 0.0);
+        heavy.class = JobClass::Large;
+        let mut crashed_heavy = job(2.0, true, 0.0, 0.0);
+        crashed_heavy.class = JobClass::Large;
+        let light = job(10.0, false, 0.0, 0.0); // Small
+        let r = rr(vec![heavy, crashed_heavy, light], 30.0);
+        assert!((r.mean_turnaround_of(JobClass::Large) - 30.0).abs() < 1e-12);
+        assert!((r.mean_turnaround_of(JobClass::Small) - 10.0).abs() < 1e-12);
+        assert_eq!(r.mean_turnaround_of(JobClass::Nn), 0.0, "empty class -> 0");
     }
 }

@@ -17,13 +17,17 @@
 //! `run_batch` runs the paper's single-node deployments (a one-node
 //! cluster — bit-identical to the pre-cluster engine); `run_cluster`
 //! scales the same engine across a `gpu::ClusterSpec`, optionally under
-//! open-system Poisson traffic (`workloads::poisson_arrivals`).
+//! open-system Poisson traffic (`workloads::poisson_arrivals`) and with
+//! checkpoint/restart preemption (`ClusterConfig::preempt` — a
+//! `sched::PreemptPolicy` may evict a running victim to admit a blocked
+//! task; off by default, and the disabled path is bit-identical).
 
 pub mod engine;
 mod events;
 pub mod metrics;
 mod placement;
 
+pub use crate::sched::PreemptConfig;
 pub use engine::{
     run_batch, run_batch_with_hook, run_cluster, run_cluster_with_hook, ClusterConfig, JobSpec,
     RunConfig, SchedMode,
@@ -310,6 +314,7 @@ mod tests {
                     mode: SchedMode::Policy("mgb3"),
                     workers_per_node: 16,
                     dispatch,
+                    preempt: None,
                 },
                 jobs.clone(),
             );
@@ -335,6 +340,7 @@ mod tests {
                 mode: SchedMode::Policy("mgb3"),
                 workers_per_node: 4,
                 dispatch: "rr",
+                preempt: None,
             },
             jobs,
         );
@@ -375,6 +381,7 @@ mod tests {
                     mode: SchedMode::Policy("mgb3"),
                     workers_per_node: 8,
                     dispatch,
+                    preempt: None,
                 },
                 jobs,
             )
@@ -402,6 +409,7 @@ mod tests {
             mode: SchedMode::Policy("mgb3"),
             workers_per_node: 8,
             dispatch: "least",
+            preempt: None,
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -412,5 +420,213 @@ mod tests {
             assert!(x.started >= x.arrival);
         }
         assert_eq!(a.completed(), a.jobs.len());
+    }
+
+    #[test]
+    fn heterogeneous_least_loaded_favours_the_faster_node() {
+        // Mixed P100/V100 cluster (ROADMAP open item): capability-
+        // normalised least-loaded must route most of an identical-job
+        // stream to the 4xV100 node (capacity 4.0 vs 1.4), not split it
+        // 50/50 the way raw outstanding-work comparison did.
+        let cluster = ClusterSpec::of(vec![NodeSpec::p100x2(), NodeSpec::v100x4()]);
+        let jobs: Vec<JobSpec> =
+            (0..12).map(|i| job(&format!("j{i}"), 2 << 30, 1000, 2_000_000)).collect();
+        let r = run_cluster(
+            ClusterConfig {
+                cluster,
+                mode: SchedMode::Policy("mgb3"),
+                workers_per_node: 6,
+                dispatch: "least",
+                preempt: None,
+            },
+            jobs,
+        );
+        assert_eq!(r.crashed(), 0);
+        assert_eq!(r.completed(), 12);
+        let per_node = r.jobs_per_node();
+        assert!(
+            per_node[1] >= 2 * per_node[0],
+            "V100 node should take the bulk: {per_node:?}"
+        );
+        assert!(per_node[0] >= 1, "slow node still serves its share: {per_node:?}");
+    }
+
+    // ---- checkpoint/restart preemption ----------------------------------
+
+    fn v100x1_cluster() -> crate::gpu::ClusterSpec {
+        ClusterSpec::single(v100x1())
+    }
+
+    fn preempt_cfg(policy: &'static str) -> PreemptConfig {
+        PreemptConfig { policy, ..PreemptConfig::default() }
+    }
+
+    fn contended_cluster_cfg(preempt: Option<PreemptConfig>) -> ClusterConfig {
+        ClusterConfig {
+            cluster: v100x1_cluster(),
+            mode: SchedMode::Policy("mgb3"),
+            workers_per_node: 3,
+            dispatch: "rr",
+            preempt,
+        }
+    }
+
+    /// A 12 GB hog running `work_us` + a 12 GB heavy arriving at `t_h`:
+    /// on one 16 GB GPU the heavy can only run by evicting the hog.
+    fn hog_and_heavy(work_hog_us: u64, work_heavy_us: u64, t_h: f64) -> Vec<JobSpec> {
+        use crate::workloads::synthetic_job;
+        vec![
+            synthetic_job("light-hog", JobClass::Small, 12 << 30, work_hog_us, 0.0),
+            synthetic_job("heavy-late", JobClass::Large, 12 << 30, work_heavy_us, t_h),
+        ]
+    }
+
+    #[test]
+    fn preempt_never_matches_disabled_exactly() {
+        // The preemption plumbing enabled-but-declining must leave every
+        // observable bit of the run identical to the disabled path (the
+        // acceptance regression for "no-preemption is bit-identical").
+        let mut jobs: Vec<JobSpec> =
+            (0..6).map(|i| job(&format!("j{i}"), 12 << 30, 200, 3_000_000)).collect();
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.arrival = i as f64 * 0.5; // staggered, heavily contended
+        }
+        let a = run_cluster(contended_cluster_cfg(None), jobs.clone());
+        let b = run_cluster(contended_cluster_cfg(Some(preempt_cfg("never"))), jobs);
+        assert_eq!(a.preemptions, 0);
+        assert_eq!(b.preemptions, 0);
+        assert_eq!(a.wasted_work_s, 0.0);
+        assert_eq!(b.wasted_work_s, 0.0);
+        assert_eq!(a.makespan, b.makespan);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.started, y.started);
+            assert_eq!(x.ended, y.ended);
+            assert_eq!(x.crashed, y.crashed);
+            assert_eq!(x.preemptions, 0);
+            assert_eq!(y.preemptions, 0);
+        }
+    }
+
+    #[test]
+    fn preemption_reclaims_device_for_heavy_late_arrival() {
+        // The ISSUE's pathology: a 100s light hog holds 12 GB; a 20s
+        // heavy job arrives at t=5 and, without preemption, waits ~97s.
+        let jobs = hog_and_heavy(100_000_000, 20_000_000, 5.0);
+        let off = run_cluster(contended_cluster_cfg(None), jobs.clone());
+        let on =
+            run_cluster(contended_cluster_cfg(Some(preempt_cfg("min-progress"))), jobs);
+        assert_eq!(off.completed(), 2);
+        assert_eq!(on.completed(), 2);
+        let heavy_off = off.mean_turnaround_of(JobClass::Large);
+        let heavy_on = on.mean_turnaround_of(JobClass::Large);
+        assert!(heavy_off > 100.0, "baseline heavy waits out the hog: {heavy_off}");
+        assert!(heavy_on < 30.0, "preemption admits the heavy promptly: {heavy_on}");
+        assert_eq!(on.preemptions, 1);
+        // Wasted work = the hog's ~3.9s of killed kernel progress
+        // (launched after its 12 GB transfer, evicted at t=5); overhead
+        // = one checkpoint + one restore of a 12 GB image (~1.12s each).
+        assert!(on.wasted_work_s > 3.5 && on.wasted_work_s < 4.5, "{}", on.wasted_work_s);
+        assert!(
+            on.ckpt_overhead_s > 2.0 && on.ckpt_overhead_s < 2.5,
+            "{}",
+            on.ckpt_overhead_s
+        );
+        let hog = &on.jobs[0];
+        assert_eq!(hog.preemptions, 1);
+        assert!(hog.wasted_s > 3.5);
+        // The hog restarts after the heavy finishes and still completes;
+        // it pays for the eviction with a longer turnaround.
+        assert!(hog.ended > off.jobs[0].ended);
+        assert!(on.makespan < 140.0, "{}", on.makespan);
+    }
+
+    #[test]
+    fn victim_checkpointed_exactly_at_completion_aborts_cleanly() {
+        // The heavy arrives at the exact instant the hog's kernel
+        // completes (completion carries the earlier sequence number, so
+        // it wins the tie). The checkpoint must abort: no eviction, no
+        // wasted work, and timings identical to the disabled run.
+        let xfer = (12u64 << 30) as f64 / crate::gpu::PCIE_BYTES_PER_SEC;
+        let t_h = xfer + 10.0; // hog launches after its H2D, runs 10s
+        let jobs = hog_and_heavy(10_000_000, 5_000_000, t_h);
+        let off = run_cluster(contended_cluster_cfg(None), jobs.clone());
+        // max-mem has no "nearly finished" guard, so it does select the
+        // zero-remaining victim — exercising the abort path itself.
+        let on = run_cluster(contended_cluster_cfg(Some(preempt_cfg("max-mem"))), jobs);
+        assert_eq!(on.preemptions, 0, "checkpoint aborted, not counted");
+        assert_eq!(on.wasted_work_s, 0.0);
+        assert_eq!(on.completed(), 2);
+        assert_eq!(on.makespan, off.makespan);
+        for (x, y) in on.jobs.iter().zip(&off.jobs) {
+            assert_eq!(x.started, y.started);
+            assert_eq!(x.ended, y.ended);
+        }
+    }
+
+    #[test]
+    fn cascading_preemption_is_disallowed_by_default() {
+        // H1 evicts the hog; after the hog restarts, H2 arrives. With
+        // the default budget of one preemption per job the restarted hog
+        // cannot be evicted again, so H2 waits out its full 200s run.
+        let mut jobs = hog_and_heavy(200_000_000, 10_000_000, 5.0);
+        jobs.push(crate::workloads::synthetic_job(
+            "heavy-late-2",
+            JobClass::Large,
+            12 << 30,
+            10_000_000,
+            30.0,
+        ));
+        let once =
+            run_cluster(contended_cluster_cfg(Some(preempt_cfg("min-progress"))), jobs.clone());
+        assert_eq!(once.completed(), 3);
+        assert_eq!(once.preemptions, 1, "budget 1: second eviction refused");
+        let h2_once = once.jobs[2].turnaround();
+        assert!(h2_once > 150.0, "H2 had to wait out the restarted hog: {h2_once}");
+        // Raising the budget to 2 lets H2 evict the hog a second time.
+        let cfg2 = PreemptConfig { max_preemptions: 2, ..preempt_cfg("min-progress") };
+        let twice = run_cluster(contended_cluster_cfg(Some(cfg2)), jobs);
+        assert_eq!(twice.completed(), 3);
+        assert_eq!(twice.preemptions, 2);
+        let h2_twice = twice.jobs[2].turnaround();
+        assert!(h2_twice < 50.0, "H2 admitted promptly on the second eviction: {h2_twice}");
+        assert!(twice.wasted_work_s > once.wasted_work_s);
+    }
+
+    #[test]
+    fn preemption_enabled_cluster_replay_is_deterministic() {
+        // Two 1xV100 nodes under least-loaded dispatch, four 60s hogs
+        // and six staggered heavies: preemptions fire on both nodes and
+        // the whole run must replay bit-for-bit.
+        let mut jobs: Vec<JobSpec> = Vec::new();
+        for i in 0..4 {
+            jobs.push(job(&format!("hog{i}"), 12 << 30, 100, 60_000_000));
+        }
+        for i in 0..6 {
+            let mut h = job(&format!("heavy{i}"), 12 << 30, 100, 5_000_000);
+            h.arrival = 3.0 + i as f64 * 1.5;
+            jobs.push(h);
+        }
+        let cfg = ClusterConfig {
+            cluster: ClusterSpec::homogeneous(v100x1(), 2),
+            mode: SchedMode::Policy("mgb3"),
+            workers_per_node: 4,
+            dispatch: "least",
+            preempt: Some(preempt_cfg("min-progress")),
+        };
+        let a = run_cluster(cfg.clone(), jobs.clone());
+        let b = run_cluster(cfg, jobs);
+        assert!(a.preemptions > 0, "scenario must actually preempt");
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.wasted_work_s, b.wasted_work_s);
+        assert_eq!(a.ckpt_overhead_s, b.ckpt_overhead_s);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.completed(), a.jobs.len(), "nobody is lost to eviction");
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.started, y.started);
+            assert_eq!(x.ended, y.ended);
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.preemptions, y.preemptions);
+            assert_eq!(x.wasted_s, y.wasted_s);
+        }
     }
 }

@@ -9,6 +9,14 @@
 //! "wait", while `raw allocations` (pinned/static modes) go straight to
 //! the device and crash the job on OOM — that asymmetry is enforced by
 //! the engine via [`TaskLedger`].
+//!
+//! Paper map: `place` is the probe protocol of §III-B/§IV handing a
+//! `TaskReq` to the node's policy; the wait queue realises "the task
+//! waits until a release". Checkpoint/restart preemption reuses exactly
+//! these primitives — a victim's eviction is `release_task` +
+//! `release_policy` per open task, and its restore is a fresh `place`
+//! of the saved requests — so the memory-safety contract (reservations
+//! precede execution) survives eviction unchanged.
 
 use super::engine::SchedMode;
 use crate::gpu::{Device, NodeSpec};
@@ -77,6 +85,10 @@ pub(crate) struct NodePlacement {
     /// cudaSetDevice semantics: place on res.static_dev.unwrap_or(0),
     /// raw (crashable) memory accounting.
     pub static_mode: bool,
+    /// Relative compute capability ([`NodeSpec::compute_capacity`],
+    /// cached at construction): the single source the dispatcher's
+    /// capability-normalised load views draw from.
+    pub compute_capacity: f64,
 }
 
 impl NodePlacement {
@@ -105,6 +117,7 @@ impl NodePlacement {
             idle_stack: Vec::new(),
             is_idle: vec![false; workers],
             static_mode: matches!(mode, SchedMode::Static),
+            compute_capacity: spec.compute_capacity(),
         }
     }
 

@@ -162,6 +162,28 @@ impl Device {
         self.kernels.iter().find(|k| k.handle == handle).map(|k| k.remaining)
     }
 
+    /// Remaining work of a kernel projected to virtual time `now`
+    /// *without* folding progress in — a read-only peek used by the
+    /// preemption layer to cost victims before deciding to touch the
+    /// device. Equals `advance_to(now)` + `remaining(handle)`.
+    pub fn remaining_at(&self, now: f64, handle: KernelHandle) -> Option<f64> {
+        let k = self.kernels.iter().find(|k| k.handle == handle)?;
+        let dt = (now - self.last_advance).max(0.0);
+        Some((k.remaining - dt * k.rate).max(0.0))
+    }
+
+    /// Wall-clock seconds until `handle` completes at its current rate,
+    /// projected to `now` without mutating (the read-only companion of
+    /// [`Device::finish_time`]). Unlike [`Device::remaining_at`] this is
+    /// in wall time, not dedicated-work units — what a preemption guard
+    /// must compare against a (wall-clock) checkpoint cost on slow or
+    /// co-scheduled devices.
+    pub fn eta_at(&self, now: f64, handle: KernelHandle) -> Option<f64> {
+        let k = self.kernels.iter().find(|k| k.handle == handle)?;
+        let dt = (now - self.last_advance).max(0.0);
+        Some((k.remaining - dt * k.rate).max(0.0) / k.rate)
+    }
+
     /// Projected finish time of `handle` given the current membership.
     pub fn finish_time(&self, now: f64, handle: KernelHandle) -> Option<f64> {
         let k = self.kernels.iter().find(|k| k.handle == handle)?;
@@ -260,6 +282,37 @@ mod tests {
         assert!((d.remaining(h2).unwrap() - left).abs() < 1e-9);
         // Now dedicated: full speed for the rest.
         assert!((d.finish_time(1.0, h2).unwrap() - (1.0 + left)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remaining_at_matches_advancing_without_mutation() {
+        let mut d = dev();
+        d.advance_to(0.0);
+        let h = d.start_kernel(0.0, 2.0, 1000);
+        // Read-only projection at t=0.5: 0.5 work-seconds folded.
+        assert!((d.remaining_at(0.5, h).unwrap() - 1.5).abs() < 1e-12);
+        // The peek did not mutate: stored remaining is still 2.0.
+        assert_eq!(d.remaining(h), Some(2.0));
+        d.advance_to(0.5);
+        assert!((d.remaining(h).unwrap() - 1.5).abs() < 1e-12);
+        // Past the finish time the projection clamps at zero.
+        assert_eq!(d.remaining_at(10.0, h), Some(0.0));
+        assert_eq!(d.remaining_at(0.5, 999), None);
+    }
+
+    #[test]
+    fn eta_is_wall_clock_not_work_units() {
+        // P100 (speed 0.7): 1.4 work-seconds remaining take 2.0 wall
+        // seconds — eta_at must report the latter.
+        let mut d = Device::new(GpuSpec::p100());
+        d.advance_to(0.0);
+        let h = d.start_kernel(0.0, 1.4, 100);
+        let speed = 3584.0 / 5120.0;
+        assert!((d.eta_at(0.0, h).unwrap() - 1.4 / speed).abs() < 1e-9);
+        // Projection folds elapsed wall time before dividing.
+        let eta_later = d.eta_at(1.0, h).unwrap();
+        assert!((eta_later - (1.4 / speed - 1.0)).abs() < 1e-9);
+        assert_eq!(d.eta_at(0.0, 999), None);
     }
 
     #[test]

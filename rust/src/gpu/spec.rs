@@ -1,4 +1,11 @@
 //! Device and node specifications (P100 / V100 presets from §V).
+//!
+//! Paper map: §V-A's two platforms — the Chameleon 2×P100 node and the
+//! AWS p3.8xlarge 4×V100 node (Table I) — plus the warp/TB capacity
+//! arithmetic Algorithms 2 and 3 reason in (§IV). [`ClusterSpec`] is
+//! the beyond-paper scale-out target: N possibly-heterogeneous nodes
+//! under one dispatcher, each node's relative speed summarised by
+//! [`NodeSpec::compute_capacity`] for capability-normalised routing.
 
 /// Static description of one GPU.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -83,6 +90,14 @@ impl NodeSpec {
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
     }
+
+    /// Relative compute capability of the node: the sum of its GPUs'
+    /// speeds in V100 units (one V100 == 1.0). A 4×V100 node is 4.0, a
+    /// 2×P100 node 1.4 — the normaliser heterogeneous-aware dispatch
+    /// divides outstanding work by.
+    pub fn compute_capacity(&self) -> f64 {
+        self.gpus.iter().map(|g| g.speed).sum()
+    }
 }
 
 /// A cluster of compute nodes — the beyond-paper scale-out target. The
@@ -108,6 +123,14 @@ impl ClusterSpec {
         assert!(n > 0, "a cluster needs at least one node");
         let name = format!("{}x[{}]", n, node.name);
         ClusterSpec { nodes: vec![node; n], name }
+    }
+
+    /// An explicit (possibly heterogeneous) node list, e.g. a P100 node
+    /// next to V100 nodes. The name concatenates the member names.
+    pub fn of(nodes: Vec<NodeSpec>) -> Self {
+        assert!(!nodes.is_empty(), "a cluster needs at least one node");
+        let name = nodes.iter().map(|n| n.name.as_str()).collect::<Vec<_>>().join("+");
+        ClusterSpec { nodes, name }
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -140,5 +163,17 @@ mod tests {
         assert_eq!(c.n_nodes(), 3);
         assert_eq!(c.total_gpus(), 6);
         assert!(c.name.contains("2xP100"));
+    }
+
+    #[test]
+    fn mixed_cluster_and_capability() {
+        let c = ClusterSpec::of(vec![NodeSpec::p100x2(), NodeSpec::v100x4()]);
+        assert_eq!(c.n_nodes(), 2);
+        assert_eq!(c.total_gpus(), 6);
+        assert_eq!(c.name, "2xP100+4xV100");
+        let p100 = c.nodes[0].compute_capacity();
+        let v100 = c.nodes[1].compute_capacity();
+        assert!((p100 - 2.0 * (3584.0 / 5120.0)).abs() < 1e-12);
+        assert!((v100 - 4.0).abs() < 1e-12);
     }
 }

@@ -3,12 +3,14 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|cluster|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
 //!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+//!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
 //!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+//!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
 //! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
 //! ```
@@ -41,12 +43,14 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|cluster|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
         [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+        [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+        [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
   compile <file.gir>
   artifacts [--dir DIR]";
 
@@ -106,6 +110,22 @@ fn parse_cluster(f: &HashMap<String, String>) -> ClusterSpec {
     }
 }
 
+/// `--preempt [POLICY]` enables checkpoint/restart preemption (a bare
+/// flag selects the default min-progress policy); `--ckpt-cost S` sets
+/// the fixed per-checkpoint latency of the cost model.
+fn parse_preempt(f: &HashMap<String, String>) -> Option<mgb::sched::PreemptConfig> {
+    let name = f.get("preempt")?;
+    let policy = mgb::sched::canonical_preempt(name).unwrap_or_else(|| {
+        eprintln!("unknown preemption policy '{name}', using min-progress");
+        "min-progress"
+    });
+    let mut cfg = mgb::sched::PreemptConfig { policy, ..Default::default() };
+    if let Some(c) = f.get("ckpt-cost").and_then(|s| s.parse::<f64>().ok()) {
+        cfg.ckpt_base_s = c.max(0.0);
+    }
+    Some(cfg)
+}
+
 fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
     match f.get("dispatch") {
         None => "rr",
@@ -154,6 +174,12 @@ fn print_result(r: &RunResult) {
         r.mean_turnaround(),
         r.kernel_slowdown_pct()
     );
+    if r.preemptions > 0 {
+        println!(
+            "preemptions={} wasted_work={:.1}s ckpt_overhead={:.1}s",
+            r.preemptions, r.wasted_work_s, r.ckpt_overhead_s
+        );
+    }
 }
 
 fn cmd_bench(f: &HashMap<String, String>) -> i32 {
@@ -198,6 +224,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
+        preempt: parse_preempt(f),
     };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
@@ -224,15 +251,21 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
     print_result(&r);
     for j in &r.jobs {
         let node = if r.n_nodes > 1 { format!(" node={}", j.node) } else { String::new() };
+        let preempted = if j.preemptions > 0 {
+            format!(" preempted={} wasted={:.1}s", j.preemptions, j.wasted_s)
+        } else {
+            String::new()
+        };
         println!(
-            "  {:<24} {}{} start={:>7.1}s end={:>7.1}s kernels={} slowdown={:+.2}%",
+            "  {:<24} {}{} start={:>7.1}s end={:>7.1}s kernels={} slowdown={:+.2}%{}",
             j.name,
             if j.crashed { "CRASH" } else { "ok   " },
             node,
             j.started,
             j.ended,
             j.n_kernels,
-            100.0 * j.kernel_slowdown()
+            100.0 * j.kernel_slowdown(),
+            preempted
         );
     }
     0
@@ -263,6 +296,7 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
+        preempt: parse_preempt(f),
     };
     let r = run_cluster(cfg, jobs);
     print_result(&r);

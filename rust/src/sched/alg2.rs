@@ -1,5 +1,8 @@
 //! Algorithm 2: hardware-emulating placement, memory AND compute hard.
 //!
+//! Paper map: §IV Algorithm 2 ("MGB-Alg2"), evaluated in Fig. 4/5 and
+//! Tables II–IV as the conservative MGB variant.
+//!
 //! Mirrors each device's per-SM occupancy (resident thread blocks and
 //! warps, against the device's per-SM caps) and walks SMs round-robin
 //! exactly like the hardware dispatcher. A task is placed only if *all*

@@ -1,5 +1,9 @@
 //! Algorithm 3: memory-safe, least-warp-load quick placement.
 //!
+//! Paper map: §IV Algorithm 3 — the default MGB policy behind the
+//! headline 4.9x mean-turnaround / throughput gains of §V (Fig. 4/5,
+//! Tables II–IV).
+//!
 //! Memory stays a hard constraint; compute is soft — the policy just
 //! tracks the *total* active warps per GPU (not per-SM) and, among the
 //! devices with enough free memory, picks the one with the least load.

@@ -8,6 +8,14 @@
 //! capacity but not the future. All three built-ins are deterministic
 //! (ties break toward the lower node index) so batch runs replay
 //! exactly.
+//!
+//! Paper map: entirely beyond the paper, whose deployments are single
+//! node (§V-A); this is the frontend a production cluster puts above N
+//! instances of the paper's per-node scheduler. On heterogeneous
+//! clusters, [`LeastLoaded`] normalises outstanding work by each node's
+//! compute capability (ROADMAP "Heterogeneous-cluster dispatch") —
+//! homogeneous clusters keep the original integer comparison and so
+//! replay pre-existing runs exactly.
 
 /// Aggregate load of one node at dispatch time.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +33,10 @@ pub struct NodeLoadView {
     /// Total device memory summed over the node's GPUs.
     pub total_mem: u64,
     pub n_gpus: usize,
+    /// Relative compute capability (sum of GPU speeds, V100 == 1.0; see
+    /// `NodeSpec::compute_capacity`). Least-loaded divides outstanding
+    /// work by this so a P100 node is not handed a V100 node's share.
+    pub compute_capacity: f64,
 }
 
 /// What the dispatcher may know about the arriving job.
@@ -63,8 +75,12 @@ impl Dispatcher for RoundRobin {
     }
 }
 
-/// Least outstanding estimated work; ties broken by queue depth, then
-/// node index.
+/// Least outstanding estimated work, normalised by node compute
+/// capability on heterogeneous clusters (a P100 node drains its queue
+/// ~2.9x slower than a 4×V100 node, so equal raw microseconds are not
+/// equal load); ties broken by queue depth, then node index. When all
+/// capabilities are equal the raw integer comparison is used, keeping
+/// homogeneous runs bit-identical to the pre-normalisation dispatcher.
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -74,10 +90,20 @@ impl Dispatcher for LeastLoaded {
     }
 
     fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        let homogeneous =
+            nodes.windows(2).all(|w| w[0].compute_capacity == w[1].compute_capacity);
+        let norm = |v: &NodeLoadView| {
+            v.outstanding_work_us as f64 / v.compute_capacity.max(f64::MIN_POSITIVE)
+        };
         let mut best = 0;
         for (i, v) in nodes.iter().enumerate().skip(1) {
             let b = &nodes[best];
-            if (v.outstanding_work_us, v.queued_jobs) < (b.outstanding_work_us, b.queued_jobs) {
+            let better = if homogeneous {
+                (v.outstanding_work_us, v.queued_jobs) < (b.outstanding_work_us, b.queued_jobs)
+            } else {
+                norm(v) < norm(b) || (norm(v) == norm(b) && v.queued_jobs < b.queued_jobs)
+            };
+            if better {
                 best = i;
             }
         }
@@ -143,7 +169,12 @@ mod tests {
             free_mem: 64 << 30,
             total_mem: 64 << 30,
             n_gpus: 4,
+            compute_capacity: 4.0,
         }
+    }
+
+    fn het_view(outstanding_work_us: u64, compute_capacity: f64) -> NodeLoadView {
+        NodeLoadView { compute_capacity, ..view(outstanding_work_us, 0, 0) }
     }
 
     fn job() -> JobInfo {
@@ -165,6 +196,24 @@ mod tests {
         assert_eq!(d.route(&job(), &nodes), 1);
         // Equal work: fewer queued jobs wins, then lower index.
         let nodes = vec![view(10, 3, 0), view(10, 1, 0), view(10, 1, 0)];
+        assert_eq!(d.route(&job(), &nodes), 1);
+    }
+
+    #[test]
+    fn least_loaded_normalises_by_compute_capability() {
+        let mut d = make_dispatcher("least");
+        // Equal raw outstanding work on a 2xP100 (1.4) and a 4xV100
+        // (4.0) node: per-capability load is 714ms vs 250ms, so the
+        // V100 node is the genuinely less-loaded one.
+        let p100 = 2.0 * (3584.0 / 5120.0);
+        let nodes = vec![het_view(1_000_000, p100), het_view(1_000_000, 4.0)];
+        assert_eq!(d.route(&job(), &nodes), 1);
+        // But the slow node wins when its raw backlog is small enough:
+        // 300ms/1.4 = 214ms < 1s/4 = 250ms.
+        let nodes = vec![het_view(300_000, p100), het_view(1_000_000, 4.0)];
+        assert_eq!(d.route(&job(), &nodes), 0);
+        // Homogeneous capacities keep the original integer comparison.
+        let nodes = vec![het_view(10, 4.0), het_view(9, 4.0)];
         assert_eq!(d.route(&job(), &nodes), 1);
     }
 

@@ -19,10 +19,17 @@
 //! instance then places the job's tasks on its devices. The two layers
 //! are deliberately decoupled: dispatchers see only aggregate
 //! [`NodeLoadView`]s, policies only their node's [`DeviceView`]s.
+//!
+//! **Preemption layer.** A [`PreemptPolicy`] (see [`preempt`]) extends
+//! a node policy's wait/admit answers with "evict victim V": the
+//! coordinator checkpoints the victim at a configurable cost, admits
+//! the blocked task, and restores the victim later. Off by default —
+//! with it disabled the engine is bit-identical to the two-layer stack.
 
 pub mod alg2;
 pub mod alg3;
 pub mod dispatch;
+pub mod preempt;
 pub mod schedgpu;
 
 pub use alg2::MgbAlg2;
@@ -30,6 +37,10 @@ pub use alg3::MgbAlg3;
 pub use dispatch::{
     canonical_dispatch, make_dispatcher, Dispatcher, JobInfo, LeastLoaded, MemHeadroom,
     NodeLoadView, RoundRobin,
+};
+pub use preempt::{
+    canonical_preempt, make_preempt_policy, MaxMemory, MinProgress, NeverPreempt, PreemptConfig,
+    PreemptPolicy, VictimView,
 };
 pub use schedgpu::SchedGpu;
 

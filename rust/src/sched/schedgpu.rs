@@ -1,5 +1,9 @@
 //! schedGPU (Reaño et al., TPDS'18) — the §V-E comparison baseline.
 //!
+//! Paper map: §V-E "Comparison with schedGPU" — the memory-only
+//! intra-node scheduler the paper's compute-aware MGB policies are
+//! measured against (and beat on the W1–W8 mixes).
+//!
 //! Memory capacity is the *only* resource criterion: a task is admitted
 //! onto the first device whose free memory covers it, with no compute
 //! awareness at all, and suspended (queued) when no memory is free.

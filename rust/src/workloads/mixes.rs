@@ -3,7 +3,8 @@
 use super::darknet::{NnTask, NN_TASKS};
 use super::rng::Rng;
 use super::rodinia::COMBOS;
-use crate::coordinator::JobSpec;
+use crate::coordinator::{JobClass, JobSpec};
+use crate::lazy::{JobTrace, TaskResources, TraceEvent};
 
 /// A large:small mix ratio (Table I: 1:1, 2:1, 3:1, 5:1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +74,50 @@ impl Workload {
                 spec
             })
             .collect()
+    }
+}
+
+/// A synthetic single-task job — reserve `mem_bytes`, transfer it in,
+/// run one `work_us` kernel (100 x 32-thread blocks), transfer it
+/// back. The minimal adversarial unit for contention/preemption
+/// studies (`bench preempt`, `examples/preemption.rs`); real mixes
+/// come from [`Workload`] instead.
+pub fn synthetic_job(
+    name: &str,
+    class: JobClass,
+    mem_bytes: u64,
+    work_us: u64,
+    arrival: f64,
+) -> JobSpec {
+    let res = TaskResources {
+        static_dev: None,
+        mem_bytes,
+        heap_bytes: 0,
+        grid: 100,
+        block: 32,
+    };
+    JobSpec {
+        name: name.into(),
+        class,
+        arrival,
+        trace: JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res },
+                TraceEvent::Malloc { task: 0, bytes: mem_bytes },
+                TraceEvent::H2D { task: 0, bytes: mem_bytes },
+                TraceEvent::Launch {
+                    task: 0,
+                    kernel: "k".into(),
+                    artifact: None,
+                    grid: 100,
+                    block: 32,
+                    work_us,
+                },
+                TraceEvent::D2H { task: 0, bytes: mem_bytes },
+                TraceEvent::Free { task: 0, bytes: mem_bytes },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        },
     }
 }
 
