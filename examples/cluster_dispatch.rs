@@ -47,6 +47,7 @@ fn main() {
             workers_per_node: mgb_workers(&node),
             dispatch,
             preempt: None,
+            latency: mgb::gpu::LatencyModel::off(),
         };
         let r = run_cluster(cfg, jobs.clone());
         println!(

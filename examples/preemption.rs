@@ -30,6 +30,7 @@ fn main() {
         workers_per_node: 4,
         dispatch: "rr",
         preempt,
+        latency: mgb::gpu::LatencyModel::off(),
     };
     println!(
         "1xV100 (16 GB): 120s hog holding 12 GB vs three 8s heavies \

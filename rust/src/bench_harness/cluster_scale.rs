@@ -35,6 +35,7 @@ pub fn cluster_scale(seed: u64) -> Report {
                 workers_per_node: mgb_workers(&node),
                 dispatch,
                 preempt: None,
+                latency: crate::gpu::LatencyModel::off(),
             };
             let r = run_cluster(cfg, jobs.clone());
             lines.push(format!(

@@ -1,0 +1,100 @@
+//! Beyond-paper: the probe/dispatch latency sweep (ROADMAP "Per-node
+//! probe latency model"). The paper's probes are host-side RPCs to a
+//! scheduler daemon; the free-frontend engine prices them at zero and
+//! so overstates open-system throughput exactly where those RPCs bite.
+//! Rows sweep the probe round-trip (with a proportional dispatch cost
+//! and frontend service time) over the same open-system stream: mean
+//! turnaround must grow monotonically with the RTT, and the preset
+//! rows (`lan`, `wan`) bracket realistic deployments.
+
+use super::{mgb_workers, Report};
+use crate::coordinator::{run_cluster, ClusterConfig, RunResult, SchedMode};
+use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec};
+use crate::workloads::{poisson_arrivals, Workload};
+
+/// The swept probe RTTs, seconds (0 = the free-frontend baseline).
+/// Steps are spaced so each one's guaranteed per-job delay (admission
+/// + task probes) dwarfs any co-residency jitter the shifted landings
+/// could cause — what keeps the sweep's monotonicity assertable.
+pub const RTT_SWEEP: [f64; 4] = [0.0, 0.05, 0.5, 2.0];
+
+/// Latency model used by the sweep at a given probe RTT: dispatch
+/// costs twice the RTT (the job hop is heavier than a probe) and the
+/// frontend serves one RPC per RTT/10.
+pub fn sweep_model(rtt_s: f64) -> LatencyModel {
+    if rtt_s == 0.0 {
+        LatencyModel::off()
+    } else {
+        LatencyModel {
+            probe_rtt_s: rtt_s,
+            dispatch_base_s: 2.0 * rtt_s,
+            frontend_service_s: rtt_s / 10.0,
+            ..LatencyModel::default()
+        }
+    }
+}
+
+fn sweep_cfg(latency: LatencyModel) -> ClusterConfig {
+    let node = NodeSpec::v100x4();
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(node.clone(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: mgb_workers(&node),
+        dispatch: "least",
+        preempt: None,
+        latency,
+    }
+}
+
+/// The one job stream every row of the experiment runs: open-system
+/// W2 at a deliberately low offered load (0.1 jobs/s onto 8 GPUs).
+/// With contention out of the picture, every modeled delay lands in
+/// turnaround instead of hiding behind queueing — which is what makes
+/// the sweep's monotonicity a clean property to assert, and what keeps
+/// the lan/wan preset rows comparable to the sweep rows.
+fn sweep_stream(seed: u64) -> Vec<crate::coordinator::JobSpec> {
+    let mut jobs = Workload::by_id("W2").expect("W2 exists").jobs(seed);
+    poisson_arrivals(&mut jobs, 0.1, seed);
+    jobs
+}
+
+/// Run the open-system W2 stream under each swept RTT. Exposed (rather
+/// than inlined into the report) so the regression tests can assert
+/// the monotonicity the report claims.
+pub fn latency_sweep(seed: u64) -> Vec<(f64, RunResult)> {
+    let jobs = sweep_stream(seed);
+    RTT_SWEEP
+        .iter()
+        .map(|&rtt| (rtt, run_cluster(sweep_cfg(sweep_model(rtt)), jobs.clone())))
+        .collect()
+}
+
+pub fn latency(seed: u64) -> Report {
+    let mut lines = Vec::new();
+    for (rtt, r) in latency_sweep(seed) {
+        lines.push(format!(
+            "probe_rtt={rtt:<6}s mean_turnaround={:.2}s makespan={:.1}s \
+             throughput={:.4}j/s completed={} crashed={}",
+            r.mean_turnaround(),
+            r.makespan,
+            r.throughput(),
+            r.completed(),
+            r.crashed()
+        ));
+    }
+    let jobs = sweep_stream(seed);
+    for (name, m) in [("lan", LatencyModel::lan()), ("wan", LatencyModel::wan())] {
+        let r = run_cluster(sweep_cfg(m), jobs.clone());
+        lines.push(format!(
+            "preset={name:<9} mean_turnaround={:.2}s makespan={:.1}s throughput={:.4}j/s",
+            r.mean_turnaround(),
+            r.makespan,
+            r.throughput()
+        ));
+    }
+    Report {
+        title: "Latency (beyond-paper): probe RTT sweep, open-system W2 on 2x 4xV100"
+            .into(),
+        lines,
+    }
+}

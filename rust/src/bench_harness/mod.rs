@@ -12,6 +12,7 @@ mod cluster_scale;
 mod fig4;
 mod fig5;
 mod fig6;
+mod latency;
 mod nn128;
 mod preempt;
 mod table2;
@@ -26,6 +27,7 @@ pub use cluster_scale::cluster_scale;
 pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
+pub use latency::{latency, latency_sweep, sweep_model, RTT_SWEEP};
 pub use nn128::nn128;
 pub use preempt::preempt;
 pub use table2::table2;
@@ -123,6 +125,7 @@ pub fn run_all(seed: u64) -> Vec<Report> {
         ablation(seed),
         cluster_scale(seed),
         preempt(seed),
+        latency(seed),
     ]
 }
 
@@ -139,6 +142,7 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         "ablation" => ablation(seed),
         "cluster" => cluster_scale(seed),
         "preempt" => preempt(seed),
+        "latency" => latency(seed),
         _ => return None,
     })
 }

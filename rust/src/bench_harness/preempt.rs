@@ -56,6 +56,7 @@ fn cfg(nodes: usize, preempt: Option<PreemptConfig>) -> ClusterConfig {
         workers_per_node: 4,
         dispatch: "least",
         preempt,
+        latency: crate::gpu::LatencyModel::off(),
     }
 }
 

@@ -52,11 +52,37 @@
 //! no preemption event is ever pushed and every decision point is
 //! unchanged, so disabled runs stay bit-identical to the admit-or-wait
 //! engine — enforced by exact-equality regression tests.
+//!
+//! **Probe/dispatch latency** (opt-in via [`ClusterConfig::latency`];
+//! see [`LatencyModel`]). The paper's probes are host-side RPCs to a
+//! scheduler daemon; with a nonzero model the engine prices them:
+//!
+//! * an arriving job queues at the cluster frontend (FIFO single
+//!   server), its routing probe fires as `ProbeSent`, and the
+//!   dispatcher routes **on the load snapshot at probe time** — by the
+//!   time the job lands (`ProbeAck` after the node's RTT, then
+//!   `DispatchArrive` after the affine-in-payload dispatch cost) the
+//!   loads may have changed, and the engine deliberately does not
+//!   re-route (stale-snapshot semantics, locked by tests);
+//! * each task probe (`TaskBegin` in policy modes) becomes an RPC to
+//!   the node's scheduler daemon: the placement decision — and the
+//!   reservation's visibility to every later probe — happens daemon-side
+//!   when `ProbeSent` fires, but the job only resumes stepping when the
+//!   ack lands a round-trip later; a probe that finds nothing blocks
+//!   server-side and retries on releases at no extra round-trip.
+//!   Checkpoint *restore* re-placement is deliberately exempt: the
+//!   victim is already resident on the node and its reservations are
+//!   re-placed by the daemon itself (no client RPC), with the data
+//!   movement priced by the checkpoint cost model instead.
+//!
+//! With the all-zero model (the default) none of these events is ever
+//! pushed and every decision point is byte-identical to the free-
+//! frontend engine — enforced by the golden-trace harness.
 
 use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
 use super::placement::{NodePlacement, TaskLedger};
-use crate::gpu::{ClusterSpec, NodeSpec, PCIE_BYTES_PER_SEC};
+use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
 use crate::sched::{
     make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView, PreemptConfig,
@@ -103,6 +129,10 @@ pub struct ClusterConfig {
     /// disables it and keeps the run bit-identical to the admit-or-wait
     /// engine; only policy modes honour it.
     pub preempt: Option<PreemptConfig>,
+    /// Probe/dispatch latency model (see `gpu::LatencyModel`). The
+    /// all-zero model (`LatencyModel::off()`, the default) keeps the
+    /// run bit-identical to the free-frontend engine.
+    pub latency: LatencyModel,
 }
 
 /// One job of the batch.
@@ -178,6 +208,16 @@ fn compact_trace(
         .collect()
 }
 
+/// The probe resource vector a `TaskBegin` conveys (§III-B) — built in
+/// one place so the synchronous and daemon-side probe paths agree.
+fn probe_req(res: &crate::lazy::TaskResources) -> TaskReq {
+    TaskReq {
+        mem_bytes: res.reserve_bytes(),
+        tbs: res.thread_blocks(),
+        warps_per_tb: res.warps_per_tb(),
+    }
+}
+
 /// Checkpoint/restart lifecycle of one job. Always `Normal` when
 /// preemption is disabled — the other states are only ever entered from
 /// `try_preempt`, which requires `Engine::preempt`.
@@ -234,6 +274,17 @@ struct JobRt {
     n_preempted: u32,
     /// Dedicated-work seconds lost to killed kernels.
     wasted_s: f64,
+    /// The dispatcher has routed this job (its load is counted in the
+    /// node's outstanding bookkeeping). Always true once queued in the
+    /// zero-latency paths; set at probe-decision time under latency.
+    dispatched: bool,
+    /// The job has physically landed on its node (latency mode: after
+    /// the dispatch hop; meaningless with the model off).
+    arrived: bool,
+    /// A task probe RPC is in flight for the TaskBegin at `pc`: either
+    /// blocked at the node daemon (placement pending) or placed with
+    /// the ack still travelling back. Latency mode only.
+    probe_inflight: bool,
 }
 
 struct Engine<'h> {
@@ -259,6 +310,16 @@ struct Engine<'h> {
     /// jobs in `JPhase::Checkpointing`): O(1) eviction-storm guard for
     /// `try_preempt`, which runs on every failed probe retry.
     ckpt_inflight: Vec<u32>,
+    /// Probe/dispatch latency model (sanitized: no negative terms).
+    latency: LatencyModel,
+    /// Cached `latency.is_off()` — invariant for the whole run, and
+    /// checked on every Arrive/TaskBegin; `true` selects the exact
+    /// pre-latency code paths everywhere.
+    latency_off: bool,
+    /// Cluster-frontend FIFO server: virtual time it frees up.
+    frontend_busy: f64,
+    /// Per-node scheduler-daemon FIFO servers (task probes).
+    daemon_busy: Vec<f64>,
     hook: Option<LaunchHook<'h>>,
 }
 
@@ -289,6 +350,7 @@ pub fn run_batch_with_hook(
         workers_per_node: cfg.workers,
         dispatch: "rr",
         preempt: None,
+        latency: LatencyModel::off(),
     };
     run_cluster_with_hook(cluster_cfg, jobs, hook)
 }
@@ -300,12 +362,29 @@ pub fn run_cluster(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> RunResult {
     run_cluster_with_hook(cfg, jobs, None)
 }
 
+/// `run_cluster` with the event-core's trace recorder armed: returns
+/// the result plus one serialised line per *fired* event, in firing
+/// order. The golden-trace test harness compares these streams
+/// byte-for-byte across runs and against committed fixtures.
+pub fn run_cluster_traced(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> (RunResult, Vec<String>) {
+    run_cluster_inner(cfg, jobs, None, true)
+}
+
 /// `run_cluster` plus a real-compute hook invoked per artifact launch.
 pub fn run_cluster_with_hook(
     cfg: ClusterConfig,
     jobs: Vec<JobSpec>,
     hook: Option<LaunchHook<'_>>,
 ) -> RunResult {
+    run_cluster_inner(cfg, jobs, hook, false).0
+}
+
+fn run_cluster_inner(
+    cfg: ClusterConfig,
+    jobs: Vec<JobSpec>,
+    hook: Option<LaunchHook<'_>>,
+    record_trace: bool,
+) -> (RunResult, Vec<String>) {
     let nodes: Vec<NodePlacement> = cfg
         .cluster
         .nodes
@@ -328,6 +407,10 @@ pub fn run_cluster_with_hook(
         })
         .collect();
     let n_nodes = nodes.len();
+    // Clamp negative latency terms: they would schedule events into
+    // the past and silently run the virtual clock backwards. An
+    // effectively-zero model then takes the off path like any other.
+    let latency = cfg.latency.sanitized();
     let mut eng = Engine {
         mode: cfg.mode,
         cluster_name: cfg.cluster.name.clone(),
@@ -347,17 +430,29 @@ pub fn run_cluster_with_hook(
             overhead_s: 0.0,
         }),
         ckpt_inflight: vec![0; n_nodes],
+        latency_off: latency.is_off(),
+        latency,
+        frontend_busy: 0.0,
+        daemon_busy: vec![0.0; n_nodes],
         nodes,
         jobs,
         hook,
     };
-    eng.run()
+    if record_trace {
+        eng.evq.record_trace();
+    }
+    let result = eng.run();
+    (result, eng.evq.take_trace())
 }
 
 impl<'h> Engine<'h> {
     /// Route `job` to a node (cluster layer) and record its estimated
-    /// load against that node. Returns the node index.
-    fn dispatch_job(&mut self, job: usize) -> usize {
+    /// load against that node. The load views are snapshotted at `t` —
+    /// the *probe* time: under a nonzero latency model the job lands
+    /// a round-trip plus dispatch cost later and is never re-routed,
+    /// so this snapshot is exactly the stale one a real frontend acts
+    /// on. Returns the node index.
+    fn dispatch_job(&mut self, job: usize, t: f64) -> usize {
         let views: Vec<NodeLoadView> = self
             .nodes
             .iter()
@@ -370,6 +465,8 @@ impl<'h> Engine<'h> {
                 total_mem: nd.total_mem(),
                 n_gpus: nd.devices.len(),
                 compute_capacity: nd.compute_capacity,
+                taken_at: t,
+                probe_rtt_s: self.latency.probe_rtt(i),
             })
             .collect();
         let info = JobInfo {
@@ -379,16 +476,140 @@ impl<'h> Engine<'h> {
         let node = self.dispatcher.route(&info, &views);
         debug_assert!(node < self.nodes.len(), "dispatcher routed off-cluster");
         self.rt[job].node = node;
+        self.rt[job].dispatched = true;
         self.outstanding_us[node] += self.rt[job].est_work_us;
         self.outstanding_mem[node] += self.rt[job].est_mem_bytes;
         node
     }
 
+    /// `job` lands on its routed node and joins the worker queue; an
+    /// idle worker picks it up immediately. Shared by the zero-latency
+    /// `Arrive` arm and the `DispatchArrive` handler so the two landing
+    /// paths cannot drift apart.
+    fn land_job(&mut self, job: usize, t: f64) {
+        let n = self.rt[job].node;
+        self.nodes[n].job_q.push_back(job);
+        if let Some(w) = self.nodes[n].pop_idle() {
+            self.start_next_job(n, w, t);
+        }
+    }
+
+    /// FIFO single-server queueing at the cluster frontend: an RPC
+    /// arriving at `t` is served at max(t, busy-until) and holds the
+    /// server for one service time. Returns the service instant.
+    fn admit_frontend(&mut self, t: f64) -> f64 {
+        let s = t.max(self.frontend_busy);
+        self.frontend_busy = s + self.latency.frontend_service_s;
+        s
+    }
+
+    /// Same FIFO queueing at `node`'s scheduler daemon (task probes).
+    fn admit_daemon(&mut self, node: usize, t: f64) -> f64 {
+        let s = t.max(self.daemon_busy[node]);
+        self.daemon_busy[node] = s + self.latency.frontend_service_s;
+        s
+    }
+
+    /// A probe RPC reached its server (latency mode only): the cluster
+    /// frontend's routing probe if the job is not yet dispatched, else
+    /// the task probe at the job's node daemon.
+    fn handle_probe_sent(&mut self, job: usize, t: f64) {
+        if self.rt[job].done {
+            return;
+        }
+        if !self.rt[job].dispatched {
+            // Route NOW, on the load the frontend sees now; the ack
+            // travels back over the chosen node's round-trip.
+            let node = self.dispatch_job(job, t);
+            self.evq.push(t + self.latency.probe_rtt(node), EvKind::ProbeAck { job });
+        } else {
+            self.daemon_try_place(job, t);
+        }
+    }
+
+    /// A probe's reply landed back at its client (latency mode only):
+    /// a routed-but-not-landed job starts its dispatch hop; a placed
+    /// task's job resumes stepping past its `TaskBegin`.
+    fn handle_probe_ack(&mut self, job: usize, t: f64) {
+        if self.rt[job].done {
+            return;
+        }
+        if !self.rt[job].arrived {
+            let dt = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+            self.evq.push(t + dt, EvKind::DispatchArrive { job });
+        } else {
+            self.rt[job].probe_inflight = false;
+            self.step_job(job, t);
+        }
+    }
+
+    /// Ask `job`'s node to place `task` with `req`; on success record
+    /// the reservation in the job's ledger (and its request vector when
+    /// preemption is on). On failure queue the job as a waiter and
+    /// offer the preemption policy its victims. Returns whether the
+    /// placement succeeded. Shared by the synchronous probe (latency
+    /// off) and the daemon-side probe service (latency on) so the two
+    /// paths cannot drift apart — latency mode is the same decisions
+    /// plus delays, never different bookkeeping.
+    fn probe_place(&mut self, job: usize, task: usize, req: &TaskReq, t: f64) -> bool {
+        let node = self.rt[job].node;
+        match self.nodes[node].place((job, task), req) {
+            Some(dev) => {
+                let preempt_on = self.preempt.is_some();
+                let rt = &mut self.rt[job];
+                rt.ledger.reserved.insert(task, (dev, req.mem_bytes));
+                rt.task_dev.insert(task, dev);
+                if preempt_on {
+                    rt.task_req.insert(task, *req);
+                }
+                true
+            }
+            None => {
+                self.nodes[node].push_waiter(job);
+                if self.preempt.is_some() {
+                    self.try_preempt(node, job, req, t);
+                }
+                false
+            }
+        }
+    }
+
+    /// A task probe is at `job`'s node daemon — first arrival, or a
+    /// release-retry while the RPC blocks server-side. Try the
+    /// placement now: success records the reservation immediately
+    /// (visible to every later probe on the node) and sends the ack
+    /// after the node's round-trip; failure queues the job as a waiter
+    /// exactly like the synchronous path (the blocked RPC retries on
+    /// the next release at no extra round-trip).
+    fn daemon_try_place(&mut self, job: usize, t: f64) {
+        debug_assert!(self.rt[job].probe_inflight, "no probe in flight");
+        // A probe can only be in flight while pc rests on its TaskBegin
+        // (the ack path is the only thing that advances pc past it).
+        // Fail loudly if that invariant ever breaks: silently returning
+        // would strand the job (no ack ever comes) and misreport it as
+        // a crash via the drain fallback.
+        let CEv::TaskBegin { task, res } = self.compact[job][self.rt[job].pc] else {
+            unreachable!("job {job}: probe in flight away from its TaskBegin");
+        };
+        let req = probe_req(&res);
+        if self.probe_place(job, task, &req, t) {
+            // pc advances when the ack lands (ProbeAck -> step_job).
+            let rtt = self.latency.probe_rtt(self.rt[job].node);
+            self.evq.push(t + rtt, EvKind::ProbeAck { job });
+        }
+    }
+
     fn run(&mut self) -> RunResult {
+        let latency_on = !self.latency_off;
         for j in 0..self.jobs.len() {
             let arr = self.jobs[j].arrival;
-            if arr <= 0.0 {
-                let n = self.dispatch_job(j);
+            if latency_on {
+                // Every job reaches the cluster through the frontend:
+                // Arrive -> (queueing) ProbeSent -> ProbeAck ->
+                // DispatchArrive. Batch jobs arrive at t = 0.
+                self.evq.push(arr.max(0.0), EvKind::Arrive { job: j });
+            } else if arr <= 0.0 {
+                let n = self.dispatch_job(j, 0.0);
                 self.nodes[n].job_q.push_back(j);
             } else {
                 self.evq.push(arr, EvKind::Arrive { job: j });
@@ -413,10 +634,26 @@ impl<'h> Engine<'h> {
                         }
                     }
                     EvKind::Arrive { job } => {
-                        let n = self.dispatch_job(job);
-                        self.nodes[n].job_q.push_back(job);
-                        if let Some(w) = self.nodes[n].pop_idle() {
-                            self.start_next_job(n, w, ev.t);
+                        if self.latency_off {
+                            self.dispatch_job(job, ev.t);
+                            self.land_job(job, ev.t);
+                        } else {
+                            // The routing probe queues at the cluster
+                            // frontend; the decision happens when it is
+                            // served (ProbeSent), not now.
+                            let t_send = self.admit_frontend(ev.t);
+                            self.evq.push(t_send, EvKind::ProbeSent { job });
+                        }
+                    }
+                    EvKind::ProbeSent { job } => self.handle_probe_sent(job, ev.t),
+                    EvKind::ProbeAck { job } => self.handle_probe_ack(job, ev.t),
+                    EvKind::DispatchArrive { job } => {
+                        // The routed job lands on its node: admission
+                        // was delayed by RTT + dispatch cost, and the
+                        // routing decision was *not* revisited.
+                        if !self.rt[job].done {
+                            self.rt[job].arrived = true;
+                            self.land_job(job, ev.t);
                         }
                     }
                     EvKind::CkptBegin { job } => self.handle_ckpt_begin(job, ev.t),
@@ -517,29 +754,36 @@ impl<'h> Engine<'h> {
                         rt.pc += 1;
                         continue;
                     }
-                    let req = TaskReq {
-                        mem_bytes: res.reserve_bytes(),
-                        tbs: res.thread_blocks(),
-                        warps_per_tb: res.warps_per_tb(),
-                    };
-                    match self.nodes[node].place((job, task), &req) {
-                        Some(dev) => {
-                            let preempt_on = self.preempt.is_some();
-                            let rt = &mut self.rt[job];
-                            rt.ledger.reserved.insert(task, (dev, req.mem_bytes));
-                            rt.task_dev.insert(task, dev);
-                            if preempt_on {
-                                rt.task_req.insert(task, req);
+                    if !self.latency_off {
+                        // Async probe protocol: the RPC outcome arrives
+                        // via ProbeSent/ProbeAck events, never inline.
+                        // "Placed" is keyed on the live reservation —
+                        // not task_dev, whose entries outlive TaskEnd —
+                        // so a re-begun task id re-probes exactly like
+                        // the synchronous path would.
+                        if self.rt[job].ledger.reserved.contains_key(&task) {
+                            if self.rt[job].probe_inflight {
+                                return; // placed; ack still travelling
                             }
-                            rt.pc += 1;
+                            self.rt[job].pc += 1; // ack delivered
+                            continue;
                         }
-                        None => {
-                            self.nodes[node].push_waiter(job);
-                            if self.preempt.is_some() {
-                                self.try_preempt(node, job, &req, t);
-                            }
+                        if self.rt[job].probe_inflight {
+                            // Woken by a release while blocked at the
+                            // daemon: retry the placement server-side.
+                            self.daemon_try_place(job, t);
                             return;
                         }
+                        self.rt[job].probe_inflight = true;
+                        let t_send = self.admit_daemon(node, t);
+                        self.evq.push(t_send, EvKind::ProbeSent { job });
+                        return;
+                    }
+                    let req = probe_req(&res);
+                    if self.probe_place(job, task, &req, t) {
+                        self.rt[job].pc += 1;
+                    } else {
+                        return;
                     }
                 }
                 CEv::Malloc { task, bytes } => {
@@ -905,10 +1149,14 @@ impl<'h> Engine<'h> {
         }
         let node = self.rt[job].node;
         self.wake_waiters(node, t);
-        self.outstanding_us[node] =
-            self.outstanding_us[node].saturating_sub(self.rt[job].est_work_us);
-        self.outstanding_mem[node] =
-            self.outstanding_mem[node].saturating_sub(self.rt[job].est_mem_bytes);
+        if self.rt[job].dispatched {
+            // Un-routed jobs (latency mode: probe chain still in
+            // flight) were never charged to a node's outstanding load.
+            self.outstanding_us[node] =
+                self.outstanding_us[node].saturating_sub(self.rt[job].est_work_us);
+            self.outstanding_mem[node] =
+                self.outstanding_mem[node].saturating_sub(self.rt[job].est_mem_bytes);
+        }
         let worker = self.rt[job].worker;
         self.start_next_job(node, worker, t);
     }

@@ -11,9 +11,14 @@
 //! the §V-A deployments (batch at t=0, Poisson arrivals beyond-paper).
 //! The checkpoint/restart kinds ([`EvKind::CkptBegin`] /
 //! [`EvKind::CkptDone`] / [`EvKind::Restart`]) carry the beyond-paper
-//! preemption protocol (ROADMAP "Job preemption"); none of them is ever
-//! pushed unless preemption is enabled, which keeps disabled runs
-//! bit-identical.
+//! preemption protocol (ROADMAP "Job preemption"); the probe/dispatch
+//! kinds ([`EvKind::ProbeSent`] / [`EvKind::ProbeAck`] /
+//! [`EvKind::DispatchArrive`]) carry the beyond-paper frontend latency
+//! protocol (ROADMAP "Per-node probe latency model"). None of them is
+//! ever pushed unless its feature is enabled, which keeps disabled
+//! runs bit-identical — provable via the trace-recorder hook
+//! ([`EventQueue::record_trace`]), which serialises every fired event
+//! for the golden-trace harness.
 
 use std::collections::BinaryHeap;
 
@@ -27,8 +32,11 @@ pub(crate) enum EvKind {
     /// The earliest kernel on `(node, dev)` may have finished. Stale if
     /// `gen` no longer matches the device's current generation.
     DevCompletion { node: usize, dev: usize, gen: u64 },
-    /// A job enters the system (open-system arrivals): the dispatcher
-    /// routes it to a node when this fires.
+    /// A job enters the system. With the latency model off this is
+    /// pushed only for open-system arrivals (t > 0) and the dispatcher
+    /// routes the job when it fires; with the model on, *every* job
+    /// arrives through the cluster frontend this way and routing is
+    /// deferred to its `ProbeSent`.
     Arrive { job: usize },
     /// Checkpoint of preemption victim `job` begins: its in-flight
     /// kernel is killed (partial progress becomes wasted work) and the
@@ -45,6 +53,20 @@ pub(crate) enum EvKind {
     /// waiter wake-ups so the job the eviction unblocked re-places
     /// first.
     Restart { job: usize, worker: usize },
+    /// A probe RPC reaches its server (latency mode only): the cluster
+    /// frontend's routing probe if `job` is not yet dispatched, else
+    /// the task probe arriving at the job's node scheduler daemon. The
+    /// decision is made *now*, on the load the server sees now — the
+    /// stale-snapshot semantics the latency model exists to expose.
+    ProbeSent { job: usize },
+    /// The probe's reply lands back at the client after the modeled
+    /// round-trip: a routed job starts its dispatch hop, a placed task
+    /// resumes stepping. Never pushed when the latency model is off.
+    ProbeAck { job: usize },
+    /// A dispatched job physically arrives at its node (after the
+    /// dispatch-cost delay) and joins the node's worker queue. Never
+    /// pushed when the latency model is off.
+    DispatchArrive { job: usize },
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -79,11 +101,27 @@ pub(crate) struct EventQueue {
     heap: BinaryHeap<Event>,
     seq: u64,
     now: f64,
+    /// Trace-recorder hook: when armed, every *fired* (popped) event is
+    /// serialised into one stable line — the golden-trace harness
+    /// compares these streams byte-for-byte across runs and against
+    /// committed fixtures. `None` (the default) costs the hot loop one
+    /// branch.
+    trace: Option<Vec<String>>,
 }
 
 impl EventQueue {
     pub fn new() -> Self {
         EventQueue::default()
+    }
+
+    /// Arm the trace recorder: subsequent pops are serialised.
+    pub fn record_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Take the recorded trace (empty if recording was never armed).
+    pub fn take_trace(&mut self) -> Vec<String> {
+        self.trace.take().unwrap_or_default()
     }
 
     pub fn push(&mut self, t: f64, kind: EvKind) {
@@ -95,6 +133,11 @@ impl EventQueue {
         let ev = self.heap.pop();
         if let Some(e) = &ev {
             self.now = e.t;
+            if let Some(tr) = &mut self.trace {
+                // {:?} on f64 prints the shortest round-trip decimal, so
+                // bit-identical runs serialise to identical strings.
+                tr.push(format!("t={:?} seq={} {:?}", e.t, e.seq, e.kind));
+            }
         }
         ev
     }
@@ -178,6 +221,48 @@ mod tests {
         q.push(6.0, EvKind::Wake { job: 1 });
         assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 1 }));
         assert!(matches!(q.pop().unwrap().kind, EvKind::CkptDone { job: 3 }));
+    }
+
+    #[test]
+    fn probe_events_order_fifo_with_the_rest() {
+        // The latency protocol leans on the same FIFO tie-break: a
+        // ProbeSent pushed before a same-instant Wake must fire first
+        // (the daemon decides before the woken waiter re-probes), and
+        // ProbeAck/DispatchArrive order by their modeled delays.
+        let mut q = EventQueue::new();
+        q.push(1.0, EvKind::ProbeSent { job: 0 });
+        q.push(1.0, EvKind::Wake { job: 1 });
+        q.push(1.2, EvKind::ProbeAck { job: 0 });
+        q.push(1.1, EvKind::DispatchArrive { job: 2 });
+        assert!(matches!(q.pop().unwrap().kind, EvKind::ProbeSent { job: 0 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 1 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::DispatchArrive { job: 2 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::ProbeAck { job: 0 }));
+    }
+
+    #[test]
+    fn trace_recorder_serialises_fired_events() {
+        let mut q = EventQueue::new();
+        q.record_trace();
+        q.push(2.0, EvKind::Wake { job: 3 });
+        q.push(1.0, EvKind::Arrive { job: 0 });
+        while q.pop().is_some() {}
+        let tr = q.take_trace();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr[0], "t=1.0 seq=2 Arrive { job: 0 }");
+        assert_eq!(tr[1], "t=2.0 seq=1 Wake { job: 3 }");
+        // Taking the trace disarms the recorder.
+        q.push(3.0, EvKind::Wake { job: 0 });
+        q.pop();
+        assert!(q.take_trace().is_empty());
+    }
+
+    #[test]
+    fn unarmed_recorder_records_nothing() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EvKind::Wake { job: 0 });
+        q.pop();
+        assert!(q.take_trace().is_empty());
     }
 
     #[test]

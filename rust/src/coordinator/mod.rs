@@ -17,10 +17,15 @@
 //! `run_batch` runs the paper's single-node deployments (a one-node
 //! cluster — bit-identical to the pre-cluster engine); `run_cluster`
 //! scales the same engine across a `gpu::ClusterSpec`, optionally under
-//! open-system Poisson traffic (`workloads::poisson_arrivals`) and with
+//! open-system Poisson traffic (`workloads::poisson_arrivals`), with
 //! checkpoint/restart preemption (`ClusterConfig::preempt` — a
 //! `sched::PreemptPolicy` may evict a running victim to admit a blocked
-//! task; off by default, and the disabled path is bit-identical).
+//! task; off by default, and the disabled path is bit-identical), and
+//! with a probe/dispatch latency model (`ClusterConfig::latency` — see
+//! `gpu::LatencyModel`; the all-zero default is likewise
+//! bit-identical). `run_cluster_traced` arms the event-core's trace
+//! recorder and returns the serialised fired-event stream alongside the
+//! result — the backbone of the golden-trace test harness.
 
 pub mod engine;
 mod events;
@@ -29,15 +34,15 @@ mod placement;
 
 pub use crate::sched::PreemptConfig;
 pub use engine::{
-    run_batch, run_batch_with_hook, run_cluster, run_cluster_with_hook, ClusterConfig, JobSpec,
-    RunConfig, SchedMode,
+    run_batch, run_batch_with_hook, run_cluster, run_cluster_traced, run_cluster_with_hook,
+    ClusterConfig, JobSpec, RunConfig, SchedMode,
 };
 pub use metrics::{JobClass, JobOutcome, RunResult};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpu::NodeSpec;
+    use crate::gpu::{LatencyModel, NodeSpec};
     use crate::lazy::{JobTrace, TaskResources, TraceEvent};
 
     /// A synthetic one-task job: reserve `mem`, run one kernel of
@@ -315,6 +320,7 @@ mod tests {
                     workers_per_node: 16,
                     dispatch,
                     preempt: None,
+                    latency: LatencyModel::off(),
                 },
                 jobs.clone(),
             );
@@ -341,6 +347,7 @@ mod tests {
                 workers_per_node: 4,
                 dispatch: "rr",
                 preempt: None,
+                latency: LatencyModel::off(),
             },
             jobs,
         );
@@ -382,6 +389,7 @@ mod tests {
                     workers_per_node: 8,
                     dispatch,
                     preempt: None,
+                    latency: LatencyModel::off(),
                 },
                 jobs,
             )
@@ -410,6 +418,7 @@ mod tests {
             workers_per_node: 8,
             dispatch: "least",
             preempt: None,
+            latency: LatencyModel::off(),
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -438,6 +447,7 @@ mod tests {
                 workers_per_node: 6,
                 dispatch: "least",
                 preempt: None,
+                latency: LatencyModel::off(),
             },
             jobs,
         );
@@ -468,6 +478,7 @@ mod tests {
             workers_per_node: 3,
             dispatch: "rr",
             preempt,
+            latency: LatencyModel::off(),
         }
     }
 
@@ -612,6 +623,7 @@ mod tests {
             workers_per_node: 4,
             dispatch: "least",
             preempt: Some(preempt_cfg("min-progress")),
+            latency: LatencyModel::off(),
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);

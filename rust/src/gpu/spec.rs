@@ -145,6 +145,119 @@ impl ClusterSpec {
 /// PCIe gen3 x16 effective host<->device bandwidth (B/s).
 pub const PCIE_BYTES_PER_SEC: f64 = 12.0e9;
 
+/// Frontend latency model (beyond-paper; ROADMAP "Per-node probe
+/// latency model"). The paper's probes are host-side RPCs to a
+/// scheduler daemon; a cluster adds a dispatch hop in front. This
+/// model prices those RPCs so open-system results reflect frontend
+/// overheads instead of assuming free routing:
+///
+/// * **probe RTT** — round-trip of one probe RPC (task probe to the
+///   node's scheduler daemon, or the dispatcher's load probe), per
+///   node: [`LatencyModel::per_node_rtt_s`] overrides the uniform
+///   [`LatencyModel::probe_rtt_s`] per node index.
+/// * **dispatch cost** — shipping a routed job to its node, affine in
+///   the job's payload: `dispatch_base_s + payload_bytes *
+///   dispatch_s_per_byte` (set the per-byte term to 0 for a constant
+///   model).
+/// * **frontend queueing** — each RPC occupies the (single-server,
+///   FIFO) frontend for `frontend_service_s`; simultaneous arrivals
+///   serialise, modelling daemon-side queueing delay.
+///
+/// The all-zero model ([`LatencyModel::off`], the `Default`) is the
+/// paper's free-frontend idealisation: the engine takes the exact
+/// pre-latency code paths and pushes no probe/dispatch events, keeping
+/// zero-latency runs bit-identical (enforced by the golden-trace
+/// tests).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyModel {
+    /// Uniform probe round-trip time, seconds.
+    pub probe_rtt_s: f64,
+    /// Per-node RTT overrides (index = node index); nodes beyond the
+    /// vector fall back to `probe_rtt_s`. Empty = uniform.
+    pub per_node_rtt_s: Vec<f64>,
+    /// Fixed dispatch (job-shipping) latency, seconds.
+    pub dispatch_base_s: f64,
+    /// Affine-in-payload dispatch term, seconds per payload byte (the
+    /// payload is the job's estimated peak reservation — its shipped
+    /// inputs/image). 0 = constant dispatch cost.
+    pub dispatch_s_per_byte: f64,
+    /// Frontend service time per RPC, seconds (FIFO queueing delay).
+    pub frontend_service_s: f64,
+}
+
+impl LatencyModel {
+    /// The zero-latency idealisation (the default): no modeled
+    /// frontend at all.
+    pub fn off() -> Self {
+        LatencyModel::default()
+    }
+
+    /// Uniform constant model: every probe costs `rtt_s` round-trip,
+    /// dispatch and queueing are free.
+    pub fn constant(rtt_s: f64) -> Self {
+        LatencyModel { probe_rtt_s: rtt_s, ..LatencyModel::default() }
+    }
+
+    /// Same-rack datacenter preset: 200 us probe RTT, 1 ms constant
+    /// dispatch, 20 us frontend service.
+    pub fn lan() -> Self {
+        LatencyModel {
+            probe_rtt_s: 200e-6,
+            dispatch_base_s: 1e-3,
+            frontend_service_s: 20e-6,
+            ..LatencyModel::default()
+        }
+    }
+
+    /// Cross-site preset: 5 ms probe RTT, 20 ms dispatch base plus an
+    /// affine payload term at ~10 GbE, 100 us frontend service.
+    pub fn wan() -> Self {
+        LatencyModel {
+            probe_rtt_s: 5e-3,
+            dispatch_base_s: 20e-3,
+            dispatch_s_per_byte: 1.0 / 1.25e9,
+            frontend_service_s: 100e-6,
+            ..LatencyModel::default()
+        }
+    }
+
+    /// Copy of the model with every term clamped to >= 0. The engine
+    /// applies this at construction: a negative term would schedule
+    /// events into the past and silently corrupt the virtual clock,
+    /// so sub-zero configurations (hand-built models; the CLI already
+    /// clamps) degrade to their zero form instead.
+    pub fn sanitized(&self) -> Self {
+        LatencyModel {
+            probe_rtt_s: self.probe_rtt_s.max(0.0),
+            per_node_rtt_s: self.per_node_rtt_s.iter().map(|r| r.max(0.0)).collect(),
+            dispatch_base_s: self.dispatch_base_s.max(0.0),
+            dispatch_s_per_byte: self.dispatch_s_per_byte.max(0.0),
+            frontend_service_s: self.frontend_service_s.max(0.0),
+        }
+    }
+
+    /// True iff every term is zero — the engine then takes the exact
+    /// pre-latency code paths (no probe/dispatch events at all).
+    pub fn is_off(&self) -> bool {
+        self.probe_rtt_s == 0.0
+            && self.per_node_rtt_s.iter().all(|&r| r == 0.0)
+            && self.dispatch_base_s == 0.0
+            && self.dispatch_s_per_byte == 0.0
+            && self.frontend_service_s == 0.0
+    }
+
+    /// Probe round-trip time to `node`.
+    pub fn probe_rtt(&self, node: usize) -> f64 {
+        self.per_node_rtt_s.get(node).copied().unwrap_or(self.probe_rtt_s)
+    }
+
+    /// Latency of shipping a routed job whose payload is
+    /// `payload_bytes` to its node.
+    pub fn dispatch_latency(&self, payload_bytes: u64) -> f64 {
+        self.dispatch_base_s + payload_bytes as f64 * self.dispatch_s_per_byte
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +276,66 @@ mod tests {
         assert_eq!(c.n_nodes(), 3);
         assert_eq!(c.total_gpus(), 6);
         assert!(c.name.contains("2xP100"));
+    }
+
+    #[test]
+    fn latency_model_off_and_per_node_lookup() {
+        assert!(LatencyModel::off().is_off());
+        assert!(LatencyModel::default().is_off());
+        assert!(!LatencyModel::constant(0.01).is_off());
+        assert!(!LatencyModel::lan().is_off());
+        assert!(!LatencyModel::wan().is_off());
+        // A per-node override alone turns the model on.
+        let m = LatencyModel { per_node_rtt_s: vec![0.0, 0.002], ..LatencyModel::off() };
+        assert!(!m.is_off());
+        assert_eq!(m.probe_rtt(0), 0.0);
+        assert_eq!(m.probe_rtt(1), 0.002);
+        // Past the override vector: fall back to the uniform RTT.
+        let m = LatencyModel { probe_rtt_s: 0.5, per_node_rtt_s: vec![0.1], ..LatencyModel::off() };
+        assert_eq!(m.probe_rtt(0), 0.1);
+        assert_eq!(m.probe_rtt(7), 0.5);
+    }
+
+    #[test]
+    fn sanitized_clamps_negative_terms_to_zero() {
+        let m = LatencyModel {
+            probe_rtt_s: -1.0,
+            per_node_rtt_s: vec![-0.5, 0.25],
+            dispatch_base_s: -2.0,
+            dispatch_s_per_byte: -1e-9,
+            frontend_service_s: -0.1,
+        }
+        .sanitized();
+        assert_eq!(m.probe_rtt_s, 0.0);
+        assert_eq!(m.per_node_rtt_s, vec![0.0, 0.25]);
+        assert_eq!(m.dispatch_base_s, 0.0);
+        assert_eq!(m.dispatch_s_per_byte, 0.0);
+        assert_eq!(m.frontend_service_s, 0.0);
+        // An all-negative model degrades to off, not to time travel.
+        let all_neg = LatencyModel {
+            probe_rtt_s: -1.0,
+            per_node_rtt_s: vec![-1.0],
+            dispatch_base_s: -1.0,
+            dispatch_s_per_byte: -1.0,
+            frontend_service_s: -1.0,
+        };
+        assert!(all_neg.sanitized().is_off());
+        // Valid models pass through unchanged.
+        assert_eq!(LatencyModel::wan().sanitized(), LatencyModel::wan());
+    }
+
+    #[test]
+    fn dispatch_latency_is_affine_in_payload() {
+        let m = LatencyModel {
+            dispatch_base_s: 0.01,
+            dispatch_s_per_byte: 1e-9,
+            ..LatencyModel::off()
+        };
+        assert!((m.dispatch_latency(0) - 0.01).abs() < 1e-15);
+        assert!((m.dispatch_latency(1_000_000) - 0.011).abs() < 1e-12);
+        // Constant model: payload does not matter.
+        let c = LatencyModel::constant(0.1);
+        assert_eq!(c.dispatch_latency(0), c.dispatch_latency(1 << 30));
     }
 
     #[test]

@@ -3,14 +3,16 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
 //!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+//!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
 //!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+//!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
 //! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
 //! ```
@@ -20,7 +22,7 @@ use mgb::compiler::compile;
 use mgb::coordinator::{
     run_cluster, run_cluster_with_hook, ClusterConfig, RunResult, SchedMode,
 };
-use mgb::gpu::{ClusterSpec, NodeSpec};
+use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
 use mgb::ir::parse::parse_program;
 use mgb::runtime::KernelRegistry;
 use mgb::workloads::{nn_homogeneous, nn_mix, poisson_arrivals, NnTask, Workload};
@@ -43,14 +45,16 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
         [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+        [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+        [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
   compile <file.gir>
   artifacts [--dir DIR]";
 
@@ -134,6 +138,43 @@ fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
             "rr"
         }),
     }
+}
+
+/// `--latency off|lan|wan` picks a frontend latency preset (`off`, the
+/// default, is the paper's free-frontend idealisation; a bare
+/// `--latency` selects `lan`). `--probe-rtt S` / `--dispatch-cost S`
+/// override the probe round-trip and the dispatch base cost in seconds
+/// — setting either on top of `off` turns the model on with only that
+/// term.
+fn parse_latency(f: &HashMap<String, String>) -> LatencyModel {
+    let mut m = match f.get("latency").map(String::as_str) {
+        None | Some("off") => LatencyModel::off(),
+        Some("on") | Some("true") | Some("lan") => LatencyModel::lan(),
+        Some("wan") => LatencyModel::wan(),
+        Some(other) => {
+            eprintln!("unknown latency preset '{other}', using off");
+            LatencyModel::off()
+        }
+    };
+    if let Some(s) = f.get("probe-rtt") {
+        match s.parse::<f64>() {
+            Ok(r) => m.probe_rtt_s = r.max(0.0),
+            Err(_) => eprintln!("invalid --probe-rtt '{s}' (seconds expected), ignoring"),
+        }
+    }
+    if let Some(s) = f.get("dispatch-cost") {
+        match s.parse::<f64>() {
+            Ok(c) => {
+                // "Fixed dispatch latency": the explicit override
+                // replaces the preset's whole dispatch model,
+                // including wan's per-byte term.
+                m.dispatch_base_s = c.max(0.0);
+                m.dispatch_s_per_byte = 0.0;
+            }
+            Err(_) => eprintln!("invalid --dispatch-cost '{s}' (seconds expected), ignoring"),
+        }
+    }
+    m
 }
 
 /// `--rate R` stamps Poisson arrivals over the batch (open system).
@@ -225,6 +266,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
         preempt: parse_preempt(f),
+        latency: parse_latency(f),
     };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
@@ -297,6 +339,7 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
         preempt: parse_preempt(f),
+        latency: parse_latency(f),
     };
     let r = run_cluster(cfg, jobs);
     print_result(&r);

@@ -8,13 +8,44 @@ use super::{Executable, PjrtRuntime};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard when a previous holder panicked. The
+/// caches guarded here are insert-only maps of completed values, so a
+/// poisoned lock never exposes a half-written entry — recovering beats
+/// propagating an unrelated thread's panic into every later launch.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A name-addressed, insert-only cache of shared values: hits hand
+/// back a clone of the *same* `Arc` (no recompile, no reallocation),
+/// and lookups tolerate lock poisoning. Kept generic so the cache
+/// contract is testable without a PJRT runtime behind it.
+struct ArcCache<V>(Mutex<HashMap<String, Arc<V>>>);
+
+impl<V> ArcCache<V> {
+    fn new() -> Self {
+        ArcCache(Mutex::new(HashMap::new()))
+    }
+
+    /// The cached value for `name`, if present (same `Arc` every hit).
+    fn get(&self, name: &str) -> Option<Arc<V>> {
+        lock_unpoisoned(&self.0).get(name).cloned()
+    }
+
+    /// Cache `value` under `name`. Last writer wins (benign for the
+    /// compile cache: both writers built the same artifact).
+    fn insert(&self, name: &str, value: Arc<V>) {
+        lock_unpoisoned(&self.0).insert(name.to_string(), value);
+    }
+}
 
 /// Lazily-compiled, name-addressed store of PJRT executables.
 pub struct KernelRegistry {
     runtime: PjrtRuntime,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    cache: ArcCache<Executable>,
 }
 
 impl KernelRegistry {
@@ -23,7 +54,7 @@ impl KernelRegistry {
         Ok(Self {
             runtime: PjrtRuntime::cpu()?,
             dir: dir.into(),
-            cache: Mutex::new(HashMap::new()),
+            cache: ArcCache::new(),
         })
     }
 
@@ -101,10 +132,11 @@ impl KernelRegistry {
         Ok(outs)
     }
 
-    /// Get (compiling on first use) the executable for `name`.
-    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    /// Get (compiling on first use) the executable for `name`. Hits
+    /// return the same `Arc` the first call cached.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e);
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
         if !path.exists() {
@@ -114,8 +146,46 @@ impl KernelRegistry {
                 self.dir.display()
             );
         }
-        let exe = std::sync::Arc::new(self.runtime.load_hlo_text(&path)?);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        let exe = Arc::new(self.runtime.load_hlo_text(&path)?);
+        self.cache.insert(name, exe.clone());
         Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hit_returns_the_same_arc() {
+        let c: ArcCache<String> = ArcCache::new();
+        assert!(c.get("k").is_none());
+        let v = Arc::new("compiled".to_string());
+        c.insert("k", v.clone());
+        let a = c.get("k").expect("hit");
+        let b = c.get("k").expect("hit");
+        // Identity, not just equality: a hit must not rebuild anything.
+        assert!(Arc::ptr_eq(&a, &v));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(c.get("other").is_none());
+    }
+
+    #[test]
+    fn cache_survives_a_poisoned_lock() {
+        let c = std::sync::Arc::new(ArcCache::<u32>::new());
+        c.insert("k", Arc::new(7));
+        // Panic while holding the lock on another thread: the mutex is
+        // now poisoned.
+        let c2 = c.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.0.lock().unwrap();
+            panic!("poison the cache lock");
+        })
+        .join();
+        assert!(c.0.lock().is_err(), "lock must actually be poisoned");
+        // The poison-tolerant accessors keep working.
+        assert_eq!(c.get("k").as_deref(), Some(&7));
+        c.insert("j", Arc::new(9));
+        assert_eq!(c.get("j").as_deref(), Some(&9));
     }
 }

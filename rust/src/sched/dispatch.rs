@@ -5,9 +5,13 @@
 //! Dispatchers see only aggregate per-node load ([`NodeLoadView`]) and
 //! a cheap estimate of the arriving job ([`JobInfo`]) — mirroring a
 //! real cluster frontend, which knows queue depths and advertised
-//! capacity but not the future. All three built-ins are deterministic
-//! (ties break toward the lower node index) so batch runs replay
-//! exactly.
+//! capacity but not the future. Under a nonzero `gpu::LatencyModel`
+//! the view is additionally *stale*: it is snapshotted at probe time
+//! ([`NodeLoadView::taken_at`]) while the job lands a round-trip plus
+//! dispatch cost later, so decisions can differ from what an
+//! instant-landing frontend would choose (by design — see the
+//! stale-routing tests). All three built-ins are deterministic (ties
+//! break toward the lower node index) so batch runs replay exactly.
 //!
 //! Paper map: entirely beyond the paper, whose deployments are single
 //! node (§V-A); this is the frontend a production cluster puts above N
@@ -37,6 +41,16 @@ pub struct NodeLoadView {
     /// `NodeSpec::compute_capacity`). Least-loaded divides outstanding
     /// work by this so a P100 node is not handed a V100 node's share.
     pub compute_capacity: f64,
+    /// Virtual time this snapshot was taken — the *probe* time. Under a
+    /// nonzero `gpu::LatencyModel` the routed job only lands on the node
+    /// `probe RTT + dispatch cost` later, so every decision is made on
+    /// load that is stale by exactly that interval (the engine never
+    /// re-snapshots at landing time). 0.0 for batch dispatch at t = 0.
+    pub taken_at: f64,
+    /// Modeled probe round-trip to this node
+    /// (`gpu::LatencyModel::probe_rtt`; 0 with the model off). Exposed
+    /// so a latency-aware dispatcher can trade load against distance.
+    pub probe_rtt_s: f64,
 }
 
 /// What the dispatcher may know about the arriving job.
@@ -170,6 +184,8 @@ mod tests {
             total_mem: 64 << 30,
             n_gpus: 4,
             compute_capacity: 4.0,
+            taken_at: 0.0,
+            probe_rtt_s: 0.0,
         }
     }
 

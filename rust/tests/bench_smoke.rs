@@ -1,0 +1,96 @@
+//! Smoke coverage for the bench harness: every experiment id must run
+//! end-to-end without panicking and produce rows, and the latency
+//! sweep must show the monotone turnaround growth its report claims.
+//! (Before this file only fig4/fig6/nn128/cluster had any coverage.)
+
+use mgb::bench_harness::{self, latency_sweep, sweep_model, RTT_SWEEP};
+
+fn smoke(name: &str) {
+    let r = bench_harness::run_experiment(name, 2)
+        .unwrap_or_else(|| panic!("experiment '{name}' unknown"));
+    assert!(!r.lines.is_empty(), "{name} produced no rows");
+    assert!(!r.title.is_empty(), "{name} has no title");
+    let text = r.to_string();
+    assert!(text.starts_with("== "), "{name}: report header missing");
+    assert!(text.lines().count() >= 1 + r.lines.len());
+}
+
+#[test]
+fn fig5_runs() {
+    smoke("fig5");
+}
+
+#[test]
+fn table2_runs() {
+    smoke("table2");
+}
+
+#[test]
+fn table3_runs() {
+    smoke("table3");
+}
+
+#[test]
+fn table4_runs() {
+    smoke("table4");
+}
+
+#[test]
+fn ablation_runs() {
+    smoke("ablation");
+}
+
+#[test]
+fn preempt_runs() {
+    smoke("preempt");
+}
+
+#[test]
+fn latency_runs() {
+    smoke("latency");
+}
+
+#[test]
+fn unknown_experiment_is_rejected() {
+    assert!(bench_harness::run_experiment("latencyy", 2).is_none());
+}
+
+#[test]
+fn latency_sweep_turnaround_grows_monotonically_with_rtt() {
+    // The acceptance criterion for the latency tentpole: on the same
+    // open-system stream, mean turnaround must rise monotonically with
+    // the probe RTT, and visibly so from the free frontend to the
+    // worst swept RTT.
+    let rows = latency_sweep(2);
+    assert_eq!(rows.len(), RTT_SWEEP.len());
+    let mut prev = f64::NEG_INFINITY;
+    for (rtt, r) in &rows {
+        assert_eq!(r.crashed(), 0, "rtt {rtt}: memory safety is latency-independent");
+        assert_eq!(r.completed(), 16, "rtt {rtt}: jobs conserved");
+        let mt = r.mean_turnaround();
+        assert!(
+            mt >= prev - 1e-6,
+            "turnaround must not drop as RTT grows: {mt} after {prev} (rtt {rtt})"
+        );
+        prev = mt;
+    }
+    let base = rows[0].1.mean_turnaround();
+    let worst = rows.last().unwrap().1.mean_turnaround();
+    // 2 s RTT per probe on multi-task jobs: the tail of the sweep must
+    // sit well above the free-frontend baseline, not within noise.
+    assert!(
+        worst > base + 2.0,
+        "sweep should visibly penalise turnaround: {base} -> {worst}"
+    );
+}
+
+#[test]
+fn sweep_model_is_off_only_at_zero() {
+    assert!(sweep_model(0.0).is_off());
+    for &rtt in &RTT_SWEEP[1..] {
+        let m = sweep_model(rtt);
+        assert!(!m.is_off());
+        assert_eq!(m.probe_rtt_s, rtt);
+        assert!(m.dispatch_base_s > 0.0 && m.frontend_service_s > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Checkpoint/restart preemption edge cases the unit suite did not
+//! cover: a victim that is already mid-checkpoint when a second probe
+//! blocks, a preemption budget exhausted mid-cascade, and the
+//! `--preempt never` == disabled equivalence on a *heterogeneous*
+//! P100/V100 cluster (the existing exact-equality test is homogeneous).
+
+use mgb::coordinator::{run_cluster, ClusterConfig, JobClass, SchedMode};
+use mgb::gpu::{ClusterSpec, GpuSpec, LatencyModel, NodeSpec};
+use mgb::sched::PreemptConfig;
+use mgb::workloads::synthetic_job;
+
+fn v100x1() -> NodeSpec {
+    NodeSpec { gpus: vec![GpuSpec::v100()], cpu_cores: 8, name: "1xV100".into() }
+}
+
+fn one_node_cfg(preempt: Option<PreemptConfig>) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::single(v100x1()),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 3,
+        dispatch: "rr",
+        preempt,
+        latency: LatencyModel::off(),
+    }
+}
+
+#[test]
+fn victim_already_checkpointing_is_not_selected_twice() {
+    // A 120 s hog holds 12 GB; two heavies block in the same instant
+    // (t = 5, FIFO order h1 then h2). h1's probe selects the hog and
+    // marks it `Checkpointing`; when h2's probe fails a moment later —
+    // before the hog's CkptBegin has even fired, so its kernel is
+    // still formally in flight and its preemption count still 0 — only
+    // the per-node ckpt-in-flight guard and the phase filter stand
+    // between it and a double eviction (the budget cannot help: it is
+    // only charged at CkptBegin, and is raised to 2 here anyway).
+    // Expect exactly one preemption, no double release of the hog's
+    // reservations, and everyone completing.
+    let jobs = vec![
+        synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
+        synthetic_job("h1", JobClass::Large, 12 << 30, 1_500_000, 5.0),
+        synthetic_job("h2", JobClass::Large, 12 << 30, 1_500_000, 5.0),
+    ];
+    // ckpt cost ~2.07 s for a 12 GiB image: bigger than a heavy's 1.5 s
+    // ETA, so min-progress never turns on the heavies themselves.
+    let cfg =
+        PreemptConfig { ckpt_base_s: 1.0, max_preemptions: 2, ..PreemptConfig::default() };
+    let r = run_cluster(one_node_cfg(Some(cfg)), jobs);
+    assert_eq!(r.completed(), 3, "nobody is lost to the refused eviction");
+    assert_eq!(r.preemptions, 1, "one eviction serves both blocked heavies");
+    assert_eq!(r.jobs[0].preemptions, 1, "the hog is the only victim");
+    assert_eq!(r.jobs[1].preemptions + r.jobs[2].preemptions, 0);
+    // Both heavies clear while the hog is parked (it restarts after).
+    assert!(r.jobs[1].turnaround() < 20.0, "h1 {}", r.jobs[1].turnaround());
+    assert!(r.jobs[2].turnaround() < 20.0, "h2 {}", r.jobs[2].turnaround());
+    assert!(r.makespan > 120.0, "the hog still pays its full runtime");
+}
+
+#[test]
+fn preemption_budget_exhausts_mid_cascade() {
+    // Budget 2: the hog is evicted for h1 and again for h2, then h3
+    // finds the budget spent and must wait out the hog's remaining
+    // ~220 s instead of triggering a third eviction.
+    let jobs = vec![
+        synthetic_job("hog", JobClass::Small, 12 << 30, 300_000_000, 0.0),
+        synthetic_job("h1", JobClass::Large, 12 << 30, 10_000_000, 5.0),
+        synthetic_job("h2", JobClass::Large, 12 << 30, 10_000_000, 40.0),
+        synthetic_job("h3", JobClass::Large, 12 << 30, 10_000_000, 80.0),
+    ];
+    let cfg = PreemptConfig { max_preemptions: 2, ..PreemptConfig::default() };
+    let r = run_cluster(one_node_cfg(Some(cfg)), jobs);
+    assert_eq!(r.completed(), 4);
+    assert_eq!(r.preemptions, 2, "third eviction must be refused");
+    assert_eq!(r.jobs[0].preemptions, 2, "both evictions hit the hog");
+    assert!(r.jobs[1].turnaround() < 30.0, "h1 {}", r.jobs[1].turnaround());
+    assert!(r.jobs[2].turnaround() < 30.0, "h2 {}", r.jobs[2].turnaround());
+    assert!(
+        r.jobs[3].turnaround() > 150.0,
+        "h3 must wait out the protected hog: {}",
+        r.jobs[3].turnaround()
+    );
+    assert!(r.makespan > 300.0, "the hog's 300 s of work still happens");
+}
+
+#[test]
+fn preempt_never_matches_disabled_on_heterogeneous_cluster() {
+    // `--preempt never` must leave every observable bit identical to
+    // preemption-off on a mixed P100/V100 cluster — the heterogeneous
+    // dispatch normalisation and the preemption plumbing must not
+    // interact. (The pre-existing equivalence test only covered a
+    // homogeneous 1xV100 cluster.)
+    let het_cfg = |preempt: Option<PreemptConfig>| ClusterConfig {
+        cluster: ClusterSpec::of(vec![NodeSpec::p100x2(), NodeSpec::v100x4()]),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 6,
+        dispatch: "least",
+        preempt,
+        latency: LatencyModel::off(),
+    };
+    let mut jobs: Vec<_> = (0..10)
+        .map(|i| {
+            synthetic_job(
+                &format!("j{i}"),
+                if i % 3 == 0 { JobClass::Large } else { JobClass::Small },
+                (6 + (i % 3) * 4) as u64 * (1 << 30), // 6/10/14 GB: contended
+                3_000_000,
+                0.0,
+            )
+        })
+        .collect();
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.arrival = i as f64 * 0.5;
+    }
+    let off = run_cluster(het_cfg(None), jobs.clone());
+    let never =
+        run_cluster(het_cfg(Some(PreemptConfig { policy: "never", ..Default::default() })), jobs);
+    assert_eq!(off.preemptions, 0);
+    assert_eq!(never.preemptions, 0);
+    assert_eq!(off.wasted_work_s, 0.0);
+    assert_eq!(never.wasted_work_s, 0.0);
+    assert_eq!(off.makespan, never.makespan, "never must not perturb timing");
+    for (x, y) in off.jobs.iter().zip(&never.jobs) {
+        assert_eq!(x.started, y.started, "{}", x.name);
+        assert_eq!(x.ended, y.ended, "{}", x.name);
+        assert_eq!(x.node, y.node, "{}", x.name);
+        assert_eq!(x.crashed, y.crashed, "{}", x.name);
+    }
+    // The scenario must actually exercise both node types.
+    let per_node = off.jobs_per_node();
+    assert!(per_node.iter().all(|&n| n > 0), "both nodes serve jobs: {per_node:?}");
+}
