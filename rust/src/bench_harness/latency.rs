@@ -6,6 +6,15 @@
 //! and frontend service time) over the same open-system stream: mean
 //! turnaround must grow monotonically with the RTT, and the preset
 //! rows (`lan`, `wan`) bracket realistic deployments.
+//!
+//! A second section compares *dispatchers* at each swept RTT on the
+//! same stream: the PR-3 `least` baseline, the latency-aware scorer
+//! (`--dispatch latency`), and `least` guarded by the timeout +
+//! re-probe protocol. On this uniform-RTT cluster latency-aware must
+//! never lose to least-loaded (equal delays cancel out of its score,
+//! so it degenerates to the same ranking — the acceptance bound); its
+//! real edge needs RTT *asymmetry*, shown by the final near/far rows
+//! where one node is 10x closer than the other.
 
 use super::{mgb_workers, Report};
 use crate::coordinator::{run_cluster, ClusterConfig, RunResult, SchedMode};
@@ -34,16 +43,81 @@ pub fn sweep_model(rtt_s: f64) -> LatencyModel {
     }
 }
 
-fn sweep_cfg(latency: LatencyModel) -> ClusterConfig {
+fn sweep_cfg_with(dispatch: &'static str, latency: LatencyModel) -> ClusterConfig {
     let node = NodeSpec::v100x4();
     ClusterConfig {
         cluster: ClusterSpec::homogeneous(node.clone(), 2),
         mode: SchedMode::Policy("mgb3"),
         workers_per_node: mgb_workers(&node),
-        dispatch: "least",
+        dispatch,
         preempt: None,
         latency,
     }
+}
+
+fn sweep_cfg(latency: LatencyModel) -> ClusterConfig {
+    sweep_cfg_with("least", latency)
+}
+
+/// The sweep model plus the timeout + re-probe guard: staleness bound
+/// of one RTT (every routing's landing delay is 3x RTT here, so the
+/// guard always arms) with budget for two re-probes per job.
+pub fn reprobe_model(rtt_s: f64) -> LatencyModel {
+    LatencyModel { reprobe_after_s: rtt_s, reprobe_budget: 2, ..sweep_model(rtt_s) }
+}
+
+/// Dispatcher comparison at each swept RTT over the same open-system
+/// stream: (rtt, [(dispatcher label, result)]). Exposed so the
+/// regression tests can assert the acceptance bound (latency-aware
+/// mean turnaround <= least-loaded at every nonzero RTT). The `least`
+/// rows double as the plain sweep rows in the report (identical
+/// configs), and at RTT 0 every variant *is* the free-frontend least
+/// run (the model is off; zero-delay latency-aware delegates to least
+/// and a zero bound never re-probes), so that row is simulated once
+/// and cloned rather than re-run.
+pub fn latency_dispatch_comparison(seed: u64) -> Vec<(f64, Vec<(&'static str, RunResult)>)> {
+    let jobs = sweep_stream(seed);
+    RTT_SWEEP
+        .iter()
+        .map(|&rtt| {
+            let least = run_cluster(sweep_cfg(sweep_model(rtt)), jobs.clone());
+            let rows = if rtt == 0.0 {
+                let relabel = |dispatcher: &str| RunResult {
+                    dispatcher: dispatcher.to_string(),
+                    ..least.clone()
+                };
+                vec![
+                    ("least", least.clone()),
+                    ("latency", relabel("latency")),
+                    ("least+reprobe", relabel("least")),
+                ]
+            } else {
+                vec![
+                    ("least", least.clone()),
+                    ("latency", run_cluster(sweep_cfg_with("latency", sweep_model(rtt)), jobs.clone())),
+                    ("least+reprobe", run_cluster(sweep_cfg(reprobe_model(rtt)), jobs.clone())),
+                ]
+            };
+            (rtt, rows)
+        })
+        .collect()
+}
+
+/// The asymmetric-RTT scenario where latency awareness actually bites:
+/// node 0 is near (RTT/10), node 1 far (the full RTT). Least-loaded
+/// ping-pongs jobs to whichever node's backlog looks smaller, blind to
+/// the far node's landing delay; the latency-aware scorer only pays
+/// the distance when the near node's backlog outweighs it.
+pub fn asymmetric_comparison(seed: u64, rtt_s: f64) -> Vec<(&'static str, RunResult)> {
+    let jobs = sweep_stream(seed);
+    let model = LatencyModel {
+        per_node_rtt_s: vec![rtt_s / 10.0, rtt_s],
+        ..sweep_model(rtt_s)
+    };
+    vec![
+        ("least", run_cluster(sweep_cfg(model.clone()), jobs.clone())),
+        ("latency", run_cluster(sweep_cfg_with("latency", model), jobs)),
+    ]
 }
 
 /// The one job stream every row of the experiment runs: open-system
@@ -71,7 +145,12 @@ pub fn latency_sweep(seed: u64) -> Vec<(f64, RunResult)> {
 
 pub fn latency(seed: u64) -> Report {
     let mut lines = Vec::new();
-    for (rtt, r) in latency_sweep(seed) {
+    // One comparison pass supplies both report sections: its `least`
+    // rows ARE the plain sweep rows (identical configs), so the sweep
+    // is not simulated twice.
+    let comparison = latency_dispatch_comparison(seed);
+    for (rtt, rows) in &comparison {
+        let (_, r) = rows.iter().find(|(n, _)| *n == "least").expect("least row");
         lines.push(format!(
             "probe_rtt={rtt:<6}s mean_turnaround={:.2}s makespan={:.1}s \
              throughput={:.4}j/s completed={} crashed={}",
@@ -90,6 +169,27 @@ pub fn latency(seed: u64) -> Report {
             r.mean_turnaround(),
             r.makespan,
             r.throughput()
+        ));
+    }
+    for (rtt, rows) in &comparison {
+        for (dispatch, r) in rows {
+            lines.push(format!(
+                "probe_rtt={rtt:<6}s dispatch={dispatch:<13} mean_turnaround={:.2}s \
+                 makespan={:.1}s completed={}",
+                r.mean_turnaround(),
+                r.makespan,
+                r.completed()
+            ));
+        }
+    }
+    let far_rtt = 0.5;
+    for (dispatch, r) in asymmetric_comparison(seed, far_rtt) {
+        lines.push(format!(
+            "asymmetric_rtt={:.2}s/{far_rtt}s dispatch={dispatch:<13} \
+             mean_turnaround={:.2}s makespan={:.1}s",
+            far_rtt / 10.0,
+            r.mean_turnaround(),
+            r.makespan
         ));
     }
     Report {

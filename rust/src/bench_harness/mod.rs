@@ -27,7 +27,10 @@ pub use cluster_scale::cluster_scale;
 pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
-pub use latency::{latency, latency_sweep, sweep_model, RTT_SWEEP};
+pub use latency::{
+    asymmetric_comparison, latency, latency_dispatch_comparison, latency_sweep, reprobe_model,
+    sweep_model, RTT_SWEEP,
+};
 pub use nn128::nn128;
 pub use preempt::preempt;
 pub use table2::table2;

@@ -62,14 +62,31 @@
 //!   dispatcher routes **on the load snapshot at probe time** — by the
 //!   time the job lands (`ProbeAck` after the node's RTT, then
 //!   `DispatchArrive` after the affine-in-payload dispatch cost) the
-//!   loads may have changed, and the engine deliberately does not
-//!   re-route (stale-snapshot semantics, locked by tests);
+//!   loads may have changed, and by default the engine deliberately
+//!   does not re-route (stale-snapshot semantics, locked by tests).
+//!   With `LatencyModel::reprobe_enabled` the frontend instead guards
+//!   each *load-based* routing decision (`Dispatcher::load_based`;
+//!   round-robin's picks cannot go stale and are never guarded) whose
+//!   landing delay exceeds the staleness
+//!   bound `reprobe_after_s`: a `ReProbe` fires at the bound, queues
+//!   for a frontend FIFO slot like any other RPC, the
+//!   cluster is re-snapshotted, and the in-flight job is redirected if
+//!   the dispatcher now picks a different node (a confirmation commits
+//!   the original landing time unchanged). Each served re-probe spends
+//!   one unit of the per-job `reprobe_budget`, so routing always
+//!   terminates; budget exhaustion commits whatever route is current;
 //! * each task probe (`TaskBegin` in policy modes) becomes an RPC to
 //!   the node's scheduler daemon: the placement decision — and the
 //!   reservation's visibility to every later probe — happens daemon-side
 //!   when `ProbeSent` fires, but the job only resumes stepping when the
 //!   ack lands a round-trip later; a probe that finds nothing blocks
 //!   server-side and retries on releases at no extra round-trip.
+//!   With `LatencyModel::coalesce_window_s` > 0 the daemon batches its
+//!   replies Nagle-style: the first successful placement opens a
+//!   per-node window, every further success inside it joins the batch,
+//!   and one shared `ProbeAck` (carrying the first member) departs at
+//!   window close — bursty probes pay one held reply instead of a
+//!   staggered reply each.
 //!   Checkpoint *restore* re-placement is deliberately exempt: the
 //!   victim is already resident on the node and its reservations are
 //!   re-placed by the daemon itself (no client RPC), with the data
@@ -285,6 +302,21 @@ struct JobRt {
     /// blocked at the node daemon (placement pending) or placed with
     /// the ack still travelling back. Latency mode only.
     probe_inflight: bool,
+    /// Re-probes this job may still fire (`LatencyModel::reprobe_budget`
+    /// at start; each served re-probe spends one). 0 = the route is
+    /// committed. Latency mode with re-probing enabled only.
+    reprobe_left: u32,
+    /// The in-flight `ReProbe` already claimed its FIFO slot at the
+    /// cluster frontend (it fired while the server was busy and was
+    /// deferred to its service instant): the next firing decides
+    /// without re-admitting.
+    reprobe_served: bool,
+    /// Virtual time the current route's journey lands
+    /// (`decision + RTT + dispatch cost`), recorded while a `ReProbe`
+    /// guards the decision: a confirming re-probe commits the landing
+    /// at exactly this instant (the re-probe rode along; it never
+    /// delays a route it does not change).
+    landing_at: f64,
 }
 
 struct Engine<'h> {
@@ -320,6 +352,15 @@ struct Engine<'h> {
     frontend_busy: f64,
     /// Per-node scheduler-daemon FIFO servers (task probes).
     daemon_busy: Vec<f64>,
+    /// Per-node close time of the currently-open ack-coalescing window
+    /// (see `LatencyModel::coalesce_window_s`); a success at t joins
+    /// the open batch iff `t < ack_close[node]`.
+    ack_close: Vec<f64>,
+    /// Per-node FIFO of in-flight ack batches: the front batch belongs
+    /// to the next shared `ProbeAck` to land on that node (acks to one
+    /// node depart in order and fly the same RTT, so FIFO holds). Each
+    /// batch lists its member jobs, carrier first.
+    ack_batch: Vec<std::collections::VecDeque<Vec<usize>>>,
     hook: Option<LaunchHook<'h>>,
 }
 
@@ -398,19 +439,20 @@ fn run_cluster_inner(
         .iter()
         .map(|j| compact_trace(&j.trace, &mut artifact_names, &mut intern))
         .collect();
-    let rt: Vec<JobRt> = jobs
-        .iter()
-        .map(|j| JobRt {
-            est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
-            est_mem_bytes: j.trace.peak_reserved_bytes(),
-            ..JobRt::default()
-        })
-        .collect();
     let n_nodes = nodes.len();
     // Clamp negative latency terms: they would schedule events into
     // the past and silently run the virtual clock backwards. An
     // effectively-zero model then takes the off path like any other.
     let latency = cfg.latency.sanitized();
+    let rt: Vec<JobRt> = jobs
+        .iter()
+        .map(|j| JobRt {
+            est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
+            est_mem_bytes: j.trace.peak_reserved_bytes(),
+            reprobe_left: latency.reprobe_budget,
+            ..JobRt::default()
+        })
+        .collect();
     let mut eng = Engine {
         mode: cfg.mode,
         cluster_name: cfg.cluster.name.clone(),
@@ -434,6 +476,8 @@ fn run_cluster_inner(
         latency,
         frontend_busy: 0.0,
         daemon_busy: vec![0.0; n_nodes],
+        ack_close: vec![0.0; n_nodes],
+        ack_batch: vec![std::collections::VecDeque::new(); n_nodes],
         nodes,
         jobs,
         hook,
@@ -449,10 +493,12 @@ impl<'h> Engine<'h> {
     /// Route `job` to a node (cluster layer) and record its estimated
     /// load against that node. The load views are snapshotted at `t` —
     /// the *probe* time: under a nonzero latency model the job lands
-    /// a round-trip plus dispatch cost later and is never re-routed,
-    /// so this snapshot is exactly the stale one a real frontend acts
-    /// on. Returns the node index.
+    /// a round-trip plus dispatch cost later, so this snapshot is
+    /// exactly the stale one a real frontend acts on. Only the timeout
+    /// + re-probe guard (`handle_reprobe`) ever revisits the decision.
+    /// Returns the node index.
     fn dispatch_job(&mut self, job: usize, t: f64) -> usize {
+        let dispatch_cost_s = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
         let views: Vec<NodeLoadView> = self
             .nodes
             .iter()
@@ -467,6 +513,7 @@ impl<'h> Engine<'h> {
                 compute_capacity: nd.compute_capacity,
                 taken_at: t,
                 probe_rtt_s: self.latency.probe_rtt(i),
+                dispatch_cost_s,
             })
             .collect();
         let info = JobInfo {
@@ -521,26 +568,117 @@ impl<'h> Engine<'h> {
             // Route NOW, on the load the frontend sees now; the ack
             // travels back over the chosen node's round-trip.
             let node = self.dispatch_job(job, t);
-            self.evq.push(t + self.latency.probe_rtt(node), EvKind::ProbeAck { job });
+            self.launch_journey(job, node, t);
         } else {
             self.daemon_try_place(job, t);
         }
     }
 
+    /// Start (or restart, after a redirect) the routed job's journey to
+    /// `node`, decided at `t`. If re-probing is enabled and the landing
+    /// delay exceeds the staleness bound — with budget left to spend —
+    /// the decision is guarded by a `ReProbe` at the bound instead of
+    /// committing: the landing instant is recorded and the `ProbeAck` /
+    /// `DispatchArrive` chain is deferred to the re-probe's verdict.
+    /// Otherwise the journey commits exactly as PR-3 shipped it.
+    fn launch_journey(&mut self, job: usize, node: usize, t: f64) {
+        let rtt = self.latency.probe_rtt(node);
+        let landing_delay = rtt + self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+        // Guard only load-based routing: a load-oblivious decision
+        // (round-robin) cannot go stale, and re-asking a stateful
+        // router would fake a redirect on every firing.
+        let guarded = self.latency.reprobe_enabled()
+            && self.dispatcher.load_based()
+            && self.rt[job].reprobe_left > 0
+            && self.latency.reprobe_after_s < landing_delay;
+        if guarded {
+            self.rt[job].landing_at = t + landing_delay;
+            self.evq.push(t + self.latency.reprobe_after_s, EvKind::ReProbe { job });
+        } else {
+            self.evq.push(t + rtt, EvKind::ProbeAck { job });
+        }
+    }
+
+    /// The staleness timeout fired for a routed-but-not-landed job: the
+    /// re-probe is an RPC like any other, so it first claims a FIFO
+    /// slot at the cluster frontend (a busy server defers the decision
+    /// to the claimed service instant — re-probe traffic competes with
+    /// arrival probes instead of queue-jumping them). When served, the
+    /// frontend re-snapshots the cluster (with the job's own load taken
+    /// back off its current node, so the comparison is unbiased) and
+    /// routes again. A *confirmation* commits the original journey at
+    /// its already-recorded landing instant — the re-probe rode along
+    /// and adds nothing to a route it does not change (unless frontend
+    /// congestion pushed the decision past the planned landing, which
+    /// then happens at the decision instant). A *redirect* re-charges
+    /// the job to the new node and restarts the journey from now, which
+    /// may itself be guarded again while budget remains. Every served
+    /// re-probe spends one unit of budget, so routing terminates.
+    fn handle_reprobe(&mut self, job: usize, t: f64) {
+        if self.rt[job].done || self.rt[job].arrived {
+            return;
+        }
+        if self.rt[job].reprobe_served {
+            self.rt[job].reprobe_served = false;
+        } else {
+            let s = self.admit_frontend(t);
+            if s > t {
+                self.rt[job].reprobe_served = true;
+                self.evq.push(s, EvKind::ReProbe { job });
+                return;
+            }
+        }
+        debug_assert!(self.rt[job].dispatched, "re-probe for an unrouted job");
+        debug_assert!(self.rt[job].reprobe_left > 0, "re-probe past its budget");
+        self.rt[job].reprobe_left -= 1;
+        let old = self.rt[job].node;
+        self.outstanding_us[old] =
+            self.outstanding_us[old].saturating_sub(self.rt[job].est_work_us);
+        self.outstanding_mem[old] =
+            self.outstanding_mem[old].saturating_sub(self.rt[job].est_mem_bytes);
+        self.rt[job].dispatched = false;
+        let node = self.dispatch_job(job, t); // re-snapshot + re-charge
+        if node == old {
+            // Frontend congestion can defer the decision past the
+            // planned landing; the job then lands at the (late)
+            // confirmation itself.
+            let landing_at = self.rt[job].landing_at.max(t);
+            self.evq.push(landing_at, EvKind::DispatchArrive { job });
+        } else {
+            self.launch_journey(job, node, t);
+        }
+    }
+
     /// A probe's reply landed back at its client (latency mode only):
     /// a routed-but-not-landed job starts its dispatch hop; a placed
-    /// task's job resumes stepping past its `TaskBegin`.
+    /// task's job resumes stepping past its `TaskBegin`. Under
+    /// coalescing a task ack is a *shared* reply: it resumes every
+    /// member of its node's front ack batch, carrier first.
     fn handle_probe_ack(&mut self, job: usize, t: f64) {
+        if !self.rt[job].done && !self.rt[job].arrived {
+            let dt = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+            self.evq.push(t + dt, EvKind::DispatchArrive { job });
+            return;
+        }
+        if self.latency.coalesce_window_s > 0.0 && self.rt[job].arrived {
+            // Batches to one node depart in order and fly the same RTT,
+            // so this ack is exactly the front batch's shared reply.
+            let node = self.rt[job].node;
+            let batch = self.ack_batch[node].pop_front().expect("ack batch for carrier");
+            debug_assert_eq!(batch.first(), Some(&job), "carrier fronts its batch");
+            for j in batch {
+                if !self.rt[j].done {
+                    self.rt[j].probe_inflight = false;
+                    self.step_job(j, t);
+                }
+            }
+            return;
+        }
         if self.rt[job].done {
             return;
         }
-        if !self.rt[job].arrived {
-            let dt = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
-            self.evq.push(t + dt, EvKind::DispatchArrive { job });
-        } else {
-            self.rt[job].probe_inflight = false;
-            self.step_job(job, t);
-        }
+        self.rt[job].probe_inflight = false;
+        self.step_job(job, t);
     }
 
     /// Ask `job`'s node to place `task` with `req`; on success record
@@ -594,8 +732,32 @@ impl<'h> Engine<'h> {
         let req = probe_req(&res);
         if self.probe_place(job, task, &req, t) {
             // pc advances when the ack lands (ProbeAck -> step_job).
-            let rtt = self.latency.probe_rtt(self.rt[job].node);
+            self.send_task_ack(job, t);
+        }
+    }
+
+    /// Depart the daemon's reply for a successfully placed task probe.
+    /// Without coalescing the ack leaves immediately and lands one RTT
+    /// later (PR-3 behaviour). With `coalesce_window_s` > 0 the daemon
+    /// holds replies Nagle-style: the first success opens a per-node
+    /// window and schedules ONE shared `ProbeAck` at window close +
+    /// RTT; every further success inside the window joins that batch
+    /// and sends nothing — a burst of probes pays one held reply
+    /// instead of a staggered reply each.
+    fn send_task_ack(&mut self, job: usize, t: f64) {
+        let node = self.rt[job].node;
+        let w = self.latency.coalesce_window_s;
+        if w == 0.0 {
+            let rtt = self.latency.probe_rtt(node);
             self.evq.push(t + rtt, EvKind::ProbeAck { job });
+        } else if t < self.ack_close[node] {
+            let batch = self.ack_batch[node].back_mut().expect("open window has a batch");
+            batch.push(job);
+        } else {
+            self.ack_close[node] = t + w;
+            self.ack_batch[node].push_back(vec![job]);
+            let rtt = self.latency.probe_rtt(node);
+            self.evq.push(t + w + rtt, EvKind::ProbeAck { job });
         }
     }
 
@@ -647,6 +809,7 @@ impl<'h> Engine<'h> {
                     }
                     EvKind::ProbeSent { job } => self.handle_probe_sent(job, ev.t),
                     EvKind::ProbeAck { job } => self.handle_probe_ack(job, ev.t),
+                    EvKind::ReProbe { job } => self.handle_reprobe(job, ev.t),
                     EvKind::DispatchArrive { job } => {
                         // The routed job lands on its node: admission
                         // was delayed by RTT + dispatch cost, and the

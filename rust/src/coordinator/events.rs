@@ -13,7 +13,8 @@
 //! [`EvKind::CkptDone`] / [`EvKind::Restart`]) carry the beyond-paper
 //! preemption protocol (ROADMAP "Job preemption"); the probe/dispatch
 //! kinds ([`EvKind::ProbeSent`] / [`EvKind::ProbeAck`] /
-//! [`EvKind::DispatchArrive`]) carry the beyond-paper frontend latency
+//! [`EvKind::DispatchArrive`] / [`EvKind::ReProbe`]) carry the
+//! beyond-paper frontend latency
 //! protocol (ROADMAP "Per-node probe latency model"). None of them is
 //! ever pushed unless its feature is enabled, which keeps disabled
 //! runs bit-identical — provable via the trace-recorder hook
@@ -67,6 +68,14 @@ pub(crate) enum EvKind {
     /// dispatch-cost delay) and joins the node's worker queue. Never
     /// pushed when the latency model is off.
     DispatchArrive { job: usize },
+    /// The frontend's staleness timeout for a routed-but-not-landed
+    /// job: fired `reprobe_after_s` after a routing decision whose
+    /// landing delay exceeds that bound. The frontend re-snapshots the
+    /// cluster and may re-route the in-flight job; each firing consumes
+    /// one unit of the job's bounded re-probe budget, so routing always
+    /// terminates. Never pushed when the latency model is off or
+    /// re-probing is disabled (`LatencyModel::reprobe_enabled`).
+    ReProbe { job: usize },
 }
 
 #[derive(Clone, Copy, Debug)]

@@ -23,7 +23,9 @@
 //! task; off by default, and the disabled path is bit-identical), and
 //! with a probe/dispatch latency model (`ClusterConfig::latency` — see
 //! `gpu::LatencyModel`; the all-zero default is likewise
-//! bit-identical). `run_cluster_traced` arms the event-core's trace
+//! bit-identical), including its timeout + re-probe guard on stale
+//! routing decisions and daemon-side probe-reply coalescing.
+//! `run_cluster_traced` arms the event-core's trace
 //! recorder and returns the serialised fired-event stream alongside the
 //! result — the backbone of the golden-trace test harness.
 
@@ -312,7 +314,7 @@ mod tests {
             RunConfig { node: v100x4(), mode: SchedMode::Policy("mgb3"), workers: 16 },
             jobs.clone(),
         );
-        for dispatch in ["rr", "least", "mem"] {
+        for dispatch in ["rr", "least", "mem", "latency"] {
             let b = run_cluster(
                 ClusterConfig {
                     cluster: ClusterSpec::single(v100x4()),

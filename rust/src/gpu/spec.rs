@@ -163,6 +163,22 @@ pub const PCIE_BYTES_PER_SEC: f64 = 12.0e9;
 ///   FIFO) frontend for `frontend_service_s`; simultaneous arrivals
 ///   serialise, modelling daemon-side queueing delay.
 ///
+/// Two protocol knobs refine how the engine *reacts* to those delays:
+///
+/// * **timeout + re-probe** — when a routed job's landing delay
+///   (RTT + dispatch cost) exceeds [`LatencyModel::reprobe_after_s`],
+///   the frontend re-snapshots the cluster at the staleness bound and
+///   may re-route before the job lands, up to
+///   [`LatencyModel::reprobe_budget`] times per job (bounded, so
+///   routing always terminates). Inert while every delay term is zero
+///   — there is no staleness to chase on a free frontend.
+/// * **probe coalescing** — with
+///   [`LatencyModel::coalesce_window_s`] > 0 a node's scheduler daemon
+///   holds successful task-probe replies for that window and sends one
+///   shared `ProbeAck` for every probe decided inside it (Nagle-style
+///   reply batching: bursty probes pay one reply instead of a staggered
+///   reply each). This *is* a delay term: it turns the model on.
+///
 /// The all-zero model ([`LatencyModel::off`], the `Default`) is the
 /// paper's free-frontend idealisation: the engine takes the exact
 /// pre-latency code paths and pushes no probe/dispatch events, keeping
@@ -183,6 +199,25 @@ pub struct LatencyModel {
     pub dispatch_s_per_byte: f64,
     /// Frontend service time per RPC, seconds (FIFO queueing delay).
     pub frontend_service_s: f64,
+    /// Staleness bound for routed-but-not-landed jobs, seconds: if a
+    /// job's landing delay (RTT + dispatch cost) exceeds this, the
+    /// frontend re-probes at `decision time + reprobe_after_s` and may
+    /// re-route. 0 (the default) = never re-probe. Inert when every
+    /// delay term is zero (does not turn the model on by itself), and
+    /// over load-oblivious dispatchers (`Dispatcher::load_based` is
+    /// false — a round-robin pick cannot go stale).
+    pub reprobe_after_s: f64,
+    /// Max re-probes per job (each fired re-probe consumes one, whether
+    /// or not it changes the route). 0 disables re-probing even with a
+    /// nonzero `reprobe_after_s` — the bound that guarantees routing
+    /// terminates.
+    pub reprobe_budget: u32,
+    /// Daemon reply-batching window, seconds: successful task probes on
+    /// one node decided within an open window share a single `ProbeAck`
+    /// that departs when the window closes. 0 = one ack per probe
+    /// (PR-3 behaviour). Nonzero turns the model on — it is a real
+    /// delay term, unlike the re-probe knobs.
+    pub coalesce_window_s: f64,
 }
 
 impl LatencyModel {
@@ -233,17 +268,31 @@ impl LatencyModel {
             dispatch_base_s: self.dispatch_base_s.max(0.0),
             dispatch_s_per_byte: self.dispatch_s_per_byte.max(0.0),
             frontend_service_s: self.frontend_service_s.max(0.0),
+            reprobe_after_s: self.reprobe_after_s.max(0.0),
+            reprobe_budget: self.reprobe_budget,
+            coalesce_window_s: self.coalesce_window_s.max(0.0),
         }
     }
 
-    /// True iff every term is zero — the engine then takes the exact
-    /// pre-latency code paths (no probe/dispatch events at all).
+    /// True iff every *delay* term is zero — the engine then takes the
+    /// exact pre-latency code paths (no probe/dispatch events at all).
+    /// The re-probe knobs are protocol modifiers, not delays: they are
+    /// inert on a free frontend (zero landing delay means nothing can
+    /// go stale) and so do not turn the model on. The coalescing window
+    /// *is* a delay (the daemon holds replies for it) and does.
     pub fn is_off(&self) -> bool {
         self.probe_rtt_s == 0.0
             && self.per_node_rtt_s.iter().all(|&r| r == 0.0)
             && self.dispatch_base_s == 0.0
             && self.dispatch_s_per_byte == 0.0
             && self.frontend_service_s == 0.0
+            && self.coalesce_window_s == 0.0
+    }
+
+    /// True iff the timeout + re-probe protocol is enabled: a nonzero
+    /// staleness bound with budget left to spend.
+    pub fn reprobe_enabled(&self) -> bool {
+        self.reprobe_after_s > 0.0 && self.reprobe_budget > 0
     }
 
     /// Probe round-trip time to `node`.
@@ -304,6 +353,9 @@ mod tests {
             dispatch_base_s: -2.0,
             dispatch_s_per_byte: -1e-9,
             frontend_service_s: -0.1,
+            reprobe_after_s: -0.2,
+            reprobe_budget: 3,
+            coalesce_window_s: -0.3,
         }
         .sanitized();
         assert_eq!(m.probe_rtt_s, 0.0);
@@ -311,6 +363,9 @@ mod tests {
         assert_eq!(m.dispatch_base_s, 0.0);
         assert_eq!(m.dispatch_s_per_byte, 0.0);
         assert_eq!(m.frontend_service_s, 0.0);
+        assert_eq!(m.reprobe_after_s, 0.0);
+        assert_eq!(m.reprobe_budget, 3, "the budget is a count, not a delay");
+        assert_eq!(m.coalesce_window_s, 0.0);
         // An all-negative model degrades to off, not to time travel.
         let all_neg = LatencyModel {
             probe_rtt_s: -1.0,
@@ -318,10 +373,29 @@ mod tests {
             dispatch_base_s: -1.0,
             dispatch_s_per_byte: -1.0,
             frontend_service_s: -1.0,
+            ..LatencyModel::off()
         };
         assert!(all_neg.sanitized().is_off());
         // Valid models pass through unchanged.
         assert_eq!(LatencyModel::wan().sanitized(), LatencyModel::wan());
+    }
+
+    #[test]
+    fn reprobe_knobs_are_inert_for_is_off_but_coalescing_is_not() {
+        // Re-probe settings alone leave the model off: with zero delays
+        // nothing can go stale, so the engine keeps the exact
+        // pre-latency paths (and the zero-latency golden traces).
+        let m = LatencyModel { reprobe_after_s: 1.0, reprobe_budget: 2, ..LatencyModel::off() };
+        assert!(m.is_off());
+        assert!(m.reprobe_enabled());
+        // Either half of the pair missing disables the protocol.
+        let m = LatencyModel { reprobe_after_s: 1.0, ..LatencyModel::off() };
+        assert!(!m.reprobe_enabled(), "budget 0 = never re-probe");
+        let m = LatencyModel { reprobe_budget: 5, ..LatencyModel::off() };
+        assert!(!m.reprobe_enabled(), "no staleness bound = never re-probe");
+        // The coalescing window is a real delay: it turns the model on.
+        let m = LatencyModel { coalesce_window_s: 0.01, ..LatencyModel::off() };
+        assert!(!m.is_off());
     }
 
     #[test]

@@ -5,17 +5,25 @@
 //! ```text
 //! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
-//!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+//!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
+//!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
-//!           [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+//!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
+//!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
 //! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
 //! ```
+//!
+//! Unknown `--flags`, stray tokens, and invalid latency values are an
+//! error, not a shrug: a typo'd `--probe-rt` (or a `--probe-rtt 5ms`)
+//! used to silently run the zero-latency model; now every subcommand
+//! validates its flag set and exits 2 naming the offender and the
+//! valid ones.
 
 use mgb::bench_harness;
 use mgb::compiler::compile;
@@ -28,14 +36,45 @@ use mgb::runtime::KernelRegistry;
 use mgb::workloads::{nn_homogeneous, nn_mix, poisson_arrivals, NnTask, Workload};
 use std::collections::HashMap;
 
+/// Valid flags per subcommand — the single source the strict parser
+/// checks against (and the error message prints).
+const BENCH_FLAGS: &[&str] = &["exp", "seed"];
+const RUN_FLAGS: &[&str] = &[
+    "workload", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
+    "coalesce-window", "workers", "seed", "compute", "artifacts",
+];
+const NN_FLAGS: &[&str] = &[
+    "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
+    "coalesce-window", "workers", "seed",
+];
+const ARTIFACTS_FLAGS: &[&str] = &["dir"];
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
-        Some("bench") => cmd_bench(&flags(&args[1..])),
-        Some("run") => cmd_run(&flags(&args[1..])),
-        Some("nn") => cmd_nn(&flags(&args[1..])),
+        Some(cmd @ ("bench" | "run" | "nn" | "artifacts")) => {
+            let valid = match cmd {
+                "bench" => BENCH_FLAGS,
+                "run" => RUN_FLAGS,
+                "nn" => NN_FLAGS,
+                _ => ARTIFACTS_FLAGS,
+            };
+            match flags(&args[1..], valid) {
+                Err(e) => {
+                    eprintln!("{cmd}: {e}");
+                    2
+                }
+                Ok(f) => match cmd {
+                    "bench" => cmd_bench(&f),
+                    "run" => cmd_run(&f),
+                    "nn" => cmd_nn(&f),
+                    _ => cmd_artifacts(&f),
+                },
+            }
+        }
         Some("compile") => cmd_compile(args.get(1).map(String::as_str)),
-        Some("artifacts") => cmd_artifacts(&flags(&args[1..])),
         _ => {
             eprintln!("usage: mgb <bench|run|nn|compile|artifacts> [flags]\n{}", HELP);
             2
@@ -47,22 +86,34 @@ fn main() {
 const HELP: &str = "\
   bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
-        [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+        [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
+        [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
-        [--nodes N] [--dispatch rr|least|mem] [--rate JOBS_PER_S]
+        [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
+        [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
   compile <file.gir>
   artifacts [--dir DIR]";
 
-fn flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--key value` / bare `--key` pairs, rejecting any key not in
+/// `valid`. Silently dropping a typo'd flag is how a `--probe-rt` run
+/// quietly measures the wrong thing — unknown flags are an error
+/// naming the flag and the subcommand's valid set instead.
+fn flags(args: &[String], valid: &[&str]) -> Result<HashMap<String, String>, String> {
     let mut m = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
+            if !valid.contains(&key) {
+                return Err(format!(
+                    "unknown flag '--{key}' (valid flags: {})",
+                    valid.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                ));
+            }
             let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
             match val {
                 Some(v) => {
@@ -75,10 +126,17 @@ fn flags(args: &[String]) -> HashMap<String, String> {
                 }
             }
         } else {
-            i += 1;
+            // Anything here was neither a flag nor consumed as a flag's
+            // value: a single-dash typo (`-probe-rtt`) or a stray
+            // positional. Ignoring it is the same silent
+            // misconfiguration as an unknown flag.
+            return Err(format!(
+                "unexpected argument '{}' (flags start with --)",
+                args[i]
+            ));
         }
     }
-    m
+    Ok(m)
 }
 
 fn parse_node(f: &HashMap<String, String>) -> NodeSpec {
@@ -145,36 +203,59 @@ fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
 /// `--latency` selects `lan`). `--probe-rtt S` / `--dispatch-cost S`
 /// override the probe round-trip and the dispatch base cost in seconds
 /// — setting either on top of `off` turns the model on with only that
-/// term.
-fn parse_latency(f: &HashMap<String, String>) -> LatencyModel {
+/// term. `--reprobe-after S` arms the timeout + re-probe protocol
+/// (implying a budget of 1 unless `--reprobe-budget N` raises it);
+/// `--coalesce-window S` turns on daemon-side reply batching.
+///
+/// Invalid values are errors, for the same reason unknown flags are: a
+/// run that warns and then measures a *different* latency model than
+/// the one asked for is the silent-misconfiguration failure mode this
+/// parser exists to close.
+fn parse_latency(f: &HashMap<String, String>) -> Result<LatencyModel, String> {
+    let seconds = |flag: &str, s: &String| -> Result<f64, String> {
+        match s.parse::<f64>() {
+            Ok(v) if v >= 0.0 && v.is_finite() => Ok(v),
+            _ => Err(format!("invalid --{flag} '{s}' (non-negative seconds expected)")),
+        }
+    };
     let mut m = match f.get("latency").map(String::as_str) {
         None | Some("off") => LatencyModel::off(),
         Some("on") | Some("true") | Some("lan") => LatencyModel::lan(),
         Some("wan") => LatencyModel::wan(),
         Some(other) => {
-            eprintln!("unknown latency preset '{other}', using off");
-            LatencyModel::off()
+            return Err(format!("unknown latency preset '{other}' (valid: off lan wan)"))
         }
     };
     if let Some(s) = f.get("probe-rtt") {
-        match s.parse::<f64>() {
-            Ok(r) => m.probe_rtt_s = r.max(0.0),
-            Err(_) => eprintln!("invalid --probe-rtt '{s}' (seconds expected), ignoring"),
-        }
+        m.probe_rtt_s = seconds("probe-rtt", s)?;
     }
     if let Some(s) = f.get("dispatch-cost") {
-        match s.parse::<f64>() {
-            Ok(c) => {
-                // "Fixed dispatch latency": the explicit override
-                // replaces the preset's whole dispatch model,
-                // including wan's per-byte term.
-                m.dispatch_base_s = c.max(0.0);
-                m.dispatch_s_per_byte = 0.0;
-            }
-            Err(_) => eprintln!("invalid --dispatch-cost '{s}' (seconds expected), ignoring"),
+        // "Fixed dispatch latency": the explicit override replaces the
+        // preset's whole dispatch model, including wan's per-byte term.
+        m.dispatch_base_s = seconds("dispatch-cost", s)?;
+        m.dispatch_s_per_byte = 0.0;
+    }
+    if let Some(s) = f.get("reprobe-after") {
+        let r = seconds("reprobe-after", s)?;
+        if r <= 0.0 {
+            return Err(format!("invalid --reprobe-after '{s}' (positive seconds expected)"));
+        }
+        m.reprobe_after_s = r;
+        // A staleness bound without a budget would never fire; give the
+        // flag its obvious meaning, overridable by --reprobe-budget.
+        if m.reprobe_budget == 0 {
+            m.reprobe_budget = 1;
         }
     }
-    m
+    if let Some(s) = f.get("reprobe-budget") {
+        m.reprobe_budget = s
+            .parse::<u32>()
+            .map_err(|_| format!("invalid --reprobe-budget '{s}' (count expected)"))?;
+    }
+    if let Some(s) = f.get("coalesce-window") {
+        m.coalesce_window_s = seconds("coalesce-window", s)?;
+    }
+    Ok(m)
 }
 
 /// `--rate R` stamps Poisson arrivals over the batch (open system).
@@ -246,6 +327,13 @@ fn cmd_bench(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_run(f: &HashMap<String, String>) -> i32 {
+    let latency = match parse_latency(f) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("run: {e}");
+            return 2;
+        }
+    };
     let cluster = parse_cluster(f);
     let mode = parse_sched(f);
     let seed = seed_of(f);
@@ -266,7 +354,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
         preempt: parse_preempt(f),
-        latency: parse_latency(f),
+        latency,
     };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
@@ -314,6 +402,13 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
+    let latency = match parse_latency(f) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("nn: {e}");
+            return 2;
+        }
+    };
     let cluster = parse_cluster(f);
     let mode = parse_sched(f);
     let seed = seed_of(f);
@@ -339,7 +434,7 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
         preempt: parse_preempt(f),
-        latency: parse_latency(f),
+        latency,
     };
     let r = run_cluster(cfg, jobs);
     print_result(&r);
@@ -403,4 +498,94 @@ fn cmd_artifacts(f: &HashMap<String, String>) -> i32 {
     }
     println!("{} artifacts OK", names.len());
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_pairs_and_bare_flags() {
+        let f = flags(&argv(&["--workload", "W5", "--preempt", "--nodes", "4"]), RUN_FLAGS)
+            .expect("all flags valid");
+        assert_eq!(f.get("workload").map(String::as_str), Some("W5"));
+        assert_eq!(f.get("preempt").map(String::as_str), Some("true"), "bare flag");
+        assert_eq!(f.get("nodes").map(String::as_str), Some("4"));
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error_naming_it_and_the_valid_set() {
+        // The regression: a typo'd --probe-rt used to be dropped on the
+        // floor and the run silently measured the zero-latency model.
+        let e = flags(&argv(&["--probe-rt", "0.005"]), RUN_FLAGS).unwrap_err();
+        assert!(e.contains("--probe-rt"), "names the offender: {e}");
+        assert!(e.contains("--probe-rtt"), "offers the valid set: {e}");
+        // Valid sets are per-subcommand: bench takes no --workload.
+        assert!(flags(&argv(&["--workload", "W1"]), BENCH_FLAGS).is_err());
+        assert!(flags(&argv(&["--exp", "latency"]), BENCH_FLAGS).is_ok());
+        // Single-dash typos and stray positionals are the same silent
+        // misconfiguration: rejected, not skipped.
+        assert!(flags(&argv(&["-probe-rtt", "0.005"]), RUN_FLAGS).is_err());
+        assert!(flags(&argv(&["--workload", "W1", "extra"]), RUN_FLAGS).is_err());
+        // A flag's value may still look dash-ish (negative numbers).
+        let f = flags(&argv(&["--rate", "-1"]), RUN_FLAGS).unwrap();
+        assert_eq!(f.get("rate").map(String::as_str), Some("-1"));
+    }
+
+    #[test]
+    fn every_documented_latency_flag_is_accepted() {
+        let f = flags(
+            &argv(&[
+                "--dispatch", "latency", "--latency", "lan", "--reprobe-after", "0.5",
+                "--reprobe-budget", "2", "--coalesce-window", "0.01",
+            ]),
+            RUN_FLAGS,
+        )
+        .expect("new flags are in the valid set");
+        let m = parse_latency(&f).expect("valid values");
+        assert_eq!(m.reprobe_after_s, 0.5);
+        assert_eq!(m.reprobe_budget, 2);
+        assert_eq!(m.coalesce_window_s, 0.01);
+        assert_eq!(parse_dispatch(&f), "latency");
+    }
+
+    #[test]
+    fn reprobe_after_alone_implies_a_budget_of_one() {
+        let f = flags(&argv(&["--reprobe-after", "0.5"]), RUN_FLAGS).unwrap();
+        let m = parse_latency(&f).expect("valid value");
+        assert_eq!(m.reprobe_after_s, 0.5);
+        assert_eq!(m.reprobe_budget, 1, "the flag's obvious meaning: re-probe once");
+        assert!(m.reprobe_enabled());
+    }
+
+    #[test]
+    fn invalid_latency_values_are_errors_not_warnings() {
+        // A warned-and-ignored value measures a different model than
+        // the one asked for — the same silent misconfiguration as an
+        // unknown flag, and rejected the same way.
+        for args in [
+            ["--latency", "wna"],
+            ["--probe-rtt", "0.005s"],
+            ["--probe-rtt", "-1"],
+            ["--dispatch-cost", "fast"],
+            ["--reprobe-after", "0"],
+            ["--reprobe-after", "-0.5"],
+            ["--reprobe-budget", "-1"],
+            ["--reprobe-budget", "1.5"],
+            ["--coalesce-window", "10ms"],
+        ] {
+            let f = flags(&argv(&args), RUN_FLAGS).unwrap();
+            let e = parse_latency(&f).unwrap_err();
+            assert!(e.contains(args[1]), "{args:?}: error names the bad value: {e}");
+        }
+        // The happy paths still parse.
+        let f = flags(&argv(&["--latency", "wan", "--probe-rtt", "0.25"]), RUN_FLAGS).unwrap();
+        let m = parse_latency(&f).unwrap();
+        assert_eq!(m.probe_rtt_s, 0.25);
+        assert!(m.dispatch_base_s > 0.0, "wan preset survives the override");
+    }
 }

@@ -10,8 +10,11 @@
 //! ([`NodeLoadView::taken_at`]) while the job lands a round-trip plus
 //! dispatch cost later, so decisions can differ from what an
 //! instant-landing frontend would choose (by design — see the
-//! stale-routing tests). All three built-ins are deterministic (ties
-//! break toward the lower node index) so batch runs replay exactly.
+//! stale-routing tests). [`LatencyAware`] is the dispatcher that
+//! *prices* that staleness machinery instead of ignoring it, trading
+//! each node's backlog against the job's landing delay there. All four
+//! built-ins are deterministic (ties break toward the lower node
+//! index) so batch runs replay exactly.
 //!
 //! Paper map: entirely beyond the paper, whose deployments are single
 //! node (§V-A); this is the frontend a production cluster puts above N
@@ -51,6 +54,11 @@ pub struct NodeLoadView {
     /// (`gpu::LatencyModel::probe_rtt`; 0 with the model off). Exposed
     /// so a latency-aware dispatcher can trade load against distance.
     pub probe_rtt_s: f64,
+    /// Modeled cost of shipping *this* job to the node
+    /// (`gpu::LatencyModel::dispatch_latency` of the job's payload; 0
+    /// with the model off). Together with `probe_rtt_s` this is the
+    /// job's landing delay were it routed here.
+    pub dispatch_cost_s: f64,
 }
 
 /// What the dispatcher may know about the arriving job.
@@ -69,11 +77,27 @@ pub trait Dispatcher: Send {
 
     /// Pick the node for an arriving job. `nodes` is never empty.
     fn route(&mut self, job: &JobInfo, nodes: &[NodeLoadView]) -> usize;
+
+    /// Whether `route` decides from the load snapshot. The timeout +
+    /// re-probe guard only arms over load-based dispatchers: a
+    /// load-oblivious decision cannot go *stale*, and re-asking a
+    /// stateful router (round-robin's cursor has moved on) would
+    /// misread the fresh answer as a redirect on every firing —
+    /// restarting the journey each time and skewing the cursor —
+    /// when nothing about the cluster changed.
+    fn load_based(&self) -> bool {
+        true
+    }
 }
 
 /// Ignore load entirely; cycle through the nodes.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
+    /// Invariant: kept reduced modulo the cluster size after every
+    /// route. Incrementing a raw counter instead and reducing only at
+    /// use would skip nodes after `usize` wraparound on clusters whose
+    /// size does not divide 2^64 (`MAX % n` then `0 % n` repeats a
+    /// node), silently breaking the fairness cycle.
     next: usize,
 }
 
@@ -84,8 +108,15 @@ impl Dispatcher for RoundRobin {
 
     fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
         let n = self.next % nodes.len();
-        self.next = self.next.wrapping_add(1);
+        self.next = (n + 1) % nodes.len();
         n
+    }
+
+    /// Round-robin never reads the snapshot: its decisions cannot go
+    /// stale, so the re-probe guard must not re-ask it (the advanced
+    /// cursor would fake a redirect every time).
+    fn load_based(&self) -> bool {
+        false
     }
 }
 
@@ -128,6 +159,16 @@ impl Dispatcher for LeastLoaded {
 /// Largest memory headroom: total capacity minus the estimated peak
 /// memory of dispatched-but-unfinished jobs. Sends memory-hungry
 /// streams where they are least likely to wait on reservations.
+///
+/// The arriving job's own peak matters: on a heterogeneous cluster the
+/// max-headroom node can be one whose total capacity the job's peak
+/// *exceeds* — routed there it can never start, while a bigger (if
+/// currently busier) node could hold it. Nodes rank lexicographically:
+/// can the node *ever* hold [`JobInfo::peak_mem_bytes`]
+/// (`total_mem >= peak`), does its current headroom cover the peak
+/// *now* (no waiting), then raw headroom; ties keep the lower index.
+/// For jobs no node can ever hold, this degrades to plain max headroom
+/// (the old rule) and the engine's drain fallback reports the crash.
 #[derive(Debug, Default)]
 pub struct MemHeadroom;
 
@@ -136,12 +177,73 @@ impl Dispatcher for MemHeadroom {
         "mem"
     }
 
-    fn route(&mut self, _job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+    fn route(&mut self, job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
         let headroom =
             |v: &NodeLoadView| v.total_mem.saturating_sub(v.outstanding_mem_bytes);
+        let rank = |v: &NodeLoadView| {
+            (
+                v.total_mem >= job.peak_mem_bytes,
+                headroom(v) >= job.peak_mem_bytes,
+                headroom(v),
+            )
+        };
         let mut best = 0;
         for (i, v) in nodes.iter().enumerate().skip(1) {
-            if headroom(v) > headroom(&nodes[best]) {
+            if rank(v) > rank(&nodes[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Latency-aware routing: minimise the job's *estimated completion
+/// start*, not just the queue it joins. Each node is scored in
+/// capability-normalised microseconds as
+///
+/// ```text
+/// eta(node) = (probe_rtt_s + dispatch_cost_s) * 1e6        // landing delay
+///           + (outstanding_work_us + est_work_us) / capacity
+/// ```
+///
+/// so a distant idle node can lose to a near busy one exactly when its
+/// extra round-trip + dispatch cost outweighs the near node's backlog.
+/// [`JobInfo::est_work_us`] decides when distance matters: a long job's
+/// own work term dominates the delay term (route by load/capability —
+/// the delay is amortised), while for a short job the landing delay is
+/// the bulk of its turnaround (route near). Ties break by queue depth,
+/// then node index, like [`LeastLoaded`].
+///
+/// When every node's landing delay is zero (the latency model off, or
+/// an all-zero row) the score degenerates to a constant shift of
+/// least-loaded's, so the dispatcher *delegates* to [`LeastLoaded`] —
+/// guaranteeing identical rankings, including the homogeneous
+/// integer-comparison path (locked by tests).
+#[derive(Debug, Default)]
+pub struct LatencyAware {
+    inner: LeastLoaded,
+}
+
+impl Dispatcher for LatencyAware {
+    fn name(&self) -> &'static str {
+        "latency"
+    }
+
+    fn route(&mut self, job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        let delay = |v: &NodeLoadView| v.probe_rtt_s + v.dispatch_cost_s;
+        if nodes.iter().all(|v| delay(v) == 0.0) {
+            return self.inner.route(job, nodes);
+        }
+        let eta_us = |v: &NodeLoadView| {
+            delay(v) * 1e6
+                + (v.outstanding_work_us + job.est_work_us) as f64
+                    / v.compute_capacity.max(f64::MIN_POSITIVE)
+        };
+        let mut best = 0;
+        for (i, v) in nodes.iter().enumerate().skip(1) {
+            let b = &nodes[best];
+            let (ev, eb) = (eta_us(v), eta_us(b));
+            if ev < eb || (ev == eb && v.queued_jobs < b.queued_jobs) {
                 best = i;
             }
         }
@@ -157,16 +259,18 @@ pub fn canonical_dispatch(name: &str) -> Option<&'static str> {
         "rr" | "round-robin" => Some("rr"),
         "least" | "least-loaded" => Some("least"),
         "mem" | "headroom" => Some("mem"),
+        "latency" | "latency-aware" => Some("latency"),
         _ => None,
     }
 }
 
-/// Construct a dispatcher by name: "rr" | "least" | "mem".
+/// Construct a dispatcher by name: "rr" | "least" | "mem" | "latency".
 pub fn make_dispatcher(name: &str) -> Box<dyn Dispatcher> {
     match canonical_dispatch(name) {
         Some("rr") => Box::new(RoundRobin::default()),
         Some("least") => Box::new(LeastLoaded),
         Some("mem") => Box::new(MemHeadroom),
+        Some("latency") => Box::new(LatencyAware::default()),
         _ => panic!("unknown dispatcher '{name}'"),
     }
 }
@@ -186,6 +290,15 @@ mod tests {
             compute_capacity: 4.0,
             taken_at: 0.0,
             probe_rtt_s: 0.0,
+            dispatch_cost_s: 0.0,
+        }
+    }
+
+    fn lat_view(outstanding_work_us: u64, rtt_s: f64, dispatch_s: f64) -> NodeLoadView {
+        NodeLoadView {
+            probe_rtt_s: rtt_s,
+            dispatch_cost_s: dispatch_s,
+            ..view(outstanding_work_us, 0, 0)
         }
     }
 
@@ -203,6 +316,24 @@ mod tests {
         let nodes = vec![view(0, 0, 0); 3];
         let picks: Vec<usize> = (0..6).map(|_| d.route(&job(), &nodes)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_cursor_survives_wraparound() {
+        // The old raw counter skewed after usize wraparound: for a
+        // 3-node cluster, MAX % 3 == 0 and the wrapped counter restarts
+        // at 0 % 3 == 0, visiting node 0 twice and starving the cycle.
+        // The reduced cursor can never reach the wraparound region.
+        let mut d = RoundRobin { next: usize::MAX };
+        let nodes = vec![view(0, 0, 0); 3];
+        let picks: Vec<usize> = (0..4).map(|_| d.route(&job(), &nodes)).collect();
+        assert_eq!(picks, vec![usize::MAX % 3, 1, 2, 0], "no node repeated");
+        assert!(d.next < 3, "cursor stays reduced modulo the cluster size");
+        // And it stays reduced from then on, whatever the history.
+        for _ in 0..10 {
+            d.route(&job(), &nodes);
+            assert!(d.next < 3);
+        }
     }
 
     #[test]
@@ -243,11 +374,114 @@ mod tests {
         assert_eq!(d.route(&job(), &nodes), 1);
     }
 
+    /// A view with explicit node capacity (heterogeneous clusters).
+    fn cap_view(total_mem: u64, outstanding_mem: u64) -> NodeLoadView {
+        NodeLoadView { total_mem, free_mem: total_mem, ..view(0, 0, outstanding_mem) }
+    }
+
+    #[test]
+    fn mem_headroom_avoids_a_node_the_job_can_never_fit_on() {
+        let mut d = make_dispatcher("mem");
+        // Node 0: 16 GB total, idle -> 16 GB headroom (the max). Node 1:
+        // 64 GB total, 52 GB outstanding -> 12 GB headroom. A 24 GB-peak
+        // job can NEVER start on node 0; the old peak-blind rule routed
+        // it there anyway, where it sat forever. Node 1 holds it once
+        // its backlog drains.
+        let big = JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 24 << 30 };
+        let nodes = vec![cap_view(16 << 30, 0), cap_view(64 << 30, 52 << 30)];
+        assert_eq!(d.route(&big, &nodes), 1, "capacity that can hold the peak wins");
+        // Between two nodes that could both hold the peak eventually,
+        // the one whose headroom covers it now (necessarily the larger
+        // headroom) wins: the job starts without waiting.
+        let nodes = vec![cap_view(64 << 30, 38 << 30), cap_view(32 << 30, 10 << 30)];
+        assert_eq!(d.route(&big, &nodes), 0, "26 GB free now beats 22 GB that waits");
+        // Among nodes that all cover the peak now, max headroom (then
+        // lower index) still decides — the pre-fix behaviour.
+        let nodes = vec![view(0, 0, 50 << 30), view(0, 0, 40 << 30), view(0, 0, 40 << 30)];
+        let small = job();
+        assert_eq!(d.route(&small, &nodes), 1);
+    }
+
+    #[test]
+    fn mem_headroom_falls_back_to_max_headroom_when_nothing_can_hold_the_job() {
+        let mut d = make_dispatcher("mem");
+        // A 100 GB peak fits nowhere: degrade to the old max-headroom
+        // rule (node 1 at 24 GB) and let the engine report the crash.
+        let huge = JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 100 << 30 };
+        let nodes = vec![cap_view(64 << 30, 60 << 30), cap_view(64 << 30, 40 << 30)];
+        assert_eq!(d.route(&huge, &nodes), 1);
+    }
+
+    #[test]
+    fn latency_aware_trades_load_against_distance() {
+        let mut d = make_dispatcher("latency");
+        // Node 0: busy (2 s of work on capacity 4 -> 0.5 s drain) but
+        // near (free RPCs). Node 1: idle but 0.8 s away round-trip +
+        // dispatch. The distant idle node LOSES: landing there costs
+        // more than waiting out the near backlog.
+        let nodes = vec![lat_view(2_000_000, 0.0, 0.0), lat_view(0, 0.5, 0.3)];
+        assert_eq!(d.route(&job(), &nodes), 0, "near busy beats distant idle");
+        // Grow the near backlog past the distance and the idle node
+        // wins: 4 s of work (1 s drain) > 0.8 s of delay.
+        let nodes = vec![lat_view(4_000_000, 0.0, 0.0), lat_view(0, 0.5, 0.3)];
+        assert_eq!(d.route(&job(), &nodes), 1, "backlog now outweighs the distance");
+    }
+
+    #[test]
+    fn latency_aware_amortises_distance_over_long_jobs() {
+        let mut d = make_dispatcher("latency");
+        // Heterogeneous: node 0 near but slow (capacity 1.4), node 1
+        // 0.5 s away but fast (4.0), both idle. A short job routes near
+        // (the RTT dominates its turnaround); a long job routes to the
+        // fast distant node (its own work term dwarfs the delay).
+        let p100 = 2.0 * (3584.0 / 5120.0);
+        let near_slow = NodeLoadView { compute_capacity: p100, ..lat_view(0, 0.0, 0.0) };
+        let far_fast = lat_view(0, 0.3, 0.2);
+        let short = JobInfo { est_work_us: 100_000, peak_mem_bytes: 1 << 30 };
+        let long = JobInfo { est_work_us: 20_000_000, peak_mem_bytes: 1 << 30 };
+        // short: 0.1s/1.4 = 71 ms near vs 0.5 s + 25 ms far -> near.
+        assert_eq!(d.route(&short, &[near_slow, far_fast]), 0);
+        // long: 20s/1.4 = 14.3 s near vs 0.5 s + 5 s far -> far.
+        assert_eq!(d.route(&long, &[near_slow, far_fast]), 1);
+    }
+
+    #[test]
+    fn latency_aware_at_zero_delay_ranks_exactly_like_least_loaded() {
+        // The satellite acceptance: with every landing delay zero the
+        // dispatcher must delegate to least-loaded — same picks on the
+        // homogeneous integer path, the heterogeneous normalised path,
+        // and every tie-break.
+        let cases: Vec<Vec<NodeLoadView>> = vec![
+            vec![view(30, 1, 0), view(10, 5, 0), view(20, 0, 0)],
+            vec![view(10, 3, 0), view(10, 1, 0), view(10, 1, 0)],
+            vec![het_view(1_000_000, 1.4), het_view(1_000_000, 4.0)],
+            vec![het_view(300_000, 1.4), het_view(1_000_000, 4.0)],
+            vec![het_view(10, 4.0), het_view(9, 4.0)],
+        ];
+        let mut la = make_dispatcher("latency");
+        let mut ll = make_dispatcher("least");
+        for nodes in &cases {
+            assert_eq!(la.route(&job(), nodes), ll.route(&job(), nodes));
+        }
+    }
+
+    #[test]
+    fn only_round_robin_is_load_oblivious() {
+        // The re-probe guard keys off this: it must stay dormant for
+        // dispatchers whose decisions cannot go stale.
+        assert!(!make_dispatcher("rr").load_based());
+        assert!(make_dispatcher("least").load_based());
+        assert!(make_dispatcher("mem").load_based());
+        assert!(make_dispatcher("latency").load_based());
+    }
+
     #[test]
     fn aliases_normalise_to_canonical_names() {
         assert_eq!(canonical_dispatch("round-robin"), Some("rr"));
         assert_eq!(canonical_dispatch("least-loaded"), Some("least"));
         assert_eq!(canonical_dispatch("headroom"), Some("mem"));
+        assert_eq!(canonical_dispatch("latency-aware"), Some("latency"));
+        assert_eq!(canonical_dispatch("latency"), Some("latency"));
         assert_eq!(canonical_dispatch("nope"), None);
     }
 

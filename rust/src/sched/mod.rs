@@ -14,9 +14,10 @@
 //! paper deploys them.
 //!
 //! **Cluster layer.** A [`Dispatcher`] routes each *arriving job* to a
-//! node of a `gpu::ClusterSpec` (round-robin, least-loaded, or
-//! memory-headroom — see [`dispatch`]); the chosen node's own policy
-//! instance then places the job's tasks on its devices. The two layers
+//! node of a `gpu::ClusterSpec` (round-robin, least-loaded,
+//! memory-headroom, or latency-aware — see [`dispatch`]); the chosen
+//! node's own policy instance then places the job's tasks on its
+//! devices. The two layers
 //! are deliberately decoupled: dispatchers see only aggregate
 //! [`NodeLoadView`]s, policies only their node's [`DeviceView`]s.
 //!
@@ -35,8 +36,8 @@ pub mod schedgpu;
 pub use alg2::MgbAlg2;
 pub use alg3::MgbAlg3;
 pub use dispatch::{
-    canonical_dispatch, make_dispatcher, Dispatcher, JobInfo, LeastLoaded, MemHeadroom,
-    NodeLoadView, RoundRobin,
+    canonical_dispatch, make_dispatcher, Dispatcher, JobInfo, LatencyAware, LeastLoaded,
+    MemHeadroom, NodeLoadView, RoundRobin,
 };
 pub use preempt::{
     canonical_preempt, make_preempt_policy, MaxMemory, MinProgress, NeverPreempt, PreemptConfig,

@@ -3,7 +3,9 @@
 //! sweep must show the monotone turnaround growth its report claims.
 //! (Before this file only fig4/fig6/nn128/cluster had any coverage.)
 
-use mgb::bench_harness::{self, latency_sweep, sweep_model, RTT_SWEEP};
+use mgb::bench_harness::{
+    self, latency_dispatch_comparison, latency_sweep, reprobe_model, sweep_model, RTT_SWEEP,
+};
 
 fn smoke(name: &str) {
     let r = bench_harness::run_experiment(name, 2)
@@ -92,5 +94,46 @@ fn sweep_model_is_off_only_at_zero() {
         assert!(!m.is_off());
         assert_eq!(m.probe_rtt_s, rtt);
         assert!(m.dispatch_base_s > 0.0 && m.frontend_service_s > 0.0);
+        // The re-probe variant guards every routing: the staleness
+        // bound sits below the landing delay (RTT + dispatch = 3x RTT).
+        let g = reprobe_model(rtt);
+        assert!(g.reprobe_enabled());
+        assert!(g.reprobe_after_s < g.probe_rtt_s + g.dispatch_base_s);
+    }
+    assert!(!reprobe_model(0.0).reprobe_enabled(), "zero RTT: nothing to guard");
+}
+
+#[test]
+fn latency_aware_dispatch_never_loses_to_least_loaded_on_the_sweep() {
+    // The PR acceptance bound: at every swept RTT (uniform across the
+    // cluster) the latency-aware dispatcher's mean turnaround is <=
+    // least-loaded's. On a homogeneous, uniform-RTT cluster the equal
+    // landing delays cancel out of its score, so it must make the very
+    // same decisions — the bound holds with equality, and any regression
+    // that makes it *worse* than least is a real routing bug.
+    for (rtt, rows) in latency_dispatch_comparison(2) {
+        let turnaround = |name: &str| {
+            rows.iter()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("row '{name}' missing at rtt {rtt}"))
+                .1
+                .mean_turnaround()
+        };
+        let (least, latency) = (turnaround("least"), turnaround("latency"));
+        assert!(
+            latency <= least + 1e-9,
+            "rtt {rtt}: latency-aware {latency} must not lose to least {least}"
+        );
+        // The guarded-routing row rides along: with the staleness bound
+        // below every landing delay each routing is re-probed, and the
+        // bounded budget must still let every job land and finish.
+        for (name, r) in &rows {
+            assert_eq!(r.crashed(), 0, "rtt {rtt} {name}: no crashes");
+            assert_eq!(r.completed(), 16, "rtt {rtt} {name}: jobs conserved");
+        }
+        assert!(
+            rows.iter().any(|(n, _)| *n == "least+reprobe"),
+            "rtt {rtt}: reprobe row present"
+        );
     }
 }

@@ -1,0 +1,241 @@
+//! Edge coverage for the PR-4 latency-layer protocol: the timeout +
+//! re-probe guard on stale routing decisions, daemon-side probe
+//! coalescing, and the latency-aware dispatcher's zero-RTT degeneration
+//! to least-loaded. Companion to the PR-3 semantics tests in
+//! `golden_trace.rs` (stale snapshots, admission delays, queueing).
+
+use mgb::coordinator::{
+    run_cluster, run_cluster_traced, ClusterConfig, JobClass, JobSpec, SchedMode,
+};
+use mgb::gpu::{ClusterSpec, GpuSpec, LatencyModel, NodeSpec};
+use mgb::workloads::{poisson_arrivals, synthetic_job, Workload};
+
+fn v100x1() -> NodeSpec {
+    NodeSpec { gpus: vec![GpuSpec::v100()], cpu_cores: 8, name: "1xV100".into() }
+}
+
+fn two_small_nodes(dispatch: &'static str, latency: LatencyModel) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(v100x1(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 2,
+        dispatch,
+        preempt: None,
+        latency,
+    }
+}
+
+/// The PR-3 stale-routing race, re-probe off: RTT 0.1 s, dispatch hop
+/// 2.0 s, so every routing decision is stale by 2.1 s when it lands.
+fn race_model() -> LatencyModel {
+    LatencyModel { probe_rtt_s: 0.1, dispatch_base_s: 2.0, ..LatencyModel::default() }
+}
+
+/// J0 (0.5 s of work) at t=0 and J1 at t=1: J1's probe-time snapshot
+/// shows J0 on node 0, so PR-3 routes J1 to node 1 even though J0 is
+/// long gone by the time J1 lands at t=3.1.
+fn race_jobs() -> Vec<JobSpec> {
+    vec![
+        synthetic_job("j0", JobClass::Small, 1 << 20, 500_000, 0.0),
+        synthetic_job("j1", JobClass::Small, 1 << 20, 1_000_000, 1.0),
+    ]
+}
+
+#[test]
+fn reprobe_fires_exactly_at_the_staleness_bound_and_redirects() {
+    // Staleness bound 1.8 s < landing delay 2.1 s: every routing is
+    // guarded. J1 is routed to node 1 at t=1.0; its re-probe fires at
+    // exactly t = 1.0 + 1.8 = 2.8, *after* J0 finished (~2.70), so the
+    // fresh snapshot shows two idle nodes and the tie-break redirects
+    // J1 to node 0. The redirected journey restarts at the re-probe
+    // instant: J1 lands at 2.8 + 0.1 + 2.0 = 4.9 — the landing time
+    // itself encodes that the guard fired at the bound, not before or
+    // after.
+    let lat = LatencyModel { reprobe_after_s: 1.8, reprobe_budget: 1, ..race_model() };
+    let r = run_cluster(two_small_nodes("least", lat), race_jobs());
+    assert_eq!(r.completed(), 2);
+    assert_eq!(r.jobs[0].node, 0);
+    assert!(r.jobs[0].ended < 2.8, "J0 must be gone before the re-probe fires");
+    assert_eq!(r.jobs[1].node, 0, "re-probe redirects J1 onto the now-idle node 0");
+    assert!(
+        (r.jobs[1].started - 4.9).abs() < 1e-9,
+        "redirected landing = arrival + bound + RTT + dispatch, got {}",
+        r.jobs[1].started
+    );
+    // Contrast: without the guard the stale decision stands (the PR-3
+    // race test), landing on node 1 at t=3.1.
+    let r = run_cluster(two_small_nodes("least", race_model()), race_jobs());
+    assert_eq!(r.jobs[1].node, 1, "unguarded routing keeps the stale pick");
+    assert!((r.jobs[1].started - 3.1).abs() < 1e-9);
+}
+
+#[test]
+fn reprobe_confirmation_commits_the_original_landing_time() {
+    // Same race, but J0 runs 5 s — still resident on node 0 when J1's
+    // re-probe fires at t=2.8. The fresh snapshot agrees with the
+    // original decision (node 1), and a confirming re-probe must not
+    // cost anything: every observable of the run equals the unguarded
+    // engine's, bit for bit.
+    let jobs = vec![
+        synthetic_job("j0", JobClass::Small, 1 << 20, 5_000_000, 0.0),
+        synthetic_job("j1", JobClass::Small, 1 << 20, 1_000_000, 1.0),
+    ];
+    let lat = LatencyModel { reprobe_after_s: 1.8, reprobe_budget: 1, ..race_model() };
+    let guarded = run_cluster(two_small_nodes("least", lat), jobs.clone());
+    let plain = run_cluster(two_small_nodes("least", race_model()), jobs);
+    assert_eq!(guarded.completed(), 2);
+    assert_eq!(guarded.jobs[1].node, 1, "confirmation keeps the original route");
+    assert_eq!(guarded.makespan, plain.makespan);
+    for (g, p) in guarded.jobs.iter().zip(&plain.jobs) {
+        assert_eq!(g.node, p.node);
+        assert_eq!(g.started, p.started, "{}: confirmation must not delay landing", g.name);
+        assert_eq!(g.ended, p.ended);
+    }
+}
+
+#[test]
+fn reprobe_budget_exhaustion_falls_back_to_the_original_route() {
+    // Budget 0 disables the guard outright, whatever the staleness
+    // bound: the whole run — every fired event — must be byte-identical
+    // to the re-probe-free engine (the "routing always terminates"
+    // bound degenerating to PR-3 behaviour).
+    let lat = LatencyModel { reprobe_after_s: 1.8, reprobe_budget: 0, ..race_model() };
+    let (exhausted, te) = run_cluster_traced(two_small_nodes("least", lat), race_jobs());
+    let (plain, tp) = run_cluster_traced(two_small_nodes("least", race_model()), race_jobs());
+    assert_eq!(te, tp, "budget 0 must replay the unguarded engine exactly");
+    assert_eq!(exhausted.jobs[1].node, plain.jobs[1].node);
+    assert_eq!(exhausted.makespan, plain.makespan);
+    assert!(
+        !te.iter().any(|l| l.contains("ReProbe")),
+        "no budget, no ReProbe events"
+    );
+}
+
+#[test]
+fn reprobe_never_arms_over_load_oblivious_round_robin() {
+    // Round-robin never reads the load snapshot, so its decisions
+    // cannot go stale — and re-asking it would fake a redirect on
+    // every firing (the cursor has moved on), restarting journeys and
+    // skewing the cycle. With rr the guard must stay dormant: the run
+    // replays the unguarded engine byte-for-byte.
+    let lat = LatencyModel { reprobe_after_s: 0.5, reprobe_budget: 3, ..race_model() };
+    let (a, ta) = run_cluster_traced(two_small_nodes("rr", lat), race_jobs());
+    let (b, tb) = run_cluster_traced(two_small_nodes("rr", race_model()), race_jobs());
+    assert_eq!(ta, tb, "rr + re-probe must replay plain rr exactly");
+    assert!(!ta.iter().any(|l| l.contains("ReProbe")), "no guard over rr");
+    assert_eq!(a.makespan, b.makespan);
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.node, y.node, "{}: rr cycle undisturbed", x.name);
+        assert_eq!(x.ended, y.ended);
+    }
+}
+
+#[test]
+fn reprobe_chain_is_bounded_by_the_budget() {
+    // A generous budget against an open stream: the run must terminate,
+    // complete everything, and replay deterministically — the per-job
+    // budget is what keeps redirect chains finite.
+    let mut jobs = Workload::by_id("W1").unwrap().jobs(7);
+    poisson_arrivals(&mut jobs, 0.5, 7);
+    let lat = LatencyModel {
+        reprobe_after_s: 0.05,
+        reprobe_budget: 4,
+        probe_rtt_s: 0.1,
+        dispatch_base_s: 1.0,
+        frontend_service_s: 0.001,
+        ..LatencyModel::default()
+    };
+    let cfg = || ClusterConfig {
+        cluster: ClusterSpec::homogeneous(NodeSpec::v100x4(), 4),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 16,
+        dispatch: "least",
+        preempt: None,
+        latency: lat.clone(),
+    };
+    let (a, ta) = run_cluster_traced(cfg(), jobs.clone());
+    let (b, tb) = run_cluster_traced(cfg(), jobs);
+    assert_eq!(a.completed() + a.crashed(), 16, "every job resolves");
+    assert_eq!(ta, tb, "guarded routing replays bit-for-bit");
+    assert_eq!(a.makespan, b.makespan);
+    let fired = ta.iter().filter(|l| l.contains("ReProbe")).count();
+    assert!(fired > 0, "the scenario must actually exercise the guard");
+    // Each served re-probe spends budget; a firing that finds the
+    // frontend busy defers itself exactly once, so at most two ReProbe
+    // events appear per unit of budget.
+    assert!(fired <= 2 * 4 * 16, "budget bounds total re-probes");
+}
+
+#[test]
+fn coalesced_probes_share_one_probe_ack() {
+    // Two jobs land on one node at the same instant and send their task
+    // probes together. Uncoalesced, each probe's reply is its own
+    // ProbeAck (4 acks total: 2 routing + 2 task). With a coalescing
+    // window the daemon holds the first reply, the second success joins
+    // the open window, and ONE shared ProbeAck resumes both jobs.
+    let jobs = || {
+        vec![
+            synthetic_job("a", JobClass::Small, 1 << 30, 1_000_000, 0.0),
+            synthetic_job("b", JobClass::Small, 1 << 30, 1_000_000, 0.0),
+        ]
+    };
+    let cfg = |coalesce_window_s: f64| ClusterConfig {
+        cluster: ClusterSpec::single(NodeSpec::v100x4()),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 2,
+        dispatch: "rr",
+        preempt: None,
+        latency: LatencyModel {
+            probe_rtt_s: 0.1,
+            coalesce_window_s,
+            ..LatencyModel::default()
+        },
+    };
+    let (plain, tp) = run_cluster_traced(cfg(0.0), jobs());
+    let (coal, tc) = run_cluster_traced(cfg(0.05), jobs());
+    let acks = |t: &[String]| t.iter().filter(|l| l.contains("ProbeAck")).count();
+    assert_eq!(acks(&tp), 4, "uncoalesced: one reply per probe");
+    assert_eq!(acks(&tc), 3, "coalesced: the two task probes share one reply");
+    assert_eq!(plain.completed(), 2);
+    assert_eq!(coal.completed(), 2);
+    // The shared reply departs at window close: both jobs resume the
+    // probe at t = landing(0.1) + window(0.05) + RTT(0.1) = 0.25, so
+    // both end at the same instant, 0.05 s later than uncoalesced.
+    for (c, p) in coal.jobs.iter().zip(&plain.jobs) {
+        assert!((c.ended - (p.ended + 0.05)).abs() < 1e-9, "{}: {} vs {}", c.name, c.ended, p.ended);
+    }
+    assert_eq!(coal.jobs[0].ended, coal.jobs[1].ended, "batch members resume together");
+}
+
+#[test]
+fn latency_dispatcher_at_zero_rtt_is_bit_identical_to_least() {
+    // The degeneration contract: with every landing delay zero the
+    // latency-aware dispatcher must *be* least-loaded — same event
+    // stream, whether the latency model is fully off (zero-latency
+    // paths) or on with only a frontend-service term (probe events
+    // fire, but all delays that could differentiate nodes are zero).
+    let mut jobs = Workload::by_id("W2").unwrap().jobs(7);
+    poisson_arrivals(&mut jobs, 0.5, 7);
+    let cfg = |dispatch: &'static str, latency: LatencyModel| ClusterConfig {
+        cluster: ClusterSpec::homogeneous(NodeSpec::v100x4(), 4),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 16,
+        dispatch,
+        preempt: None,
+        latency,
+    };
+    for model in [
+        LatencyModel::off(),
+        LatencyModel { frontend_service_s: 0.01, ..LatencyModel::default() },
+    ] {
+        let (a, ta) = run_cluster_traced(cfg("least", model.clone()), jobs.clone());
+        let (b, tb) = run_cluster_traced(cfg("latency", model), jobs.clone());
+        assert_eq!(ta, tb, "zero-RTT latency-aware must replay least exactly");
+        assert_eq!(a.makespan, b.makespan);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.ended, y.ended);
+        }
+        assert_eq!(b.dispatcher, "latency", "the name still reports the selection");
+    }
+}
