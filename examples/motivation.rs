@@ -25,6 +25,7 @@ fn kernel(name: &str, warps: u64, mem_gib: u64) -> JobSpec {
         name: name.into(),
         class: JobClass::Large,
         arrival: 0.0,
+        slo: None,
         trace: JobTrace {
             events: vec![
                 TraceEvent::TaskBegin { task: 0, res },

@@ -59,7 +59,13 @@ fn main() {
 
     // 4. Schedule 12 copies on a 4xV100 node under MGB (Alg. 3).
     let jobs: Vec<JobSpec> = (0..12)
-        .map(|i| JobSpec { name: format!("vecadd-{i}"), class: JobClass::Small, trace: trace.clone(), arrival: 0.0 })
+        .map(|i| JobSpec {
+            name: format!("vecadd-{i}"),
+            class: JobClass::Small,
+            trace: trace.clone(),
+            arrival: 0.0,
+            slo: None,
+        })
         .collect();
     let result = run_batch(
         RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Policy("mgb3"), workers: 8 },

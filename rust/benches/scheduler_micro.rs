@@ -19,7 +19,7 @@ fn main() {
     let views: Vec<DeviceView> = (0..4)
         .map(|_| DeviceView { spec: GpuSpec::v100(), free_mem: 8 << 30 })
         .collect();
-    let req = TaskReq { mem_bytes: 2 << 30, tbs: 800, warps_per_tb: 4 };
+    let req = TaskReq { mem_bytes: 2 << 30, tbs: 800, warps_per_tb: 4, slo: None };
     for name in ["mgb3", "mgb2", "schedgpu"] {
         let mut policy = make_policy(name, 4);
         let mut i = 0usize;

@@ -1,0 +1,135 @@
+//! Beyond-paper: cross-node checkpoint migration under SLO-aware
+//! victim selection (ROADMAP "cross-node victim migration",
+//! "SLO-aware victim selection"). PR 2's preemption could only restore
+//! a victim *on the same node* — on a loaded cluster the evicted job
+//! re-queues behind the very contention that evicted it. Here the same
+//! deterministic scenario is run with same-node-only restore
+//! (`migrate: "off"`) against cluster-wide restore (`"cluster"`) at
+//! each swept probe RTT, so the report shows both the win (the victim
+//! escapes its contended home node) and the price (probe RTT +
+//! dispatch cost + the 12 GiB image transfer over the migration link).
+//!
+//! The scenario is hand-computable under round-robin dispatch: node 0
+//! hosts a 12 GB best-effort hog (120 s), node 1 only a 1 GB batch
+//! filler (1 s); a latency-sensitive 12 GB heavy (100 s) arrives at
+//! t = 5, lands on node 0 by cursor order, blocks, and evicts the hog.
+//! Restored same-node the hog waits out the heavy's entire residency;
+//! restored cluster-wide the rr cursor routes it to node 1, where it
+//! re-places as soon as the image lands. A final contrast row swaps
+//! the classes to show the SLO lattice refusing the eviction outright:
+//! a best-effort arrival never displaces latency-sensitive work.
+
+use super::{sweep_model, Report};
+use crate::coordinator::{run_cluster, ClusterConfig, JobClass, JobSpec, RunResult, SchedMode};
+use crate::gpu::{ClusterSpec, GpuSpec, LatencyModel, NodeSpec};
+use crate::sched::{PreemptConfig, SloClass};
+use crate::workloads::synthetic_job;
+
+/// Swept probe RTTs, seconds (0 = free frontend; each row prices the
+/// frontend with the same [`sweep_model`] `bench latency` uses, so the
+/// two experiments stay comparable row-for-row).
+pub const MIGRATE_RTT_SWEEP: [f64; 3] = [0.0, 0.05, 0.5];
+
+fn slo_job(
+    name: &str,
+    class: JobClass,
+    slo: SloClass,
+    mem_bytes: u64,
+    work_us: u64,
+    arrival: f64,
+) -> JobSpec {
+    let mut j = synthetic_job(name, class, mem_bytes, work_us, arrival);
+    j.slo = Some(slo);
+    j
+}
+
+/// The migration stream (see the module docs for the exact dance).
+fn stream() -> Vec<JobSpec> {
+    vec![
+        slo_job("hog", JobClass::Small, SloClass::BestEffort, 12 << 30, 120_000_000, 0.0),
+        slo_job("filler", JobClass::Small, SloClass::Batch, 1 << 30, 1_000_000, 0.0),
+        slo_job("heavy", JobClass::Large, SloClass::LatencySensitive, 12 << 30, 100_000_000, 5.0),
+    ]
+}
+
+/// The class-swapped contrast stream: the hog is latency-sensitive,
+/// the late heavy best-effort — the SLO lattice must refuse to evict.
+fn protected_stream() -> Vec<JobSpec> {
+    vec![
+        slo_job("hog", JobClass::Small, SloClass::LatencySensitive, 12 << 30, 120_000_000, 0.0),
+        slo_job("filler", JobClass::Small, SloClass::Batch, 1 << 30, 1_000_000, 0.0),
+        slo_job("heavy", JobClass::Large, SloClass::BestEffort, 12 << 30, 100_000_000, 5.0),
+    ]
+}
+
+fn cfg(migrate: &'static str, latency: LatencyModel) -> ClusterConfig {
+    let node = NodeSpec { gpus: vec![GpuSpec::v100()], cpu_cores: 8, name: "1xV100".into() };
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(node, 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "rr",
+        preempt: Some(PreemptConfig { policy: "slo", migrate, ..Default::default() }),
+        latency,
+    }
+}
+
+/// Same-node-only vs cluster-wide restore on the same stream at each
+/// swept RTT: `(rtt, [(restore label, result)])`. Exposed so the smoke
+/// test can assert the acceptance bound — cluster-wide restore never
+/// worsens mean turnaround vs same-node-only at zero RTT — and export
+/// the rows as a JSON CI artifact.
+pub fn migrate_comparison(_seed: u64) -> Vec<(f64, Vec<(&'static str, RunResult)>)> {
+    MIGRATE_RTT_SWEEP
+        .iter()
+        .map(|&rtt| {
+            (
+                rtt,
+                vec![
+                    ("same-node", run_cluster(cfg("off", sweep_model(rtt)), stream())),
+                    ("cluster", run_cluster(cfg("cluster", sweep_model(rtt)), stream())),
+                ],
+            )
+        })
+        .collect()
+}
+
+pub fn migrate(seed: u64) -> Report {
+    let mut lines = Vec::new();
+    for (rtt, rows) in migrate_comparison(seed) {
+        for (label, r) in rows {
+            let att = |c: SloClass| {
+                r.slo_attainment(c).map_or_else(|| "n/a".into(), |a| format!("{:.0}%", 100.0 * a))
+            };
+            lines.push(format!(
+                "probe_rtt={rtt:<5}s restore={label:<9} mean_turnaround={:.1}s \
+                 heavy_turnaround={:.1}s hog_turnaround={:.1}s migrations={} \
+                 migrate_bytes={:.1}GiB slo_ls={} slo_be={}",
+                r.mean_turnaround(),
+                r.mean_turnaround_of(JobClass::Large),
+                r.mean_turnaround_of_slo(SloClass::BestEffort),
+                r.migrations,
+                r.migrate_bytes as f64 / (1u64 << 30) as f64,
+                att(SloClass::LatencySensitive),
+                att(SloClass::BestEffort),
+            ));
+        }
+    }
+    // The lattice contrast: with the classes swapped the best-effort
+    // arrival may not evict the latency-sensitive hog at all — it
+    // waits, whatever the migration mode.
+    let r = run_cluster(cfg("cluster", sweep_model(0.0)), protected_stream());
+    lines.push(format!(
+        "slo-protected  restore=cluster   preemptions={} migrations={} \
+         heavy_turnaround={:.1}s (best-effort arrival waits out the tighter hog)",
+        r.preemptions,
+        r.migrations,
+        r.mean_turnaround_of(JobClass::Large),
+    ));
+    Report {
+        title: "Migration (beyond-paper): same-node vs cluster-wide checkpoint restore, \
+                SLO-aware victims"
+            .into(),
+        lines,
+    }
+}

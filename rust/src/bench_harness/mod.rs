@@ -13,6 +13,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod latency;
+mod migrate;
 mod nn128;
 mod preempt;
 mod table2;
@@ -31,6 +32,7 @@ pub use latency::{
     asymmetric_comparison, latency, latency_dispatch_comparison, latency_sweep, reprobe_model,
     sweep_model, RTT_SWEEP,
 };
+pub use migrate::{migrate, migrate_comparison, MIGRATE_RTT_SWEEP};
 pub use nn128::nn128;
 pub use preempt::preempt;
 pub use table2::table2;
@@ -129,6 +131,7 @@ pub fn run_all(seed: u64) -> Vec<Report> {
         cluster_scale(seed),
         preempt(seed),
         latency(seed),
+        migrate(seed),
     ]
 }
 
@@ -146,6 +149,7 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         "cluster" => cluster_scale(seed),
         "preempt" => preempt(seed),
         "latency" => latency(seed),
+        "migrate" => migrate(seed),
         _ => return None,
     })
 }

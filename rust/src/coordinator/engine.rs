@@ -53,6 +53,20 @@
 //! unchanged, so disabled runs stay bit-identical to the admit-or-wait
 //! engine — enforced by exact-equality regression tests.
 //!
+//! With `PreemptConfig::migrate = "cluster"` the restore *migrates*:
+//! after `CkptDone` the victim's saved reservation set re-enters the
+//! cluster frontend as a first-class restore job, routed by the active
+//! dispatcher on a live load snapshot (under a nonzero latency model it
+//! queues, probes, and pays RTT + dispatch cost like any arrival,
+//! re-probe guard included), pays the checkpoint-image transfer
+//! (`held_bytes / migrate_bytes_per_s`) when it lands on a node other
+//! than its home, and re-places its reservations there
+//! (`MigrateArrive`). `migrate: "off"` (the default) never pushes a
+//! migration event and keeps the home-node restore path byte-identical.
+//! Victim selection can additionally be SLO-aware: each job's optional
+//! `SloClass` is threaded through every task probe, and the `slo`
+//! policy never evicts a tighter class for a looser arrival.
+//!
 //! **Probe/dispatch latency** (opt-in via [`ClusterConfig::latency`];
 //! see [`LatencyModel`]). The paper's probes are host-side RPCs to a
 //! scheduler daemon; with a nonzero model the engine prices them:
@@ -103,7 +117,7 @@ use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
 use crate::sched::{
     make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView, PreemptConfig,
-    PreemptPolicy, TaskReq, VictimView,
+    PreemptPolicy, SloClass, TaskReq, VictimView,
 };
 use std::collections::HashMap;
 
@@ -162,6 +176,11 @@ pub struct JobSpec {
     /// at t = 0 (§V-A); open-system experiments (Poisson arrivals via
     /// `workloads::poisson_arrivals`) stagger it.
     pub arrival: f64,
+    /// Optional SLO class (beyond-paper; `workloads::assign_slo` stamps
+    /// one per `JobClass`, the `--slo` CLI mapping). Threaded into
+    /// every task probe so SLO-aware victim selection can compare the
+    /// blocked task's class against its candidates'; `None` = no SLO.
+    pub slo: Option<SloClass>,
 }
 
 /// Called on every kernel launch that names a PJRT artifact — the
@@ -226,12 +245,14 @@ fn compact_trace(
 }
 
 /// The probe resource vector a `TaskBegin` conveys (§III-B) — built in
-/// one place so the synchronous and daemon-side probe paths agree.
-fn probe_req(res: &crate::lazy::TaskResources) -> TaskReq {
+/// one place so the synchronous and daemon-side probe paths agree. The
+/// owning job's SLO class rides along for the preemption layer.
+fn probe_req(res: &crate::lazy::TaskResources, slo: Option<SloClass>) -> TaskReq {
     TaskReq {
         mem_bytes: res.reserve_bytes(),
         tbs: res.thread_blocks(),
         warps_per_tb: res.warps_per_tb(),
+        slo,
     }
 }
 
@@ -311,12 +332,34 @@ struct JobRt {
     /// deferred to its service instant): the next firing decides
     /// without re-admitting.
     reprobe_served: bool,
+    /// A `ReProbe` event belonging to the job's *current* journey is
+    /// outstanding. Armed when the guard is set, disarmed when the
+    /// re-probe is served — and force-disarmed by `begin_migration`,
+    /// which starts a new journey: a deferred arrival re-probe still
+    /// sitting in the queue (its landing overtook it) must fire as a
+    /// no-op, not spend the restore's budget or double-uncharge its
+    /// node.
+    reprobe_armed: bool,
     /// Virtual time the current route's journey lands
     /// (`decision + RTT + dispatch cost`), recorded while a `ReProbe`
     /// guards the decision: a confirming re-probe commits the landing
     /// at exactly this instant (the re-probe rode along; it never
     /// delays a route it does not change).
     landing_at: f64,
+    /// Home node of a cluster-migrating restore in flight: set when the
+    /// checkpointed victim re-enters the cluster frontend, cleared when
+    /// its `MigrateArrive` lands. Landing on any *other* node pays the
+    /// image-transfer term and counts as a migration. `None` always
+    /// with `migrate: "off"` — the flag the landing paths branch on.
+    migrating_from: Option<usize>,
+    /// The job currently occupies worker `worker` on node `node`: set
+    /// at every worker pickup, relinquished at `CkptDone` (the captured
+    /// slot is recycled by the `Restart` event instead). `finish_job`
+    /// only hands a worker back when this is set — a checkpointed or
+    /// migrating victim force-failed before its next pickup holds no
+    /// worker, and recycling its stale index would hand another node's
+    /// (or another job's) worker to the queue.
+    holds_worker: bool,
 }
 
 struct Engine<'h> {
@@ -372,6 +415,11 @@ struct PreemptRt {
     preemptions: u64,
     /// Virtual seconds spent writing + restoring checkpoint images.
     overhead_s: f64,
+    /// Restores that landed on a node other than the victim's home
+    /// (cluster migration only; same-node re-placements not counted).
+    migrations: u64,
+    /// Checkpoint-image bytes shipped across nodes by those restores.
+    migrate_bytes: u64,
 }
 
 /// Run a batch of jobs under `cfg`; all jobs are queued at t = 0.
@@ -465,11 +513,19 @@ fn run_cluster_inner(
         dispatcher: make_dispatcher(cfg.dispatch),
         outstanding_us: vec![0; n_nodes],
         outstanding_mem: vec![0; n_nodes],
-        preempt: cfg.preempt.map(|c| PreemptRt {
-            policy: make_preempt_policy(c.policy),
-            cfg: c,
-            preemptions: 0,
-            overhead_s: 0.0,
+        // Sanitize the preemption cost model like the latency model: a
+        // zero/negative checkpoint bandwidth would push CkptDone at an
+        // inf/NaN time and poison the event heap's ordering.
+        preempt: cfg.preempt.map(|c| {
+            let pc = c.sanitized();
+            PreemptRt {
+                policy: make_preempt_policy(pc.policy),
+                cfg: pc,
+                preemptions: 0,
+                overhead_s: 0.0,
+                migrations: 0,
+                migrate_bytes: 0,
+            }
         }),
         ckpt_inflight: vec![0; n_nodes],
         latency_off: latency.is_off(),
@@ -520,8 +576,19 @@ impl<'h> Engine<'h> {
             est_work_us: self.rt[job].est_work_us,
             peak_mem_bytes: self.rt[job].est_mem_bytes,
         };
-        let node = self.dispatcher.route(&info, &views);
+        let mut node = self.dispatcher.route(&info, &views);
         debug_assert!(node < self.nodes.len(), "dispatcher routed off-cluster");
+        if let Some(home) = self.rt[job].migrating_from {
+            // A memory-oblivious dispatcher (rr, least) may route a
+            // migrating restore to a node that can never hold its saved
+            // reservation set — where the all-or-nothing re-place would
+            // strand it until the drain fallback misreports a crash.
+            // Restores are not allowed to die to routing: fall back to
+            // the home node, which held the set before the eviction.
+            if !self.restore_can_ever_fit(job, node) {
+                node = home;
+            }
+        }
         self.rt[job].node = node;
         self.rt[job].dispatched = true;
         self.outstanding_us[node] += self.rt[job].est_work_us;
@@ -583,7 +650,15 @@ impl<'h> Engine<'h> {
     /// Otherwise the journey commits exactly as PR-3 shipped it.
     fn launch_journey(&mut self, job: usize, node: usize, t: f64) {
         let rtt = self.latency.probe_rtt(node);
-        let landing_delay = rtt + self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+        let mut landing_delay = rtt + self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+        if self.rt[job].migrating_from.is_some() {
+            // The checkpoint-image transfer is part of a migrating
+            // restore's journey: a restore dominated by a 10 s image
+            // copy is exactly as stale-prone at landing as a far
+            // dispatch, so it arms the same guard and commits the same
+            // full landing instant.
+            landing_delay += self.migrate_xfer_s(job);
+        }
         // Guard only load-based routing: a load-oblivious decision
         // (round-robin) cannot go stale, and re-asking a stateful
         // router would fake a redirect on every firing.
@@ -593,6 +668,7 @@ impl<'h> Engine<'h> {
             && self.latency.reprobe_after_s < landing_delay;
         if guarded {
             self.rt[job].landing_at = t + landing_delay;
+            self.rt[job].reprobe_armed = true;
             self.evq.push(t + self.latency.reprobe_after_s, EvKind::ReProbe { job });
         } else {
             self.evq.push(t + rtt, EvKind::ProbeAck { job });
@@ -618,6 +694,13 @@ impl<'h> Engine<'h> {
         if self.rt[job].done || self.rt[job].arrived {
             return;
         }
+        if !self.rt[job].reprobe_armed {
+            // A deferred re-probe from a journey this job no longer
+            // travels (its arrival landed, then a migration began): the
+            // event is stale and owns nothing — firing it would spend
+            // the new journey's budget and double-uncharge its node.
+            return;
+        }
         if self.rt[job].reprobe_served {
             self.rt[job].reprobe_served = false;
         } else {
@@ -630,6 +713,9 @@ impl<'h> Engine<'h> {
         }
         debug_assert!(self.rt[job].dispatched, "re-probe for an unrouted job");
         debug_assert!(self.rt[job].reprobe_left > 0, "re-probe past its budget");
+        // Served: this journey's outstanding re-probe is consumed (a
+        // redirect's launch_journey may arm a fresh one).
+        self.rt[job].reprobe_armed = false;
         self.rt[job].reprobe_left -= 1;
         let old = self.rt[job].node;
         self.outstanding_us[old] =
@@ -643,9 +729,88 @@ impl<'h> Engine<'h> {
             // planned landing; the job then lands at the (late)
             // confirmation itself.
             let landing_at = self.rt[job].landing_at.max(t);
-            self.evq.push(landing_at, EvKind::DispatchArrive { job });
+            self.push_landing(job, landing_at);
         } else {
             self.launch_journey(job, node, t);
+        }
+    }
+
+    /// Land the routed job at `t_land` — the *full* journey end, image
+    /// transfer included for a migrating restore (the journey entry
+    /// points `handle_probe_ack`/`launch_journey`/`begin_migration`
+    /// fold `migrate_xfer_s` in, so a guarded restore's recorded
+    /// `landing_at` already covers the transfer and a confirming
+    /// re-probe commits it unchanged). Ordinary jobs land as
+    /// `DispatchArrive`; a migrating restore as `MigrateArrive`.
+    fn push_landing(&mut self, job: usize, t_land: f64) {
+        if self.rt[job].migrating_from.is_some() {
+            self.evq.push(t_land, EvKind::MigrateArrive { job });
+        } else {
+            self.evq.push(t_land, EvKind::DispatchArrive { job });
+        }
+    }
+
+    /// Checkpoint-image bytes a migrating restore ships: the saved
+    /// reservation set (what the checkpoint wrote out).
+    fn saved_bytes(&self, job: usize) -> u64 {
+        self.rt[job].saved.iter().map(|&(_, req)| req.mem_bytes).sum()
+    }
+
+    /// Whether `node` could re-place the migrating restore's saved
+    /// reservations on an otherwise-empty node, decided by actually
+    /// packing them first-fit in descending size over the node's device
+    /// capacities. A success is its own witness (some placement
+    /// exists), so this can never answer "feasible" for a node the set
+    /// genuinely cannot fit — the direction that would strand the
+    /// restore. A false "infeasible" (first-fit-decreasing is not a
+    /// complete bin-packing decision procedure) merely takes the
+    /// conservative home fallback.
+    fn restore_can_ever_fit(&self, job: usize, node: usize) -> bool {
+        // Under compute-hard placement (Alg2: all thread blocks must be
+        // resident at once) a task whose footprint exceeds an *empty*
+        // device is refused forever, whatever the memory situation —
+        // the other policies treat compute as soft. Tasks that fit
+        // individually but not simultaneously remain a (bin-packing)
+        // blind spot here, as on the memory side below.
+        let compute_hard =
+            matches!(self.mode, SchedMode::Policy(p) if p == "mgb2" || p == "alg2");
+        if compute_hard {
+            let fits_somewhere = |req: &TaskReq| {
+                self.nodes[node].devices.iter().any(|d| {
+                    req.warps_per_tb <= d.spec.warps_per_sm as u64
+                        && req.tbs <= d.spec.resident_tb_limit(req.warps_per_tb)
+                })
+            };
+            if !self.rt[job].saved.iter().all(|(_, req)| fits_somewhere(req)) {
+                return false;
+            }
+        }
+        let mut free: Vec<u64> =
+            self.nodes[node].devices.iter().map(|d| d.spec.mem_bytes).collect();
+        let mut reqs: Vec<u64> =
+            self.rt[job].saved.iter().map(|&(_, req)| req.mem_bytes).collect();
+        reqs.sort_unstable_by(|a, b| b.cmp(a));
+        'pack: for r in reqs {
+            for f in free.iter_mut() {
+                if *f >= r {
+                    *f -= r;
+                    continue 'pack;
+                }
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Image-transfer time of the migrating restore's *current* route:
+    /// zero when it lands back home (the image never left the node).
+    fn migrate_xfer_s(&self, job: usize) -> f64 {
+        let home = self.rt[job].migrating_from.expect("migration in flight");
+        if self.rt[job].node == home {
+            0.0
+        } else {
+            let bw = self.preempt.as_ref().expect("migration in preempt mode").cfg;
+            self.saved_bytes(job) as f64 / bw.migrate_bytes_per_s
         }
     }
 
@@ -656,8 +821,11 @@ impl<'h> Engine<'h> {
     /// member of its node's front ack batch, carrier first.
     fn handle_probe_ack(&mut self, job: usize, t: f64) {
         if !self.rt[job].done && !self.rt[job].arrived {
-            let dt = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
-            self.evq.push(t + dt, EvKind::DispatchArrive { job });
+            let mut dt = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
+            if self.rt[job].migrating_from.is_some() {
+                dt += self.migrate_xfer_s(job);
+            }
+            self.push_landing(job, t + dt);
             return;
         }
         if self.latency.coalesce_window_s > 0.0 && self.rt[job].arrived {
@@ -729,7 +897,7 @@ impl<'h> Engine<'h> {
         let CEv::TaskBegin { task, res } = self.compact[job][self.rt[job].pc] else {
             unreachable!("job {job}: probe in flight away from its TaskBegin");
         };
-        let req = probe_req(&res);
+        let req = probe_req(&res, self.jobs[job].slo);
         if self.probe_place(job, task, &req, t) {
             // pc advances when the ack lands (ProbeAck -> step_job).
             self.send_task_ack(job, t);
@@ -821,18 +989,21 @@ impl<'h> Engine<'h> {
                     }
                     EvKind::CkptBegin { job } => self.handle_ckpt_begin(job, ev.t),
                     EvKind::CkptDone { job } => self.handle_ckpt_done(job, ev.t),
-                    EvKind::Restart { job, worker } => {
-                        // Recycle the worker the victim held at CkptDone
-                        // now that the waiters it unblocked have
-                        // re-placed. The payload carries the worker: a
-                        // same-instant pickup may already have assigned
-                        // the victim a different one. If the victim was
-                        // force-failed meanwhile, finish_job recycled it.
-                        if !self.rt[job].done {
-                            let node = self.rt[job].node;
-                            self.start_next_job(node, worker, ev.t);
-                        }
+                    EvKind::Restart { job: _, node, worker } => {
+                        // Recycle the worker the victim relinquished at
+                        // CkptDone, now that the waiters its eviction
+                        // unblocked have re-placed. The payload carries
+                        // both node and worker: a same-instant pickup
+                        // may already have assigned the victim a
+                        // different worker, and a cluster-migrating
+                        // victim may already be routed off its home node
+                        // entirely. Unconditional — this event owns the
+                        // captured slot whatever became of the victim
+                        // (finish_job only recycles workers a job still
+                        // holds).
+                        self.start_next_job(node, worker, ev.t);
                     }
+                    EvKind::MigrateArrive { job } => self.handle_migrate_arrive(job, ev.t),
                 }
             }
             // Queue drained but some jobs never finished: their resource
@@ -849,13 +1020,22 @@ impl<'h> Engine<'h> {
     }
 
     fn start_next_job(&mut self, node: usize, worker: usize, t: f64) {
-        let Some(job) = self.nodes[node].job_q.pop_front() else {
-            self.nodes[node].mark_idle(worker);
-            return;
+        let job = loop {
+            let Some(j) = self.nodes[node].job_q.pop_front() else {
+                self.nodes[node].mark_idle(worker);
+                return;
+            };
+            if !self.rt[j].done {
+                break j;
+            }
+            // Force-failed while still queued (drain fallback): there
+            // is nothing to run — keep popping rather than binding the
+            // worker to a dead job and starving the rest of the queue.
         };
         let pin = self.nodes[node].worker_pin[worker];
         let rt = &mut self.rt[job];
         rt.worker = worker;
+        rt.holds_worker = true;
         if rt.phase == JPhase::Preempted {
             // Re-queued by checkpoint/restart: keep the original start
             // time and saved pc; step_job routes into the restore path.
@@ -942,7 +1122,7 @@ impl<'h> Engine<'h> {
                         self.evq.push(t_send, EvKind::ProbeSent { job });
                         return;
                     }
-                    let req = probe_req(&res);
+                    let req = probe_req(&res, self.jobs[job].slo);
                     if self.probe_place(job, task, &req, t) {
                         self.rt[job].pc += 1;
                     } else {
@@ -1106,6 +1286,15 @@ impl<'h> Engine<'h> {
             let d = &self.nodes[node].devices[dev];
             let remaining_s = d.remaining_at(t, handle).unwrap_or(0.0);
             let eta_s = d.eta_at(t, handle).unwrap_or(0.0);
+            let est_ckpt_s = cfg.ckpt_seconds(held_bytes);
+            if eta_s <= est_ckpt_s {
+                // Completes before its own checkpoint image would be
+                // written: evicting can only lose to waiting. Enforced
+                // here so the invariant holds for *every* policy — the
+                // built-ins keep their own (unit-tested) guard, but a
+                // policy that forgets it must not regress the engine.
+                continue;
+            }
             victims.push(VictimView {
                 job: v,
                 dev,
@@ -1114,8 +1303,9 @@ impl<'h> Engine<'h> {
                 progress_s: (rt.kernel_work_s - remaining_s).max(0.0),
                 remaining_s,
                 eta_s,
-                est_ckpt_s: cfg.ckpt_seconds(held_bytes),
+                est_ckpt_s,
                 times_preempted: rt.n_preempted,
+                slo: self.jobs[v].slo,
             });
         }
         if victims.is_empty() {
@@ -1196,15 +1386,88 @@ impl<'h> Engine<'h> {
         rt.saved = saved;
         rt.phase = JPhase::Preempted;
         // Capture the worker slot now: a same-instant pickup can assign
-        // the victim a different worker before the Restart fires.
+        // the victim a different worker before the Restart fires. The
+        // victim relinquishes it here — the Restart event owns the
+        // recycle from this point on.
         let worker = rt.worker;
+        rt.holds_worker = false;
         self.ckpt_inflight[node] -= 1;
         // Waiters first (their Wake events carry earlier sequence
-        // numbers than the Restart below), so the job the eviction was
-        // for re-places before the victim can reclaim its memory.
+        // numbers than the landing/Restart below), so the job the
+        // eviction was for re-places before the victim can reclaim its
+        // memory.
         self.wake_waiters(node, t);
-        self.nodes[node].job_q.push_back(victim);
-        self.evq.push(t, EvKind::Restart { job: victim, worker });
+        let migrate = self.preempt.as_ref().is_some_and(|p| p.cfg.migrate_on());
+        if migrate {
+            // Cluster-wide restore: the saved reservation set re-enters
+            // the cluster frontend as a first-class restore job instead
+            // of re-queuing where the contention that evicted it lives.
+            self.begin_migration(victim, t);
+        } else {
+            self.nodes[node].job_q.push_back(victim);
+        }
+        self.evq.push(t, EvKind::Restart { job: victim, node, worker });
+    }
+
+    /// Send a checkpointed victim back through the cluster frontend
+    /// (`migrate: "cluster"` only). Its estimated load is taken off the
+    /// home node — the re-dispatch re-charges wherever it routes — and
+    /// the restore job then travels exactly like an arriving job: with
+    /// the latency model off it is routed now and lands after only the
+    /// image transfer; with the model on it queues for a frontend slot,
+    /// is routed at `ProbeSent` by the active dispatcher on a live
+    /// snapshot (re-probe guard included), and pays the probe RTT +
+    /// dispatch cost before the transfer. Either way the landing is a
+    /// `MigrateArrive`, and restore re-placement on the landed node
+    /// still goes through `try_restore` — the reservation contract
+    /// travels with the job.
+    fn begin_migration(&mut self, victim: usize, t: f64) {
+        let home = self.rt[victim].node;
+        self.outstanding_us[home] =
+            self.outstanding_us[home].saturating_sub(self.rt[victim].est_work_us);
+        self.outstanding_mem[home] =
+            self.outstanding_mem[home].saturating_sub(self.rt[victim].est_mem_bytes);
+        let rt = &mut self.rt[victim];
+        rt.dispatched = false;
+        rt.arrived = false;
+        // A deferred arrival re-probe that fired after landing leaves
+        // its claimed-slot flag set (and possibly a stale ReProbe event
+        // still queued); the restore journey is a fresh RPC that must
+        // queue at the frontend like one, and the stale event must fire
+        // as a no-op — disarm both.
+        rt.reprobe_served = false;
+        rt.reprobe_armed = false;
+        rt.migrating_from = Some(home);
+        if self.latency_off {
+            self.dispatch_job(victim, t);
+            let xfer = self.migrate_xfer_s(victim);
+            self.push_landing(victim, t + xfer);
+        } else {
+            let t_send = self.admit_frontend(t);
+            self.evq.push(t_send, EvKind::ProbeSent { job: victim });
+        }
+    }
+
+    /// A migrating restore lands on its routed node: count the
+    /// migration (and the shipped image bytes) when the node is not the
+    /// victim's home, then join the worker queue like any landing job —
+    /// the next pickup routes into `try_restore` on this node.
+    fn handle_migrate_arrive(&mut self, job: usize, t: f64) {
+        if self.rt[job].done {
+            // Force-failed while the restore was in flight; the ledger
+            // was already drained by finish_job.
+            self.rt[job].migrating_from = None;
+            return;
+        }
+        let home = self.rt[job].migrating_from.take().expect("migration in flight");
+        if self.rt[job].node != home {
+            let bytes = self.saved_bytes(job);
+            let p = self.preempt.as_mut().expect("migration in preempt mode");
+            p.migrations += 1;
+            p.migrate_bytes += bytes;
+        }
+        self.rt[job].arrived = true;
+        self.land_job(job, t);
     }
 
     /// Re-place a checkpointed job's saved reservations all-or-nothing,
@@ -1321,7 +1584,15 @@ impl<'h> Engine<'h> {
                 self.outstanding_mem[node].saturating_sub(self.rt[job].est_mem_bytes);
         }
         let worker = self.rt[job].worker;
-        self.start_next_job(node, worker, t);
+        // Only hand back a worker the job actually occupies: a
+        // checkpointed (possibly migrating) victim force-failed before
+        // its next pickup relinquished its slot to the Restart event,
+        // and its stale index may even belong to another node's pool —
+        // recycling it here would double-assign a worker another job
+        // holds.
+        if self.rt[job].holds_worker {
+            self.start_next_job(node, worker, t);
+        }
     }
 
     fn collect(&mut self) -> RunResult {
@@ -1332,6 +1603,7 @@ impl<'h> Engine<'h> {
             .map(|(spec, rt)| JobOutcome {
                 name: spec.name.clone(),
                 class: spec.class,
+                slo: spec.slo,
                 arrival: spec.arrival,
                 node: rt.node,
                 started: rt.started,
@@ -1362,6 +1634,8 @@ impl<'h> Engine<'h> {
             preemptions: self.preempt.as_ref().map_or(0, |p| p.preemptions),
             wasted_work_s: self.rt.iter().map(|r| r.wasted_s).sum(),
             ckpt_overhead_s: self.preempt.as_ref().map_or(0.0, |p| p.overhead_s),
+            migrations: self.preempt.as_ref().map_or(0, |p| p.migrations),
+            migrate_bytes: self.preempt.as_ref().map_or(0, |p| p.migrate_bytes),
         }
     }
 }

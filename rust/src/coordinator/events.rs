@@ -10,7 +10,8 @@
 //! Paper map: the discrete-event clock realises the virtual timeline of
 //! the §V-A deployments (batch at t=0, Poisson arrivals beyond-paper).
 //! The checkpoint/restart kinds ([`EvKind::CkptBegin`] /
-//! [`EvKind::CkptDone`] / [`EvKind::Restart`]) carry the beyond-paper
+//! [`EvKind::CkptDone`] / [`EvKind::Restart`] /
+//! [`EvKind::MigrateArrive`]) carry the beyond-paper
 //! preemption protocol (ROADMAP "Job preemption"); the probe/dispatch
 //! kinds ([`EvKind::ProbeSent`] / [`EvKind::ProbeAck`] /
 //! [`EvKind::DispatchArrive`] / [`EvKind::ReProbe`]) carry the
@@ -48,12 +49,13 @@ pub(crate) enum EvKind {
     /// released to the node's waiters, its progress saved, and it
     /// re-queues for a worker.
     CkptDone { job: usize },
-    /// Recycle the checkpointed job's worker slot (captured at
-    /// `CkptDone`, since a same-instant pickup can re-assign the job a
-    /// different worker before this fires). Fired after `CkptDone`'s
-    /// waiter wake-ups so the job the eviction unblocked re-places
-    /// first.
-    Restart { job: usize, worker: usize },
+    /// Recycle the checkpointed job's worker slot on its *home* node
+    /// (both captured at `CkptDone`: a same-instant pickup can
+    /// re-assign the job a different worker before this fires, and a
+    /// cluster-migrating victim may already have been re-routed off the
+    /// node whose worker it held). Fired after `CkptDone`'s waiter
+    /// wake-ups so the job the eviction unblocked re-places first.
+    Restart { job: usize, node: usize, worker: usize },
     /// A probe RPC reaches its server (latency mode only): the cluster
     /// frontend's routing probe if `job` is not yet dispatched, else
     /// the task probe arriving at the job's node scheduler daemon. The
@@ -76,6 +78,15 @@ pub(crate) enum EvKind {
     /// terminates. Never pushed when the latency model is off or
     /// re-probing is disabled (`LatencyModel::reprobe_enabled`).
     ReProbe { job: usize },
+    /// A checkpointed preemption victim's *restore job* lands on its
+    /// routed node (cluster-wide migration only,
+    /// `sched::PreemptConfig::migrate = "cluster"`): the landing
+    /// instant already includes the probe RTT + dispatch cost of the
+    /// journey plus the checkpoint-image transfer when the node is not
+    /// the victim's home. Replaces `DispatchArrive` for migrating
+    /// restores so traces distinguish migration landings; never pushed
+    /// with migration off, which keeps `--migrate off` byte-identical.
+    MigrateArrive { job: usize },
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -220,16 +231,25 @@ mod tests {
         q.push(5.0, EvKind::DevCompletion { node: 0, dev: 0, gen: 1 });
         q.push(5.0, EvKind::CkptBegin { job: 3 });
         q.push(5.0, EvKind::Wake { job: 9 });
-        q.push(5.0, EvKind::Restart { job: 3, worker: 1 });
+        q.push(5.0, EvKind::Restart { job: 3, node: 0, worker: 1 });
         assert!(matches!(q.pop().unwrap().kind, EvKind::DevCompletion { .. }));
         assert!(matches!(q.pop().unwrap().kind, EvKind::CkptBegin { job: 3 }));
         assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 9 }));
-        assert!(matches!(q.pop().unwrap().kind, EvKind::Restart { job: 3, worker: 1 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Restart { job: 3, node: 0, worker: 1 }));
         // CkptDone is ordered by its (cost-model) time like any event.
         q.push(7.0, EvKind::CkptDone { job: 3 });
         q.push(6.0, EvKind::Wake { job: 1 });
         assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 1 }));
         assert!(matches!(q.pop().unwrap().kind, EvKind::CkptDone { job: 3 }));
+        // A migrating restore's landing rides the same FIFO: pushed
+        // after CkptDone's waiter wakes and before the Restart, it must
+        // fire between them at an equal instant.
+        q.push(9.0, EvKind::Wake { job: 1 });
+        q.push(9.0, EvKind::MigrateArrive { job: 3 });
+        q.push(9.0, EvKind::Restart { job: 3, node: 1, worker: 0 });
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Wake { job: 1 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::MigrateArrive { job: 3 }));
+        assert!(matches!(q.pop().unwrap().kind, EvKind::Restart { job: 3, node: 1, worker: 0 }));
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Batch-run outcomes and the paper's macro-measures (§V-A): system
 //! throughput, job turnaround, crash percentage, kernel slowdown —
 //! plus the beyond-paper preemption measures (preemption count, wasted
-//! work, checkpoint overhead) the `bench preempt` experiment reports.
+//! work, checkpoint overhead) the `bench preempt` experiment reports,
+//! and the migration/SLO measures (migration count, shipped image
+//! bytes, per-class SLO attainment) `bench migrate` reports.
+
+use crate::sched::SloClass;
 
 /// Workload class, for mix bookkeeping (large: >4 GB footprint).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -16,6 +20,8 @@ pub enum JobClass {
 pub struct JobOutcome {
     pub name: String,
     pub class: JobClass,
+    /// SLO class the job carried, if any (`JobSpec::slo`).
+    pub slo: Option<SloClass>,
     /// Queue-arrival time (0 for the paper's batch experiments).
     pub arrival: f64,
     /// Cluster node the dispatcher routed the job to (0 on one node).
@@ -77,6 +83,11 @@ pub struct RunResult {
     pub wasted_work_s: f64,
     /// Virtual seconds spent writing/restoring checkpoint images.
     pub ckpt_overhead_s: f64,
+    /// Checkpointed victims restored on a node other than their home
+    /// (0 unless `PreemptConfig::migrate = "cluster"`).
+    pub migrations: u64,
+    /// Checkpoint-image bytes those migrations shipped across nodes.
+    pub migrate_bytes: u64,
 }
 
 impl RunResult {
@@ -124,6 +135,33 @@ impl RunResult {
         self.mean_turnaround_where(|j| j.class == class)
     }
 
+    /// Mean turnaround over completed jobs of one SLO class.
+    pub fn mean_turnaround_of_slo(&self, class: SloClass) -> f64 {
+        self.mean_turnaround_where(|j| j.slo == Some(class))
+    }
+
+    /// SLO attainment of one class: the fraction of its jobs that
+    /// completed with turnaround within `SloClass::stretch_bound()`
+    /// times their dedicated kernel seconds (crashed jobs count as
+    /// missed; jobs that ran no kernel only attain the unbounded
+    /// best-effort class). `None` when no job carries the class, so a
+    /// classless run prints nothing rather than a vacuous 100%.
+    pub fn slo_attainment(&self, class: SloClass) -> Option<f64> {
+        let (mut n, mut met) = (0u32, 0u32);
+        for j in self.jobs.iter().filter(|j| j.slo == Some(class)) {
+            n += 1;
+            let bound = class.stretch_bound() * j.kernel_dedicated_s.max(1e-9);
+            if !j.crashed && j.turnaround() <= bound {
+                met += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(met as f64 / n as f64)
+        }
+    }
+
     /// Mean turnaround over completed jobs matching `keep`; 0.0 when
     /// none match (the shared crash-filter/empty-set convention).
     fn mean_turnaround_where(&self, keep: impl Fn(&JobOutcome) -> bool) -> f64 {
@@ -163,6 +201,7 @@ mod tests {
         JobOutcome {
             name: "j".into(),
             class: JobClass::Small,
+            slo: None,
             arrival: 0.0,
             node: 0,
             started: 0.0,
@@ -188,6 +227,8 @@ mod tests {
             preemptions: 0,
             wasted_work_s: 0.0,
             ckpt_overhead_s: 0.0,
+            migrations: 0,
+            migrate_bytes: 0,
         }
     }
 
@@ -225,6 +266,31 @@ mod tests {
     fn turnaround_mean_over_completed() {
         let r = rr(vec![job(4.0, false, 0.0, 0.0), job(8.0, false, 0.0, 0.0)], 8.0);
         assert!((r.mean_turnaround() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_attainment_applies_the_stretch_bound_per_class() {
+        // Latency-sensitive bound is 4x dedicated seconds: a 10 s job
+        // finishing at 30 s attains (stretch 3), at 50 s it misses.
+        let mut met = job(30.0, false, 10.0, 10.0);
+        met.slo = Some(SloClass::LatencySensitive);
+        let mut missed = job(50.0, false, 10.0, 10.0);
+        missed.slo = Some(SloClass::LatencySensitive);
+        // Crashes count as missed whatever the timing...
+        let mut crashed = job(1.0, true, 10.0, 10.0);
+        crashed.slo = Some(SloClass::LatencySensitive);
+        // ...while best-effort attains by completing at all.
+        let mut be = job(10_000.0, false, 1.0, 1.0);
+        be.slo = Some(SloClass::BestEffort);
+        let unclassed = job(10.0, false, 1.0, 1.0);
+        let r = rr(vec![met, missed, crashed, be, unclassed], 10_000.0);
+        let a = r.slo_attainment(SloClass::LatencySensitive).expect("class present");
+        assert!((a - 1.0 / 3.0).abs() < 1e-12, "1 of 3 attained: {a}");
+        assert_eq!(r.slo_attainment(SloClass::BestEffort), Some(1.0));
+        assert_eq!(r.slo_attainment(SloClass::Batch), None, "empty class -> None");
+        // Per-SLO-class turnaround means filter like the JobClass ones.
+        assert!((r.mean_turnaround_of_slo(SloClass::LatencySensitive) - 40.0).abs() < 1e-12);
+        assert_eq!(r.mean_turnaround_of_slo(SloClass::Batch), 0.0);
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! open-system Poisson traffic (`workloads::poisson_arrivals`), with
 //! checkpoint/restart preemption (`ClusterConfig::preempt` — a
 //! `sched::PreemptPolicy` may evict a running victim to admit a blocked
-//! task; off by default, and the disabled path is bit-identical), and
+//! task, with optional SLO-aware victim selection over per-job
+//! [`SloClass`]es and optional cluster-wide restore migration through
+//! the frontend; off by default, and the disabled path is
+//! bit-identical), and
 //! with a probe/dispatch latency model (`ClusterConfig::latency` — see
 //! `gpu::LatencyModel`; the all-zero default is likewise
 //! bit-identical), including its timeout + re-probe guard on stale
@@ -34,7 +37,7 @@ mod events;
 pub mod metrics;
 mod placement;
 
-pub use crate::sched::PreemptConfig;
+pub use crate::sched::{PreemptConfig, SloClass};
 pub use engine::{
     run_batch, run_batch_with_hook, run_cluster, run_cluster_traced, run_cluster_with_hook,
     ClusterConfig, JobSpec, RunConfig, SchedMode,
@@ -55,6 +58,7 @@ mod tests {
             name: name.into(),
             class: JobClass::Small,
             arrival: 0.0,
+            slo: None,
             trace: JobTrace {
                 events: vec![
                     TraceEvent::TaskBegin { task: 0, res },
@@ -554,19 +558,18 @@ mod tests {
     }
 
     #[test]
-    fn victim_checkpointed_exactly_at_completion_aborts_cleanly() {
+    fn victim_completing_at_the_blocked_instant_is_never_evicted() {
         // The heavy arrives at the exact instant the hog's kernel
-        // completes (completion carries the earlier sequence number, so
-        // it wins the tie). The checkpoint must abort: no eviction, no
-        // wasted work, and timings identical to the disabled run.
+        // completes. Since the max-mem wall-clock guard (bugfix sweep)
+        // a zero-eta victim is spared at *selection* time — killing it
+        // can only lose to waiting — so no checkpoint starts at all:
+        // no eviction, no wasted work, timings identical to disabled.
         let xfer = (12u64 << 30) as f64 / crate::gpu::PCIE_BYTES_PER_SEC;
         let t_h = xfer + 10.0; // hog launches after its H2D, runs 10s
         let jobs = hog_and_heavy(10_000_000, 5_000_000, t_h);
         let off = run_cluster(contended_cluster_cfg(None), jobs.clone());
-        // max-mem has no "nearly finished" guard, so it does select the
-        // zero-remaining victim — exercising the abort path itself.
         let on = run_cluster(contended_cluster_cfg(Some(preempt_cfg("max-mem"))), jobs);
-        assert_eq!(on.preemptions, 0, "checkpoint aborted, not counted");
+        assert_eq!(on.preemptions, 0, "nearly-finished victim spared, nothing counted");
         assert_eq!(on.wasted_work_s, 0.0);
         assert_eq!(on.completed(), 2);
         assert_eq!(on.makespan, off.makespan);

@@ -76,6 +76,13 @@ pub(crate) struct NodePlacement {
     /// Jobs whose pending task placement did not fit; retried after the
     /// next release on this node.
     wait_q: Vec<usize>,
+    /// O(1) wait-queue membership flags mirroring `wait_q`, indexed by
+    /// job and grown on demand (the node does not know the batch size
+    /// at construction). The `Vec::contains` dedup it replaces made
+    /// `push_waiter` O(n) per call — O(n²) across a burst of blocked
+    /// jobs, and every failed probe retry pushes. Same pattern as
+    /// `is_idle`/`idle_stack`; insertion order is untouched.
+    in_wait_q: Vec<bool>,
     /// Worker -> pinned device (SA/CG) or None (policy/static modes).
     pub worker_pin: Vec<Option<usize>>,
     /// Idle workers, most recently idled on top (wakeup pops the top).
@@ -113,6 +120,7 @@ impl NodePlacement {
             policy,
             job_q: VecDeque::new(),
             wait_q: Vec::new(),
+            in_wait_q: Vec::new(),
             worker_pin,
             idle_stack: Vec::new(),
             is_idle: vec![false; workers],
@@ -154,14 +162,22 @@ impl NodePlacement {
     }
 
     /// Queue `job` to retry placement after the next release here.
+    /// Duplicate-free in O(1) via the `in_wait_q` flags (no scan).
     pub fn push_waiter(&mut self, job: usize) {
-        if !self.wait_q.contains(&job) {
+        if self.in_wait_q.len() <= job {
+            self.in_wait_q.resize(job + 1, false);
+        }
+        if !self.in_wait_q[job] {
+            self.in_wait_q[job] = true;
             self.wait_q.push(job);
         }
     }
 
     /// Drain the wait queue (the engine turns these into Wake events).
     pub fn take_waiters(&mut self) -> Vec<usize> {
+        for &job in &self.wait_q {
+            self.in_wait_q[job] = false;
+        }
         std::mem::take(&mut self.wait_q)
     }
 
@@ -221,12 +237,23 @@ mod tests {
         n.push_waiter(2);
         assert_eq!(n.take_waiters(), vec![7, 2]);
         assert!(n.take_waiters().is_empty());
+        // Draining resets membership: the same jobs can wait again (a
+        // retried probe that fails again), in fresh insertion order.
+        n.push_waiter(2);
+        n.push_waiter(7);
+        n.push_waiter(2);
+        assert_eq!(n.take_waiters(), vec![2, 7]);
+        // Sparse job indices grow the flag mirror on demand.
+        n.push_waiter(1000);
+        n.push_waiter(0);
+        n.push_waiter(1000);
+        assert_eq!(n.take_waiters(), vec![1000, 0]);
     }
 
     #[test]
     fn place_reserves_memory_on_the_chosen_device() {
         let mut n = node();
-        let req = TaskReq { mem_bytes: 4 << 30, tbs: 100, warps_per_tb: 4 };
+        let req = TaskReq { mem_bytes: 4 << 30, tbs: 100, warps_per_tb: 4, slo: None };
         let dev = n.place((0, 0), &req).expect("fits");
         assert_eq!(n.devices[dev].free_mem, (16u64 << 30) - (4 << 30));
         let before = n.free_mem();

@@ -15,4 +15,6 @@ pub mod device;
 pub mod spec;
 
 pub use device::{Device, KernelHandle};
-pub use spec::{ClusterSpec, GpuSpec, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
+pub use spec::{
+    ClusterSpec, GpuSpec, LatencyModel, NodeSpec, NIC_BYTES_PER_SEC, PCIE_BYTES_PER_SEC,
+};

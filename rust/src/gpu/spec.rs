@@ -145,6 +145,12 @@ impl ClusterSpec {
 /// PCIe gen3 x16 effective host<->device bandwidth (B/s).
 pub const PCIE_BYTES_PER_SEC: f64 = 12.0e9;
 
+/// 10 GbE effective node-to-node bandwidth (B/s) — the default link a
+/// migrating checkpoint image crosses when a preemption victim is
+/// restored on a different node (`sched::PreemptConfig::migrate`);
+/// also what the `wan` latency preset prices its dispatch payload at.
+pub const NIC_BYTES_PER_SEC: f64 = 1.25e9;
+
 /// Frontend latency model (beyond-paper; ROADMAP "Per-node probe
 /// latency model"). The paper's probes are host-side RPCs to a
 /// scheduler daemon; a cluster adds a dispatch hop in front. This
@@ -250,7 +256,7 @@ impl LatencyModel {
         LatencyModel {
             probe_rtt_s: 5e-3,
             dispatch_base_s: 20e-3,
-            dispatch_s_per_byte: 1.0 / 1.25e9,
+            dispatch_s_per_byte: 1.0 / NIC_BYTES_PER_SEC,
             frontend_service_s: 100e-6,
             ..LatencyModel::default()
         }

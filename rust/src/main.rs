@@ -3,16 +3,18 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
 //!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
-//!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+//!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
+//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
 //!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
-//!           [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+//!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
+//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
@@ -41,11 +43,13 @@ use std::collections::HashMap;
 const BENCH_FLAGS: &[&str] = &["exp", "seed"];
 const RUN_FLAGS: &[&str] = &[
     "workload", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "migrate", "migrate-bw", "slo",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed", "compute", "artifacts",
 ];
 const NN_FLAGS: &[&str] = &[
     "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "migrate", "migrate-bw", "slo",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed",
 ];
@@ -84,16 +88,18 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
         [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
-        [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+        [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
+        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
-        [--preempt [min-progress|max-mem|never]] [--ckpt-cost SECONDS]
+        [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
+        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
   compile <file.gir>
@@ -174,18 +180,65 @@ fn parse_cluster(f: &HashMap<String, String>) -> ClusterSpec {
 
 /// `--preempt [POLICY]` enables checkpoint/restart preemption (a bare
 /// flag selects the default min-progress policy); `--ckpt-cost S` sets
-/// the fixed per-checkpoint latency of the cost model.
-fn parse_preempt(f: &HashMap<String, String>) -> Option<mgb::sched::PreemptConfig> {
-    let name = f.get("preempt")?;
-    let policy = mgb::sched::canonical_preempt(name).unwrap_or_else(|| {
-        eprintln!("unknown preemption policy '{name}', using min-progress");
-        "min-progress"
-    });
+/// the fixed per-checkpoint latency of the cost model; `--migrate
+/// off|cluster` routes restores back through the cluster frontend
+/// (bare flag = `cluster`) at `--migrate-bw BYTES/S` image bandwidth.
+///
+/// Invalid values — and preemption-dependent flags without `--preempt`
+/// — are hard errors, like `parse_latency`: the old warn-and-default
+/// (and the silently swallowed unparsable `--ckpt-cost`) measured a
+/// *different* preemption model than the one asked for.
+fn parse_preempt(f: &HashMap<String, String>) -> Result<Option<mgb::sched::PreemptConfig>, String> {
+    let Some(name) = f.get("preempt") else {
+        for dep in ["ckpt-cost", "migrate", "migrate-bw"] {
+            if f.contains_key(dep) {
+                return Err(format!("--{dep} requires --preempt"));
+            }
+        }
+        return Ok(None);
+    };
+    let policy = mgb::sched::canonical_preempt(name).ok_or_else(|| {
+        format!("unknown preemption policy '{name}' (valid: min-progress max-mem slo never)")
+    })?;
     let mut cfg = mgb::sched::PreemptConfig { policy, ..Default::default() };
-    if let Some(c) = f.get("ckpt-cost").and_then(|s| s.parse::<f64>().ok()) {
-        cfg.ckpt_base_s = c.max(0.0);
+    if let Some(s) = f.get("ckpt-cost") {
+        cfg.ckpt_base_s = match s.parse::<f64>() {
+            Ok(v) if v >= 0.0 && v.is_finite() => v,
+            _ => return Err(format!("invalid --ckpt-cost '{s}' (non-negative seconds expected)")),
+        };
     }
-    Some(cfg)
+    if let Some(s) = f.get("migrate") {
+        cfg.migrate = mgb::sched::canonical_migrate(s)
+            .ok_or_else(|| format!("unknown migrate mode '{s}' (valid: off cluster)"))?;
+    }
+    if let Some(s) = f.get("migrate-bw") {
+        cfg.migrate_bytes_per_s = match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => v,
+            _ => return Err(format!("invalid --migrate-bw '{s}' (positive bytes/s expected)")),
+        };
+    }
+    Ok(Some(cfg))
+}
+
+/// `--slo` stamps SLO classes onto the generated jobs by workload
+/// class (Large -> latency-sensitive, Small -> batch, NN ->
+/// best-effort) so the `slo` victim policy and the per-class
+/// attainment metrics have classes to act on. Off by default: jobs
+/// carry no SLO and the run is unchanged.
+fn parse_slo(f: &HashMap<String, String>) -> Result<bool, String> {
+    match f.get("slo").map(String::as_str) {
+        None | Some("off") => Ok(false),
+        Some("true") | Some("on") => Ok(true),
+        Some(other) => Err(format!("invalid --slo '{other}' (bare flag, on, or off)")),
+    }
+}
+
+/// The validated run/nn option bundle: latency model, preemption
+/// config, SLO stamping — any invalid value is one error naming it.
+type RunOpts = (LatencyModel, Option<mgb::sched::PreemptConfig>, bool);
+
+fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
+    Ok((parse_latency(f)?, parse_preempt(f)?, parse_slo(f)?))
 }
 
 fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
@@ -302,6 +355,23 @@ fn print_result(r: &RunResult) {
             r.preemptions, r.wasted_work_s, r.ckpt_overhead_s
         );
     }
+    if r.migrations > 0 {
+        println!(
+            "migrations={} migrate_bytes={:.2}GiB",
+            r.migrations,
+            r.migrate_bytes as f64 / (1u64 << 30) as f64
+        );
+    }
+    for class in mgb::sched::SloClass::ALL {
+        if let Some(a) = r.slo_attainment(class) {
+            println!(
+                "slo[{}] attainment={:.0}% mean_turnaround={:.1}s",
+                class.name(),
+                100.0 * a,
+                r.mean_turnaround_of_slo(class)
+            );
+        }
+    }
 }
 
 fn cmd_bench(f: &HashMap<String, String>) -> i32 {
@@ -327,8 +397,8 @@ fn cmd_bench(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_run(f: &HashMap<String, String>) -> i32 {
-    let latency = match parse_latency(f) {
-        Ok(l) => l,
+    let (latency, preempt, slo) = match parse_run_opts(f) {
+        Ok(v) => v,
         Err(e) => {
             eprintln!("run: {e}");
             return 2;
@@ -347,13 +417,16 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| bench_harness::mgb_workers(&cluster.nodes[0]));
     let mut jobs = workload.jobs(seed);
+    if slo {
+        mgb::workloads::assign_slo(&mut jobs);
+    }
     apply_rate(f, &mut jobs, seed);
     let cfg = ClusterConfig {
         cluster,
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
-        preempt: parse_preempt(f),
+        preempt,
         latency,
     };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
@@ -402,8 +475,8 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
-    let latency = match parse_latency(f) {
-        Ok(l) => l,
+    let (latency, preempt, slo) = match parse_run_opts(f) {
+        Ok(v) => v,
         Err(e) => {
             eprintln!("nn: {e}");
             return 2;
@@ -427,13 +500,16 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
+    if slo {
+        mgb::workloads::assign_slo(&mut jobs);
+    }
     apply_rate(f, &mut jobs, seed);
     let cfg = ClusterConfig {
         cluster,
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
-        preempt: parse_preempt(f),
+        preempt,
         latency,
     };
     let r = run_cluster(cfg, jobs);
@@ -560,6 +636,60 @@ mod tests {
         assert_eq!(m.reprobe_after_s, 0.5);
         assert_eq!(m.reprobe_budget, 1, "the flag's obvious meaning: re-probe once");
         assert!(m.reprobe_enabled());
+    }
+
+    #[test]
+    fn preempt_flags_parse_and_validate_like_latency() {
+        // Happy path: migration + SLO policy + explicit bandwidth.
+        let f = flags(
+            &argv(&["--preempt", "slo", "--migrate", "cluster", "--migrate-bw", "2.5e9",
+                    "--ckpt-cost", "0.1", "--slo"]),
+            RUN_FLAGS,
+        )
+        .expect("new flags are in the valid set");
+        let cfg = parse_preempt(&f).expect("valid").expect("enabled");
+        assert_eq!(cfg.policy, "slo");
+        assert_eq!(cfg.migrate, "cluster");
+        assert_eq!(cfg.migrate_bytes_per_s, 2.5e9);
+        assert_eq!(cfg.ckpt_base_s, 0.1);
+        assert!(parse_slo(&f).expect("bare --slo"), "bare flag enables classing");
+        // Bare --migrate means cluster; bare --preempt the default policy.
+        let f = flags(&argv(&["--preempt", "--migrate"]), RUN_FLAGS).unwrap();
+        let cfg = parse_preempt(&f).unwrap().unwrap();
+        assert_eq!((cfg.policy, cfg.migrate), ("min-progress", "cluster"));
+        // No --preempt, no config — and no silent stamping either way.
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert!(parse_preempt(&f).unwrap().is_none());
+        assert!(!parse_slo(&f).unwrap());
+    }
+
+    #[test]
+    fn invalid_preempt_values_are_errors_not_warnings() {
+        // The same closure parse_latency got in PR 4: warn-and-default
+        // (unknown policy) and swallow-on-parse-failure (--ckpt-cost)
+        // both measured a different preemption model than asked for.
+        for args in [
+            vec!["--preempt", "maxmemm"],
+            vec!["--preempt", "--ckpt-cost", "fast"],
+            vec!["--preempt", "--ckpt-cost", "-1"],
+            vec!["--preempt", "--migrate", "sideways"],
+            vec!["--preempt", "--migrate-bw", "0"],
+            vec!["--preempt", "--migrate-bw", "-2e9"],
+            vec!["--preempt", "--migrate-bw", "10GbE"],
+        ] {
+            let f = flags(&argv(&args), RUN_FLAGS).unwrap();
+            let e = parse_preempt(&f).unwrap_err();
+            assert!(e.contains(args[args.len() - 1]), "{args:?}: names the bad value: {e}");
+        }
+        // Preemption-dependent flags without --preempt are the silent
+        // no-op misconfiguration — rejected, naming the dependency.
+        for dep in [["--migrate", "cluster"], ["--migrate-bw", "1e9"], ["--ckpt-cost", "0.1"]] {
+            let f = flags(&argv(&dep), RUN_FLAGS).unwrap();
+            let e = parse_preempt(&f).unwrap_err();
+            assert!(e.contains("requires --preempt"), "{dep:?}: {e}");
+        }
+        let f = flags(&argv(&["--slo", "tight"]), RUN_FLAGS).unwrap();
+        assert!(parse_slo(&f).is_err(), "unknown --slo value rejected");
     }
 
     #[test]

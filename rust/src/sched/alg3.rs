@@ -78,7 +78,7 @@ mod tests {
     }
 
     fn req(mem: u64, tbs: u64, wptb: u64) -> TaskReq {
-        TaskReq { mem_bytes: mem, tbs, warps_per_tb: wptb }
+        TaskReq { mem_bytes: mem, tbs, warps_per_tb: wptb, slo: None }
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //! compute capability (ROADMAP "Heterogeneous-cluster dispatch") —
 //! homogeneous clusters keep the original integer comparison and so
 //! replay pre-existing runs exactly.
+//!
+//! Arriving jobs are not the only traffic: with cluster-wide
+//! checkpoint migration on (`sched::PreemptConfig::migrate`), an
+//! evicted victim's *restore job* re-enters this layer and is routed
+//! by the same `route` call on a live snapshot — which is how victim
+//! restore inherits every dispatcher here, including the
+//! latency-aware scorer and the re-probe staleness guard.
 
 /// Aggregate load of one node at dispatch time.
 #[derive(Clone, Copy, Debug)]

@@ -26,6 +26,11 @@
 //! coordinator checkpoints the victim at a configurable cost, admits
 //! the blocked task, and restores the victim later. Off by default —
 //! with it disabled the engine is bit-identical to the two-layer stack.
+//! Victim selection can be SLO-aware ([`SloAware`], with per-job
+//! [`SloClass`]es threaded through [`TaskReq`]), and restores can
+//! *migrate*: with `PreemptConfig::migrate = "cluster"` a checkpointed
+//! victim re-enters the cluster layer as a restore job and is routed
+//! by the active [`Dispatcher`] like any arrival.
 
 pub mod alg2;
 pub mod alg3;
@@ -40,8 +45,8 @@ pub use dispatch::{
     MemHeadroom, NodeLoadView, RoundRobin,
 };
 pub use preempt::{
-    canonical_preempt, make_preempt_policy, MaxMemory, MinProgress, NeverPreempt, PreemptConfig,
-    PreemptPolicy, VictimView,
+    canonical_migrate, canonical_preempt, make_preempt_policy, MaxMemory, MinProgress,
+    NeverPreempt, PreemptConfig, PreemptPolicy, SloAware, SloClass, VictimView,
 };
 pub use schedgpu::SchedGpu;
 
@@ -56,6 +61,12 @@ pub struct TaskReq {
     pub tbs: u64,
     /// Warps per thread block.
     pub warps_per_tb: u64,
+    /// SLO class of the owning job, threaded from the workload layer
+    /// (`coordinator::JobSpec::slo`) so the SLO-aware preemption
+    /// policy can weigh the blocked task's class against its victims'.
+    /// `None` = no SLO (ranks loosest in the victim lattice). Placement
+    /// policies ignore it.
+    pub slo: Option<SloClass>,
 }
 
 impl TaskReq {

@@ -21,16 +21,81 @@
 //!
 //! All built-ins are deterministic (ties break toward the lower job
 //! index) so preemption-enabled runs replay exactly.
+//!
+//! Two beyond-paper refinements ride on the same contract (ROADMAP
+//! "cross-node victim migration", "SLO-aware victim selection"):
+//! [`SloClass`] threads an optional per-job SLO from the workload layer
+//! through [`TaskReq`]/[`VictimView`] so [`SloAware`] can refuse to
+//! evict tighter-class work for looser arrivals, and
+//! [`PreemptConfig::migrate`] lets a checkpointed victim re-enter the
+//! *cluster frontend* as a restore job instead of re-queuing on its
+//! home node — the reservation contract travels with the job (Reaño et
+//! al.'s memory-safe co-scheduling condition), priced by the image
+//! transfer over [`PreemptConfig::migrate_bytes_per_s`].
 
 use super::TaskReq;
-use crate::gpu::PCIE_BYTES_PER_SEC;
+use crate::gpu::{NIC_BYTES_PER_SEC, PCIE_BYTES_PER_SEC};
+
+/// Service-level objective class a job may carry (beyond-paper; ROADMAP
+/// "SLO-aware victim selection"). Declared tightest-first, so the
+/// derived ordering is "tighter < looser". A job without a class
+/// (`None` everywhere the option is threaded) has no SLO at all and is
+/// treated as [`SloClass::BestEffort`] by the victim-selection lattice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Interactive/serving traffic: turnaround is the product.
+    LatencySensitive,
+    /// Throughput jobs with a deadline measured in queue drains.
+    Batch,
+    /// Scavenger work: runs whenever capacity is spare.
+    BestEffort,
+}
+
+impl SloClass {
+    /// Every class, tightest first (stable iteration order for reports).
+    pub const ALL: [SloClass; 3] =
+        [SloClass::LatencySensitive, SloClass::Batch, SloClass::BestEffort];
+
+    /// Canonical CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::LatencySensitive => "latency-sensitive",
+            SloClass::Batch => "batch",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Looseness rank of an optional class: 0 = tightest. `None` (no
+    /// SLO) ranks loosest — a job that never asked for a guarantee is
+    /// the first to yield capacity.
+    pub fn looseness(slo: Option<SloClass>) -> u8 {
+        match slo {
+            Some(SloClass::LatencySensitive) => 0,
+            Some(SloClass::Batch) => 1,
+            Some(SloClass::BestEffort) | None => 2,
+        }
+    }
+
+    /// Turnaround-stretch bound defining SLO attainment: a completed
+    /// job meets its SLO iff `turnaround <= bound * dedicated kernel
+    /// seconds`. Best-effort has no bound (always attained when the
+    /// job completes).
+    pub fn stretch_bound(&self) -> f64 {
+        match self {
+            SloClass::LatencySensitive => 4.0,
+            SloClass::Batch => 20.0,
+            SloClass::BestEffort => f64::INFINITY,
+        }
+    }
+}
 
 /// Checkpoint/restart configuration carried by
 /// `coordinator::ClusterConfig`. `None` there disables preemption and
 /// keeps the engine bit-identical to the admit-or-wait scheduler.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PreemptConfig {
-    /// Victim-selection policy: "min-progress" | "max-mem" | "never".
+    /// Victim-selection policy:
+    /// "min-progress" | "max-mem" | "slo" | "never".
     pub policy: &'static str,
     /// Fixed per-checkpoint (and per-restore) latency, seconds — probe
     /// round-trip + image setup (`--ckpt-cost`).
@@ -42,6 +107,19 @@ pub struct PreemptConfig {
     /// preemption: a restarted job cannot be evicted again, bounding
     /// wasted work at one lost kernel per job.
     pub max_preemptions: u32,
+    /// Restore routing after `CkptDone` (`--migrate`): "off" (the
+    /// default) re-places the victim on its home node — the PR-2
+    /// behaviour, byte-identical; "cluster" sends the victim's saved
+    /// reservation set back through the cluster frontend as a
+    /// first-class restore job, routed by the active dispatcher and
+    /// paying the image-transfer term when it lands on another node.
+    pub migrate: &'static str,
+    /// Cross-node checkpoint-image transfer bandwidth, bytes/s
+    /// (`--migrate-bw`): a migrating restore pays
+    /// `held_bytes / migrate_bytes_per_s` on top of the probe RTT and
+    /// dispatch cost when it lands away from its home node. Defaults to
+    /// a 10 GbE node-to-node link ([`NIC_BYTES_PER_SEC`]).
+    pub migrate_bytes_per_s: f64,
 }
 
 impl Default for PreemptConfig {
@@ -51,14 +129,61 @@ impl Default for PreemptConfig {
             ckpt_base_s: 0.05,
             ckpt_bytes_per_s: PCIE_BYTES_PER_SEC,
             max_preemptions: 1,
+            migrate: "off",
+            migrate_bytes_per_s: NIC_BYTES_PER_SEC,
         }
     }
 }
 
 impl PreemptConfig {
     /// Checkpoint (== restore) duration for a job holding `bytes`.
+    /// Safe under any bandwidth only after [`PreemptConfig::sanitized`]
+    /// — the engine applies it at construction, and the CLI hard-errors
+    /// on invalid values before a config is ever built.
     pub fn ckpt_seconds(&self, bytes: u64) -> f64 {
         self.ckpt_base_s + bytes as f64 / self.ckpt_bytes_per_s
+    }
+
+    /// Whether restores may leave their home node.
+    pub fn migrate_on(&self) -> bool {
+        self.migrate == "cluster"
+    }
+
+    /// Copy of the config with every cost-model term forced valid, the
+    /// construction-time guard `coordinator` applies (mirroring
+    /// `LatencyModel::sanitized`). A zero/negative/NaN bandwidth would
+    /// make `ckpt_seconds` return inf/NaN, scheduling `CkptDone` at a
+    /// time that poisons the event heap's `total_cmp` ordering — such
+    /// bandwidths degrade to the defaults instead, and a negative base
+    /// cost (events in the past) degrades to zero. Unknown migrate
+    /// aliases panic, exactly like `make_preempt_policy` on an unknown
+    /// policy name.
+    pub fn sanitized(&self) -> Self {
+        let bw = |v: f64, default: f64| if v.is_finite() && v > 0.0 { v } else { default };
+        PreemptConfig {
+            policy: self.policy,
+            ckpt_base_s: if self.ckpt_base_s.is_finite() && self.ckpt_base_s >= 0.0 {
+                self.ckpt_base_s
+            } else {
+                0.0
+            },
+            ckpt_bytes_per_s: bw(self.ckpt_bytes_per_s, PCIE_BYTES_PER_SEC),
+            max_preemptions: self.max_preemptions,
+            migrate: canonical_migrate(self.migrate)
+                .unwrap_or_else(|| panic!("unknown migrate mode '{}'", self.migrate)),
+            migrate_bytes_per_s: bw(self.migrate_bytes_per_s, NIC_BYTES_PER_SEC),
+        }
+    }
+}
+
+/// Canonical migrate-mode name, or `None` if unrecognised. Shared by
+/// the CLI parser and [`PreemptConfig::sanitized`]; "true" (a bare
+/// `--migrate` flag) selects cluster-wide restore.
+pub fn canonical_migrate(name: &str) -> Option<&'static str> {
+    match name {
+        "off" | "none" => Some("off"),
+        "cluster" | "on" | "true" => Some("cluster"),
+        _ => None,
     }
 }
 
@@ -89,6 +214,9 @@ pub struct VictimView {
     pub est_ckpt_s: f64,
     /// Times this job has already been checkpointed.
     pub times_preempted: u32,
+    /// SLO class of the candidate job (`None` = no SLO, treated as
+    /// best-effort by [`SloAware`]).
+    pub slo: Option<SloClass>,
 }
 
 /// A victim-selection policy: given the blocked task's resource vector
@@ -150,8 +278,10 @@ impl PreemptPolicy for MinProgress {
 }
 
 /// Maximise freed memory: evict the victim holding the most reserved
-/// bytes (ties toward the lower job index). No progress guard — useful
-/// when the blocked request is memory-bound and urgency dominates.
+/// bytes (ties toward the lower job index), skipping victims whose
+/// kernel finishes before a checkpoint would complete — killing those
+/// is strictly worse than waiting out the kernel, whatever memory they
+/// hold (the same wall-clock guard [`MinProgress`] applies).
 #[derive(Debug, Default)]
 pub struct MaxMemory;
 
@@ -163,12 +293,72 @@ impl PreemptPolicy for MaxMemory {
     fn select_victim(&mut self, _blocked: &TaskReq, victims: &[VictimView]) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, v) in victims.iter().enumerate() {
+            if v.eta_s <= v.est_ckpt_s {
+                continue; // finishes before a checkpoint would: wait
+            }
             let better = match best {
                 None => true,
                 Some(b) => {
                     let bv = &victims[b];
                     v.held_bytes > bv.held_bytes
                         || (v.held_bytes == bv.held_bytes && v.job < bv.job)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+/// SLO-aware victim selection (ROADMAP "SLO-aware victim selection";
+/// Zahaf et al. show real-time victim choice must respect deadline
+/// classes). The lattice:
+///
+/// 1. **Never evict a tighter class for a looser one** — a victim
+///    whose class is tighter than the blocked task's is untouchable
+///    (jobs without a class rank loosest, so classless arrivals can
+///    only evict other best-effort work).
+/// 2. Among eligible victims, evict the **loosest class first** —
+///    best-effort yields before batch, batch before
+///    latency-sensitive.
+/// 3. Within a class, break ties by **least SLO-slack damage**: the
+///    turnaround the eviction inflicts on the victim, `progress_s`
+///    (work re-done) plus `2 * est_ckpt_s` (checkpoint + restore);
+///    then the lower job index.
+///
+/// The [`MinProgress`]/[`MaxMemory`] wall-clock guard applies too: a
+/// victim whose kernel beats its own checkpoint is always spared.
+#[derive(Debug, Default)]
+pub struct SloAware;
+
+impl PreemptPolicy for SloAware {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn select_victim(&mut self, blocked: &TaskReq, victims: &[VictimView]) -> Option<usize> {
+        let blocked_loose = SloClass::looseness(blocked.slo);
+        let damage = |v: &VictimView| v.progress_s + 2.0 * v.est_ckpt_s;
+        let mut best: Option<usize> = None;
+        for (i, v) in victims.iter().enumerate() {
+            if v.eta_s <= v.est_ckpt_s {
+                continue; // finishes before a checkpoint would: wait
+            }
+            let loose = SloClass::looseness(v.slo);
+            if loose < blocked_loose {
+                continue; // never evict a tighter class for a looser one
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bv = &victims[b];
+                    let bloose = SloClass::looseness(bv.slo);
+                    loose > bloose
+                        || (loose == bloose
+                            && (damage(v) < damage(bv)
+                                || (damage(v) == damage(bv) && v.job < bv.job)))
                 }
             };
             if better {
@@ -186,6 +376,7 @@ pub fn canonical_preempt(name: &str) -> Option<&'static str> {
     match name {
         "min-progress" | "minprog" | "true" | "on" => Some("min-progress"),
         "max-mem" | "maxmem" | "mem" => Some("max-mem"),
+        "slo" | "slo-aware" => Some("slo"),
         "never" | "off" => Some("never"),
         _ => None,
     }
@@ -196,6 +387,7 @@ pub fn make_preempt_policy(name: &str) -> Box<dyn PreemptPolicy> {
     match canonical_preempt(name) {
         Some("min-progress") => Box::new(MinProgress),
         Some("max-mem") => Box::new(MaxMemory),
+        Some("slo") => Box::new(SloAware),
         Some("never") => Box::new(NeverPreempt),
         _ => panic!("unknown preemption policy '{name}'"),
     }
@@ -206,7 +398,11 @@ mod tests {
     use super::*;
 
     fn req() -> TaskReq {
-        TaskReq { mem_bytes: 8 << 30, tbs: 100, warps_per_tb: 4 }
+        TaskReq { mem_bytes: 8 << 30, tbs: 100, warps_per_tb: 4, slo: None }
+    }
+
+    fn req_slo(slo: SloClass) -> TaskReq {
+        TaskReq { slo: Some(slo), ..req() }
     }
 
     fn victim(job: usize, held: u64, progress: f64, remaining: f64) -> VictimView {
@@ -220,7 +416,12 @@ mod tests {
             eta_s: remaining, // V100-dedicated: wall == work units
             est_ckpt_s: 1.0,
             times_preempted: 0,
+            slo: None,
         }
+    }
+
+    fn victim_slo(job: usize, slo: Option<SloClass>, progress: f64, remaining: f64) -> VictimView {
+        VictimView { slo, ..victim(job, 8 << 30, progress, remaining) }
     }
 
     #[test]
@@ -260,22 +461,141 @@ mod tests {
     }
 
     #[test]
+    fn max_mem_spares_a_nearly_finished_holder() {
+        // The regression the bugfix sweep closes: a 12 GB holder 0.5 s
+        // from completing its kernel must be spared — killing it costs
+        // a 1.0 s checkpoint, strictly worse than waiting — even though
+        // it holds the most memory. The next-largest *viable* holder is
+        // taken instead.
+        let mut p = make_preempt_policy("max-mem");
+        let vs = vec![
+            victim(0, 12 << 30, 99.5, 0.5), // eta 0.5 < ckpt 1.0: spare
+            victim(1, 8 << 30, 10.0, 50.0),
+        ];
+        assert_eq!(p.select_victim(&req(), &vs), Some(1), "12 GB holder is spared");
+        // Every victim nearly finished: decline outright (wait them out).
+        let vs = vec![victim(0, 12 << 30, 99.5, 0.5), victim(1, 8 << 30, 99.9, 0.1)];
+        assert_eq!(p.select_victim(&req(), &vs), None);
+        // The guard is wall-clock, like min-progress: eta above the
+        // checkpoint cost stays evictable.
+        let vs = vec![victim(0, 12 << 30, 99.0, 1.5)];
+        assert_eq!(p.select_victim(&req(), &vs), Some(0));
+    }
+
+    #[test]
     fn never_always_declines() {
         let mut p = make_preempt_policy("never");
         assert_eq!(p.select_victim(&req(), &[victim(0, 1 << 30, 0.0, 100.0)]), None);
     }
 
     #[test]
+    fn slo_aware_never_evicts_a_tighter_class_for_a_looser_one() {
+        let mut p = make_preempt_policy("slo");
+        // A batch arrival may not evict latency-sensitive work, however
+        // attractive the victim looks.
+        let vs = vec![victim_slo(0, Some(SloClass::LatencySensitive), 1.0, 100.0)];
+        assert_eq!(p.select_victim(&req_slo(SloClass::Batch), &vs), None);
+        // Same class is fair game; a tighter arrival may evict looser.
+        let vs = vec![victim_slo(0, Some(SloClass::Batch), 1.0, 100.0)];
+        assert_eq!(p.select_victim(&req_slo(SloClass::Batch), &vs), Some(0));
+        assert_eq!(p.select_victim(&req_slo(SloClass::LatencySensitive), &vs), Some(0));
+        // A classless arrival ranks loosest: only best-effort (or
+        // classless) victims are eligible.
+        let vs = vec![
+            victim_slo(0, Some(SloClass::Batch), 0.0, 100.0),
+            victim_slo(1, Some(SloClass::BestEffort), 50.0, 100.0),
+        ];
+        assert_eq!(p.select_victim(&req(), &vs), Some(1), "classless evicts best-effort only");
+    }
+
+    #[test]
+    fn slo_aware_prefers_loosest_class_then_least_slack_damage() {
+        let mut p = make_preempt_policy("slo");
+        // Loosest class first: best-effort yields before batch, even
+        // when the batch victim would be cheaper to evict.
+        let vs = vec![
+            victim_slo(0, Some(SloClass::Batch), 0.0, 100.0),
+            victim_slo(1, Some(SloClass::BestEffort), 80.0, 20.0),
+        ];
+        assert_eq!(p.select_victim(&req_slo(SloClass::LatencySensitive), &vs), Some(1));
+        // Within a class: least damage (progress + 2x ckpt) wins...
+        let vs = vec![
+            victim_slo(3, Some(SloClass::Batch), 50.0, 50.0),
+            victim_slo(5, Some(SloClass::Batch), 5.0, 95.0),
+        ];
+        assert_eq!(p.select_victim(&req_slo(SloClass::LatencySensitive), &vs), Some(1));
+        // ...and equal damage ties to the lower job index.
+        let vs = vec![
+            victim_slo(7, Some(SloClass::Batch), 5.0, 95.0),
+            victim_slo(4, Some(SloClass::Batch), 5.0, 95.0),
+        ];
+        assert_eq!(p.select_victim(&req_slo(SloClass::LatencySensitive), &vs), Some(1));
+        // The wall-clock guard applies here too.
+        let vs = vec![victim_slo(0, Some(SloClass::BestEffort), 99.5, 0.5)];
+        assert_eq!(p.select_victim(&req_slo(SloClass::LatencySensitive), &vs), None);
+    }
+
+    #[test]
+    fn slo_class_lattice_and_names() {
+        assert_eq!(SloClass::looseness(Some(SloClass::LatencySensitive)), 0);
+        assert_eq!(SloClass::looseness(Some(SloClass::Batch)), 1);
+        assert_eq!(SloClass::looseness(Some(SloClass::BestEffort)), 2);
+        assert_eq!(SloClass::looseness(None), 2, "no SLO ranks loosest");
+        assert!(SloClass::LatencySensitive < SloClass::Batch, "tighter orders first");
+        assert_eq!(SloClass::ALL.len(), 3);
+        assert_eq!(SloClass::Batch.name(), "batch");
+        assert!(SloClass::LatencySensitive.stretch_bound() < SloClass::Batch.stretch_bound());
+        assert!(SloClass::BestEffort.stretch_bound().is_infinite());
+    }
+
+    #[test]
     fn aliases_and_cost_model() {
         assert_eq!(canonical_preempt("on"), Some("min-progress"));
         assert_eq!(canonical_preempt("mem"), Some("max-mem"));
+        assert_eq!(canonical_preempt("slo-aware"), Some("slo"));
         assert_eq!(canonical_preempt("off"), Some("never"));
         assert_eq!(canonical_preempt("nope"), None);
+        assert_eq!(canonical_migrate("off"), Some("off"));
+        assert_eq!(canonical_migrate("true"), Some("cluster"), "bare --migrate = cluster");
+        assert_eq!(canonical_migrate("cluster"), Some("cluster"));
+        assert_eq!(canonical_migrate("nope"), None);
         let cfg = PreemptConfig::default();
         // 12 GiB at PCIe bandwidth + base latency.
         let want = 0.05 + (12u64 << 30) as f64 / PCIE_BYTES_PER_SEC;
         assert!((cfg.ckpt_seconds(12 << 30) - want).abs() < 1e-12);
         assert_eq!(cfg.max_preemptions, 1, "cascades disallowed by default");
+        assert_eq!(cfg.migrate, "off", "same-node restore is the default");
+        assert!(!cfg.migrate_on());
+        assert_eq!(cfg.migrate_bytes_per_s, NIC_BYTES_PER_SEC);
+    }
+
+    #[test]
+    fn sanitized_defends_the_cost_model_against_poison_bandwidths() {
+        // The regression the bugfix sweep closes: a zero (or negative,
+        // or NaN) bandwidth made ckpt_seconds return inf/NaN, and an
+        // event scheduled at that time poisons the heap's total_cmp
+        // ordering for the rest of the run.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let cfg = PreemptConfig { ckpt_bytes_per_s: bad, ..Default::default() }.sanitized();
+            assert_eq!(cfg.ckpt_bytes_per_s, PCIE_BYTES_PER_SEC, "degrades to the default");
+            assert!(cfg.ckpt_seconds(12 << 30).is_finite());
+            let cfg =
+                PreemptConfig { migrate_bytes_per_s: bad, ..Default::default() }.sanitized();
+            assert_eq!(cfg.migrate_bytes_per_s, NIC_BYTES_PER_SEC);
+        }
+        // Negative/NaN base cost would schedule events into the past.
+        let cfg = PreemptConfig { ckpt_base_s: -3.0, ..Default::default() }.sanitized();
+        assert_eq!(cfg.ckpt_base_s, 0.0);
+        // Valid configs pass through unchanged, aliases canonicalise.
+        let cfg = PreemptConfig { migrate: "on", ..Default::default() };
+        assert_eq!(cfg.sanitized().migrate, "cluster");
+        assert_eq!(PreemptConfig::default().sanitized(), PreemptConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown migrate mode")]
+    fn sanitized_rejects_unknown_migrate_mode() {
+        let _ = PreemptConfig { migrate: "sideways", ..Default::default() }.sanitized();
     }
 
     #[test]

@@ -135,7 +135,7 @@ impl NnTask {
         let compiled = compile(&self.program());
         let trace = interpret(&compiled, &[]).expect("nn workload interprets");
         debug_assert!(trace.check_well_formed().is_ok());
-        JobSpec { name: self.profile().name.to_string(), class: JobClass::Nn, trace, arrival: 0.0 }
+        JobSpec { name: self.profile().name.to_string(), class: JobClass::Nn, trace, arrival: 0.0, slo: None }
     }
 }
 

@@ -5,6 +5,7 @@ use super::rng::Rng;
 use super::rodinia::COMBOS;
 use crate::coordinator::{JobClass, JobSpec};
 use crate::lazy::{JobTrace, TaskResources, TraceEvent};
+use crate::sched::SloClass;
 
 /// A large:small mix ratio (Table I: 1:1, 2:1, 3:1, 5:1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +101,7 @@ pub fn synthetic_job(
         name: name.into(),
         class,
         arrival,
+        slo: None,
         trace: JobTrace {
             events: vec![
                 TraceEvent::TaskBegin { task: 0, res },
@@ -118,6 +120,21 @@ pub fn synthetic_job(
                 TraceEvent::TaskEnd { task: 0 },
             ],
         },
+    }
+}
+
+/// Stamp SLO classes onto a job mix by workload class — the `--slo`
+/// CLI mapping: heavy (Large) jobs are latency-sensitive (they are the
+/// turnaround story the paper's 4.9x targets), Small jobs batch, NN
+/// jobs best-effort. Jobs keep `slo: None` (no SLO at all) unless this
+/// is called, so existing mixes replay unchanged.
+pub fn assign_slo(jobs: &mut [JobSpec]) {
+    for j in jobs.iter_mut() {
+        j.slo = Some(match j.class {
+            JobClass::Large => SloClass::LatencySensitive,
+            JobClass::Small => SloClass::Batch,
+            JobClass::Nn => SloClass::BestEffort,
+        });
     }
 }
 
@@ -224,6 +241,22 @@ mod tests {
         poisson_arrivals(&mut d, 0.5, 43);
         assert!(a.iter().zip(&d).any(|(x, y)| x.arrival != y.arrival));
         assert_eq!(b.len(), a.len());
+    }
+
+    #[test]
+    fn assign_slo_maps_job_classes_and_default_is_none() {
+        let mut jobs = WORKLOADS[0].jobs(1);
+        jobs.extend(nn_mix(4, 1));
+        assert!(jobs.iter().all(|j| j.slo.is_none()), "no SLO unless asked");
+        assign_slo(&mut jobs);
+        for j in &jobs {
+            let want = match j.class {
+                JobClass::Large => SloClass::LatencySensitive,
+                JobClass::Small => SloClass::Batch,
+                JobClass::Nn => SloClass::BestEffort,
+            };
+            assert_eq!(j.slo, Some(want), "{}", j.name);
+        }
     }
 
     #[test]

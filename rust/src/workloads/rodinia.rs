@@ -119,7 +119,7 @@ impl Combo {
         let compiled = compile(&program);
         let trace = interpret(&compiled, &[]).expect("workload interprets");
         debug_assert!(trace.check_well_formed().is_ok());
-        JobSpec { name: self.name.to_string(), class: self.class(), trace, arrival: 0.0 }
+        JobSpec { name: self.name.to_string(), class: self.class(), trace, arrival: 0.0, slo: None }
     }
 
     /// The host-side IR mirroring the CUDA benchmark's structure.

@@ -4,7 +4,8 @@
 //! (Before this file only fig4/fig6/nn128/cluster had any coverage.)
 
 use mgb::bench_harness::{
-    self, latency_dispatch_comparison, latency_sweep, reprobe_model, sweep_model, RTT_SWEEP,
+    self, latency_dispatch_comparison, latency_sweep, migrate_comparison, reprobe_model,
+    sweep_model, MIGRATE_RTT_SWEEP, RTT_SWEEP,
 };
 
 fn smoke(name: &str) {
@@ -50,6 +51,72 @@ fn preempt_runs() {
 #[test]
 fn latency_runs() {
     smoke("latency");
+}
+
+#[test]
+fn migrate_runs() {
+    smoke("migrate");
+}
+
+#[test]
+fn cluster_restore_never_worsens_turnaround_at_zero_rtt() {
+    // The PR acceptance bound: with a free frontend (zero RTT) routing
+    // a checkpointed victim's restore through the cluster frontend can
+    // only help — the dispatcher may still pick the home node, and any
+    // other pick it makes is by its own load ranking. The bench's
+    // scenario makes it a strict win (the victim escapes its heavy's
+    // 100 s residency), and same-node-only must never migrate at all.
+    let rows = migrate_comparison(2);
+    assert_eq!(rows.len(), MIGRATE_RTT_SWEEP.len());
+    // Export the comparison as a JSON artifact (hand-rolled; the
+    // offline crate set has no serde) for CI upload next to the golden
+    // traces.
+    let mut json = String::from("[\n");
+    for (rtt, results) in &rows {
+        for (label, r) in results {
+            json.push_str(&format!(
+                "  {{\"rtt_s\": {rtt}, \"restore\": \"{label}\", \
+                 \"mean_turnaround_s\": {:.6}, \"makespan_s\": {:.6}, \
+                 \"preemptions\": {}, \"migrations\": {}, \"migrate_bytes\": {}}},\n",
+                r.mean_turnaround(),
+                r.makespan,
+                r.preemptions,
+                r.migrations,
+                r.migrate_bytes
+            ));
+        }
+    }
+    let json = json.trim_end_matches(",\n").to_string() + "\n]\n";
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bench_migrate.json"), json).unwrap();
+    for (rtt, results) in &rows {
+        let row = |name: &str| {
+            &results
+                .iter()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("row '{name}' missing at rtt {rtt}"))
+                .1
+        };
+        let (same, cluster) = (row("same-node"), row("cluster"));
+        for r in [same, cluster] {
+            assert_eq!(r.crashed(), 0, "rtt {rtt}: migration must stay memory-safe");
+            assert_eq!(r.completed(), 3, "rtt {rtt}: jobs conserved");
+        }
+        assert_eq!(same.migrations, 0, "same-node-only restore never migrates");
+        assert_eq!(same.migrate_bytes, 0);
+        assert_eq!(cluster.migrations, 1, "rtt {rtt}: the evicted hog migrates once");
+        assert_eq!(cluster.migrate_bytes, 12 << 30, "the 12 GiB image crossed nodes");
+        if *rtt == 0.0 {
+            assert!(
+                cluster.mean_turnaround() <= same.mean_turnaround() + 1e-9,
+                "zero RTT: cluster-wide restore must not worsen mean turnaround \
+                 ({} vs {})",
+                cluster.mean_turnaround(),
+                same.mean_turnaround()
+            );
+        }
+    }
 }
 
 #[test]

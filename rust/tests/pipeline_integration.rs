@@ -172,6 +172,7 @@ fn cg_crash_cleanup_releases_memory_for_survivors() {
             class: JobClass::Large,
             trace: mk(9 << 30),
             arrival: 0.0,
+            slo: None,
         })
         .collect();
     let r = run_batch(RunConfig { node, mode: SchedMode::Cg, workers: 4 }, jobs);
@@ -247,6 +248,7 @@ fn single_job_larger_than_any_gpu_crashes_everywhere() {
         name: "whale".into(),
         class: JobClass::Large,
         arrival: 0.0,
+        slo: None,
         trace: JobTrace {
             events: vec![
                 TraceEvent::TaskBegin { task: 0, res },
@@ -325,6 +327,7 @@ fn static_mapping_honours_set_device_and_can_oom() {
             class: JobClass::Large,
             trace,
             arrival: 0.0,
+            slo: None,
         }
     };
     let jobs = vec![app(10), app(9)];
@@ -364,6 +367,7 @@ fn default_device0_without_set_device() {
             class: JobClass::Large,
             trace: interpret(&compile(&pb.finish()), &[]).unwrap(),
             arrival: 0.0,
+            slo: None,
         }
     };
     let r = run_batch(

@@ -1,10 +1,15 @@
 //! Checkpoint/restart preemption edge cases the unit suite did not
 //! cover: a victim that is already mid-checkpoint when a second probe
-//! blocks, a preemption budget exhausted mid-cascade, and the
+//! blocks, a preemption budget exhausted mid-cascade, the
 //! `--preempt never` == disabled equivalence on a *heterogeneous*
-//! P100/V100 cluster (the existing exact-equality test is homogeneous).
+//! P100/V100 cluster (the existing exact-equality test is homogeneous),
+//! and the cross-node migration edges — a victim whose home node fills
+//! while its checkpoint is in flight must migrate rather than queue
+//! behind the contention, `--migrate off` must fire no migration event
+//! and replay deterministically, and the re-probe guard must arm over a
+//! migrating restore's journey like any routed RPC.
 
-use mgb::coordinator::{run_cluster, ClusterConfig, JobClass, SchedMode};
+use mgb::coordinator::{run_cluster, run_cluster_traced, ClusterConfig, JobClass, SchedMode};
 use mgb::gpu::{ClusterSpec, GpuSpec, LatencyModel, NodeSpec};
 use mgb::sched::PreemptConfig;
 use mgb::workloads::synthetic_job;
@@ -128,4 +133,240 @@ fn preempt_never_matches_disabled_on_heterogeneous_cluster() {
     // The scenario must actually exercise both node types.
     let per_node = off.jobs_per_node();
     assert!(per_node.iter().all(|&n| n > 0), "both nodes serve jobs: {per_node:?}");
+}
+
+// ---- cross-node checkpoint migration ---------------------------------
+
+/// Two 1xV100 nodes under round-robin dispatch (cursor order makes the
+/// dance hand-computable): hog -> node 0, filler -> node 1, and the
+/// heavy late arrival -> node 0, where it blocks and evicts the hog.
+fn migration_cfg(migrate: &'static str) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(v100x1(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "rr",
+        preempt: Some(PreemptConfig { migrate, ..PreemptConfig::default() }),
+        latency: LatencyModel::off(),
+    }
+}
+
+/// hog holds 12 GB for 120 s on node 0; the 12 GB heavy that evicts it
+/// at t = 5 then occupies the node for its own 100 s — so by the time
+/// the hog's checkpoint image is written, its home node has *filled*
+/// and a same-node restore strands it behind the heavy's residency.
+fn migration_jobs() -> Vec<mgb::coordinator::JobSpec> {
+    vec![
+        synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
+        synthetic_job("filler", JobClass::Small, 1 << 30, 1_000_000, 0.0),
+        synthetic_job("heavy", JobClass::Large, 12 << 30, 100_000_000, 5.0),
+    ]
+}
+
+#[test]
+fn victim_migrates_when_its_home_node_fills_mid_checkpoint() {
+    // Same-node-only restore: the hog re-queues on node 0 behind the
+    // very heavy that evicted it and waits out its ~103 s residency.
+    let off = run_cluster(migration_cfg("off"), migration_jobs());
+    assert_eq!(off.completed(), 3, "no deadlock either way");
+    assert_eq!((off.migrations, off.migrate_bytes), (0, 0));
+    assert_eq!(off.preemptions, 1);
+    assert_eq!(off.jobs[0].node, 0, "restore is pinned to the home node");
+    assert!(off.jobs[0].ended > 200.0, "hog strands behind the heavy: {}", off.jobs[0].ended);
+    // Cluster-wide restore: the saved reservation set re-enters the
+    // frontend, the rr cursor routes it to node 1 (idle since the
+    // filler finished), and the hog restores as soon as its 12 GiB
+    // image lands there — ~90 s sooner.
+    let on = run_cluster(migration_cfg("cluster"), migration_jobs());
+    assert_eq!(on.completed(), 3, "migration must not lose anybody");
+    assert_eq!(on.preemptions, 1);
+    assert_eq!(on.migrations, 1, "exactly one cross-node restore");
+    assert_eq!(on.migrate_bytes, 12 << 30, "the full image crossed the link");
+    assert_eq!(on.jobs[0].node, 1, "the hog finishes on the other node");
+    assert!(on.jobs[0].ended < 160.0, "migrated restore escapes the wait: {}", on.jobs[0].ended);
+    assert!(on.jobs[0].ended > 130.0, "but still pays transfer + restore + full kernel");
+    // The eviction beneficiary is untouched by where the victim went.
+    assert_eq!(on.jobs[2].started, off.jobs[2].started, "heavy unaffected by migration");
+    assert_eq!(on.jobs[2].ended, off.jobs[2].ended);
+}
+
+#[test]
+fn migrate_off_fires_no_migration_events_and_replays_bit_identically() {
+    // `--migrate off` IS the default, and must take the exact PR-2/PR-4
+    // restore path: a preempting run fires the checkpoint protocol but
+    // never a MigrateArrive, and the full event stream replays
+    // byte-for-byte (the committed golden fixtures lock the
+    // preemption-disabled paths across PRs; this locks the enabled,
+    // unmigrated ones within one).
+    assert_eq!(PreemptConfig::default().migrate, "off");
+    let (a, ta) = run_cluster_traced(migration_cfg("off"), migration_jobs());
+    let (b, tb) = run_cluster_traced(migration_cfg("off"), migration_jobs());
+    assert_eq!(ta, tb, "migrate-off preemption replays bit-identically");
+    assert_eq!(a.makespan, b.makespan);
+    assert!(ta.iter().any(|l| l.contains("CkptBegin")), "scenario must preempt");
+    assert!(ta.iter().any(|l| l.contains("CkptDone")));
+    assert!(ta.iter().any(|l| l.contains("Restart")));
+    assert!(
+        !ta.iter().any(|l| l.contains("MigrateArrive")),
+        "migrate off must never push a migration event"
+    );
+    // And the cluster mode is what introduces them — nothing else.
+    let (_, tc) = run_cluster_traced(migration_cfg("cluster"), migration_jobs());
+    assert_eq!(
+        tc.iter().filter(|l| l.contains("MigrateArrive")).count(),
+        1,
+        "cluster restore lands exactly once"
+    );
+}
+
+#[test]
+fn migrating_restore_never_routes_to_a_node_that_cannot_hold_it() {
+    // Memory-oblivious dispatch (rr) would send the evicted hog's
+    // restore to the 8 GB node by cursor order — where its 12 GB saved
+    // reservation can never re-place and the drain fallback would
+    // misreport a crash. The frontend must override the infeasible
+    // route and land the restore back home, where it simply waits out
+    // the heavy like a same-node restore.
+    let small = NodeSpec {
+        gpus: vec![GpuSpec { mem_bytes: 8 << 30, ..GpuSpec::v100() }],
+        cpu_cores: 8,
+        name: "1xSmall".into(),
+    };
+    let cfg = ClusterConfig {
+        cluster: ClusterSpec::of(vec![v100x1(), small]),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "rr",
+        preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
+        latency: LatencyModel::off(),
+    };
+    let jobs = vec![
+        synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
+        synthetic_job("filler", JobClass::Small, 1 << 30, 1_000_000, 0.0),
+        synthetic_job("heavy", JobClass::Large, 12 << 30, 100_000_000, 5.0),
+    ];
+    let r = run_cluster(cfg, jobs);
+    assert_eq!(r.crashed(), 0, "the restore must not die to an infeasible route");
+    assert_eq!(r.completed(), 3);
+    assert_eq!(r.preemptions, 1);
+    assert_eq!(r.migrations, 0, "falling back home is not a migration");
+    assert_eq!(r.jobs[0].node, 0, "the hog lands back on the only node that fits it");
+    assert!(r.jobs[0].ended > 200.0, "home restore waits out the heavy: {}", r.jobs[0].ended);
+}
+
+#[test]
+fn reprobe_guard_arms_over_a_migrating_restore_journey() {
+    // Migration + `--reprobe-after`: the restore job is an RPC like any
+    // arrival, so a landing delay (RTT 0.1 + dispatch 2.0) above the
+    // staleness bound (1.8) puts a ReProbe guard on its routing too.
+    // Scenario (least-loaded, so the guard arms): hog (12 GB, 120 s
+    // est) -> node 0; busy (1 GB, 150 s est) -> node 1; the heavy
+    // (12 GB, 200 s) routes to node 0 — the *lighter* queue — blocks,
+    // and evicts the hog. The migration decision then sees node 0
+    // carrying the heavy's 200 s vs busy's 150 s and routes the restore
+    // cross-node; its re-probe fires at the bound, re-snapshots,
+    // confirms (loads did not flip), and the landing commits at the
+    // original instant plus the image transfer. Each of the hog's two
+    // guarded journeys — arrival and restore — spends one re-probe.
+    let lat = LatencyModel {
+        probe_rtt_s: 0.1,
+        dispatch_base_s: 2.0,
+        reprobe_after_s: 1.8,
+        reprobe_budget: 2,
+        ..LatencyModel::default()
+    };
+    let cfg = || ClusterConfig {
+        cluster: ClusterSpec::homogeneous(v100x1(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "least",
+        preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
+        latency: lat.clone(),
+    };
+    let jobs = || {
+        vec![
+            synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
+            synthetic_job("busy", JobClass::Small, 1 << 30, 150_000_000, 0.0),
+            synthetic_job("heavy", JobClass::Large, 12 << 30, 200_000_000, 5.0),
+        ]
+    };
+    let (a, ta) = run_cluster_traced(cfg(), jobs());
+    let (b, tb) = run_cluster_traced(cfg(), jobs());
+    assert_eq!(ta, tb, "guarded migration replays bit-for-bit");
+    assert_eq!(a.completed(), 3);
+    assert_eq!(a.preemptions, 1);
+    assert_eq!(a.migrations, 1, "the restore landed cross-node");
+    assert_eq!(a.migrate_bytes, 12 << 30);
+    assert_eq!(a.jobs[0].node, 1, "hog finishes on the busy-but-lighter node");
+    let hog_reprobes = ta.iter().filter(|l| l.contains("ReProbe { job: 0 }")).count();
+    assert_eq!(
+        hog_reprobes, 2,
+        "one guarded arrival + one guarded restore journey: {hog_reprobes}"
+    );
+    assert_eq!(ta.iter().filter(|l| l.contains("MigrateArrive { job: 0 }")).count(), 1);
+    // The confirmed landing pays RTT + dispatch + the 12 GiB transfer
+    // after the checkpoint — the hog cannot be running again before it.
+    assert!(a.jobs[0].ended > 130.0 && a.jobs[0].ended < 160.0, "{}", a.jobs[0].ended);
+}
+
+#[test]
+fn reprobe_redirects_a_migrating_restore_whose_target_stales() {
+    // The other half of the satellite: a re-probe may *redirect* a
+    // restore. The lever is a completion inside the staleness window —
+    // under least-loaded, arrivals are biased away from the restore's
+    // chosen node by its own re-charge, so only an un-charge can flip
+    // the ranking. Timeline (rtt 0.1, dispatch 2.0, bound 1.8):
+    //
+    //   t=0    hog (12 GB, 120 s est) -> n0; busy (1 GB, 150 s) -> n1
+    //   t=1    shortie (1 GB, 6 s) -> n0 (126 total), done ~9.38
+    //   t=5    heavy (12 GB, 147 s) -> n0 (lighter: 126 < 150), blocks,
+    //          evicts the hog; CkptDone ~8.22
+    //   t~8.22 restore decision: n0 = 147+6 = 153 > n1 = 150 -> route
+    //          n1 (cross-node: the 12 GiB transfer arms the guard)
+    //   t~9.38 shortie finishes: n0 drops to 147
+    //   t~10.0 ReProbe: n0 = 147 < n1 = 150 -> REDIRECT home; the
+    //          image transfer is aborted (xfer drops to zero), the
+    //          redirected journey is guarded once more and confirms
+    //   t~12.1 MigrateArrive on n0 = home: no migration is counted and
+    //          no bytes crossed; the hog then waits out the heavy.
+    let lat = LatencyModel {
+        probe_rtt_s: 0.1,
+        dispatch_base_s: 2.0,
+        reprobe_after_s: 1.8,
+        reprobe_budget: 3,
+        ..LatencyModel::default()
+    };
+    let cfg = || ClusterConfig {
+        cluster: ClusterSpec::homogeneous(v100x1(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "least",
+        preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
+        latency: lat.clone(),
+    };
+    let jobs = || {
+        vec![
+            synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
+            synthetic_job("busy", JobClass::Small, 1 << 30, 150_000_000, 0.0),
+            synthetic_job("shortie", JobClass::Small, 1 << 30, 6_000_000, 1.0),
+            synthetic_job("heavy", JobClass::Large, 12 << 30, 147_000_000, 5.0),
+        ]
+    };
+    let (a, ta) = run_cluster_traced(cfg(), jobs());
+    let (b, tb) = run_cluster_traced(cfg(), jobs());
+    assert_eq!(ta, tb, "redirected migration replays bit-for-bit");
+    assert_eq!(a.completed(), 4);
+    assert_eq!(a.preemptions, 1);
+    assert_eq!(a.jobs[0].node, 0, "the redirect sends the restore back home");
+    assert_eq!(a.migrations, 0, "a home landing is not a migration");
+    assert_eq!(a.migrate_bytes, 0, "the aborted transfer shipped nothing");
+    // Three guarded decisions for the hog: arrival, the cross-node
+    // restore (redirected), and the redirected journey (confirmed).
+    let hog_reprobes = ta.iter().filter(|l| l.contains("ReProbe { job: 0 }")).count();
+    assert_eq!(hog_reprobes, 3, "arrival + redirected restore + confirm: {hog_reprobes}");
+    assert_eq!(ta.iter().filter(|l| l.contains("MigrateArrive { job: 0 }")).count(), 1);
+    // Landing home (~12.1 s), the hog re-places only after the heavy's
+    // 147 s residency — it pays for the dispatcher's choice, not the
+    // transfer it never made.
+    assert!(a.jobs[0].ended > 250.0 && a.jobs[0].ended < 300.0, "{}", a.jobs[0].ended);
 }

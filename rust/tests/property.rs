@@ -232,7 +232,13 @@ fn prop_random_batches_conserve_jobs_and_memory_safety() {
             .map(|i| {
                 let c = compiled(rng);
                 let trace = interpret(&c, &[1 << 20]).expect("interprets");
-                JobSpec { name: format!("rand-{i}"), class: JobClass::Small, trace, arrival: 0.0 }
+                JobSpec {
+                    name: format!("rand-{i}"),
+                    class: JobClass::Small,
+                    trace,
+                    arrival: 0.0,
+                    slo: None,
+                }
             })
             .collect();
         let workers = 1 + rng.below(12);
@@ -263,6 +269,7 @@ fn prop_placements_always_fit_free_memory() {
                 mem_bytes: (rng.below(18) as u64) << 30,
                 tbs: 1 + rng.below(2000) as u64,
                 warps_per_tb: 1 + rng.below(8) as u64,
+                slo: None,
             };
             if let Some(d) = policy.place((i, 0), &req, &views) {
                 assert!(
