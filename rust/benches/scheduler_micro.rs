@@ -2,7 +2,10 @@
 //! micro-benchmarks: placement decision latency (the paper's "very
 //! simple to minimize the runtime overheads" claim for Alg. 3 vs the
 //! SM-mirroring Alg. 2), compiler pass cost, lazy-runtime interpretation
-//! throughput, and full batch-simulation wall time.
+//! throughput, full batch-simulation wall time, and the fleet-scale
+//! `bench scale` sweep (calendar queue vs `BinaryHeap` reference),
+//! which rewrites `BENCH_SCALE.json` at the repo root on every run.
+//! Set `MGB_SKIP_SCALE=1` to skip the sweep's 1000-node rows locally.
 
 use mgb::bench_harness::time_it;
 use mgb::compiler::compile;
@@ -80,4 +83,26 @@ fn main() {
             jobs128.clone(),
         );
     });
+
+    // -- fleet-scale event-core sweep -----------------------------------
+    // Each row runs once per backend (the rows are whole cluster
+    // simulations; iterating them criterion-style would take hours).
+    // The full sweep also rewrites BENCH_SCALE.json at the repo root —
+    // the artifact CI's regression gate compares against.
+    println!();
+    if std::env::var_os("MGB_SKIP_SCALE").is_some() {
+        let r = mgb::bench_harness::scale_smoke_point(mgb::bench_harness::DEFAULT_SEED);
+        println!(
+            "scale smoke {:<10} events={} peak_events={} heap={:.0}ev/s calendar={:.0}ev/s \
+             speedup={:.2}x (MGB_SKIP_SCALE set; BENCH_SCALE.json not rewritten)",
+            r.label,
+            r.events,
+            r.peak_events,
+            r.baseline_events_per_s,
+            r.events_per_s,
+            r.speedup_vs_baseline()
+        );
+    } else {
+        mgb::bench_harness::scale(mgb::bench_harness::DEFAULT_SEED).print();
+    }
 }

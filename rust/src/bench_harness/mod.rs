@@ -16,6 +16,7 @@ mod latency;
 mod migrate;
 mod nn128;
 mod preempt;
+mod scale;
 mod table2;
 mod table3;
 mod table4;
@@ -35,6 +36,10 @@ pub use latency::{
 pub use migrate::{migrate, migrate_comparison, MIGRATE_RTT_SWEEP};
 pub use nn128::nn128;
 pub use preempt::preempt;
+pub use scale::{
+    bench_scale_json, calibration_events_per_s, run_point, scale, scale_smoke_point, ScalePoint,
+    ScaleRow, RATE_PER_NODE, SWEEP,
+};
 pub use table2::table2;
 pub use table3::table3;
 pub use table4::table4;
@@ -150,6 +155,10 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         "preempt" => preempt(seed),
         "latency" => latency(seed),
         "migrate" => migrate(seed),
+        // Not in `run_all`: the 1000-node rows take minutes, and the
+        // sweep writes BENCH_SCALE.json at the repo root as a side
+        // effect — run it deliberately (`bench --exp scale`).
+        "scale" => scale(seed),
         _ => return None,
     })
 }

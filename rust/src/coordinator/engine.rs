@@ -205,14 +205,23 @@ enum CEv {
 
 const NO_ARTIFACT: u32 = u32::MAX;
 
+/// "No device" sentinel in the per-job `task_dev` slab.
+const NO_DEV: u32 = u32::MAX;
+
 /// Compact one trace, interning artifact names through a hash map (a
-/// linear rescan of `names` per launch was O(n²) across a batch).
+/// linear rescan of `names` per launch was O(n²) across a batch). All
+/// string work happens here, once per batch — the stepping loop only
+/// ever touches `u32` artifact ids. Also returns the job's task-id
+/// bound (max task id + 1): runtime task ids are dense by construction
+/// (static tasks first, dynamic ids appended in order), so the bound
+/// sizes the per-job task slabs (`task_dev` / `task_req` / the ledger)
+/// that replace per-event `HashMap` lookups with direct indexing.
 fn compact_trace(
     trace: &JobTrace,
     names: &mut Vec<String>,
     intern: &mut HashMap<String, u32>,
-) -> Vec<CEv> {
-    trace
+) -> (Vec<CEv>, usize) {
+    let compact: Vec<CEv> = trace
         .events
         .iter()
         .map(|e| match e {
@@ -241,7 +250,20 @@ fn compact_trace(
             TraceEvent::TaskEnd { task } => CEv::TaskEnd { task: *task },
             TraceEvent::Host { micros } => CEv::Host { micros: *micros },
         })
-        .collect()
+        .collect();
+    let n_tasks = compact
+        .iter()
+        .map(|e| match e {
+            CEv::TaskBegin { task, .. }
+            | CEv::Malloc { task, .. }
+            | CEv::Launch { task, .. }
+            | CEv::Free { task, .. }
+            | CEv::TaskEnd { task } => task + 1,
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    (compact, n_tasks)
 }
 
 /// The probe resource vector a `TaskBegin` conveys (§III-B) — built in
@@ -278,8 +300,10 @@ struct JobRt {
     pc: usize,
     /// Cluster node the dispatcher routed this job to.
     node: usize,
-    /// runtime task id -> device (on the job's node).
-    task_dev: HashMap<usize, usize>,
+    /// Runtime task id -> device (on the job's node), dense by task id
+    /// (`NO_DEV` = unplaced). Task ids are dense per job, so a slab
+    /// replaces the HashMap the hot loop hashed on every Launch/Malloc.
+    task_dev: Vec<u32>,
     /// Memory held per open task (reservations + raw allocations).
     ledger: TaskLedger,
     pinned_dev: Option<usize>,
@@ -303,9 +327,10 @@ struct JobRt {
     kernel_work_s: f64,
     /// Checkpoint/restart lifecycle (Normal unless preemption fires).
     phase: JPhase,
-    /// Probe resource vectors of open placed tasks — kept only in
-    /// preemption mode, so a checkpointed task can be re-placed.
-    task_req: HashMap<usize, TaskReq>,
+    /// Probe resource vectors of open placed tasks, dense by task id —
+    /// written only in preemption mode, so a checkpointed task can be
+    /// re-placed.
+    task_req: Vec<Option<TaskReq>>,
     /// Checkpointed open tasks awaiting restore.
     saved: Vec<(usize, TaskReq)>,
     /// Times this job has been preempted (bounds cascading).
@@ -372,10 +397,19 @@ struct Engine<'h> {
     rt: Vec<JobRt>,
     nodes: Vec<NodePlacement>,
     gens: DevGens,
-    /// (node, device, kernel handle) -> job.
-    kernel_owner: HashMap<(usize, usize, usize), usize>,
+    /// Kernel handle -> owning job, one slab per flat device (indexed
+    /// by the shared `DevGens::flat` layout). Each slab holds only the
+    /// device's *resident* kernels (a handful), so a linear scan plus
+    /// `swap_remove` replaces hashing a (node, dev, handle) 3-tuple on
+    /// every launch and completion.
+    kernel_owner: Vec<Vec<(usize, u32)>>,
     evq: EventQueue,
     dispatcher: Box<dyn Dispatcher>,
+    /// Reused dispatcher-snapshot buffer: `dispatch_job` refills it in
+    /// place instead of allocating a fresh `Vec<NodeLoadView>` per
+    /// routing decision (one per arrival / re-probe / migration —
+    /// O(jobs · nodes) allocation traffic at fleet scale).
+    views_scratch: Vec<NodeLoadView>,
     /// Per-node dispatched-but-unfinished load (dispatcher bookkeeping).
     outstanding_us: Vec<u64>,
     outstanding_mem: Vec<u64>,
@@ -456,7 +490,27 @@ pub fn run_cluster(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> RunResult {
 /// order. The golden-trace test harness compares these streams
 /// byte-for-byte across runs and against committed fixtures.
 pub fn run_cluster_traced(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> (RunResult, Vec<String>) {
-    run_cluster_inner(cfg, jobs, None, true)
+    run_cluster_inner(cfg, jobs, None, true, false)
+}
+
+/// `run_cluster` on an explicitly named event-queue backend: `"heap"`
+/// selects the pre-overhaul `BinaryHeap` reference backend, any other
+/// name the default calendar queue. Both realise the same (t, seq)
+/// total order — `bench scale` runs every sweep row on each so the
+/// overhaul's speedup is measured in one binary rather than asserted,
+/// and the golden-trace tests replay the two byte-for-byte.
+pub fn run_cluster_on_backend(cfg: ClusterConfig, jobs: Vec<JobSpec>, backend: &str) -> RunResult {
+    run_cluster_inner(cfg, jobs, None, false, backend == "heap").0
+}
+
+/// [`run_cluster_traced`] on a named event-queue backend
+/// (see [`run_cluster_on_backend`]).
+pub fn run_cluster_traced_on_backend(
+    cfg: ClusterConfig,
+    jobs: Vec<JobSpec>,
+    backend: &str,
+) -> (RunResult, Vec<String>) {
+    run_cluster_inner(cfg, jobs, None, true, backend == "heap")
 }
 
 /// `run_cluster` plus a real-compute hook invoked per artifact launch.
@@ -465,7 +519,7 @@ pub fn run_cluster_with_hook(
     jobs: Vec<JobSpec>,
     hook: Option<LaunchHook<'_>>,
 ) -> RunResult {
-    run_cluster_inner(cfg, jobs, hook, false).0
+    run_cluster_inner(cfg, jobs, hook, false, false).0
 }
 
 fn run_cluster_inner(
@@ -473,6 +527,7 @@ fn run_cluster_inner(
     jobs: Vec<JobSpec>,
     hook: Option<LaunchHook<'_>>,
     record_trace: bool,
+    heap_backend: bool,
 ) -> (RunResult, Vec<String>) {
     let nodes: Vec<NodePlacement> = cfg
         .cluster
@@ -481,12 +536,17 @@ fn run_cluster_inner(
         .map(|n| NodePlacement::new(n, &cfg.mode, cfg.workers_per_node))
         .collect();
     let devs_per_node: Vec<usize> = nodes.iter().map(|n| n.devices.len()).collect();
+    let gens = DevGens::new(&devs_per_node);
+    let n_devs = gens.n_devs();
     let mut artifact_names = Vec::new();
     let mut intern: HashMap<String, u32> = HashMap::new();
-    let compact: Vec<Vec<CEv>> = jobs
-        .iter()
-        .map(|j| compact_trace(&j.trace, &mut artifact_names, &mut intern))
-        .collect();
+    let mut compact = Vec::with_capacity(jobs.len());
+    let mut task_bound = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        let (c, n_tasks) = compact_trace(&j.trace, &mut artifact_names, &mut intern);
+        compact.push(c);
+        task_bound.push(n_tasks);
+    }
     let n_nodes = nodes.len();
     // Clamp negative latency terms: they would schedule events into
     // the past and silently run the virtual clock backwards. An
@@ -494,10 +554,14 @@ fn run_cluster_inner(
     let latency = cfg.latency.sanitized();
     let rt: Vec<JobRt> = jobs
         .iter()
-        .map(|j| JobRt {
+        .zip(&task_bound)
+        .map(|(j, &n_tasks)| JobRt {
             est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
             est_mem_bytes: j.trace.peak_reserved_bytes(),
             reprobe_left: latency.reprobe_budget,
+            task_dev: vec![NO_DEV; n_tasks],
+            task_req: vec![None; n_tasks],
+            ledger: TaskLedger::with_tasks(n_tasks),
             ..JobRt::default()
         })
         .collect();
@@ -507,10 +571,11 @@ fn run_cluster_inner(
         compact,
         artifact_names,
         rt,
-        gens: DevGens::new(&devs_per_node),
-        kernel_owner: HashMap::new(),
-        evq: EventQueue::new(),
+        gens,
+        kernel_owner: vec![Vec::new(); n_devs],
+        evq: if heap_backend { EventQueue::with_heap_backend() } else { EventQueue::new() },
         dispatcher: make_dispatcher(cfg.dispatch),
+        views_scratch: Vec::with_capacity(n_nodes),
         outstanding_us: vec![0; n_nodes],
         outstanding_mem: vec![0; n_nodes],
         // Sanitize the preemption cost model like the latency model: a
@@ -555,28 +620,28 @@ impl<'h> Engine<'h> {
     /// Returns the node index.
     fn dispatch_job(&mut self, job: usize, t: f64) -> usize {
         let dispatch_cost_s = self.latency.dispatch_latency(self.rt[job].est_mem_bytes);
-        let views: Vec<NodeLoadView> = self
-            .nodes
-            .iter()
-            .enumerate()
-            .map(|(i, nd)| NodeLoadView {
-                queued_jobs: nd.job_q.len(),
-                outstanding_work_us: self.outstanding_us[i],
-                outstanding_mem_bytes: self.outstanding_mem[i],
-                free_mem: nd.free_mem(),
-                total_mem: nd.total_mem(),
-                n_gpus: nd.devices.len(),
-                compute_capacity: nd.compute_capacity,
-                taken_at: t,
-                probe_rtt_s: self.latency.probe_rtt(i),
-                dispatch_cost_s,
-            })
-            .collect();
+        // Refill the reused snapshot buffer (taken out of `self` so the
+        // closure below can borrow the other fields freely).
+        let mut views = std::mem::take(&mut self.views_scratch);
+        views.clear();
+        views.extend(self.nodes.iter().enumerate().map(|(i, nd)| NodeLoadView {
+            queued_jobs: nd.job_q.len(),
+            outstanding_work_us: self.outstanding_us[i],
+            outstanding_mem_bytes: self.outstanding_mem[i],
+            free_mem: nd.free_mem(),
+            total_mem: nd.total_mem(),
+            n_gpus: nd.devices.len(),
+            compute_capacity: nd.compute_capacity,
+            taken_at: t,
+            probe_rtt_s: self.latency.probe_rtt(i),
+            dispatch_cost_s,
+        }));
         let info = JobInfo {
             est_work_us: self.rt[job].est_work_us,
             peak_mem_bytes: self.rt[job].est_mem_bytes,
         };
         let mut node = self.dispatcher.route(&info, &views);
+        self.views_scratch = views;
         debug_assert!(node < self.nodes.len(), "dispatcher routed off-cluster");
         if let Some(home) = self.rt[job].migrating_from {
             // A memory-oblivious dispatcher (rr, least) may route a
@@ -863,10 +928,10 @@ impl<'h> Engine<'h> {
             Some(dev) => {
                 let preempt_on = self.preempt.is_some();
                 let rt = &mut self.rt[job];
-                rt.ledger.reserved.insert(task, (dev, req.mem_bytes));
-                rt.task_dev.insert(task, dev);
+                rt.ledger.reserve(task, dev, req.mem_bytes);
+                rt.task_dev[task] = dev as u32;
                 if preempt_on {
-                    rt.task_req.insert(task, *req);
+                    rt.task_req[task] = Some(*req);
                 }
                 true
             }
@@ -1087,13 +1152,13 @@ impl<'h> Engine<'h> {
                         let dev = (res.static_dev.unwrap_or(0) as usize)
                             .min(self.nodes[node].devices.len() - 1);
                         let rt = &mut self.rt[job];
-                        rt.task_dev.insert(task, dev);
+                        rt.task_dev[task] = dev as u32;
                         rt.pc += 1;
                         continue;
                     }
                     if let Some(dev) = self.rt[job].pinned_dev {
                         let rt = &mut self.rt[job];
-                        rt.task_dev.insert(task, dev);
+                        rt.task_dev[task] = dev as u32;
                         rt.pc += 1;
                         continue;
                     }
@@ -1104,7 +1169,7 @@ impl<'h> Engine<'h> {
                         // not task_dev, whose entries outlive TaskEnd —
                         // so a re-begun task id re-probes exactly like
                         // the synchronous path would.
-                        if self.rt[job].ledger.reserved.contains_key(&task) {
+                        if self.rt[job].ledger.has_reservation(task) {
                             if self.rt[job].probe_inflight {
                                 return; // placed; ack still travelling
                             }
@@ -1131,16 +1196,17 @@ impl<'h> Engine<'h> {
                 }
                 CEv::Malloc { task, bytes } => {
                     let rt = &mut self.rt[job];
-                    if rt.ledger.reserved.contains_key(&task) {
+                    if rt.ledger.has_reservation(task) {
                         rt.pc += 1; // covered by the probe's reservation
                         continue;
                     }
-                    let dev = *rt.task_dev.get(&task).expect("task placed");
+                    let dev = rt.task_dev[task];
+                    debug_assert_ne!(dev, NO_DEV, "task placed");
+                    let dev = dev as usize;
                     match self.nodes[node].devices[dev].alloc(bytes) {
                         Ok(()) => {
                             let rt = &mut self.rt[job];
-                            let e = rt.ledger.alloc.entry(task).or_insert((dev, 0));
-                            e.1 += bytes;
+                            rt.ledger.add_alloc(task, dev, bytes);
                             rt.pc += 1;
                         }
                         Err(_avail) => {
@@ -1158,7 +1224,9 @@ impl<'h> Engine<'h> {
                     return;
                 }
                 CEv::Launch { task, artifact, grid, block, work_us } => {
-                    let dev = *self.rt[job].task_dev.get(&task).expect("task placed");
+                    let dev = self.rt[job].task_dev[task];
+                    debug_assert_ne!(dev, NO_DEV, "task placed");
+                    let dev = dev as usize;
                     if artifact != NO_ARTIFACT {
                         if let Some(hook) = self.hook.as_mut() {
                             hook(&self.artifact_names[artifact as usize]);
@@ -1170,7 +1238,8 @@ impl<'h> Engine<'h> {
                     d.advance_to(t);
                     let h = d.start_kernel(t, work_s, warps);
                     let speed = d.spec.speed;
-                    self.kernel_owner.insert((node, dev, h), job);
+                    let fi = self.gens.flat(node, dev);
+                    self.kernel_owner[fi].push((h, job as u32));
                     let rt = &mut self.rt[job];
                     rt.kernel_started = t;
                     rt.kernel_ded = work_s / speed;
@@ -1188,13 +1257,8 @@ impl<'h> Engine<'h> {
                     return; // job sleeps until DevCompletion wakes it
                 }
                 CEv::Free { task, bytes } => {
-                    let rt = &mut self.rt[job];
-                    if !rt.ledger.reserved.contains_key(&task) {
-                        if let Some(e) = rt.ledger.alloc.get_mut(&task) {
-                            let dev = e.0;
-                            e.1 = e.1.saturating_sub(bytes);
-                            self.nodes[node].devices[dev].release(bytes);
-                        }
+                    if let Some(dev) = self.rt[job].ledger.free_alloc(task, bytes) {
+                        self.nodes[node].devices[dev].release(bytes);
                     }
                     self.rt[job].pc += 1;
                 }
@@ -1218,7 +1282,9 @@ impl<'h> Engine<'h> {
         let nd = &mut self.nodes[node];
         let released = self.rt[job].ledger.release_task(&mut nd.devices, task);
         nd.release_policy((job, task));
-        self.rt[job].task_req.remove(&task);
+        if let Some(req) = self.rt[job].task_req.get_mut(task) {
+            *req = None;
+        }
         if released || nd.has_policy() {
             self.wake_waiters(node, t);
         }
@@ -1269,7 +1335,7 @@ impl<'h> Engine<'h> {
             };
             // Bytes the eviction would hand back, per device.
             let mut freed = vec![0u64; self.nodes[node].devices.len()];
-            for &(d, bytes) in rt.ledger.reserved.values() {
+            for (d, bytes) in rt.ledger.reserved_entries() {
                 freed[d] += bytes;
             }
             let held_bytes: u64 = freed.iter().sum();
@@ -1349,9 +1415,9 @@ impl<'h> Engine<'h> {
             d.remove_kernel(t, handle);
             (self.rt[victim].kernel_work_s - rem).max(0.0)
         };
-        self.kernel_owner.remove(&(node, dev, handle));
+        let _ = self.take_kernel_owner(node, dev, handle);
         self.resched_dev(node, dev, t);
-        let held: u64 = self.rt[victim].ledger.reserved.values().map(|&(_, b)| b).sum();
+        let held: u64 = self.rt[victim].ledger.reserved_bytes_total();
         let rt = &mut self.rt[victim];
         rt.inflight = None;
         rt.wasted_s += lost;
@@ -1374,13 +1440,13 @@ impl<'h> Engine<'h> {
         let open = self.rt[victim].ledger.open_tasks();
         let mut saved = Vec::with_capacity(open.len());
         for task in open {
-            if let Some(req) = self.rt[victim].task_req.remove(&task) {
+            if let Some(req) = self.rt[victim].task_req[task].take() {
                 saved.push((task, req));
             }
             let nd = &mut self.nodes[node];
             self.rt[victim].ledger.release_task(&mut nd.devices, task);
             nd.release_policy((victim, task));
-            self.rt[victim].task_dev.remove(&task);
+            self.rt[victim].task_dev[task] = NO_DEV;
         }
         let rt = &mut self.rt[victim];
         rt.saved = saved;
@@ -1502,12 +1568,12 @@ impl<'h> Engine<'h> {
         let mut held = 0u64;
         let rt = &mut self.rt[job];
         for &(task, dev, bytes) in &placed {
-            rt.ledger.reserved.insert(task, (dev, bytes));
-            rt.task_dev.insert(task, dev);
+            rt.ledger.reserve(task, dev, bytes);
+            rt.task_dev[task] = dev as u32;
             held += bytes;
         }
         for &(task, req) in &saved {
-            rt.task_req.insert(task, req);
+            rt.task_req[task] = Some(req);
         }
         rt.phase = JPhase::Restoring;
         let p = self.preempt.as_mut().expect("restore in preempt mode");
@@ -1532,7 +1598,7 @@ impl<'h> Engine<'h> {
             }
         }
         for h in finished {
-            let job = self.kernel_owner.remove(&(node, dev, h)).expect("owned kernel");
+            let job = self.take_kernel_owner(node, dev, h).expect("owned kernel");
             let rt = &mut self.rt[job];
             rt.act_s += t - rt.kernel_started;
             rt.ded_s += rt.kernel_ded;
@@ -1542,6 +1608,16 @@ impl<'h> Engine<'h> {
             self.step_job(job, t);
         }
         self.resched_dev(node, dev, t);
+    }
+
+    /// Detach and return the owner of kernel `h` on `(node, dev)`, if
+    /// the kernel is still owned (a checkpoint may race a same-instant
+    /// completion; whichever fires first takes the entry).
+    fn take_kernel_owner(&mut self, node: usize, dev: usize, h: usize) -> Option<usize> {
+        let fi = self.gens.flat(node, dev);
+        let slab = &mut self.kernel_owner[fi];
+        let i = slab.iter().position(|&(hh, _)| hh == h)?;
+        Some(slab.swap_remove(i).1 as usize)
     }
 
     /// Invalidate the device's pending completion event and push a fresh
@@ -1636,6 +1712,8 @@ impl<'h> Engine<'h> {
             ckpt_overhead_s: self.preempt.as_ref().map_or(0.0, |p| p.overhead_s),
             migrations: self.preempt.as_ref().map_or(0, |p| p.migrations),
             migrate_bytes: self.preempt.as_ref().map_or(0, |p| p.migrate_bytes),
+            events_fired: self.evq.events_fired(),
+            peak_events: self.evq.peak_len(),
         }
     }
 }

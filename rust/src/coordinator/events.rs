@@ -1,11 +1,24 @@
 //! Event-core of the coordinator: the virtual clock, the discrete-event
-//! heap, and the per-device generation counters.
+//! queue, and the per-device generation counters.
 //!
 //! This layer knows nothing about jobs, memory, or policies — it only
 //! orders [`EvKind`] values in virtual time (f64 seconds) with FIFO
 //! tie-breaking, and tracks one generation counter per (node, device)
 //! so a stale completion event (pushed before a membership change on
 //! the device) can be recognised and dropped by the engine.
+//!
+//! The queue itself is an epoch-indexed calendar queue
+//! ([`CalendarQueue`]): events hash into time buckets by an integer
+//! epoch computed *once* at push, so the hot pop path scans one small
+//! bucket instead of paying `BinaryHeap`'s log-depth sift on every
+//! operation. The pre-overhaul `BinaryHeap` survives as a selectable
+//! reference backend ([`EventQueue::with_heap_backend`]) — the
+//! order-equivalence property tests pit the two against each other on
+//! identical streams, and `bench scale` reports both so the speedup is
+//! measured, not asserted. Both backends realise the *same* total
+//! order: earliest `t` first (`f64::total_cmp`), FIFO by `seq` on
+//! same-instant ties — which is why committed golden traces are
+//! byte-identical under either.
 //!
 //! Paper map: the discrete-event clock realises the virtual timeline of
 //! the §V-A deployments (batch at t=0, Poisson arrivals beyond-paper).
@@ -114,24 +127,242 @@ impl Ord for Event {
     }
 }
 
-/// The event heap plus the virtual clock: `now()` is the time of the
+/// `a` pops strictly before `b`: earliest `t` (`total_cmp`), FIFO by
+/// `seq` on ties. The one ordering both backends implement.
+#[inline]
+fn earlier(a: &Event, b: &Event) -> bool {
+    match a.t.total_cmp(&b.t) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.seq < b.seq,
+    }
+}
+
+const MIN_BUCKETS: usize = 16; // power of two; `& mask` replaces `%`
+const MIN_WIDTH: f64 = 1e-9;
+
+/// An event plus its bucket epoch, computed once at insertion. Epochs
+/// are compared by *integer* equality on the pop path — no float
+/// arithmetic can disagree between push and pop about which epoch a
+/// slot belongs to, so bucket membership can never reorder events.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    ev: Event,
+    epoch: u64,
+}
+
+/// Bucketed calendar queue (Brown 1988, adapted): epoch `e` covers
+/// virtual times `[e*width, (e+1)*width)` and maps to bucket
+/// `e & (n_buckets-1)`. Pops scan the current epoch's bucket for the
+/// (t, seq)-minimum; empty epochs advance the epoch cursor, and after
+/// a fruitless full lap the cursor jumps straight to the global
+/// minimum (the queue is sparse far ahead of the clock). Bucket count
+/// doubles/halves with occupancy and the width recalibrates to the
+/// live span on each rebuild, keeping O(1) amortised push/pop for the
+/// engine's near-monotone event streams.
+///
+/// Correctness is width-independent: `floor(t/width)` is monotone in
+/// `t`, every remaining slot's epoch is >= the cursor (pushes clamp to
+/// the cursor, so even a push into the past stays visible and pops in
+/// exact (t, seq) order), and ties within a bucket resolve by the same
+/// `total_cmp`/seq rule as the heap. Width and bucket count only move
+/// *performance*.
+#[derive(Debug)]
+struct CalendarQueue {
+    buckets: Vec<Vec<Slot>>,
+    /// Epoch width in virtual seconds; recalibrated on rebuild.
+    width: f64,
+    /// The epoch cursor: no remaining slot has a smaller epoch.
+    cur_epoch: u64,
+    /// Time of the last popped event; seeds the cursor after rebuilds.
+    floor_t: f64,
+    len: usize,
+}
+
+impl CalendarQueue {
+    fn new() -> Self {
+        CalendarQueue {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            width: 1.0,
+            cur_epoch: 0,
+            floor_t: 0.0,
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `floor(t / width)` as an integer epoch. The `as u64` cast
+    /// saturates for astronomically late events, which degrades those
+    /// to one shared bucket ordered by (t, seq) — still correct.
+    #[inline]
+    fn epoch_of(&self, t: f64) -> u64 {
+        if t <= 0.0 {
+            0
+        } else {
+            (t / self.width) as u64
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        debug_assert!(!ev.t.is_nan(), "event times must not be NaN");
+        // Clamp to the cursor: a slot behind the cursor would be
+        // invisible to the epoch scan. The clamped slot lands in the
+        // bucket scanned next and wins there by its small (t, seq).
+        let epoch = self.epoch_of(ev.t).max(self.cur_epoch);
+        let mask = self.buckets.len() - 1;
+        self.buckets[(epoch as usize) & mask].push(Slot { ev, epoch });
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            let n = self.buckets.len() * 2;
+            self.rebuild(n);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len();
+        let mask = n - 1;
+        for _lap in 0..n {
+            let bucket = &self.buckets[(self.cur_epoch as usize) & mask];
+            let mut best: Option<usize> = None;
+            for (i, s) in bucket.iter().enumerate() {
+                if s.epoch != self.cur_epoch {
+                    continue; // same bucket, later lap of the calendar
+                }
+                if best.is_none_or(|j| earlier(&s.ev, &bucket[j].ev)) {
+                    best = Some(i);
+                }
+            }
+            if let Some(i) = best {
+                return Some(self.take((self.cur_epoch as usize) & mask, i));
+            }
+            // Saturating: once epochs saturate every remaining slot
+            // shares epoch u64::MAX and one bucket orders them all.
+            self.cur_epoch = self.cur_epoch.saturating_add(1);
+        }
+        // A full lap proved epochs [cur, cur+n) empty: the next event
+        // is far ahead of the clock. Jump the cursor straight to the
+        // global (t, seq) minimum — O(len), amortised rare.
+        let mut best: Option<(usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, s) in bucket.iter().enumerate() {
+                if best.is_none_or(|(pb, pi)| earlier(&s.ev, &self.buckets[pb][pi].ev)) {
+                    best = Some((b, i));
+                }
+            }
+        }
+        let (b, i) = best.expect("len > 0");
+        self.cur_epoch = self.buckets[b][i].epoch;
+        Some(self.take(b, i))
+    }
+
+    /// Remove and return slot `i` of bucket `b`, shrinking if sparse.
+    fn take(&mut self, b: usize, i: usize) -> Event {
+        let slot = self.buckets[b].swap_remove(i);
+        self.len -= 1;
+        self.floor_t = slot.ev.t;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            let n = self.buckets.len() / 2;
+            self.rebuild(n);
+        }
+        slot.ev
+    }
+
+    /// Re-bucket every slot into `n_buckets` buckets, recalibrating the
+    /// epoch width so the live events spread over ~len/3 epochs (the
+    /// classic calendar-queue target: a few slots per visited bucket).
+    fn rebuild(&mut self, n_buckets: usize) {
+        let slots: Vec<Slot> = self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        if slots.len() >= 2 {
+            let (mut min_t, mut max_t) = (f64::INFINITY, f64::NEG_INFINITY);
+            for s in &slots {
+                min_t = min_t.min(s.ev.t);
+                max_t = max_t.max(s.ev.t);
+            }
+            let span = max_t - min_t;
+            if span.is_finite() && span > 0.0 {
+                self.width = (3.0 * span / slots.len() as f64).max(MIN_WIDTH);
+            }
+        }
+        self.buckets = vec![Vec::new(); n_buckets.max(MIN_BUCKETS)];
+        self.cur_epoch = self.epoch_of(self.floor_t);
+        let mask = self.buckets.len() - 1;
+        for s in slots {
+            let epoch = self.epoch_of(s.ev.t).max(self.cur_epoch);
+            self.buckets[(epoch as usize) & mask].push(Slot { ev: s.ev, epoch });
+        }
+    }
+}
+
+/// The pluggable ordering structure behind [`EventQueue`].
+#[derive(Debug)]
+enum Backend {
+    /// The calendar queue: the default, O(1) amortised.
+    Calendar(CalendarQueue),
+    /// The pre-overhaul binary heap, kept as the reference backend:
+    /// the property tests replay identical streams through both, and
+    /// `bench scale` runs every sweep row on each so the before/after
+    /// events/sec columns are measured in the same binary.
+    Heap(BinaryHeap<Event>),
+}
+
+/// The event queue plus the virtual clock: `now()` is the time of the
 /// most recently popped event (0.0 before the first pop).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub(crate) struct EventQueue {
-    heap: BinaryHeap<Event>,
+    backend: Backend,
     seq: u64,
     now: f64,
+    /// Total events fired (popped) — the numerator of events/sec.
+    fired: u64,
+    /// High-water mark of queue length — the "peak heap size" column.
+    peak: usize,
     /// Trace-recorder hook: when armed, every *fired* (popped) event is
     /// serialised into one stable line — the golden-trace harness
     /// compares these streams byte-for-byte across runs and against
     /// committed fixtures. `None` (the default) costs the hot loop one
-    /// branch.
+    /// branch and zero allocations.
     trace: Option<Vec<String>>,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+/// Out-of-line so the untraced pop path stays lean; only traced runs
+/// (golden-trace harness) ever enter here.
+#[cold]
+#[inline(never)]
+fn record_line(tr: &mut Vec<String>, e: &Event) {
+    // {:?} on f64 prints the shortest round-trip decimal, so
+    // bit-identical runs serialise to identical strings.
+    tr.push(format!("t={:?} seq={} {:?}", e.t, e.seq, e.kind));
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        EventQueue::default()
+        EventQueue {
+            backend: Backend::Calendar(CalendarQueue::new()),
+            seq: 0,
+            now: 0.0,
+            fired: 0,
+            peak: 0,
+            trace: None,
+        }
+    }
+
+    /// The legacy `BinaryHeap` reference backend (identical ordering
+    /// contract). Selected by the property tests and by `bench scale`'s
+    /// baseline rows via `run_cluster_on_backend("heap")`.
+    pub fn with_heap_backend() -> Self {
+        EventQueue { backend: Backend::Heap(BinaryHeap::new()), ..EventQueue::new() }
     }
 
     /// Arm the trace recorder: subsequent pops are serialised.
@@ -146,53 +377,111 @@ impl EventQueue {
 
     pub fn push(&mut self, t: f64, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Event { t, seq: self.seq, kind });
+        let ev = Event { t, seq: self.seq, kind };
+        match &mut self.backend {
+            Backend::Calendar(c) => c.push(ev),
+            Backend::Heap(h) => h.push(ev),
+        }
+        let len = self.len();
+        if len > self.peak {
+            self.peak = len;
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        let ev = self.heap.pop();
+        let ev = match &mut self.backend {
+            Backend::Calendar(c) => c.pop(),
+            Backend::Heap(h) => h.pop(),
+        };
         if let Some(e) = &ev {
             self.now = e.t;
+            self.fired += 1;
             if let Some(tr) = &mut self.trace {
-                // {:?} on f64 prints the shortest round-trip decimal, so
-                // bit-identical runs serialise to identical strings.
-                tr.push(format!("t={:?} seq={} {:?}", e.t, e.seq, e.kind));
+                record_line(tr, e);
             }
         }
         ev
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            Backend::Calendar(c) => c.len(),
+            Backend::Heap(h) => h.len(),
+        }
     }
 
     /// Virtual time of the last popped event.
     pub fn now(&self) -> f64 {
         self.now
     }
+
+    /// Total events fired so far (monotone; survives draining).
+    pub fn events_fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// High-water mark of queue length over the queue's lifetime.
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
 }
 
-/// One generation counter per (node, device). Bumping invalidates every
-/// completion event pushed under an older generation.
+/// One generation counter per (node, device), stored flat: node
+/// strides are prefix sums, so `current` is two indexed loads instead
+/// of chasing a nested `Vec<Vec<_>>`'s second indirection on every
+/// completion event. The flat index is shared with the engine's
+/// per-device slabs (kernel ownership) so every per-device table uses
+/// one layout.
 #[derive(Debug)]
-pub(crate) struct DevGens(Vec<Vec<u64>>);
+pub(crate) struct DevGens {
+    /// One counter per device, nodes concatenated in cluster order.
+    gens: Vec<u64>,
+    /// `base[n]` = flat index of node n's device 0; `base[n_nodes]` =
+    /// total device count.
+    base: Vec<usize>,
+}
 
 impl DevGens {
     /// `devs_per_node[n]` = number of devices on node `n`.
     pub fn new(devs_per_node: &[usize]) -> Self {
-        DevGens(devs_per_node.iter().map(|&d| vec![0; d]).collect())
+        let mut base = Vec::with_capacity(devs_per_node.len() + 1);
+        let mut total = 0;
+        for &d in devs_per_node {
+            base.push(total);
+            total += d;
+        }
+        base.push(total);
+        DevGens { gens: vec![0; total], base }
+    }
+
+    /// Flat slab index of `(node, dev)`.
+    #[inline]
+    pub fn flat(&self, node: usize, dev: usize) -> usize {
+        debug_assert!(dev < self.base[node + 1] - self.base[node], "device off node");
+        self.base[node] + dev
+    }
+
+    /// Total device count across the cluster (the slab length).
+    pub fn n_devs(&self) -> usize {
+        self.gens.len()
     }
 
     /// Advance the counter and return the new generation.
     pub fn bump(&mut self, node: usize, dev: usize) -> u64 {
-        self.0[node][dev] += 1;
-        self.0[node][dev]
+        let i = self.flat(node, dev);
+        self.gens[i] += 1;
+        self.gens[i]
     }
 
     pub fn current(&self, node: usize, dev: usize) -> u64 {
-        self.0[node][dev]
+        self.gens[self.flat(node, dev)]
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::rng::Rng;
 
     #[test]
     fn pops_in_time_order_fifo_on_ties() {
@@ -295,6 +584,24 @@ mod tests {
     }
 
     #[test]
+    fn fired_and_peak_counters_track_queue_pressure() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.events_fired(), 0);
+        assert_eq!(q.peak_len(), 0);
+        q.push(1.0, EvKind::Wake { job: 0 });
+        q.push(2.0, EvKind::Wake { job: 1 });
+        q.push(3.0, EvKind::Wake { job: 2 });
+        assert_eq!(q.peak_len(), 3);
+        q.pop();
+        q.push(4.0, EvKind::Wake { job: 3 });
+        assert_eq!(q.peak_len(), 3, "pop+push stays at the high-water mark");
+        while q.pop().is_some() {}
+        assert_eq!(q.events_fired(), 4);
+        assert_eq!(q.peak_len(), 3, "draining does not reset the peak");
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
     fn generations_invalidate_stale_events() {
         let mut g = DevGens::new(&[2, 1]);
         assert_eq!(g.current(0, 1), 0);
@@ -307,5 +614,131 @@ mod tests {
         // Other devices are unaffected.
         assert_eq!(g.current(0, 0), 0);
         assert_eq!(g.current(1, 0), 0);
+    }
+
+    #[test]
+    fn flat_indexing_spans_heterogeneous_nodes() {
+        // 2 + 1 + 3 devices: the flat slab is [n0d0, n0d1, n1d0, n2d0,
+        // n2d1, n2d2] and bumps on one node never alias another.
+        let mut g = DevGens::new(&[2, 1, 3]);
+        assert_eq!(g.n_devs(), 6);
+        assert_eq!(g.flat(0, 0), 0);
+        assert_eq!(g.flat(0, 1), 1);
+        assert_eq!(g.flat(1, 0), 2);
+        assert_eq!(g.flat(2, 0), 3);
+        assert_eq!(g.flat(2, 2), 5);
+        g.bump(0, 1);
+        g.bump(2, 0);
+        g.bump(2, 0);
+        assert_eq!(g.current(0, 1), 1);
+        assert_eq!(g.current(2, 0), 2);
+        // Flat neighbours of the bumped devices stay untouched — the
+        // stride math does not bleed across node boundaries.
+        assert_eq!(g.current(0, 0), 0);
+        assert_eq!(g.current(1, 0), 0, "node 1 sits between the bumped devices");
+        assert_eq!(g.current(2, 1), 0);
+        assert_eq!(g.current(2, 2), 0);
+    }
+
+    fn assert_same_pop(a: Option<Event>, b: Option<Event>) {
+        match (a, b) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.t.to_bits(), y.t.to_bits(), "time diverged: {} vs {}", x.t, y.t);
+                assert_eq!(x.seq, y.seq, "FIFO tie-break diverged at t={}", x.t);
+                assert_eq!(x.kind, y.kind);
+            }
+            (x, y) => panic!("one backend drained early: {x:?} vs {y:?}"),
+        }
+    }
+
+    #[test]
+    fn calendar_pops_exactly_like_the_heap_on_10k_random_events() {
+        // The determinism contract of the overhaul: on 10k random
+        // (time, seq) events — including bursts of same-instant ties —
+        // the calendar queue's pop stream is *identical* to the binary
+        // heap's, element for element, under interleaved pushes and
+        // pops (which exercise the epoch cursor, lap skips, and both
+        // resize directions mid-stream).
+        let mut rng = Rng::new(0xCA1E5DA2);
+        let mut cal = EventQueue::new();
+        let mut heap = EventQueue::with_heap_backend();
+        let mut pushed = 0usize;
+        while pushed < 10_000 {
+            let burst = (1 + rng.below(8)).min(10_000 - pushed);
+            for _ in 0..burst {
+                // Engine contract: never schedule into the past. Times
+                // mix a coarse grid (many exact ties), µs-scale jitter,
+                // and rare far-future outliers that force epoch laps.
+                let dt = match rng.below(10) {
+                    0..=3 => rng.below(16) as f64 * 0.25,
+                    4..=6 => rng.below(1_000) as f64 * 1e-3,
+                    7 | 8 => rng.below(1_000_000) as f64 * 1e-6,
+                    _ => rng.below(4) as f64 * 1e4,
+                };
+                let job = rng.below(64);
+                cal.push(cal.now() + dt, EvKind::Wake { job });
+                heap.push(heap.now() + dt, EvKind::Wake { job });
+                pushed += 1;
+            }
+            for _ in 0..rng.below(6) {
+                assert_same_pop(cal.pop(), heap.pop());
+            }
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            let done = a.is_none();
+            assert_same_pop(a, b);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(cal.now().to_bits(), heap.now().to_bits());
+        assert_eq!(cal.events_fired(), 10_000);
+        assert_eq!(heap.events_fired(), 10_000);
+        assert_eq!(cal.peak_len(), heap.peak_len(), "lengths tracked identically");
+    }
+
+    #[test]
+    fn calendar_matches_heap_even_for_pushes_behind_the_clock() {
+        // The engine never schedules into the past, but the queue must
+        // not *depend* on that: a push below `now` is clamped into the
+        // current epoch (where its small (t, seq) wins the bucket scan)
+        // and the pop stream still matches the heap exactly.
+        let mut rng = Rng::new(0x0DD0_EA57);
+        let mut cal = EventQueue::new();
+        let mut heap = EventQueue::with_heap_backend();
+        for round in 0..2_000 {
+            // Absolute times, uncorrelated with the clock — roughly half
+            // land behind `now` once pops begin.
+            let t = rng.below(1_000) as f64 * 0.125;
+            cal.push(t, EvKind::Wake { job: round });
+            heap.push(t, EvKind::Wake { job: round });
+            if rng.below(3) == 0 {
+                assert_same_pop(cal.pop(), heap.pop());
+            }
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            let done = a.is_none();
+            assert_same_pop(a, b);
+            if done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn heap_backend_preserves_the_same_contract() {
+        let mut q = EventQueue::with_heap_backend();
+        q.record_trace();
+        q.push(2.0, EvKind::Wake { job: 3 });
+        q.push(1.0, EvKind::Arrive { job: 0 });
+        while q.pop().is_some() {}
+        let tr = q.take_trace();
+        assert_eq!(tr[0], "t=1.0 seq=2 Arrive { job: 0 }");
+        assert_eq!(tr[1], "t=2.0 seq=1 Wake { job: 3 }");
+        assert_eq!(q.events_fired(), 2);
+        assert_eq!(q.peak_len(), 2);
     }
 }

@@ -88,6 +88,13 @@ pub struct RunResult {
     pub migrations: u64,
     /// Checkpoint-image bytes those migrations shipped across nodes.
     pub migrate_bytes: u64,
+    /// Discrete events the run's event queue fired — the numerator of
+    /// `bench scale`'s events/sec column (wall time is measured by the
+    /// harness; the engine itself never reads a host clock).
+    pub events_fired: u64,
+    /// High-water mark of the event queue's length over the run (the
+    /// peak-heap-size column of `bench scale`).
+    pub peak_events: usize,
 }
 
 impl RunResult {
@@ -229,6 +236,8 @@ mod tests {
             ckpt_overhead_s: 0.0,
             migrations: 0,
             migrate_bytes: 0,
+            events_fired: 0,
+            peak_events: 0,
         }
     }
 

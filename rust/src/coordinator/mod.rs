@@ -39,8 +39,9 @@ mod placement;
 
 pub use crate::sched::{PreemptConfig, SloClass};
 pub use engine::{
-    run_batch, run_batch_with_hook, run_cluster, run_cluster_traced, run_cluster_with_hook,
-    ClusterConfig, JobSpec, RunConfig, SchedMode,
+    run_batch, run_batch_with_hook, run_cluster, run_cluster_on_backend, run_cluster_traced,
+    run_cluster_traced_on_backend, run_cluster_with_hook, ClusterConfig, JobSpec, RunConfig,
+    SchedMode,
 };
 pub use metrics::{JobClass, JobOutcome, RunResult};
 

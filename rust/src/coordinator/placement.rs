@@ -21,30 +21,106 @@
 use super::engine::SchedMode;
 use crate::gpu::{Device, NodeSpec};
 use crate::sched::{make_policy, DeviceView, Policy, TaskKey, TaskReq};
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
+
+/// "Empty slot" sentinel in the ledger's dense device columns.
+const NO_SLOT: u32 = u32::MAX;
 
 /// Per-job memory ledger: what each open task holds, split into the
 /// probe's up-front reservation (memory-safe) and raw allocations
 /// (crashable). Owned by the engine's per-job runtime state; the
 /// release path lives here so reservation/allocation semantics stay in
 /// one module.
+///
+/// Storage is dense by task id (task ids are dense per job, sized up
+/// front via `with_tasks` and grown on demand for stragglers): the
+/// membership checks the stepping loop performs on every Malloc/Free/
+/// TaskBegin are single indexed loads, where the HashMap pair this
+/// replaces hashed the task id each time.
 #[derive(Debug, Default)]
 pub(crate) struct TaskLedger {
-    /// task -> (device, bytes) reserved via probe (policy modes).
-    pub reserved: HashMap<usize, (usize, u64)>,
-    /// task -> (device, bytes) raw-allocated (pinned/static modes).
-    pub alloc: HashMap<usize, (usize, u64)>,
+    /// task -> (device | NO_SLOT, bytes) reserved via probe (policy
+    /// modes).
+    reserved: Vec<(u32, u64)>,
+    /// task -> (device | NO_SLOT, bytes) raw-allocated (pinned/static
+    /// modes). The entry survives `free_alloc` even at 0 bytes — it
+    /// marks the task open — and only `release_task` clears it.
+    alloc: Vec<(u32, u64)>,
 }
 
 impl TaskLedger {
-    /// Distinct tasks still holding memory, in stable (sorted) order.
+    /// An empty ledger pre-sized for task ids `0..n_tasks`.
+    pub fn with_tasks(n_tasks: usize) -> Self {
+        TaskLedger {
+            reserved: vec![(NO_SLOT, 0); n_tasks],
+            alloc: vec![(NO_SLOT, 0); n_tasks],
+        }
+    }
+
+    fn ensure(&mut self, task: usize) {
+        if self.reserved.len() <= task {
+            self.reserved.resize(task + 1, (NO_SLOT, 0));
+            self.alloc.resize(task + 1, (NO_SLOT, 0));
+        }
+    }
+
+    /// Record `task`'s probe reservation of `bytes` on `dev`.
+    pub fn reserve(&mut self, task: usize, dev: usize, bytes: u64) {
+        self.ensure(task);
+        self.reserved[task] = (dev as u32, bytes);
+    }
+
+    /// Whether `task` holds a live probe reservation.
+    #[inline]
+    pub fn has_reservation(&self, task: usize) -> bool {
+        self.reserved.get(task).is_some_and(|&(d, _)| d != NO_SLOT)
+    }
+
+    /// Add `bytes` of raw allocation for `task` on `dev` (the first
+    /// allocation pins the task's device; later ones accumulate bytes).
+    pub fn add_alloc(&mut self, task: usize, dev: usize, bytes: u64) {
+        self.ensure(task);
+        let e = &mut self.alloc[task];
+        if e.0 == NO_SLOT {
+            *e = (dev as u32, bytes);
+        } else {
+            e.1 += bytes;
+        }
+    }
+
+    /// A `cudaFree` of `bytes` by `task`: shrinks the task's raw
+    /// allocation and returns the device to hand the bytes back to.
+    /// `None` when the task's memory is covered by a probe reservation
+    /// (reservations release only at TaskEnd) or it holds no raw
+    /// allocation at all — in both cases the caller frees nothing.
+    pub fn free_alloc(&mut self, task: usize, bytes: u64) -> Option<usize> {
+        if self.has_reservation(task) {
+            return None;
+        }
+        let e = self.alloc.get_mut(task)?;
+        if e.0 == NO_SLOT {
+            return None;
+        }
+        e.1 = e.1.saturating_sub(bytes);
+        Some(e.0 as usize)
+    }
+
+    /// Live probe reservations as `(device, bytes)` pairs (any order;
+    /// callers reduce commutatively).
+    pub fn reserved_entries(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.reserved.iter().filter(|&&(d, _)| d != NO_SLOT).map(|&(d, b)| (d as usize, b))
+    }
+
+    /// Total bytes held under probe reservations.
+    pub fn reserved_bytes_total(&self) -> u64 {
+        self.reserved_entries().map(|(_, b)| b).sum()
+    }
+
+    /// Distinct tasks still holding memory, in stable ascending order
+    /// (dense storage iterates in task-id order by construction).
     pub fn open_tasks(&self) -> Vec<usize> {
-        self.reserved
-            .keys()
-            .chain(self.alloc.keys())
-            .copied()
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
+        (0..self.reserved.len())
+            .filter(|&t| self.reserved[t].0 != NO_SLOT || self.alloc[t].0 != NO_SLOT)
             .collect()
     }
 
@@ -52,15 +128,18 @@ impl TaskLedger {
     /// the node's devices. Returns whether any bytes were released.
     pub fn release_task(&mut self, devices: &mut [Device], task: usize) -> bool {
         let mut released = false;
-        if let Some((dev, bytes)) = self.reserved.remove(&task) {
-            devices[dev].release(bytes);
+        if task >= self.reserved.len() {
+            return false;
+        }
+        let (dev, bytes) = std::mem::replace(&mut self.reserved[task], (NO_SLOT, 0));
+        if dev != NO_SLOT {
+            devices[dev as usize].release(bytes);
             released = true;
         }
-        if let Some((dev, bytes)) = self.alloc.remove(&task) {
-            if bytes > 0 {
-                devices[dev].release(bytes);
-                released = true;
-            }
+        let (dev, bytes) = std::mem::replace(&mut self.alloc[task], (NO_SLOT, 0));
+        if dev != NO_SLOT && bytes > 0 {
+            devices[dev as usize].release(bytes);
+            released = true;
         }
         released
     }
@@ -96,6 +175,14 @@ pub(crate) struct NodePlacement {
     /// cached at construction): the single source the dispatcher's
     /// capability-normalised load views draw from.
     pub compute_capacity: f64,
+    /// Total device memory, cached at construction (device capacities
+    /// never change mid-run): the dispatcher reads `total_mem` for
+    /// every node on every routing decision, and re-summing it was the
+    /// one O(devices) scan left on that path.
+    total_mem_bytes: u64,
+    /// Reused policy-snapshot buffer for `place`: refilled in place
+    /// instead of allocating a fresh `Vec<DeviceView>` per probe.
+    views_scratch: Vec<DeviceView>,
 }
 
 impl NodePlacement {
@@ -115,8 +202,11 @@ impl NodePlacement {
             SchedMode::Policy(name) => Some(make_policy(name, n_gpus)),
             _ => None,
         };
+        let devices: Vec<Device> = spec.gpus.iter().map(|&g| Device::new(g)).collect();
         NodePlacement {
-            devices: spec.gpus.iter().map(|&g| Device::new(g)).collect(),
+            total_mem_bytes: devices.iter().map(|d| d.spec.mem_bytes).sum(),
+            views_scratch: Vec::with_capacity(devices.len()),
+            devices,
             policy,
             job_q: VecDeque::new(),
             wait_q: Vec::new(),
@@ -137,13 +227,11 @@ impl NodePlacement {
     /// task's memory on it. `None` = nothing fits; the caller queues
     /// the job as a waiter.
     pub fn place(&mut self, key: TaskKey, req: &TaskReq) -> Option<usize> {
-        let views: Vec<DeviceView> = self
-            .devices
-            .iter()
-            .map(|d| DeviceView { spec: d.spec, free_mem: d.free_mem })
-            .collect();
+        self.views_scratch.clear();
+        self.views_scratch
+            .extend(self.devices.iter().map(|d| DeviceView { spec: d.spec, free_mem: d.free_mem }));
         let policy = self.policy.as_mut().expect("policy mode");
-        let dev = policy.place(key, req, &views)?;
+        let dev = policy.place(key, req, &self.views_scratch)?;
         self.devices[dev]
             .alloc(req.mem_bytes)
             .expect("policy admitted within free_mem");
@@ -201,9 +289,10 @@ impl NodePlacement {
         self.devices.iter().map(|d| d.free_mem).sum()
     }
 
-    /// Total memory summed across the node's devices.
+    /// Total memory across the node's devices (cached: capacities are
+    /// fixed at construction).
     pub fn total_mem(&self) -> u64 {
-        self.devices.iter().map(|d| d.spec.mem_bytes).sum()
+        self.total_mem_bytes
     }
 }
 
@@ -266,11 +355,62 @@ mod tests {
         let mut n = node();
         let mut ledger = TaskLedger::default();
         n.devices[0].alloc(1 << 30).unwrap();
-        ledger.alloc.insert(0, (0, 1 << 30));
+        ledger.add_alloc(0, 0, 1 << 30);
         assert!(ledger.release_task(&mut n.devices, 0));
         assert_eq!(n.devices[0].free_mem, 16 << 30);
         assert!(!ledger.release_task(&mut n.devices, 0), "second release is a no-op");
         assert_eq!(ledger.open_tasks(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ledger_dense_storage_keeps_hashmap_semantics() {
+        let mut n = node();
+        let mut ledger = TaskLedger::with_tasks(2);
+        // Reservation membership is what gates Malloc/Free semantics.
+        ledger.reserve(1, 2, 4 << 30);
+        assert!(ledger.has_reservation(1));
+        assert!(!ledger.has_reservation(0));
+        assert!(!ledger.has_reservation(99), "out-of-range ids are simply absent");
+        // A reserved task never frees through free_alloc.
+        assert_eq!(ledger.free_alloc(1, 1 << 30), None);
+        // Raw allocations accumulate on the first device used.
+        ledger.add_alloc(0, 3, 1 << 30);
+        ledger.add_alloc(0, 0, 1 << 30); // later dev ignored, bytes added
+        assert_eq!(ledger.free_alloc(0, 3 << 30), Some(3), "frees report the pinned device");
+        // Over-free saturates; the entry stays open until release_task.
+        assert_eq!(ledger.open_tasks(), vec![0, 1]);
+        assert_eq!(ledger.reserved_bytes_total(), 4 << 30);
+        assert_eq!(ledger.reserved_entries().collect::<Vec<_>>(), vec![(2, 4 << 30)]);
+        // Growth on demand past the pre-sized bound.
+        ledger.reserve(7, 0, 1 << 20);
+        assert_eq!(ledger.open_tasks(), vec![0, 1, 7], "ascending task order");
+        // Releasing a fully-freed raw task releases no bytes.
+        let before = n.free_mem();
+        assert!(!ledger.release_task(&mut n.devices, 0), "0-byte leftover frees nothing");
+        assert_eq!(n.free_mem(), before);
+        assert_eq!(ledger.open_tasks(), vec![1, 7]);
+    }
+
+    #[test]
+    fn burst_of_1000_waiters_stays_duplicate_free_in_order() {
+        // Regression guard for the O(1) flag-mirror path: an eviction
+        // storm parks a burst of blocked jobs on one node, and every
+        // failed probe retry re-pushes its job. Membership, insertion
+        // order, and drain-reset semantics must all survive the burst.
+        let mut n = node();
+        for round in 0..3 {
+            for j in 0..1000 {
+                n.push_waiter(j);
+                n.push_waiter(j); // immediate duplicate
+            }
+            for j in 0..1000 {
+                n.push_waiter(j); // late duplicate after the full burst
+            }
+            let drained = n.take_waiters();
+            assert_eq!(drained.len(), 1000, "round {round}: duplicates collapsed");
+            assert_eq!(drained, (0..1000).collect::<Vec<_>>(), "insertion order kept");
+            assert!(n.take_waiters().is_empty());
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
 //!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
@@ -88,7 +88,7 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
         [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]

@@ -125,6 +125,32 @@ fn unknown_experiment_is_rejected() {
 }
 
 #[test]
+fn scale_smoke_row_holds_the_backend_contract() {
+    // The fast row of `bench scale` (the full sweep's 1000-node rows
+    // belong to `cargo bench` / CI, not the test suite). `run_point`
+    // itself asserts calendar-vs-heap determinism (events, peak,
+    // outcomes, makespan); here we pin the row's shape and that the
+    // sweep actually exercises an open-system multi-node run.
+    let r = bench_harness::scale_smoke_point(2);
+    assert_eq!(r.nodes, 2);
+    assert_eq!(r.jobs, 64);
+    assert!(r.events >= r.jobs as u64, "every job fires at least one event");
+    assert!(r.peak_events > 0 && r.peak_events <= r.events as usize);
+    assert!(r.events_per_s > 0.0 && r.baseline_events_per_s > 0.0);
+    assert!(r.speedup_vs_baseline() > 0.0);
+    // And the JSON emitter round-trips the row without structural rot.
+    let json = bench_harness::bench_scale_json("smoke", 2, 1.0, &[r]);
+    assert!(json.contains("\"label\": \"smoke-2n\""));
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+}
+
+#[test]
+fn scale_calibration_row_is_positive_and_heap_backed() {
+    let c = bench_harness::calibration_events_per_s(2);
+    assert!(c > 0.0 && c.is_finite(), "calibration events/sec: {c}");
+}
+
+#[test]
 fn latency_sweep_turnaround_grows_monotonically_with_rtt() {
     // The acceptance criterion for the latency tentpole: on the same
     // open-system stream, mean turnaround must rise monotonically with

@@ -14,7 +14,8 @@
 //! string diff.
 
 use mgb::coordinator::{
-    run_cluster, run_cluster_traced, ClusterConfig, JobSpec, SchedMode,
+    run_cluster, run_cluster_traced, run_cluster_traced_on_backend, ClusterConfig, JobSpec,
+    SchedMode,
 };
 use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
 use mgb::workloads::{poisson_arrivals, synthetic_job, Workload};
@@ -132,6 +133,62 @@ fn golden_w2_four_node_open_system() {
         run_cluster_traced(cfg(4, "least", LatencyModel::off()), mix("W2", Some(0.5)));
     assert_eq!(r.completed() + r.crashed(), 16);
     check_golden("w2_4node_open", &tr);
+}
+
+// ---- backend equivalence (calendar queue vs BinaryHeap reference) ----
+
+#[test]
+fn calendar_backend_fires_byte_identical_streams_to_the_heap() {
+    // The calendar queue replaces the `BinaryHeap` on the engine's hot
+    // path; the heap survives as the reference backend precisely so
+    // this test can demand byte-for-byte equality of the full fired-
+    // event stream — which also pins the calendar backend to the same
+    // committed golden fixtures as the heap, with no second fixture
+    // set to maintain.
+    for (nodes, dispatch, rate) in
+        [(1usize, "rr", None), (4usize, "least", Some(0.5)), (2usize, "least", Some(2.0))]
+    {
+        let jobs = mix("W2", rate);
+        let (a, ta) = run_cluster_traced(cfg(nodes, dispatch, LatencyModel::off()), jobs.clone());
+        let (b, tb) =
+            run_cluster_traced_on_backend(cfg(nodes, dispatch, LatencyModel::off()), jobs, "heap");
+        if ta != tb {
+            let (ln, e, act) = first_divergence(&ta.join("\n"), &tb.join("\n"));
+            panic!("backends diverged ({nodes}n/{dispatch}) at event {ln}:\n  calendar: {e}\n  heap:     {act}");
+        }
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events_fired, b.events_fired);
+        assert_eq!(a.peak_events, b.peak_events);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!((x.started, x.ended, x.node), (y.started, y.ended, y.node));
+        }
+    }
+}
+
+#[test]
+fn backend_equivalence_holds_with_preemption_and_latency_on() {
+    // Same contract under the densest event mix the engine has:
+    // checkpoint/restart preemption plus a nonzero latency model, so
+    // Ckpt*/Restart/Probe*/DispatchArrive kinds all cross the queue
+    // (same-instant ties between them are where a queue-order bug
+    // would hide).
+    let lat = LatencyModel {
+        probe_rtt_s: 0.01,
+        dispatch_base_s: 0.05,
+        frontend_service_s: 0.001,
+        ..LatencyModel::default()
+    };
+    let mut c = cfg(2, "least", lat);
+    c.preempt = Some(mgb::sched::PreemptConfig::default());
+    let jobs = mix("W1", Some(2.0));
+    let (a, ta) = run_cluster_traced(c.clone(), jobs.clone());
+    let (b, tb) = run_cluster_traced_on_backend(c, jobs, "heap");
+    if ta != tb {
+        let (ln, e, act) = first_divergence(&ta.join("\n"), &tb.join("\n"));
+        panic!("backends diverged at event {ln}:\n  calendar: {e}\n  heap:     {act}");
+    }
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.makespan, b.makespan);
 }
 
 // ---- zero-latency bit-identity (the tentpole's acceptance) -----------

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Gate the `bench scale` sweep (BENCH_SCALE.json) in CI.
+
+Two checks, per rust/src/bench_harness/scale.rs:
+
+1. In-run backend gate (always on): every row's calendar-queue
+   events/sec must be >= MIN_SPEEDUP x the BinaryHeap reference
+   measured in the *same* run — same machine, same binary, so no
+   calibration is needed. The calendar queue exists to be faster; a
+   row where it drops below the reference heap is a regression in the
+   queue itself.
+
+2. Committed-baseline gate (arms itself once a *measured* baseline is
+   committed): each row's calibration-normalised events/sec
+   (events_per_s / calibration_events_per_s) must be >= (1 - TOLERANCE)
+   of the committed row's. Normalising by the shared heap-backend
+   calibration row cancels host-CPU speed, so the gate compares code
+   across commits, not runners. A committed file whose provenance is
+   not "measured" (the bootstrap placeholder, hand-estimated before
+   the first toolchain run) only produces a notice: commit the freshly
+   measured file to arm the gate.
+
+Usage:
+  check_bench_scale.py --fresh BENCH_SCALE.json [--committed baseline.json]
+
+Exit 0 = pass, 1 = regression, 2 = malformed input.
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = "mgb-bench-scale-v1"
+# Gate 1: calendar must beat (or at worst approach) the in-run heap
+# reference. 0.8 leaves headroom for timing noise on loaded runners;
+# the sweep's committed trajectory shows multiples, not fractions.
+MIN_SPEEDUP = 0.8
+# Gate 2: >20% drop of normalised events/sec vs the committed baseline
+# fails the build (the ISSUE's regression threshold).
+TOLERANCE = 0.20
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench_scale: cannot read {path}: {e}")
+        sys.exit(2)
+    if doc.get("schema") != SCHEMA:
+        print(f"check_bench_scale: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+        sys.exit(2)
+    for key in ("provenance", "calibration_events_per_s", "rows"):
+        if key not in doc:
+            print(f"check_bench_scale: {path}: missing key {key!r}")
+            sys.exit(2)
+    for row in doc["rows"]:
+        for key in ("label", "nodes", "events", "peak_events",
+                    "baseline_events_per_s", "events_per_s"):
+            if key not in row:
+                print(f"check_bench_scale: {path}: row missing {key!r}: {row}")
+                sys.exit(2)
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_SCALE.json written by this run")
+    ap.add_argument("--committed",
+                    help="baseline BENCH_SCALE.json from git (omit to skip gate 2)")
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    failures = []
+
+    # -- gate 1: in-run calendar-vs-heap ------------------------------
+    for row in fresh["rows"]:
+        base = row["baseline_events_per_s"]
+        cur = row["events_per_s"]
+        speedup = cur / base if base > 0 else 0.0
+        mark = "ok" if speedup >= MIN_SPEEDUP else "FAIL"
+        print(f"  [{mark}] {row['label']:<12} heap={base:>12.0f} ev/s  "
+              f"calendar={cur:>12.0f} ev/s  speedup={speedup:6.2f}x  "
+              f"peak_events={row['peak_events']}")
+        if speedup < MIN_SPEEDUP:
+            failures.append(
+                f"{row['label']}: calendar {cur:.0f} ev/s < "
+                f"{MIN_SPEEDUP}x heap reference {base:.0f} ev/s")
+
+    # -- gate 2: normalised trajectory vs committed baseline ----------
+    if args.committed:
+        committed = load(args.committed)
+        if committed.get("provenance") != "measured":
+            print(f"  committed baseline provenance is "
+                  f"{committed.get('provenance')!r} (not 'measured'); "
+                  f"regression gate not armed — commit a freshly measured "
+                  f"BENCH_SCALE.json to arm it")
+        else:
+            calib_new = fresh["calibration_events_per_s"]
+            calib_old = committed["calibration_events_per_s"]
+            if calib_new <= 0 or calib_old <= 0:
+                print("check_bench_scale: non-positive calibration")
+                sys.exit(2)
+            old_rows = {r["label"]: r for r in committed["rows"]}
+            for row in fresh["rows"]:
+                old = old_rows.get(row["label"])
+                if old is None:
+                    print(f"  [new ] {row['label']}: no committed row, skipping")
+                    continue
+                norm_new = row["events_per_s"] / calib_new
+                norm_old = old["events_per_s"] / calib_old
+                ratio = norm_new / norm_old if norm_old > 0 else 0.0
+                mark = "ok" if ratio >= 1.0 - TOLERANCE else "FAIL"
+                print(f"  [{mark}] {row['label']:<12} normalised "
+                      f"{norm_old:8.3f} -> {norm_new:8.3f}  ({ratio:6.2%})")
+                if ratio < 1.0 - TOLERANCE:
+                    failures.append(
+                        f"{row['label']}: normalised events/sec fell "
+                        f"{1.0 - ratio:.1%} vs committed baseline "
+                        f"(tolerance {TOLERANCE:.0%})")
+                # Simulated columns are machine-independent: a changed
+                # event count against the same committed workload means
+                # the engine's behaviour changed, which belongs in the
+                # golden-trace diff, not a silent perf delta.
+                if row["events"] != old["events"]:
+                    failures.append(
+                        f"{row['label']}: fired {row['events']} events, "
+                        f"committed baseline fired {old['events']} "
+                        f"(determinism drift)")
+
+    if failures:
+        print("\ncheck_bench_scale: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\ncheck_bench_scale: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
