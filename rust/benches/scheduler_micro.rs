@@ -10,7 +10,7 @@
 use mgb::bench_harness::time_it;
 use mgb::compiler::compile;
 use mgb::coordinator::{run_batch, RunConfig, SchedMode};
-use mgb::gpu::{GpuSpec, NodeSpec};
+use mgb::gpu::{GpuSpec, InterferenceProfile, NodeSpec};
 use mgb::lazy::interpret;
 use mgb::sched::{make_policy, DeviceView, TaskReq};
 use mgb::workloads::{Workload, COMBOS};
@@ -22,7 +22,7 @@ fn main() {
     let views: Vec<DeviceView> = (0..4)
         .map(|_| DeviceView { spec: GpuSpec::v100(), free_mem: 8 << 30 })
         .collect();
-    let req = TaskReq { mem_bytes: 2 << 30, tbs: 800, warps_per_tb: 4, slo: None };
+    let req = TaskReq { mem_bytes: 2 << 30, tbs: 800, warps_per_tb: 4, slo: None, iv: InterferenceProfile::ZERO };
     for name in ["mgb3", "mgb2", "schedgpu"] {
         let mut policy = make_policy(name, 4);
         let mut i = 0usize;

@@ -1,0 +1,300 @@
+//! Interference-aware sharing vs MIG-style partitioning (beyond-paper;
+//! ROADMAP "Interference-aware device model"). Two sections:
+//!
+//! * **W5 open-system rows** — the exact `bench cluster` 4-node
+//!   construction (same seeds, same Poisson stamping), run with the
+//!   per-benchmark interference vectors off and on. The off rows must
+//!   reproduce `bench cluster`'s numbers to the bit (the zero-vector
+//!   contract; `bench_smoke` gates on it), so the on rows isolate what
+//!   modeled contention costs the sharing dispatchers.
+//! * **High-pressure mix rows** — small-footprint synthetic jobs
+//!   (2 GiB, so four fit an 8 GiB half-V100 slice) carrying hot
+//!   profiles that fight over DRAM bandwidth, routed by the sharing
+//!   dispatchers vs `--dispatch partition`. Partitioning bounds
+//!   co-residency per isolation domain, so its worst-case per-kernel
+//!   degradation must come in at or below the sharing dispatchers' —
+//!   the predictability-for-peak-throughput trade the report's columns
+//!   make visible.
+//!
+//! Like `bench scale`, the full experiment writes a machine-readable
+//! artifact (`BENCH_INTERFERENCE.json` at the repo root) and is kept
+//! out of `run_all` because of that side effect.
+
+use super::{mgb_workers, Report};
+use crate::coordinator::{run_cluster, ClusterConfig, JobClass, JobSpec, RunResult, SchedMode};
+use crate::gpu::{ClusterSpec, InterferenceProfile, LatencyModel, NodeSpec};
+use crate::workloads::{assign_interference, poisson_arrivals, synthetic_job_with_iv, Workload};
+
+/// One measured row of the interference report.
+#[derive(Clone, Debug)]
+pub struct InterferenceRow {
+    /// Which section produced the row: "w5" or "hot".
+    pub section: &'static str,
+    pub dispatch: &'static str,
+    /// Whether the job mix carried nonzero interference vectors.
+    pub interference: bool,
+    pub nodes: usize,
+    pub jobs: usize,
+    pub completed: usize,
+    pub crashed: usize,
+    pub throughput: f64,
+    pub mean_turnaround_s: f64,
+    /// Time-weighted mean kernel slowdown vs dedicated execution (%).
+    pub kernel_slowdown_pct: f64,
+    /// Worst per-job kernel slowdown (%) — the predictability tail the
+    /// partition dispatcher exists to bound.
+    pub worst_kernel_slowdown_pct: f64,
+}
+
+impl InterferenceRow {
+    fn from_result(
+        section: &'static str,
+        dispatch: &'static str,
+        interference: bool,
+        nodes: usize,
+        r: &RunResult,
+    ) -> Self {
+        InterferenceRow {
+            section,
+            dispatch,
+            interference,
+            nodes,
+            jobs: r.jobs.len(),
+            completed: r.completed(),
+            crashed: r.crashed(),
+            throughput: r.throughput(),
+            mean_turnaround_s: r.mean_turnaround(),
+            kernel_slowdown_pct: r.kernel_slowdown_pct(),
+            worst_kernel_slowdown_pct: r.worst_kernel_slowdown_pct(),
+        }
+    }
+
+    fn line(&self) -> String {
+        format!(
+            "{:<4} nodes={} dispatch={:<9} interference={:<5} jobs={:<3} completed={:<3} \
+             crashed={} throughput={:.4}j/s mean_turnaround={:.1}s \
+             kernel_slowdown={:.2}% worst_kernel_slowdown={:.2}%",
+            self.section,
+            self.nodes,
+            self.dispatch,
+            self.interference,
+            self.jobs,
+            self.completed,
+            self.crashed,
+            self.throughput,
+            self.mean_turnaround_s,
+            self.kernel_slowdown_pct,
+            self.worst_kernel_slowdown_pct
+        )
+    }
+}
+
+fn cluster_cfg(node: &NodeSpec, nodes: usize, dispatch: &'static str) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(node.clone(), nodes),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: mgb_workers(node),
+        dispatch,
+        preempt: None,
+        latency: LatencyModel::off(),
+    }
+}
+
+/// The `bench cluster` job stream, verbatim: `nodes` copies of the W5
+/// mix drawn with distinct seeds, stamped with Poisson arrivals at
+/// [`super::RATE_PER_NODE`] jobs/s per node. Keeping this construction
+/// byte-for-byte identical to `cluster_scale` is what makes the
+/// interference-off rows comparable to (and gated against) the
+/// existing `bench cluster` numbers.
+fn w5_jobs(seed: u64, nodes: usize) -> Vec<JobSpec> {
+    let w5 = Workload::by_id("W5").expect("W5 exists");
+    let mut jobs = Vec::new();
+    for k in 0..nodes as u64 {
+        jobs.extend(w5.jobs(seed.wrapping_add(k)));
+    }
+    poisson_arrivals(&mut jobs, super::RATE_PER_NODE * nodes as f64, seed);
+    jobs
+}
+
+/// One W5 open-system row, with the per-benchmark vectors optionally
+/// stamped on (`workloads::assign_interference` — the `--interference`
+/// CLI mapping).
+pub fn w5_row(seed: u64, nodes: usize, dispatch: &'static str, interference: bool) -> InterferenceRow {
+    let node = NodeSpec::v100x4();
+    let mut jobs = w5_jobs(seed, nodes);
+    if interference {
+        assign_interference(&mut jobs);
+    }
+    let r = run_cluster(cluster_cfg(&node, nodes, dispatch), jobs);
+    InterferenceRow::from_result("w5", dispatch, interference, nodes, &r)
+}
+
+const HOT_JOBS_PER_NODE: usize = 24;
+/// 2 GiB footprint: four jobs fit one 8 GiB half-V100 slice, eight fit
+/// a whole V100 — partitioning halves the worst-case co-residency.
+const HOT_MEM_BYTES: u64 = 2 << 30;
+const HOT_WORK_US: u64 = 6_000_000;
+/// Arrival rate per node (jobs/s). Above the dedicated-rate service
+/// capacity, so devices actually co-schedule and the vectors bite.
+const HOT_RATE_PER_NODE: f64 = 1.0;
+
+/// The high-pressure mix: two in three jobs hammer DRAM bandwidth, the
+/// third is SM-bound, all with footprints that fit a half-V100 slice.
+fn hot_jobs(seed: u64, nodes: usize, interference: bool) -> Vec<JobSpec> {
+    let n = HOT_JOBS_PER_NODE * nodes;
+    let mut jobs: Vec<JobSpec> = (0..n)
+        .map(|i| {
+            let (tag, iv) = if i % 3 == 2 {
+                ("sm", InterferenceProfile::new(0.3, 0.25, 0.8))
+            } else {
+                ("bw", InterferenceProfile::new(0.8, 0.45, 0.55))
+            };
+            let iv = if interference { iv } else { InterferenceProfile::ZERO };
+            synthetic_job_with_iv(
+                &format!("hot#{i:02}-{tag}"),
+                JobClass::Small,
+                HOT_MEM_BYTES,
+                HOT_WORK_US,
+                0.0,
+                iv,
+            )
+        })
+        .collect();
+    poisson_arrivals(&mut jobs, HOT_RATE_PER_NODE * nodes as f64, seed);
+    jobs
+}
+
+/// One high-pressure-mix row.
+pub fn hot_row(seed: u64, nodes: usize, dispatch: &'static str, interference: bool) -> InterferenceRow {
+    let node = NodeSpec::v100x4();
+    let jobs = hot_jobs(seed, nodes, interference);
+    let r = run_cluster(cluster_cfg(&node, nodes, dispatch), jobs);
+    InterferenceRow::from_result("hot", dispatch, interference, nodes, &r)
+}
+
+/// The sharing-vs-partition comparison `bench_smoke` gates on: the
+/// 2-node high-pressure mix with vectors on, under least-loaded,
+/// memory-headroom, and partitioned dispatch. Partition's worst-case
+/// per-kernel degradation must not exceed either sharing dispatcher's.
+pub fn hot_mix_comparison(seed: u64) -> Vec<InterferenceRow> {
+    ["least", "mem", "partition"]
+        .into_iter()
+        .map(|d| hot_row(seed, 2, d, true))
+        .collect()
+}
+
+/// Render the machine-readable `BENCH_INTERFERENCE.json` document
+/// (hand-rolled like the rest of the crate's JSON — the offline crate
+/// set has no serde).
+pub fn bench_interference_json(provenance: &str, seed: u64, rows: &[InterferenceRow]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"mgb-bench-interference-v1\",\n");
+    s.push_str(&format!("  \"provenance\": \"{provenance}\",\n"));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"section\": \"{}\", \"dispatch\": \"{}\", \"interference\": {}, \
+             \"nodes\": {}, \"jobs\": {}, \"completed\": {}, \"crashed\": {}, \
+             \"throughput\": {:.6}, \"mean_turnaround_s\": {:.6}, \
+             \"kernel_slowdown_pct\": {:.4}, \"worst_kernel_slowdown_pct\": {:.4}}}{}\n",
+            r.section,
+            r.dispatch,
+            r.interference,
+            r.nodes,
+            r.jobs,
+            r.completed,
+            r.crashed,
+            r.throughput,
+            r.mean_turnaround_s,
+            r.kernel_slowdown_pct,
+            r.worst_kernel_slowdown_pct,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The `bench --exp interference` entry: W5 rows off/on under the
+/// sharing dispatchers, the high-pressure mix under sharing vs
+/// partition (off rows for the partition baseline ride along), then
+/// write `BENCH_INTERFERENCE.json` at the repo root. Deliberately not
+/// part of `run_all` (the JSON write is a side effect).
+pub fn interference(seed: u64) -> Report {
+    let mut rows = Vec::new();
+    for interference in [false, true] {
+        for dispatch in ["least", "mem"] {
+            rows.push(w5_row(seed, 4, dispatch, interference));
+        }
+    }
+    for dispatch in ["least", "partition"] {
+        rows.push(hot_row(seed, 2, dispatch, false));
+    }
+    rows.extend(hot_mix_comparison(seed));
+
+    let mut lines: Vec<String> = rows.iter().map(InterferenceRow::line).collect();
+    let json = bench_interference_json("measured", seed, &rows);
+    let path =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_INTERFERENCE.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => lines.push(format!("wrote {}", path.display())),
+        Err(e) => lines.push(format!("WARN: could not write {}: {e}", path.display())),
+    }
+    Report {
+        title: "Interference-aware sharing vs partitioned dispatch (W5 + high-pressure mixes)"
+            .into(),
+        lines,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_document_is_well_formed_enough_to_gate_on() {
+        let row = InterferenceRow {
+            section: "hot",
+            dispatch: "partition",
+            interference: true,
+            nodes: 2,
+            jobs: 48,
+            completed: 48,
+            crashed: 0,
+            throughput: 0.5,
+            mean_turnaround_s: 12.25,
+            kernel_slowdown_pct: 8.5,
+            worst_kernel_slowdown_pct: 30.125,
+        };
+        let s = bench_interference_json("measured", 7, &[row]);
+        assert!(s.contains("\"schema\": \"mgb-bench-interference-v1\""));
+        assert!(s.contains("\"dispatch\": \"partition\""));
+        assert!(s.contains("\"interference\": true"));
+        assert!(s.contains("\"worst_kernel_slowdown_pct\": 30.1250"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn hot_mix_construction_is_deterministic_and_slice_sized() {
+        let a = hot_jobs(7, 2, true);
+        let b = hot_jobs(7, 2, true);
+        assert_eq!(a.len(), 2 * HOT_JOBS_PER_NODE);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.trace.peak_interference(), y.trace.peak_interference());
+        }
+        // Every job fits a half-V100 slice, and vectors follow the flag.
+        for j in &a {
+            assert!(
+                j.trace.peak_reserved_bytes() <= 8 << 30,
+                "{} must fit an 8 GiB slice",
+                j.name
+            );
+            assert!(!j.trace.peak_interference().is_zero());
+        }
+        assert!(hot_jobs(7, 2, false).iter().all(|j| j.trace.peak_interference().is_zero()));
+    }
+}

@@ -12,6 +12,7 @@ mod cluster_scale;
 mod fig4;
 mod fig5;
 mod fig6;
+mod interference;
 mod latency;
 mod migrate;
 mod nn128;
@@ -29,6 +30,9 @@ pub use cluster_scale::cluster_scale;
 pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
+pub use interference::{
+    bench_interference_json, hot_mix_comparison, hot_row, interference, w5_row, InterferenceRow,
+};
 pub use latency::{
     asymmetric_comparison, latency, latency_dispatch_comparison, latency_sweep, reprobe_model,
     sweep_model, RTT_SWEEP,
@@ -159,6 +163,9 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         // sweep writes BENCH_SCALE.json at the repo root as a side
         // effect — run it deliberately (`bench --exp scale`).
         "scale" => scale(seed),
+        // Not in `run_all` either: writes BENCH_INTERFERENCE.json at
+        // the repo root as a side effect (`bench --exp interference`).
+        "interference" => interference(seed),
         _ => return None,
     })
 }

@@ -113,11 +113,11 @@
 use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
 use super::placement::{NodePlacement, TaskLedger};
-use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
+use crate::gpu::{ClusterSpec, InterferenceProfile, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
 use crate::sched::{
-    make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView, PreemptConfig,
-    PreemptPolicy, SloClass, TaskReq, VictimView,
+    canonical_dispatch, make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView,
+    PreemptConfig, PreemptPolicy, SloClass, TaskReq, VictimView,
 };
 use std::collections::HashMap;
 
@@ -275,6 +275,7 @@ fn probe_req(res: &crate::lazy::TaskResources, slo: Option<SloClass>) -> TaskReq
         tbs: res.thread_blocks(),
         warps_per_tb: res.warps_per_tb(),
         slo,
+        iv: res.iv,
     }
 }
 
@@ -315,6 +316,15 @@ struct JobRt {
     /// Dispatch-time load estimates (kernel + host us, peak bytes).
     est_work_us: u64,
     est_mem_bytes: u64,
+    /// Dispatch-time interference estimate: componentwise max over the
+    /// job's task probes (`JobTrace::peak_interference`). All-zero for
+    /// legacy workloads — which keeps every interference-aware branch
+    /// on its bit-identical off path.
+    est_iv: InterferenceProfile,
+    /// Per-task probe interference vectors, dense by task id; recorded
+    /// at TaskBegin so the Launch arm can hand the task's pressure to
+    /// `Device::start_kernel_with` without re-walking the trace.
+    task_iv: Vec<InterferenceProfile>,
     ded_s: f64,
     act_s: f64,
     n_kernels: u64,
@@ -413,6 +423,10 @@ struct Engine<'h> {
     /// Per-node dispatched-but-unfinished load (dispatcher bookkeeping).
     outstanding_us: Vec<u64>,
     outstanding_mem: Vec<u64>,
+    /// Per-node summed interference estimates of dispatched-but-
+    /// unfinished jobs — the `NodeLoadView::pressure` source. Stays
+    /// all-zero whenever every job's profile is zero.
+    outstanding_iv: Vec<InterferenceProfile>,
     /// Checkpoint/restart machinery; `None` = preemption disabled.
     preempt: Option<PreemptRt>,
     /// Checkpoints currently in flight per node (mirrors the set of
@@ -529,11 +543,22 @@ fn run_cluster_inner(
     record_trace: bool,
     heap_backend: bool,
 ) -> (RunResult, Vec<String>) {
+    // Partition-then-allocate: under the partition dispatcher every
+    // physical device is split into PARTITION_SLICES static MIG-style
+    // isolation domains before the placement layer ever sees it — the
+    // dispatcher's contention-aware allocation is over sliced nodes.
+    // Keyed off the canonical dispatcher name so `ClusterConfig` needs
+    // no new field and every other dispatcher builds bit-identically.
+    let slices = if canonical_dispatch(cfg.dispatch) == Some("partition") {
+        super::placement::PARTITION_SLICES
+    } else {
+        1
+    };
     let nodes: Vec<NodePlacement> = cfg
         .cluster
         .nodes
         .iter()
-        .map(|n| NodePlacement::new(n, &cfg.mode, cfg.workers_per_node))
+        .map(|n| NodePlacement::new(&n.sliced(slices), &cfg.mode, cfg.workers_per_node))
         .collect();
     let devs_per_node: Vec<usize> = nodes.iter().map(|n| n.devices.len()).collect();
     let gens = DevGens::new(&devs_per_node);
@@ -558,6 +583,8 @@ fn run_cluster_inner(
         .map(|(j, &n_tasks)| JobRt {
             est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
             est_mem_bytes: j.trace.peak_reserved_bytes(),
+            est_iv: j.trace.peak_interference(),
+            task_iv: vec![InterferenceProfile::ZERO; n_tasks],
             reprobe_left: latency.reprobe_budget,
             task_dev: vec![NO_DEV; n_tasks],
             task_req: vec![None; n_tasks],
@@ -578,6 +605,7 @@ fn run_cluster_inner(
         views_scratch: Vec::with_capacity(n_nodes),
         outstanding_us: vec![0; n_nodes],
         outstanding_mem: vec![0; n_nodes],
+        outstanding_iv: vec![InterferenceProfile::ZERO; n_nodes],
         // Sanitize the preemption cost model like the latency model: a
         // zero/negative checkpoint bandwidth would push CkptDone at an
         // inf/NaN time and poison the event heap's ordering.
@@ -635,10 +663,12 @@ impl<'h> Engine<'h> {
             taken_at: t,
             probe_rtt_s: self.latency.probe_rtt(i),
             dispatch_cost_s,
+            pressure: self.outstanding_iv[i],
         }));
         let info = JobInfo {
             est_work_us: self.rt[job].est_work_us,
             peak_mem_bytes: self.rt[job].est_mem_bytes,
+            iv: self.rt[job].est_iv,
         };
         let mut node = self.dispatcher.route(&info, &views);
         self.views_scratch = views;
@@ -658,6 +688,7 @@ impl<'h> Engine<'h> {
         self.rt[job].dispatched = true;
         self.outstanding_us[node] += self.rt[job].est_work_us;
         self.outstanding_mem[node] += self.rt[job].est_mem_bytes;
+        self.outstanding_iv[node] = self.outstanding_iv[node].add(&self.rt[job].est_iv);
         node
     }
 
@@ -787,6 +818,7 @@ impl<'h> Engine<'h> {
             self.outstanding_us[old].saturating_sub(self.rt[job].est_work_us);
         self.outstanding_mem[old] =
             self.outstanding_mem[old].saturating_sub(self.rt[job].est_mem_bytes);
+        self.outstanding_iv[old] = self.outstanding_iv[old].sub_clamped(&self.rt[job].est_iv);
         self.rt[job].dispatched = false;
         let node = self.dispatch_job(job, t); // re-snapshot + re-charge
         if node == old {
@@ -1147,6 +1179,10 @@ impl<'h> Engine<'h> {
                     self.rt[job].pc += 1;
                 }
                 CEv::TaskBegin { task, res } => {
+                    // Record the probe's pressure vector for the Launch
+                    // arm whatever placement path runs below (idempotent
+                    // across probe retries/re-entries).
+                    self.rt[job].task_iv[task] = res.iv;
                     if self.nodes[node].static_mode {
                         // §II-B: the app's cudaSetDevice (or device 0).
                         let dev = (res.static_dev.unwrap_or(0) as usize)
@@ -1234,9 +1270,10 @@ impl<'h> Engine<'h> {
                     }
                     let warps = grid * block.div_ceil(32);
                     let work_s = work_us as f64 * 1e-6;
+                    let iv = self.rt[job].task_iv[task];
                     let d = &mut self.nodes[node].devices[dev];
                     d.advance_to(t);
-                    let h = d.start_kernel(t, work_s, warps);
+                    let h = d.start_kernel_with(t, work_s, warps, iv);
                     let speed = d.spec.speed;
                     let fi = self.gens.flat(node, dev);
                     self.kernel_owner[fi].push((h, job as u32));
@@ -1493,6 +1530,8 @@ impl<'h> Engine<'h> {
             self.outstanding_us[home].saturating_sub(self.rt[victim].est_work_us);
         self.outstanding_mem[home] =
             self.outstanding_mem[home].saturating_sub(self.rt[victim].est_mem_bytes);
+        self.outstanding_iv[home] =
+            self.outstanding_iv[home].sub_clamped(&self.rt[victim].est_iv);
         let rt = &mut self.rt[victim];
         rt.dispatched = false;
         rt.arrived = false;
@@ -1658,6 +1697,8 @@ impl<'h> Engine<'h> {
                 self.outstanding_us[node].saturating_sub(self.rt[job].est_work_us);
             self.outstanding_mem[node] =
                 self.outstanding_mem[node].saturating_sub(self.rt[job].est_mem_bytes);
+            self.outstanding_iv[node] =
+                self.outstanding_iv[node].sub_clamped(&self.rt[job].est_iv);
         }
         let worker = self.rt[job].worker;
         // Only hand back a worker the job actually occupies: a

@@ -198,6 +198,19 @@ impl RunResult {
             100.0 * (act / ded - 1.0)
         }
     }
+
+    /// Worst per-job kernel slowdown (%) over completed jobs — the
+    /// paper's "individual kernel performance degradation at most
+    /// 2.5%" claim as a measured tail statistic rather than the
+    /// time-weighted mean [`RunResult::kernel_slowdown_pct`] reports.
+    /// 0.0 when no job completed (the empty-set convention).
+    pub fn worst_kernel_slowdown_pct(&self) -> f64 {
+        self.jobs
+            .iter()
+            .filter(|j| !j.crashed)
+            .map(|j| 100.0 * j.kernel_slowdown())
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +270,23 @@ mod tests {
         );
         // (12 / 11 - 1) ≈ 9.09%
         assert!((r.kernel_slowdown_pct() - 100.0 * (12.0 / 11.0 - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worst_slowdown_is_the_uncrashed_tail_not_the_mean() {
+        let r = rr(
+            vec![
+                job(1.0, false, 10.0, 10.5), // 5%
+                job(1.0, false, 1.0, 1.2),   // 20% — the tail
+                job(1.0, true, 1.0, 9.0),    // crashed: excluded
+                job(1.0, false, 0.0, 0.0),   // no kernels: 0%
+            ],
+            1.0,
+        );
+        assert!((r.worst_kernel_slowdown_pct() - 20.0).abs() < 1e-9);
+        // Empty set (all crashed) reports 0, like the other measures.
+        let r = rr(vec![job(1.0, true, 1.0, 2.0)], 1.0);
+        assert_eq!(r.worst_kernel_slowdown_pct(), 0.0);
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub use engine::{
     SchedMode,
 };
 pub use metrics::{JobClass, JobOutcome, RunResult};
+pub use placement::PARTITION_SLICES;
 
 #[cfg(test)]
 mod tests {
@@ -54,7 +55,14 @@ mod tests {
     /// A synthetic one-task job: reserve `mem`, run one kernel of
     /// `work_us` with `warps` warps (as grid x 32-thread blocks).
     fn job(name: &str, mem: u64, warps: u64, work_us: u64) -> JobSpec {
-        let res = TaskResources { static_dev: None, mem_bytes: mem, heap_bytes: 0, grid: warps, block: 32 };
+        let res = TaskResources {
+            static_dev: None,
+            mem_bytes: mem,
+            heap_bytes: 0,
+            grid: warps,
+            block: 32,
+            iv: crate::gpu::InterferenceProfile::ZERO,
+        };
         JobSpec {
             name: name.into(),
             class: JobClass::Small,

@@ -26,6 +26,17 @@ use std::collections::VecDeque;
 /// "Empty slot" sentinel in the ledger's dense device columns.
 const NO_SLOT: u32 = u32::MAX;
 
+/// Static MIG-style slices per physical device when the partition
+/// dispatcher is active (`--dispatch partition`): the engine builds
+/// each node from `NodeSpec::sliced(PARTITION_SLICES)`, so every
+/// physical GPU becomes this many half-size isolation domains — its
+/// own [`Device`] with its own memory pool and waterfill, on which
+/// only one partition's kernels ever co-reside. Two is the coarsest
+/// (and most portable) MIG geometry; the slicing math in
+/// `GpuSpec::slice` supports any count if a finer geometry is wanted
+/// later.
+pub const PARTITION_SLICES: usize = 2;
+
 /// Per-job memory ledger: what each open task holds, split into the
 /// probe's up-front reservation (memory-safe) and raw allocations
 /// (crashable). Owned by the engine's per-job runtime state; the
@@ -299,6 +310,7 @@ impl NodePlacement {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::InterferenceProfile;
 
     fn node() -> NodePlacement {
         NodePlacement::new(&NodeSpec::v100x4(), &SchedMode::Policy("mgb3"), 4)
@@ -342,7 +354,13 @@ mod tests {
     #[test]
     fn place_reserves_memory_on_the_chosen_device() {
         let mut n = node();
-        let req = TaskReq { mem_bytes: 4 << 30, tbs: 100, warps_per_tb: 4, slo: None };
+        let req = TaskReq {
+            mem_bytes: 4 << 30,
+            tbs: 100,
+            warps_per_tb: 4,
+            slo: None,
+            iv: InterferenceProfile::ZERO,
+        };
         let dev = n.place((0, 0), &req).expect("fits");
         assert_eq!(n.devices[dev].free_mem, (16u64 << 30) - (4 << 30));
         let before = n.free_mem();
@@ -419,5 +437,31 @@ mod tests {
         assert_eq!(n.n_workers(), 4);
         assert_eq!(n.worker_pin, vec![Some(0), Some(1), Some(2), Some(3)]);
         assert!(!n.has_policy());
+    }
+
+    #[test]
+    fn partitioned_node_is_built_from_device_slices() {
+        // The engine hands NodePlacement a pre-sliced NodeSpec when the
+        // partition dispatcher is active; the placement layer treats
+        // each slice as an independent device — policy arity, memory
+        // pools, and capability all follow the slice geometry.
+        let sliced = NodeSpec::v100x4().sliced(PARTITION_SLICES);
+        let n = NodePlacement::new(&sliced, &SchedMode::Policy("mgb3"), 4);
+        assert_eq!(n.devices.len(), 4 * PARTITION_SLICES);
+        assert_eq!(n.devices[0].spec.mem_bytes, (16u64 << 30) / PARTITION_SLICES as u64);
+        assert_eq!(n.total_mem(), 64 << 30, "slicing conserves total memory");
+        assert!((n.compute_capacity - 4.0).abs() < 1e-12, "and total capability");
+        // A reservation that fits a whole V100 no longer fits a slice.
+        let req = TaskReq {
+            mem_bytes: 12 << 30,
+            tbs: 100,
+            warps_per_tb: 4,
+            slo: None,
+            iv: InterferenceProfile::ZERO,
+        };
+        let mut n = n;
+        assert!(n.place((0, 0), &req).is_none(), "12 GB cannot fit an 8 GB slice");
+        let small = TaskReq { mem_bytes: 6 << 30, ..req };
+        assert!(n.place((0, 0), &small).is_some());
     }
 }

@@ -6,8 +6,16 @@
 //! elapsed virtual time into remaining work; membership changes
 //! (kernel added/removed) change every resident kernel's rate, so the
 //! engine re-queries finish times afterwards.
+//!
+//! On top of the warp-capacity waterfill, each resident kernel may
+//! carry an [`InterferenceProfile`] (memory-bandwidth / L2 / SM
+//! pressure). When any resident profile is nonzero, every kernel's
+//! rate is further divided by the device's piecewise-linear
+//! [`InterferenceResponse`](super::spec::InterferenceResponse) to its
+//! co-residents' aggregate pressure. All-zero profiles skip that pass
+//! entirely, keeping the legacy processor-sharing rates bit-identical.
 
-use super::spec::GpuSpec;
+use super::spec::{GpuSpec, InterferenceProfile};
 
 /// Identifies a resident kernel on a device.
 pub type KernelHandle = usize;
@@ -30,8 +38,11 @@ struct ResidentKernel {
     /// Warps the kernel keeps resident (capped at device capacity).
     warps: u64,
     /// Current progress rate (work-seconds per wall-second): max-min
-    /// share of the warp capacity x device speed / MPS overhead.
+    /// share of the warp capacity x device speed / MPS overhead,
+    /// divided by the interference slowdown when profiles are nonzero.
     rate: f64,
+    /// Resource-pressure profile (sanitized; ZERO = no interference).
+    iv: InterferenceProfile,
 }
 
 /// Mutable device state.
@@ -67,8 +78,20 @@ impl Device {
         Ok(())
     }
 
-    /// Release `bytes` back to the pool.
+    /// Release `bytes` back to the pool. Releasing more than is
+    /// outstanding (a double release, or releasing bytes never
+    /// allocated) is an accounting bug upstream: the old
+    /// unconditional clamp silently swallowed it, letting the ledger
+    /// and the device drift apart. Debug builds now fail loudly; the
+    /// clamp remains as the release-build backstop so a production
+    /// run degrades to the old masking behaviour instead of
+    /// overflowing `free_mem` past capacity.
     pub fn release(&mut self, bytes: u64) {
+        debug_assert!(
+            bytes <= self.spec.mem_bytes - self.free_mem,
+            "released {bytes} B with only {} B outstanding (double release?)",
+            self.spec.mem_bytes - self.free_mem
+        );
         self.free_mem = (self.free_mem + bytes).min(self.spec.mem_bytes);
     }
 
@@ -118,6 +141,7 @@ impl Device {
             for k in &mut self.kernels {
                 k.rate = base;
             }
+            self.apply_interference();
             return;
         }
         // Waterfill: ascending demand, small kernels take their full
@@ -135,17 +159,66 @@ impl Device {
             remaining_cap -= share;
             remaining_n -= 1;
         }
+        self.apply_interference();
+    }
+
+    /// Divide each resident kernel's waterfilled rate by its
+    /// interference slowdown — a function of its co-residents'
+    /// *aggregate* pressure through the spec's piecewise-linear
+    /// response. When every resident profile is all-zero (the legacy
+    /// model, and every pre-interference workload) this returns before
+    /// touching any rate, so those runs stay bit-identical to the pure
+    /// processor-sharing device.
+    fn apply_interference(&mut self) {
+        let mut agg = InterferenceProfile::ZERO;
+        for k in &self.kernels {
+            agg = agg.add(&k.iv);
+        }
+        if agg.is_zero() {
+            return;
+        }
+        let resp = self.spec.interference;
+        for k in &mut self.kernels {
+            let others = agg.sub_clamped(&k.iv);
+            let slow = resp.slowdown(&k.iv, &others);
+            if slow != 1.0 {
+                k.rate /= slow;
+            }
+        }
     }
 
     /// Add a kernel with `work` dedicated-V100-seconds and a warp demand
     /// (will be capped at device capacity for residency). Callers must
-    /// `advance_to(now)` first. Returns the handle.
+    /// `advance_to(now)` first. Returns the handle. Equivalent to
+    /// [`Device::start_kernel_with`] with the all-zero profile — the
+    /// legacy processor-sharing-only entry point.
     pub fn start_kernel(&mut self, now: f64, work: f64, warps: u64) -> KernelHandle {
+        self.start_kernel_with(now, work, warps, InterferenceProfile::ZERO)
+    }
+
+    /// [`Device::start_kernel`] with an explicit resource-pressure
+    /// profile. The profile is sanitized (clamped into [0, 1] per
+    /// component) before residency, so a corrupt workload vector can
+    /// degrade neighbours but never speed anyone up or push the
+    /// slowdown past the spec's cap.
+    pub fn start_kernel_with(
+        &mut self,
+        now: f64,
+        work: f64,
+        warps: u64,
+        iv: InterferenceProfile,
+    ) -> KernelHandle {
         debug_assert!((now - self.last_advance).abs() < 1e-9);
         let handle = self.next_handle;
         self.next_handle += 1;
         let resident = warps.min(self.spec.warp_capacity()).max(1);
-        self.kernels.push(ResidentKernel { handle, remaining: work, warps: resident, rate: 0.0 });
+        self.kernels.push(ResidentKernel {
+            handle,
+            remaining: work,
+            warps: resident,
+            rate: 0.0,
+            iv: iv.sanitized(),
+        });
         self.recompute_rates();
         handle
     }
@@ -354,5 +427,119 @@ mod tests {
         let t1 = d.finish_time(t2, h1).unwrap();
         // h1: 1.0 done dedicated + 1.0 shared; 1.0 left at full speed.
         assert!((t1 - (t2 + 1.0)).abs() < 1e-9, "got {t1}");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics_in_debug() {
+        // Regression: the old unconditional `.min(mem_bytes)` clamp let
+        // a double release pass silently, leaving the engine's ledger
+        // and the device permanently out of sync.
+        let mut d = dev();
+        d.alloc(4 << 30).unwrap();
+        d.release(4 << 30);
+        d.release(4 << 30);
+    }
+
+    #[test]
+    fn zero_profiles_are_bit_identical_to_legacy_sharing() {
+        // A co-residency scenario driven twice — once through the
+        // legacy entry point, once through start_kernel_with + ZERO —
+        // must produce *bit-identical* rates and finish times at every
+        // membership change (the golden-trace compatibility contract).
+        let mut a = dev();
+        let mut b = dev();
+        a.advance_to(0.0);
+        b.advance_to(0.0);
+        let cap = a.spec.warp_capacity();
+        let scenario: &[(f64, u64)] = &[(3.0, cap), (1.0, cap / 2), (2.0, cap * 2)];
+        let mut ha = Vec::new();
+        let mut hb = Vec::new();
+        for &(work, warps) in scenario {
+            ha.push(a.start_kernel(0.0, work, warps));
+            hb.push(b.start_kernel_with(0.0, work, warps, InterferenceProfile::ZERO));
+        }
+        for (&x, &y) in ha.iter().zip(&hb) {
+            // Exact equality on purpose: identical f64 bit patterns.
+            assert_eq!(a.finish_time(0.0, x), b.finish_time(0.0, y));
+        }
+        let (ta, ka) = a.next_completion(0.0).unwrap();
+        let (tb, kb) = b.next_completion(0.0).unwrap();
+        assert_eq!(ta, tb);
+        a.remove_kernel(ta, ka);
+        b.remove_kernel(tb, kb);
+        assert_eq!(a.next_completion(ta), b.next_completion(tb));
+    }
+
+    #[test]
+    fn nonzero_profiles_slow_coresidents_down() {
+        // Same warp footprint, but one run carries memory-bandwidth
+        // pressure past the knee: both residents must finish strictly
+        // later than the interference-free run.
+        let mut free = dev();
+        let mut hot = dev();
+        free.advance_to(0.0);
+        hot.advance_to(0.0);
+        let cap = free.spec.warp_capacity();
+        let f1 = free.start_kernel(0.0, 2.0, cap / 4);
+        let f2 = free.start_kernel(0.0, 2.0, cap / 4);
+        let iv = InterferenceProfile::new(0.9, 0.2, 0.3);
+        let h1 = hot.start_kernel_with(0.0, 2.0, cap / 4, iv);
+        let h2 = hot.start_kernel_with(0.0, 2.0, cap / 4, iv);
+        for (f, h) in [(f1, h1), (f2, h2)] {
+            let tf = free.finish_time(0.0, f).unwrap();
+            let th = hot.finish_time(0.0, h).unwrap();
+            assert!(th > tf, "interference must cost wall time: {th} <= {tf}");
+        }
+        // A single kernel, however hot, has no co-residents to fight:
+        // `others` is zero but `own + rest` can still cross the knee —
+        // the response only charges for pressure the kernel *shares* in
+        // creating, so dedicated runs are charged iff own pressure alone
+        // exceeds the knee (0.9 + 0.2 + 0.3 each < knee=1.0: free).
+        let mut solo = dev();
+        solo.advance_to(0.0);
+        let hs = solo.start_kernel_with(0.0, 2.0, cap / 4, iv);
+        assert_eq!(solo.finish_time(0.0, hs), Some(2.0));
+    }
+
+    #[test]
+    fn slowdown_is_monotone_and_bounded() {
+        // Holding the probe kernel fixed, adding hotter neighbours
+        // never speeds it up, and its rate never drops below
+        // dedicated-rate / max_slowdown.
+        let cap = dev().spec.warp_capacity();
+        let probe_iv = InterferenceProfile::new(0.6, 0.4, 0.5);
+        let dedicated_rate = {
+            let mut d = dev();
+            d.advance_to(0.0);
+            let h = d.start_kernel_with(0.0, 1.0, cap / 8, probe_iv);
+            1.0 / d.eta_at(0.0, h).unwrap()
+        };
+        let max_slow = dev().spec.interference.max_slowdown;
+        let mut last_eta = 0.0;
+        for n in 0..6 {
+            let mut d = dev();
+            d.advance_to(0.0);
+            let h = d.start_kernel_with(0.0, 1.0, cap / 8, probe_iv);
+            for _ in 0..n {
+                d.start_kernel_with(0.0, 10.0, 1, InterferenceProfile::new(0.9, 0.9, 0.9));
+            }
+            let eta = d.eta_at(0.0, h).unwrap();
+            assert!(
+                eta >= last_eta - 1e-12,
+                "eta must be monotone in neighbour pressure: {eta} < {last_eta} at n={n}"
+            );
+            // Strip the MPS overhead (orthogonal to interference) before
+            // checking the interference bound.
+            let mps = 1.0 + MPS_PER_NEIGHBOUR * n as f64;
+            let rate = 1.0 / eta * mps;
+            assert!(
+                rate >= dedicated_rate / max_slow - 1e-9,
+                "rate {rate} fell below dedicated {dedicated_rate} / max_slowdown {max_slow}"
+            );
+            assert!(rate <= dedicated_rate + 1e-9);
+            last_eta = eta;
+        }
     }
 }

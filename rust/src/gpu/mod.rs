@@ -16,5 +16,6 @@ pub mod spec;
 
 pub use device::{Device, KernelHandle};
 pub use spec::{
-    ClusterSpec, GpuSpec, LatencyModel, NodeSpec, NIC_BYTES_PER_SEC, PCIE_BYTES_PER_SEC,
+    ClusterSpec, GpuSpec, InterferenceProfile, InterferenceResponse, LatencyModel, NodeSpec,
+    NIC_BYTES_PER_SEC, PCIE_BYTES_PER_SEC,
 };

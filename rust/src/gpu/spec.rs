@@ -7,6 +7,139 @@
 //! under one dispatcher, each node's relative speed summarised by
 //! [`NodeSpec::compute_capacity`] for capability-normalised routing.
 
+/// Per-kernel resource-pressure profile — the interference vector of
+/// arXiv 2501.16909, which shows GPU co-residency contention is
+/// *resource-specific* rather than a flat co-residency tax. Each
+/// component is the fraction of the corresponding device resource the
+/// kernel demands when running dedicated (0 = does not touch it,
+/// 1 = saturates it alone). The all-zero profile (the `Default`) is the
+/// pre-interference idealisation: kernels carrying it neither slow
+/// others down nor are slowed beyond the processor-sharing model, so
+/// zero-vector runs stay bit-identical to the legacy device model
+/// (enforced by the golden traces and the zero-vector property test).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InterferenceProfile {
+    /// DRAM bandwidth share demanded (fraction of device bandwidth).
+    pub mem_bw: f64,
+    /// L2 footprint class (fraction of L2 capacity the working set
+    /// wants resident; evictions past 1.0 aggregate demand hurt).
+    pub l2: f64,
+    /// SM issue-slot occupancy pressure (fraction of issue bandwidth).
+    pub sm: f64,
+}
+
+impl InterferenceProfile {
+    /// The all-zero profile: no modeled interference at all.
+    pub const ZERO: InterferenceProfile = InterferenceProfile { mem_bw: 0.0, l2: 0.0, sm: 0.0 };
+
+    pub fn new(mem_bw: f64, l2: f64, sm: f64) -> Self {
+        InterferenceProfile { mem_bw, l2, sm }
+    }
+
+    /// True iff every component is exactly zero — the device model's
+    /// fast path selector (zero aggregate pressure must take the exact
+    /// legacy code path, not a `x / 1.0` detour).
+    pub fn is_zero(&self) -> bool {
+        self.mem_bw == 0.0 && self.l2 == 0.0 && self.sm == 0.0
+    }
+
+    /// Copy with every component clamped to [0, 1]: a dedicated kernel
+    /// cannot demand more than the whole device, and negative pressure
+    /// would subtract slowdown from co-residents.
+    pub fn sanitized(&self) -> Self {
+        let c = |x: f64| x.clamp(0.0, 1.0);
+        InterferenceProfile { mem_bw: c(self.mem_bw), l2: c(self.l2), sm: c(self.sm) }
+    }
+
+    /// Componentwise sum (aggregate pressure of co-residents).
+    pub fn add(&self, o: &InterferenceProfile) -> Self {
+        InterferenceProfile {
+            mem_bw: self.mem_bw + o.mem_bw,
+            l2: self.l2 + o.l2,
+            sm: self.sm + o.sm,
+        }
+    }
+
+    /// Componentwise subtraction clamped at zero (uncharging a job
+    /// from a node's aggregate without floating-point underflow going
+    /// negative).
+    pub fn sub_clamped(&self, o: &InterferenceProfile) -> Self {
+        InterferenceProfile {
+            mem_bw: (self.mem_bw - o.mem_bw).max(0.0),
+            l2: (self.l2 - o.l2).max(0.0),
+            sm: (self.sm - o.sm).max(0.0),
+        }
+    }
+
+    /// Componentwise max (a trace's peak profile over its tasks).
+    pub fn max(&self, o: &InterferenceProfile) -> Self {
+        InterferenceProfile {
+            mem_bw: self.mem_bw.max(o.mem_bw),
+            l2: self.l2.max(o.l2),
+            sm: self.sm.max(o.sm),
+        }
+    }
+
+    /// Largest single component — the bottleneck resource's pressure.
+    pub fn max_component(&self) -> f64 {
+        self.mem_bw.max(self.l2).max(self.sm)
+    }
+}
+
+/// How a device's kernels respond to aggregate resource pressure: a
+/// piecewise-linear slowdown per resource with the max taken across
+/// resources (a kernel is only as slow as its most-contended resource
+/// makes it — the roofline view of arXiv 2501.16909).
+///
+/// For one resource with the kernel's own demand `own` and co-resident
+/// aggregate demand `others`:
+///
+/// ```text
+/// slowdown = 1                                   if own+others <= knee
+///          = 1 + slope * own * (own+others-knee) otherwise
+/// ```
+///
+/// Below the knee the resource is undersubscribed and co-residency is
+/// free; past it the kernel degrades linearly in the overflow, scaled
+/// by how much the kernel itself depends on the resource (`own` — a
+/// kernel that never touches DRAM cannot be slowed by bandwidth hogs).
+/// The final slowdown is `max` over resources, capped at
+/// `max_slowdown`, so every kernel's rate stays within
+/// `[rate / max_slowdown, rate]` of its interference-free rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InterferenceResponse {
+    /// Aggregate-demand knee per resource: total demand at or below it
+    /// is contention-free (1.0 = the resource's full capacity).
+    pub knee: f64,
+    /// Slowdown per unit of overflow past the knee.
+    pub slope: f64,
+    /// Hard cap on the per-kernel interference slowdown (>= 1).
+    pub max_slowdown: f64,
+}
+
+impl Default for InterferenceResponse {
+    fn default() -> Self {
+        InterferenceResponse { knee: 1.0, slope: 1.0, max_slowdown: 4.0 }
+    }
+}
+
+impl InterferenceResponse {
+    /// Interference slowdown (>= 1) of a kernel with profile `own`
+    /// co-resident with aggregate pressure `others`. Monotone
+    /// non-decreasing in every component of `others`, exactly 1.0 when
+    /// `own` is all-zero, and capped at `max_slowdown`.
+    pub fn slowdown(&self, own: &InterferenceProfile, others: &InterferenceProfile) -> f64 {
+        let per = |o: f64, rest: f64| {
+            let excess = (o + rest - self.knee).max(0.0);
+            1.0 + self.slope * o * excess
+        };
+        let s = per(own.mem_bw, others.mem_bw)
+            .max(per(own.l2, others.l2))
+            .max(per(own.sm, others.sm));
+        s.clamp(1.0, self.max_slowdown.max(1.0))
+    }
+}
+
 /// Static description of one GPU.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GpuSpec {
@@ -20,6 +153,10 @@ pub struct GpuSpec {
     pub mem_bytes: u64,
     /// Relative compute speed; 1.0 = V100 (the `work_us` reference).
     pub speed: f64,
+    /// Piecewise-linear response to co-resident resource pressure (see
+    /// [`InterferenceResponse`]); only consulted when a resident kernel
+    /// carries a nonzero [`InterferenceProfile`].
+    pub interference: InterferenceResponse,
 }
 
 impl GpuSpec {
@@ -31,6 +168,7 @@ impl GpuSpec {
             tbs_per_sm: 32,
             mem_bytes: 16 << 30,
             speed: 3584.0 / 5120.0,
+            interference: InterferenceResponse::default(),
         }
     }
 
@@ -42,6 +180,28 @@ impl GpuSpec {
             tbs_per_sm: 32,
             mem_bytes: 16 << 30,
             speed: 1.0,
+            interference: InterferenceResponse::default(),
+        }
+    }
+
+    /// A static MIG-style slice: 1/`k` of the device's SMs, memory, and
+    /// speed, with per-SM limits unchanged (arXiv 2105.10312's
+    /// partition-then-allocate alternative to sharing). Slices are
+    /// *isolation domains*: each becomes its own [`Device`], so kernels
+    /// on different slices of one physical GPU never co-reside and
+    /// never interfere — the predictability-for-peak-throughput trade
+    /// `--dispatch partition` measures. `k = 0` is treated as 1 (no
+    /// slicing).
+    ///
+    /// [`Device`]: super::Device
+    pub fn slice(&self, k: usize) -> Self {
+        let k = k.max(1) as u32;
+        let sms = (self.sms / k).max(1);
+        GpuSpec {
+            sms,
+            mem_bytes: self.mem_bytes / k as u64,
+            speed: self.speed * sms as f64 / self.sms.max(1) as f64,
+            ..*self
         }
     }
 
@@ -89,6 +249,21 @@ impl NodeSpec {
 
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
+    }
+
+    /// The node with every GPU statically partitioned into `k`
+    /// MIG-style slices ([`GpuSpec::slice`]), in GPU order (slices of
+    /// GPU 0 first). `k <= 1` returns the node unchanged, so the
+    /// unpartitioned path stays bit-identical.
+    pub fn sliced(&self, k: usize) -> Self {
+        if k <= 1 {
+            return self.clone();
+        }
+        NodeSpec {
+            gpus: self.gpus.iter().flat_map(|g| (0..k).map(move |_| g.slice(k))).collect(),
+            cpu_cores: self.cpu_cores,
+            name: format!("{}/{k}", self.name),
+        }
     }
 
     /// Relative compute capability of the node: the sum of its GPUs'
@@ -416,6 +591,90 @@ mod tests {
         // Constant model: payload does not matter.
         let c = LatencyModel::constant(0.1);
         assert_eq!(c.dispatch_latency(0), c.dispatch_latency(1 << 30));
+    }
+
+    #[test]
+    fn interference_profile_algebra() {
+        assert!(InterferenceProfile::ZERO.is_zero());
+        assert!(InterferenceProfile::default().is_zero());
+        let a = InterferenceProfile::new(0.5, 0.2, 0.8);
+        assert!(!a.is_zero());
+        let b = InterferenceProfile::new(0.3, 0.9, 0.1);
+        let s = a.add(&b);
+        assert_eq!(s, InterferenceProfile::new(0.8, 1.1, 0.9));
+        assert_eq!(s.sub_clamped(&a), b);
+        // Over-subtraction clamps at zero instead of going negative.
+        assert_eq!(a.sub_clamped(&s), InterferenceProfile::ZERO);
+        assert_eq!(a.max(&b), InterferenceProfile::new(0.5, 0.9, 0.8));
+        assert_eq!(s.max_component(), 1.1);
+        // Sanitize clamps into [0, 1] per component.
+        let wild = InterferenceProfile::new(-0.5, 2.0, 0.7).sanitized();
+        assert_eq!(wild, InterferenceProfile::new(0.0, 1.0, 0.7));
+    }
+
+    #[test]
+    fn interference_response_is_piecewise_linear_max_across_resources() {
+        let r = InterferenceResponse::default();
+        let zero = InterferenceProfile::ZERO;
+        // A zero-profile kernel is never slowed, whatever the others do.
+        assert_eq!(r.slowdown(&zero, &InterferenceProfile::new(1.0, 1.0, 1.0)), 1.0);
+        // Below the knee co-residency is free.
+        let own = InterferenceProfile::new(0.4, 0.1, 0.2);
+        assert_eq!(r.slowdown(&own, &InterferenceProfile::new(0.5, 0.5, 0.5)), 1.0);
+        // Past the knee: 1 + slope * own * excess on the worst resource.
+        let others = InterferenceProfile::new(0.9, 0.0, 0.0);
+        let want = 1.0 + 1.0 * 0.4 * (0.4 + 0.9 - 1.0);
+        assert!((r.slowdown(&own, &others) - want).abs() < 1e-12);
+        // Max across resources: saturating SM pressure dominates.
+        let others = InterferenceProfile::new(0.9, 0.0, 1.0);
+        let sm_w = 1.0 + 1.0 * 0.2 * (0.2 + 1.0 - 1.0);
+        assert!((r.slowdown(&own, &others) - want.max(sm_w)).abs() < 1e-12);
+        // Monotone in co-resident pressure, and capped at max_slowdown.
+        let mut prev = 1.0;
+        for i in 0..50 {
+            let p = i as f64 * 0.2;
+            let s = r.slowdown(
+                &InterferenceProfile::new(1.0, 1.0, 1.0),
+                &InterferenceProfile::new(p, p, p),
+            );
+            assert!(s >= prev, "monotone: {s} after {prev}");
+            assert!(s <= r.max_slowdown);
+            prev = s;
+        }
+        assert_eq!(prev, r.max_slowdown, "deep oversubscription hits the cap");
+    }
+
+    #[test]
+    fn gpu_slices_partition_sm_memory_and_speed() {
+        let v = GpuSpec::v100();
+        let half = v.slice(2);
+        assert_eq!(half.sms, 40);
+        assert_eq!(half.mem_bytes, 8 << 30);
+        assert!((half.speed - 0.5).abs() < 1e-12);
+        assert_eq!(half.warps_per_sm, v.warps_per_sm, "per-SM limits unchanged");
+        assert_eq!(half.tbs_per_sm, v.tbs_per_sm);
+        assert_eq!(half.warp_capacity(), v.warp_capacity() / 2);
+        // k = 0/1 are the identity.
+        assert_eq!(v.slice(0), v);
+        assert_eq!(v.slice(1), v);
+        // Odd split on the P100: SM count floors, speed follows it.
+        let p = GpuSpec::p100();
+        let third = p.slice(3);
+        assert_eq!(third.sms, 18);
+        assert!((third.speed - p.speed * 18.0 / 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sliced_node_is_an_isolation_domain_list() {
+        let n = NodeSpec::v100x4();
+        let s = n.sliced(2);
+        assert_eq!(s.n_gpus(), 8, "4 GPUs x 2 slices");
+        assert_eq!(s.name, "4xV100/2");
+        assert!(s.gpus.iter().all(|g| g.mem_bytes == 8 << 30));
+        // Capacity is conserved (up to SM-count flooring): 8 x 0.5.
+        assert!((s.compute_capacity() - 4.0).abs() < 1e-12);
+        assert_eq!(n.sliced(1).n_gpus(), 4, "k <= 1 is the identity");
+        assert_eq!(n.sliced(0).name, n.name);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The interpreter + lazy runtime proper.
 
 use super::trace::{JobTrace, TaskResources, TraceEvent};
+use crate::gpu::InterferenceProfile;
 use crate::compiler::CompiledProgram;
 use crate::ir::{CopyDir, Expr, Function, Op, OpKind, Terminator, ValueId};
 use std::collections::HashMap;
@@ -329,6 +330,7 @@ impl<'a> Interp<'a> {
                 heap_bytes: self.heap_limit,
                 grid,
                 block,
+                iv: InterferenceProfile::ZERO,
             };
             self.emit(TraceEvent::TaskBegin { task, res });
             self.tasks.entry(task).or_default().began = true;
@@ -393,6 +395,7 @@ impl<'a> Interp<'a> {
             heap_bytes: self.eval_expr(f, env, &t.heap_bytes)? as u64,
             grid: self.eval_expr(f, env, &t.grid)? as u64,
             block: self.eval_expr(f, env, &t.block)? as u64,
+            iv: InterferenceProfile::ZERO,
         };
         self.emit(TraceEvent::TaskBegin { task, res });
         Ok(())

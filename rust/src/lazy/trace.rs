@@ -1,5 +1,7 @@
 //! Trace events: the device-independent operation stream of one job.
 
+use crate::gpu::InterferenceProfile;
+
 /// Resource vector a probe conveys to the scheduler (`task_begin`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TaskResources {
@@ -15,6 +17,12 @@ pub struct TaskResources {
     pub grid: u64,
     /// Threads per block of the widest member launch.
     pub block: u64,
+    /// Resource-pressure profile of the task's kernels (memory
+    /// bandwidth / L2 / SM occupancy). `ZERO` — the default for every
+    /// trace source that predates interference modeling — means the
+    /// task neither suffers nor causes contention beyond processor
+    /// sharing.
+    pub iv: InterferenceProfile,
 }
 
 impl TaskResources {
@@ -106,6 +114,21 @@ impl JobTrace {
                 _ => 0,
             })
             .sum()
+    }
+
+    /// Componentwise-max interference profile over all task probes —
+    /// the job-granularity pressure estimate the dispatcher charges a
+    /// node with before any of the job's tasks have actually begun
+    /// (the per-task vectors refine it at TaskBegin). All-zero for
+    /// interference-free traces.
+    pub fn peak_interference(&self) -> InterferenceProfile {
+        let mut peak = InterferenceProfile::ZERO;
+        for e in &self.events {
+            if let TraceEvent::TaskBegin { res, .. } = e {
+                peak = peak.max(&res.iv);
+            }
+        }
+        peak
     }
 
     /// Peak simultaneous reserved memory implied by the trace, assuming

@@ -3,18 +3,18 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
-//!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
+//!           [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
-//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
+//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
-//!           [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
+//!           [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
 //!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
-//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
+//!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
@@ -43,13 +43,13 @@ use std::collections::HashMap;
 const BENCH_FLAGS: &[&str] = &["exp", "seed"];
 const RUN_FLAGS: &[&str] = &[
     "workload", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
-    "migrate", "migrate-bw", "slo",
+    "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed", "compute", "artifacts",
 ];
 const NN_FLAGS: &[&str] = &[
     "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
-    "migrate", "migrate-bw", "slo",
+    "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed",
 ];
@@ -88,18 +88,18 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
-        [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
+        [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
-        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
+        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
-        [--nodes N] [--dispatch rr|least|mem|latency] [--rate JOBS_PER_S]
+        [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
         [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
-        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo]
+        [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
   compile <file.gir>
@@ -233,12 +233,26 @@ fn parse_slo(f: &HashMap<String, String>) -> Result<bool, String> {
     }
 }
 
+/// `--interference` stamps per-benchmark resource-pressure vectors
+/// onto the generated jobs by the artifacts their launches bind
+/// (`workloads::assign_interference`), turning on the device model's
+/// contention response. Off by default: jobs keep all-zero vectors and
+/// the run replays bit-identically to the pre-interference model.
+fn parse_interference(f: &HashMap<String, String>) -> Result<bool, String> {
+    match f.get("interference").map(String::as_str) {
+        None | Some("off") => Ok(false),
+        Some("true") | Some("on") => Ok(true),
+        Some(other) => Err(format!("invalid --interference '{other}' (bare flag, on, or off)")),
+    }
+}
+
 /// The validated run/nn option bundle: latency model, preemption
-/// config, SLO stamping — any invalid value is one error naming it.
-type RunOpts = (LatencyModel, Option<mgb::sched::PreemptConfig>, bool);
+/// config, SLO stamping, interference stamping — any invalid value is
+/// one error naming it.
+type RunOpts = (LatencyModel, Option<mgb::sched::PreemptConfig>, bool, bool);
 
 fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
-    Ok((parse_latency(f)?, parse_preempt(f)?, parse_slo(f)?))
+    Ok((parse_latency(f)?, parse_preempt(f)?, parse_slo(f)?, parse_interference(f)?))
 }
 
 fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
@@ -397,7 +411,7 @@ fn cmd_bench(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_run(f: &HashMap<String, String>) -> i32 {
-    let (latency, preempt, slo) = match parse_run_opts(f) {
+    let (latency, preempt, slo, interference) = match parse_run_opts(f) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("run: {e}");
@@ -419,6 +433,9 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
     let mut jobs = workload.jobs(seed);
     if slo {
         mgb::workloads::assign_slo(&mut jobs);
+    }
+    if interference {
+        mgb::workloads::assign_interference(&mut jobs);
     }
     apply_rate(f, &mut jobs, seed);
     let cfg = ClusterConfig {
@@ -475,7 +492,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
-    let (latency, preempt, slo) = match parse_run_opts(f) {
+    let (latency, preempt, slo, interference) = match parse_run_opts(f) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("nn: {e}");
@@ -502,6 +519,9 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
     };
     if slo {
         mgb::workloads::assign_slo(&mut jobs);
+    }
+    if interference {
+        mgb::workloads::assign_interference(&mut jobs);
     }
     apply_rate(f, &mut jobs, seed);
     let cfg = ClusterConfig {
@@ -690,6 +710,28 @@ mod tests {
         }
         let f = flags(&argv(&["--slo", "tight"]), RUN_FLAGS).unwrap();
         assert!(parse_slo(&f).is_err(), "unknown --slo value rejected");
+    }
+
+    #[test]
+    fn interference_flag_parses_like_slo() {
+        // Bare flag, on, off — the same bare-flag convention as --slo.
+        let f = flags(&argv(&["--interference"]), RUN_FLAGS).expect("flag in the valid set");
+        assert!(parse_interference(&f).expect("bare flag"));
+        let f = flags(&argv(&["--interference", "on"]), NN_FLAGS).unwrap();
+        assert!(parse_interference(&f).unwrap());
+        let f = flags(&argv(&["--interference", "off"]), RUN_FLAGS).unwrap();
+        assert!(!parse_interference(&f).unwrap());
+        // No flag, no stamping; unknown values are errors, not shrugs.
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert!(!parse_interference(&f).unwrap());
+        let f = flags(&argv(&["--interference", "heavy"]), RUN_FLAGS).unwrap();
+        assert!(parse_interference(&f).is_err());
+        // The partition dispatcher is a valid --dispatch value (with
+        // its "mig" alias), not a warn-and-default typo.
+        let f = flags(&argv(&["--dispatch", "partition"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_dispatch(&f), "partition");
+        let f = flags(&argv(&["--dispatch", "mig"]), NN_FLAGS).unwrap();
+        assert_eq!(parse_dispatch(&f), "partition");
     }
 
     #[test]

@@ -160,7 +160,7 @@ impl Policy for MgbAlg2 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpu::GpuSpec;
+    use crate::gpu::{GpuSpec, InterferenceProfile};
 
     fn views(n: usize, free: u64) -> Vec<DeviceView> {
         (0..n)
@@ -169,7 +169,7 @@ mod tests {
     }
 
     fn req(mem: u64, tbs: u64, wptb: u64) -> TaskReq {
-        TaskReq { mem_bytes: mem, tbs, warps_per_tb: wptb, slo: None }
+        TaskReq { mem_bytes: mem, tbs, warps_per_tb: wptb, slo: None, iv: InterferenceProfile::ZERO }
     }
 
     #[test]

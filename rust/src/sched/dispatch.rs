@@ -30,6 +30,19 @@
 //! by the same `route` call on a live snapshot — which is how victim
 //! restore inherits every dispatcher here, including the
 //! latency-aware scorer and the re-probe staleness guard.
+//!
+//! With interference modeling on (nonzero workload pressure vectors),
+//! [`Partition`] is the alternative frontend from the
+//! partition-then-allocate literature: the engine slices every device
+//! into static MIG-style partitions
+//! (`coordinator::placement::PARTITION_SLICES`) and this dispatcher
+//! does contention-aware job-to-partition-group allocation, steering
+//! each arriving job to the node whose aggregate pressure its own
+//! vector worsens least. Isolation caps worst-case degradation at the
+//! price of peak throughput — the trade the interference bench
+//! measures.
+
+use crate::gpu::InterferenceProfile;
 
 /// Aggregate load of one node at dispatch time.
 #[derive(Clone, Copy, Debug)]
@@ -66,6 +79,11 @@ pub struct NodeLoadView {
     /// with the model off). Together with `probe_rtt_s` this is the
     /// job's landing delay were it routed here.
     pub dispatch_cost_s: f64,
+    /// Summed interference profiles of every job dispatched to the
+    /// node and not yet finished (dispatcher-level bookkeeping like
+    /// `outstanding_work_us`, not live device state). All-zero when no
+    /// outstanding job carries a pressure vector.
+    pub pressure: InterferenceProfile,
 }
 
 /// What the dispatcher may know about the arriving job.
@@ -75,6 +93,10 @@ pub struct JobInfo {
     pub est_work_us: u64,
     /// Estimated peak simultaneous reservation, bytes.
     pub peak_mem_bytes: u64,
+    /// Componentwise-max interference profile over the job's task
+    /// probes (`JobTrace::peak_interference`). All-zero for legacy
+    /// workloads.
+    pub iv: InterferenceProfile,
 }
 
 /// A cluster-level job router. Stateful (round-robin keeps a cursor);
@@ -258,6 +280,61 @@ impl Dispatcher for LatencyAware {
     }
 }
 
+/// Contention-aware allocation over statically partitioned devices —
+/// the dispatch half of partition-then-allocate (the engine's slicing
+/// of each device into `PARTITION_SLICES` isolation domains is the
+/// other half, keyed off this dispatcher's canonical name).
+///
+/// Routing minimises the *post-placement* pressure hot-spot: the node
+/// whose per-GPU-slice aggregate pressure, after adding the arriving
+/// job's vector, has the smallest dominant component. Jobs thus spread
+/// by the resource they actually contend on — two memory-bandwidth
+/// hogs land on different nodes even when work-wise both fit on one —
+/// which is what bounds worst-case per-kernel degradation. Ties break
+/// by capability-normalised outstanding work, then queue depth, then
+/// node index, so pressure-equal clusters degrade to sensible
+/// load balancing.
+///
+/// With interference modeling off (the arriving job and every node
+/// all-zero) there is no pressure signal at all; the dispatcher
+/// delegates to [`LeastLoaded`], mirroring [`LatencyAware`]'s
+/// zero-delay delegation (and locked by the same style of test).
+#[derive(Debug, Default)]
+pub struct Partition {
+    inner: LeastLoaded,
+}
+
+impl Dispatcher for Partition {
+    fn name(&self) -> &'static str {
+        "partition"
+    }
+
+    fn route(&mut self, job: &JobInfo, nodes: &[NodeLoadView]) -> usize {
+        if job.iv.is_zero() && nodes.iter().all(|v| v.pressure.is_zero()) {
+            return self.inner.route(job, nodes);
+        }
+        // Dominant per-slice pressure component if the job landed here.
+        let hot = |v: &NodeLoadView| {
+            v.pressure.add(&job.iv).max_component() / (v.n_gpus as f64).max(1.0)
+        };
+        let work = |v: &NodeLoadView| {
+            v.outstanding_work_us as f64 / v.compute_capacity.max(f64::MIN_POSITIVE)
+        };
+        let mut best = 0;
+        for (i, v) in nodes.iter().enumerate().skip(1) {
+            let b = &nodes[best];
+            let better = hot(v) < hot(b)
+                || (hot(v) == hot(b)
+                    && (work(v) < work(b)
+                        || (work(v) == work(b) && v.queued_jobs < b.queued_jobs)));
+            if better {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
 /// Canonical short name for a dispatcher alias, or `None` if the name
 /// is not recognised. The single alias table shared by the CLI parser
 /// and [`make_dispatcher`].
@@ -267,17 +344,20 @@ pub fn canonical_dispatch(name: &str) -> Option<&'static str> {
         "least" | "least-loaded" => Some("least"),
         "mem" | "headroom" => Some("mem"),
         "latency" | "latency-aware" => Some("latency"),
+        "partition" | "mig" => Some("partition"),
         _ => None,
     }
 }
 
-/// Construct a dispatcher by name: "rr" | "least" | "mem" | "latency".
+/// Construct a dispatcher by name:
+/// "rr" | "least" | "mem" | "latency" | "partition".
 pub fn make_dispatcher(name: &str) -> Box<dyn Dispatcher> {
     match canonical_dispatch(name) {
         Some("rr") => Box::new(RoundRobin::default()),
         Some("least") => Box::new(LeastLoaded),
         Some("mem") => Box::new(MemHeadroom),
         Some("latency") => Box::new(LatencyAware::default()),
+        Some("partition") => Box::new(Partition::default()),
         _ => panic!("unknown dispatcher '{name}'"),
     }
 }
@@ -298,7 +378,12 @@ mod tests {
             taken_at: 0.0,
             probe_rtt_s: 0.0,
             dispatch_cost_s: 0.0,
+            pressure: InterferenceProfile::ZERO,
         }
+    }
+
+    fn hot_view(outstanding_work_us: u64, pressure: InterferenceProfile) -> NodeLoadView {
+        NodeLoadView { pressure, ..view(outstanding_work_us, 0, 0) }
     }
 
     fn lat_view(outstanding_work_us: u64, rtt_s: f64, dispatch_s: f64) -> NodeLoadView {
@@ -314,7 +399,11 @@ mod tests {
     }
 
     fn job() -> JobInfo {
-        JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 1 << 30 }
+        JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 1 << 30, iv: InterferenceProfile::ZERO }
+    }
+
+    fn hot_job(mem_bw: f64, l2: f64, sm: f64) -> JobInfo {
+        JobInfo { iv: InterferenceProfile::new(mem_bw, l2, sm), ..job() }
     }
 
     #[test]
@@ -473,6 +562,69 @@ mod tests {
     }
 
     #[test]
+    fn partition_spreads_by_dominant_pressure_component() {
+        let mut d = make_dispatcher("partition");
+        // Node 0 is memory-bandwidth hot, node 1 SM hot. A bandwidth
+        // hog routes to the SM-hot node (its own dominant resource is
+        // the one it avoids stacking), even though node 1 has MORE
+        // outstanding work.
+        let nodes = vec![
+            hot_view(0, InterferenceProfile::new(0.9, 0.1, 0.1)),
+            hot_view(5_000_000, InterferenceProfile::new(0.1, 0.1, 0.9)),
+        ];
+        assert_eq!(d.route(&hot_job(0.8, 0.1, 0.1), &nodes), 1);
+        // And an SM hog makes the opposite choice on the same cluster.
+        assert_eq!(d.route(&hot_job(0.1, 0.1, 0.8), &nodes), 0);
+    }
+
+    #[test]
+    fn partition_normalises_pressure_by_slice_count() {
+        let mut d = make_dispatcher("partition");
+        // Same aggregate pressure, but node 1 has twice the GPU slices
+        // to dilute it over: it is the cooler hot-spot.
+        let hot = InterferenceProfile::new(0.8, 0.2, 0.2);
+        let mut small = hot_view(0, hot);
+        small.n_gpus = 4;
+        let mut big = hot_view(0, hot);
+        big.n_gpus = 8;
+        assert_eq!(d.route(&hot_job(0.5, 0.1, 0.1), &[small, big]), 1);
+    }
+
+    #[test]
+    fn partition_ties_break_by_normalised_work_then_queue() {
+        let mut d = make_dispatcher("partition");
+        let hot = InterferenceProfile::new(0.4, 0.4, 0.4);
+        // Equal pressure everywhere: less outstanding work wins.
+        let nodes = vec![hot_view(2_000_000, hot), hot_view(1_000_000, hot)];
+        assert_eq!(d.route(&hot_job(0.2, 0.2, 0.2), &nodes), 1);
+        // Equal pressure and work: fewer queued jobs, then lower index.
+        let mut q0 = hot_view(1_000_000, hot);
+        q0.queued_jobs = 3;
+        let q1 = hot_view(1_000_000, hot);
+        assert_eq!(d.route(&hot_job(0.2, 0.2, 0.2), &[q0, q1]), 1);
+    }
+
+    #[test]
+    fn partition_with_zero_pressure_ranks_exactly_like_least_loaded() {
+        // Interference off = no signal: the partition dispatcher must
+        // delegate to least-loaded on every path (homogeneous integer,
+        // heterogeneous normalised, tie-breaks) — the same contract
+        // latency-aware honours at zero delay.
+        let cases: Vec<Vec<NodeLoadView>> = vec![
+            vec![view(30, 1, 0), view(10, 5, 0), view(20, 0, 0)],
+            vec![view(10, 3, 0), view(10, 1, 0), view(10, 1, 0)],
+            vec![het_view(1_000_000, 1.4), het_view(1_000_000, 4.0)],
+            vec![het_view(300_000, 1.4), het_view(1_000_000, 4.0)],
+            vec![het_view(10, 4.0), het_view(9, 4.0)],
+        ];
+        let mut pa = make_dispatcher("partition");
+        let mut ll = make_dispatcher("least");
+        for nodes in &cases {
+            assert_eq!(pa.route(&job(), nodes), ll.route(&job(), nodes));
+        }
+    }
+
+    #[test]
     fn only_round_robin_is_load_oblivious() {
         // The re-probe guard keys off this: it must stay dormant for
         // dispatchers whose decisions cannot go stale.
@@ -480,6 +632,7 @@ mod tests {
         assert!(make_dispatcher("least").load_based());
         assert!(make_dispatcher("mem").load_based());
         assert!(make_dispatcher("latency").load_based());
+        assert!(make_dispatcher("partition").load_based());
     }
 
     #[test]
@@ -489,6 +642,8 @@ mod tests {
         assert_eq!(canonical_dispatch("headroom"), Some("mem"));
         assert_eq!(canonical_dispatch("latency-aware"), Some("latency"));
         assert_eq!(canonical_dispatch("latency"), Some("latency"));
+        assert_eq!(canonical_dispatch("mig"), Some("partition"));
+        assert_eq!(canonical_dispatch("partition"), Some("partition"));
         assert_eq!(canonical_dispatch("nope"), None);
     }
 

@@ -42,7 +42,7 @@ pub use alg2::MgbAlg2;
 pub use alg3::MgbAlg3;
 pub use dispatch::{
     canonical_dispatch, make_dispatcher, Dispatcher, JobInfo, LatencyAware, LeastLoaded,
-    MemHeadroom, NodeLoadView, RoundRobin,
+    MemHeadroom, NodeLoadView, Partition, RoundRobin,
 };
 pub use preempt::{
     canonical_migrate, canonical_preempt, make_preempt_policy, MaxMemory, MinProgress,
@@ -50,7 +50,7 @@ pub use preempt::{
 };
 pub use schedgpu::SchedGpu;
 
-use crate::gpu::GpuSpec;
+use crate::gpu::{GpuSpec, InterferenceProfile};
 
 /// Resource vector conveyed by a probe (`task_begin`).
 #[derive(Clone, Copy, Debug)]
@@ -67,6 +67,11 @@ pub struct TaskReq {
     /// `None` = no SLO (ranks loosest in the victim lattice). Placement
     /// policies ignore it.
     pub slo: Option<SloClass>,
+    /// Resource-pressure profile of the task's kernels, threaded from
+    /// the workload layer so contention-aware dispatchers and (future)
+    /// interference-aware node policies can see what the probe is about
+    /// to inflict on its co-residents. `ZERO` for legacy workloads.
+    pub iv: InterferenceProfile,
 }
 
 impl TaskReq {

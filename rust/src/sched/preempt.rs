@@ -396,9 +396,10 @@ pub fn make_preempt_policy(name: &str) -> Box<dyn PreemptPolicy> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::InterferenceProfile;
 
     fn req() -> TaskReq {
-        TaskReq { mem_bytes: 8 << 30, tbs: 100, warps_per_tb: 4, slo: None }
+        TaskReq { mem_bytes: 8 << 30, tbs: 100, warps_per_tb: 4, slo: None, iv: InterferenceProfile::ZERO }
     }
 
     fn req_slo(slo: SloClass) -> TaskReq {

@@ -55,7 +55,7 @@ impl Policy for SchedGpu {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpu::GpuSpec;
+    use crate::gpu::{GpuSpec, InterferenceProfile};
 
     fn views(frees: &[u64]) -> Vec<DeviceView> {
         frees
@@ -68,7 +68,7 @@ mod tests {
     fn piles_onto_device0_while_memory_lasts() {
         let mut p = SchedGpu::new(4);
         let v = views(&[16 << 30; 4]);
-        let r = TaskReq { mem_bytes: 1 << 30, tbs: 10_000, warps_per_tb: 8, slo: None };
+        let r = TaskReq { mem_bytes: 1 << 30, tbs: 10_000, warps_per_tb: 8, slo: None, iv: InterferenceProfile::ZERO };
         for i in 0..8 {
             // 8 x 1.5GB-class NN jobs all fit on one V100: all on dev 0.
             assert_eq!(p.place((i, 0), &r, &v), Some(0));
@@ -79,7 +79,7 @@ mod tests {
     fn spills_only_on_memory_pressure() {
         let mut p = SchedGpu::new(2);
         let v = views(&[1 << 30, 16 << 30]);
-        let r = TaskReq { mem_bytes: 2 << 30, tbs: 1, warps_per_tb: 1, slo: None };
+        let r = TaskReq { mem_bytes: 2 << 30, tbs: 1, warps_per_tb: 1, slo: None, iv: InterferenceProfile::ZERO };
         assert_eq!(p.place((0, 0), &r, &v), Some(1));
     }
 
@@ -87,7 +87,7 @@ mod tests {
     fn suspends_with_no_memory_anywhere() {
         let mut p = SchedGpu::new(2);
         let v = views(&[1 << 20, 1 << 20]);
-        let r = TaskReq { mem_bytes: 1 << 30, tbs: 1, warps_per_tb: 1, slo: None };
+        let r = TaskReq { mem_bytes: 1 << 30, tbs: 1, warps_per_tb: 1, slo: None, iv: InterferenceProfile::ZERO };
         assert_eq!(p.place((0, 0), &r, &v), None);
     }
 }

@@ -137,6 +137,23 @@ impl NnTask {
         debug_assert!(trace.check_well_formed().is_ok());
         JobSpec { name: self.profile().name.to_string(), class: JobClass::Nn, trace, arrival: 0.0, slo: None }
     }
+
+    /// Per-task resource-pressure profile (memory bandwidth / L2 / SM).
+    /// Training is the all-round heavy hitter (fwd+bwd streams weights
+    /// both ways), prediction streams weights through L2 at moderate
+    /// compute, generation's sequential RNN cells are L2-resident, and
+    /// detection barely touches the device (video-I/O bound). Stamped
+    /// only by `workloads::assign_interference` — plain `job_spec()`
+    /// traces stay all-zero.
+    pub fn interference(&self) -> crate::gpu::InterferenceProfile {
+        use crate::gpu::InterferenceProfile as P;
+        match self {
+            NnTask::Predict => P::new(0.4, 0.45, 0.3),
+            NnTask::Train => P::new(0.55, 0.5, 0.65),
+            NnTask::Detect => P::new(0.2, 0.25, 0.12),
+            NnTask::Generate => P::new(0.3, 0.6, 0.4),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@ use super::darknet::{NnTask, NN_TASKS};
 use super::rng::Rng;
 use super::rodinia::COMBOS;
 use crate::coordinator::{JobClass, JobSpec};
+use crate::gpu::InterferenceProfile;
 use crate::lazy::{JobTrace, TaskResources, TraceEvent};
 use crate::sched::SloClass;
 
@@ -96,6 +97,7 @@ pub fn synthetic_job(
         heap_bytes: 0,
         grid: 100,
         block: 32,
+        iv: InterferenceProfile::ZERO,
     };
     JobSpec {
         name: name.into(),
@@ -120,6 +122,65 @@ pub fn synthetic_job(
                 TraceEvent::TaskEnd { task: 0 },
             ],
         },
+    }
+}
+
+/// A [`synthetic_job`] carrying an explicit interference vector — the
+/// adversarial unit of the high-pressure interference bench mixes
+/// (small footprints that fit MIG-style device slices, hot profiles
+/// that fight over one resource).
+pub fn synthetic_job_with_iv(
+    name: &str,
+    class: JobClass,
+    mem_bytes: u64,
+    work_us: u64,
+    arrival: f64,
+    iv: InterferenceProfile,
+) -> JobSpec {
+    let mut spec = synthetic_job(name, class, mem_bytes, work_us, arrival);
+    stamp_iv(&mut spec, iv);
+    spec
+}
+
+/// Overwrite every task probe's pressure vector in `spec`'s trace.
+fn stamp_iv(spec: &mut JobSpec, iv: InterferenceProfile) {
+    for e in spec.trace.events.iter_mut() {
+        if let TraceEvent::TaskBegin { res, .. } = e {
+            res.iv = iv.sanitized();
+        }
+    }
+}
+
+/// Stamp per-benchmark interference vectors onto a job mix — the
+/// `--interference` CLI mapping, and the single place traces acquire
+/// nonzero pressure. Each job's profile is looked up from the artifact
+/// its launches bind (`Bench::interference` for the Rodinia combos,
+/// `NnTask::interference` for the Darknet tasks); jobs whose launches
+/// bind no known artifact (synthetic jobs, hand-built traces) are left
+/// untouched. Jobs keep all-zero vectors unless this is called, so
+/// every existing mix replays bit-identically.
+pub fn assign_interference(jobs: &mut [JobSpec]) {
+    use super::rodinia::Bench;
+    for spec in jobs.iter_mut() {
+        let artifact = spec.trace.events.iter().find_map(|e| match e {
+            TraceEvent::Launch { artifact: Some(a), .. } => Some(a.clone()),
+            _ => None,
+        });
+        let Some(artifact) = artifact else { continue };
+        let iv = match artifact.as_str() {
+            "backprop" => Bench::Backprop.interference(),
+            "srad" => Bench::SradV1.interference(),
+            "lavamd" => Bench::LavaMd.interference(),
+            "needle" => Bench::Needle.interference(),
+            "dwt2d" => Bench::Dwt2d.interference(),
+            "bfs" => Bench::Bfs.interference(),
+            "darknet_predict" => NnTask::Predict.interference(),
+            "darknet_train" => NnTask::Train.interference(),
+            "darknet_detect" => NnTask::Detect.interference(),
+            "darknet_rnn" => NnTask::Generate.interference(),
+            _ => continue,
+        };
+        stamp_iv(spec, iv);
     }
 }
 
@@ -257,6 +318,43 @@ mod tests {
             };
             assert_eq!(j.slo, Some(want), "{}", j.name);
         }
+    }
+
+    #[test]
+    fn assign_interference_stamps_by_artifact_and_default_is_zero() {
+        let mut jobs = WORKLOADS[0].jobs(1);
+        jobs.extend(nn_mix(8, 1));
+        let zero = |j: &JobSpec| j.trace.peak_interference().is_zero();
+        assert!(jobs.iter().all(zero), "no pressure unless asked");
+        assign_interference(&mut jobs);
+        for j in &jobs {
+            assert!(!zero(j), "{}: every rodinia/darknet job gains a vector", j.name);
+        }
+        // The vectors are the per-benchmark ones, not one blanket value.
+        let bfs = jobs.iter().find(|j| j.name.contains("bfs"));
+        if let Some(b) = bfs {
+            assert_eq!(b.trace.peak_interference(), super::super::rodinia::Bench::Bfs.interference());
+        }
+        let train = jobs.iter().find(|j| j.name.contains("nn-train")).unwrap();
+        assert_eq!(train.trace.peak_interference(), NnTask::Train.interference());
+        // Synthetic (artifact-less) jobs pass through untouched.
+        let mut synth = vec![synthetic_job("s", JobClass::Small, 1 << 30, 1000, 0.0)];
+        assign_interference(&mut synth);
+        assert!(zero(&synth[0]));
+    }
+
+    #[test]
+    fn synthetic_job_with_iv_stamps_and_sanitizes() {
+        let j = synthetic_job_with_iv(
+            "hot",
+            JobClass::Small,
+            2 << 30,
+            1000,
+            0.0,
+            InterferenceProfile::new(1.5, -0.3, 0.7),
+        );
+        // Components clamp into [0, 1] on the way in.
+        assert_eq!(j.trace.peak_interference(), InterferenceProfile::new(1.0, 0.0, 0.7));
     }
 
     #[test]

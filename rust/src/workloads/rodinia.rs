@@ -62,6 +62,28 @@ impl Bench {
             Bench::Bfs => "bfs",
         }
     }
+
+    /// Per-benchmark resource-pressure profile (memory-bandwidth share,
+    /// L2 footprint class, SM occupancy), following the resource-
+    /// specific contention characterisation of arXiv 2501.16909:
+    /// bfs is a memory-bound irregular traversal (bandwidth-dominant,
+    /// cache-hostile), needle's wavefront DP lives in the L2 tile
+    /// window, srad is a dense bandwidth+compute stencil, lavaMD is
+    /// compute-bound MD with a small working set, dwt2d and backprop
+    /// sit mid-spectrum. Stamped onto traces only by
+    /// `workloads::assign_interference` — plain `job_spec()` traces
+    /// stay all-zero (bit-identical legacy behaviour).
+    pub fn interference(&self) -> crate::gpu::InterferenceProfile {
+        use crate::gpu::InterferenceProfile as P;
+        match self {
+            Bench::Bfs => P::new(0.85, 0.5, 0.2),
+            Bench::Needle => P::new(0.35, 0.7, 0.15),
+            Bench::SradV1 | Bench::SradV2 => P::new(0.65, 0.45, 0.85),
+            Bench::Dwt2d => P::new(0.55, 0.35, 0.4),
+            Bench::LavaMd => P::new(0.25, 0.3, 0.85),
+            Bench::Backprop => P::new(0.45, 0.4, 0.35),
+        }
+    }
 }
 
 /// The paper's pool: 7 small (1–4 GB) + 10 large (>4 GB) combos.

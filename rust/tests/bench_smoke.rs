@@ -125,6 +125,84 @@ fn unknown_experiment_is_rejected() {
 }
 
 #[test]
+fn partition_bounds_worst_case_degradation_under_pressure() {
+    // The interference PR's acceptance bound: on the high-pressure
+    // small-footprint mix (2 GiB jobs with hot vectors — four fit one
+    // half-V100 slice), the partitioned dispatcher's worst per-kernel
+    // degradation must not exceed either sharing dispatcher's. Slices
+    // are isolation domains, so partitioning halves the worst-case
+    // co-residency a kernel can suffer; sharing buys throughput by
+    // giving that bound up.
+    let rows = bench_harness::hot_mix_comparison(2);
+    assert_eq!(rows.len(), 3);
+    let row = |d: &str| {
+        rows.iter()
+            .find(|r| r.dispatch == d)
+            .unwrap_or_else(|| panic!("row '{d}' missing"))
+    };
+    for r in &rows {
+        assert_eq!(r.crashed, 0, "{}: the high-pressure mix must stay memory-safe", r.dispatch);
+        assert_eq!(r.completed, r.jobs, "{}: jobs conserved", r.dispatch);
+        assert!(r.interference, "comparison rows run with vectors on");
+    }
+    let partition = row("partition").worst_kernel_slowdown_pct;
+    for d in ["least", "mem"] {
+        let sharing = row(d).worst_kernel_slowdown_pct;
+        assert!(
+            partition <= sharing + 1e-9,
+            "partition worst-case degradation {partition}% must not exceed {d}'s {sharing}%"
+        );
+    }
+    // Export the comparison as a JSON artifact for CI upload next to
+    // BENCH_SCALE.json (same hand-rolled-JSON convention).
+    let json = bench_harness::bench_interference_json("smoke", 2, &rows);
+    assert!(json.contains("\"dispatch\": \"partition\""));
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bench_interference.json"), json).unwrap();
+}
+
+#[test]
+fn interference_off_rows_reproduce_bench_cluster_numbers() {
+    // The zero-vector contract at the report level: `bench
+    // --exp interference`'s off rows use the exact `bench cluster` job
+    // construction, so their numbers must equal a from-scratch run of
+    // that recipe bit for bit — any drift means the interference
+    // plumbing perturbed the off path.
+    use mgb::coordinator::{run_cluster, ClusterConfig, SchedMode};
+    use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
+    use mgb::workloads::{poisson_arrivals, Workload};
+    let node = NodeSpec::v100x4();
+    let w5 = Workload::by_id("W5").expect("W5 exists");
+    let mut jobs = Vec::new();
+    for k in 0..2u64 {
+        jobs.extend(w5.jobs(2u64.wrapping_add(k)));
+    }
+    poisson_arrivals(&mut jobs, 0.35 * 2.0, 2);
+    let r = run_cluster(
+        ClusterConfig {
+            cluster: ClusterSpec::homogeneous(node.clone(), 2),
+            mode: SchedMode::Policy("mgb3"),
+            workers_per_node: bench_harness::mgb_workers(&node),
+            dispatch: "least",
+            preempt: None,
+            latency: LatencyModel::off(),
+        },
+        jobs,
+    );
+    let row = bench_harness::w5_row(2, 2, "least", false);
+    assert!(!row.interference);
+    assert_eq!(row.jobs, r.jobs.len());
+    assert_eq!(row.completed, r.completed());
+    assert_eq!(row.crashed, r.crashed());
+    assert_eq!(row.throughput, r.throughput(), "throughput must match bit for bit");
+    assert_eq!(row.mean_turnaround_s, r.mean_turnaround());
+    assert_eq!(row.kernel_slowdown_pct, r.kernel_slowdown_pct());
+    assert_eq!(row.worst_kernel_slowdown_pct, r.worst_kernel_slowdown_pct());
+}
+
+#[test]
 fn scale_smoke_row_holds_the_backend_contract() {
     // The fast row of `bench scale` (the full sweep's 1000-node rows
     // belong to `cargo bench` / CI, not the test suite). `run_point`

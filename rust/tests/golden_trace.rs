@@ -135,6 +135,62 @@ fn golden_w2_four_node_open_system() {
     check_golden("w2_4node_open", &tr);
 }
 
+#[test]
+fn golden_w1_four_node_interference() {
+    // The interference-on fixture: the same W1 x 4-node open-system
+    // construction as `golden_w1_four_node_open`, with per-benchmark
+    // resource-pressure vectors stamped (`--interference`). Pins the
+    // contention-aware device model's full event stream, and holds the
+    // calendar backend to the heap reference on the interference path.
+    let mut jobs = mix("W1", Some(0.5));
+    mgb::workloads::assign_interference(&mut jobs);
+    assert!(
+        jobs.iter().any(|j| !j.trace.peak_interference().is_zero()),
+        "W1 binds rodinia artifacts, so stamping must take"
+    );
+    let (r, tr) = run_cluster_traced(cfg(4, "least", LatencyModel::off()), jobs.clone());
+    assert_eq!(r.completed() + r.crashed(), 16);
+    let (_, th) =
+        run_cluster_traced_on_backend(cfg(4, "least", LatencyModel::off()), jobs, "heap");
+    if tr != th {
+        let (ln, e, a) = first_divergence(&tr.join("\n"), &th.join("\n"));
+        panic!("backends diverged on the interference path at event {ln}:\n  calendar: {e}\n  heap:     {a}");
+    }
+    check_golden("w1_4node_interference", &tr);
+}
+
+#[test]
+fn interference_vectors_change_the_stream_zero_vectors_do_not() {
+    // The on/off contract in one place. A dense single-node batch (16
+    // jobs on 4 GPUs — co-residency guaranteed) must fire a *different*
+    // stream once vectors are stamped: the model has to bite. And jobs
+    // whose launches bind no known artifact keep zero vectors, so
+    // `assign_interference` on them must replay the untouched stream
+    // byte-for-byte.
+    let (_, off) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), mix("W1", None));
+    let mut stamped = mix("W1", None);
+    mgb::workloads::assign_interference(&mut stamped);
+    let (_, on) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), stamped);
+    assert_ne!(on, off, "stamped vectors must perturb a co-scheduled batch");
+    // Synthetic jobs bind no artifact: stamping is a no-op end to end.
+    let jobs: Vec<JobSpec> = (0..8)
+        .map(|i| {
+            synthetic_job(
+                &format!("s{i}"),
+                mgb::coordinator::JobClass::Small,
+                1 << 30,
+                2_000_000,
+                0.0,
+            )
+        })
+        .collect();
+    let mut stamped = jobs.clone();
+    mgb::workloads::assign_interference(&mut stamped);
+    let (_, a) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), jobs);
+    let (_, b) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), stamped);
+    assert_eq!(a, b, "zero vectors must replay the legacy stream exactly");
+}
+
 // ---- backend equivalence (calendar queue vs BinaryHeap reference) ----
 
 #[test]

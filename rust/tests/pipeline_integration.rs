@@ -5,7 +5,7 @@
 
 use mgb::bench_harness;
 use mgb::coordinator::{run_batch, RunConfig, SchedMode};
-use mgb::gpu::NodeSpec;
+use mgb::gpu::{InterferenceProfile, NodeSpec};
 use mgb::workloads::{nn_mix, Workload, COMBOS, NN_TASKS, WORKLOADS};
 
 #[test]
@@ -140,7 +140,14 @@ fn cg_crash_cleanup_releases_memory_for_survivors() {
     use mgb::coordinator::JobClass;
     use mgb::lazy::{JobTrace, TaskResources, TraceEvent};
     let mk = |mem: u64| {
-        let res = TaskResources { static_dev: None, mem_bytes: mem, heap_bytes: 0, grid: 100, block: 32 };
+        let res = TaskResources {
+            static_dev: None,
+            mem_bytes: mem,
+            heap_bytes: 0,
+            grid: 100,
+            block: 32,
+            iv: InterferenceProfile::ZERO,
+        };
         JobTrace {
             events: vec![
                 TraceEvent::TaskBegin { task: 0, res },
@@ -243,7 +250,14 @@ fn single_job_larger_than_any_gpu_crashes_everywhere() {
     // than deadlock the batch.
     use mgb::coordinator::JobClass;
     use mgb::lazy::{JobTrace, TaskResources, TraceEvent};
-    let res = TaskResources { static_dev: None, mem_bytes: 20 << 30, heap_bytes: 0, grid: 10, block: 32 };
+    let res = TaskResources {
+        static_dev: None,
+        mem_bytes: 20 << 30,
+        heap_bytes: 0,
+        grid: 10,
+        block: 32,
+        iv: InterferenceProfile::ZERO,
+    };
     let job = mgb::coordinator::JobSpec {
         name: "whale".into(),
         class: JobClass::Large,

@@ -5,12 +5,19 @@
 //! first failing seed for replay.
 
 use mgb::compiler::{compile, CompiledProgram};
-use mgb::coordinator::{run_batch, JobClass, JobSpec, RunConfig, SchedMode};
-use mgb::gpu::{GpuSpec, NodeSpec};
+use mgb::coordinator::{
+    run_batch, run_cluster_traced, run_cluster_traced_on_backend, ClusterConfig, JobClass,
+    JobSpec, RunConfig, SchedMode,
+};
+use mgb::gpu::{
+    ClusterSpec, Device, GpuSpec, InterferenceProfile, InterferenceResponse, LatencyModel,
+    NodeSpec,
+};
 use mgb::ir::{Expr, OpKind, Program, ProgramBuilder};
 use mgb::lazy::{interpret, TraceEvent};
 use mgb::sched::{make_policy, DeviceView, TaskReq};
 use mgb::workloads::rng::Rng;
+use mgb::workloads::{poisson_arrivals, Workload};
 
 /// Run `prop` for `cases` seeds; panic with the seed on first failure.
 fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
@@ -270,6 +277,7 @@ fn prop_placements_always_fit_free_memory() {
                 tbs: 1 + rng.below(2000) as u64,
                 warps_per_tb: 1 + rng.below(8) as u64,
                 slo: None,
+                iv: InterferenceProfile::ZERO,
             };
             if let Some(d) = policy.place((i, 0), &req, &views) {
                 assert!(
@@ -281,6 +289,111 @@ fn prop_placements_always_fit_free_memory() {
                 free[d] -= req.mem_bytes;
             }
         }
+    });
+}
+
+#[test]
+fn prop_zero_vector_cluster_streams_are_replay_and_backend_identical() {
+    // The interference tentpole's off-path contract at event
+    // granularity: with every vector at its all-zero default, a
+    // multi-thousand-event open-system cluster run fires byte-identical
+    // streams run-to-run and across event-queue backends. The
+    // interference plumbing (per-node pressure charging, per-task
+    // vector threading, the device's aggregate check) must add no
+    // nondeterminism and perturb no zero-pressure code path.
+    let cluster_cfg = |dispatch: &'static str| ClusterConfig {
+        cluster: ClusterSpec::homogeneous(NodeSpec::v100x4(), 2),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 16,
+        dispatch,
+        preempt: None,
+        latency: LatencyModel::off(),
+    };
+    for dispatch in ["least", "mem"] {
+        let mut jobs = Workload::by_id("W1").unwrap().jobs(11);
+        jobs.extend(Workload::by_id("W2").unwrap().jobs(13));
+        poisson_arrivals(&mut jobs, 1.5, 11);
+        assert!(
+            jobs.iter().all(|j| j.trace.peak_interference().is_zero()),
+            "unstamped mixes must carry all-zero vectors"
+        );
+        let (a, ta) = run_cluster_traced(cluster_cfg(dispatch), jobs.clone());
+        let (_, tb) = run_cluster_traced(cluster_cfg(dispatch), jobs.clone());
+        let (c, tc) = run_cluster_traced_on_backend(cluster_cfg(dispatch), jobs, "heap");
+        assert_eq!(ta, tb, "{dispatch}: zero-vector replay must be byte-identical");
+        assert_eq!(ta, tc, "{dispatch}: backends must agree on the zero-vector stream");
+        assert!(ta.len() >= 1_000, "{dispatch}: stream too small to mean much: {}", ta.len());
+        assert_eq!(a.makespan, c.makespan);
+        assert_eq!(a.completed(), c.completed());
+    }
+}
+
+#[test]
+fn prop_interference_slowdown_is_monotone_and_clamped() {
+    // Response-level property: for any own-profile, slowdown is >= 1,
+    // <= max_slowdown, and monotone non-decreasing as co-resident
+    // pressure accumulates component by component.
+    check(300, |rng| {
+        let resp = InterferenceResponse::default();
+        let frac = |rng: &mut Rng| rng.below(101) as f64 / 100.0;
+        let own = InterferenceProfile::new(frac(rng), frac(rng), frac(rng));
+        let mut others = InterferenceProfile::ZERO;
+        let mut prev = resp.slowdown(&own, &others);
+        assert_eq!(prev, 1.0, "no co-residents, no slowdown");
+        for _ in 0..12 {
+            let delta = InterferenceProfile::new(
+                frac(rng) * 0.5,
+                frac(rng) * 0.5,
+                frac(rng) * 0.5,
+            );
+            others = others.add(&delta);
+            let s = resp.slowdown(&own, &others);
+            assert!(s >= prev - 1e-12, "monotone: {s} after {prev}");
+            assert!((1.0..=resp.max_slowdown).contains(&s), "clamped: {s}");
+            prev = s;
+        }
+    });
+}
+
+#[test]
+fn prop_device_rates_stay_within_the_interference_envelope() {
+    // Device-level property: a kernel's interference-normalised rate
+    // (MPS overhead factored out) never exceeds its dedicated rate and
+    // never falls below dedicated / max_slowdown, for random profiles
+    // and random co-resident counts. Warp totals stay under the
+    // device's compute headroom so processor sharing stays out of the
+    // picture and the envelope isolates the interference term.
+    check(150, |rng| {
+        let spec = GpuSpec::v100();
+        let frac = |rng: &mut Rng| rng.below(101) as f64 / 100.0;
+        let own = InterferenceProfile::new(frac(rng), frac(rng), frac(rng));
+        let warps = 1 + rng.below(512) as u64;
+        let dedicated = {
+            let mut d = Device::new(spec);
+            d.advance_to(0.0);
+            let h = d.start_kernel_with(0.0, 1.0, warps, own);
+            1.0 / d.eta_at(0.0, h).expect("resident")
+        };
+        let mut d = Device::new(spec);
+        d.advance_to(0.0);
+        let h = d.start_kernel_with(0.0, 1.0, warps, own);
+        let n = 1 + rng.below(6);
+        for _ in 0..n {
+            let iv = InterferenceProfile::new(frac(rng), frac(rng), frac(rng));
+            d.start_kernel_with(0.0, 1.0, 1 + rng.below(512) as u64, iv);
+        }
+        let rate = 1.0 / d.eta_at(0.0, h).expect("still resident");
+        let mps = 1.0 + mgb::gpu::device::MPS_PER_NEIGHBOUR * n as f64;
+        let normalised = rate * mps;
+        let max_slow = spec.interference.max_slowdown;
+        assert!(
+            normalised <= dedicated * (1.0 + 1e-9),
+            "co-residency sped a kernel up: {normalised} > {dedicated}"
+        );
+        assert!(
+            normalised >= dedicated / max_slow - 1e-9,
+            "rate {normalised} fell below dedicated {dedicated} / max_slowdown {max_slow}"
+        );
     });
 }
 
