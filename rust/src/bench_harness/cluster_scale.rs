@@ -36,6 +36,8 @@ pub fn cluster_scale(seed: u64) -> Report {
                 dispatch,
                 preempt: None,
                 latency: crate::gpu::LatencyModel::off(),
+                admit: None,
+                frontend_q: "fifo",
             };
             let r = run_cluster(cfg, jobs.clone());
             lines.push(format!(

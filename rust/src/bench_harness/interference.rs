@@ -20,6 +20,7 @@
 //! artifact (`BENCH_INTERFERENCE.json` at the repo root) and is kept
 //! out of `run_all` because of that side effect.
 
+use super::json::float;
 use super::{mgb_workers, Report};
 use crate::coordinator::{run_cluster, ClusterConfig, JobClass, JobSpec, RunResult, SchedMode};
 use crate::gpu::{ClusterSpec, InterferenceProfile, LatencyModel, NodeSpec};
@@ -97,6 +98,8 @@ fn cluster_cfg(node: &NodeSpec, nodes: usize, dispatch: &'static str) -> Cluster
         dispatch,
         preempt: None,
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -185,7 +188,8 @@ pub fn hot_mix_comparison(seed: u64) -> Vec<InterferenceRow> {
 
 /// Render the machine-readable `BENCH_INTERFERENCE.json` document
 /// (hand-rolled like the rest of the crate's JSON — the offline crate
-/// set has no serde).
+/// set has no serde; floats go through the guarded `json` formatter so
+/// a poisoned metric lands as `null`, not a NaN token).
 pub fn bench_interference_json(provenance: &str, seed: u64, rows: &[InterferenceRow]) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"mgb-bench-interference-v1\",\n");
@@ -196,8 +200,8 @@ pub fn bench_interference_json(provenance: &str, seed: u64, rows: &[Interference
         s.push_str(&format!(
             "    {{\"section\": \"{}\", \"dispatch\": \"{}\", \"interference\": {}, \
              \"nodes\": {}, \"jobs\": {}, \"completed\": {}, \"crashed\": {}, \
-             \"throughput\": {:.6}, \"mean_turnaround_s\": {:.6}, \
-             \"kernel_slowdown_pct\": {:.4}, \"worst_kernel_slowdown_pct\": {:.4}}}{}\n",
+             \"throughput\": {}, \"mean_turnaround_s\": {}, \
+             \"kernel_slowdown_pct\": {}, \"worst_kernel_slowdown_pct\": {}}}{}\n",
             r.section,
             r.dispatch,
             r.interference,
@@ -205,10 +209,10 @@ pub fn bench_interference_json(provenance: &str, seed: u64, rows: &[Interference
             r.jobs,
             r.completed,
             r.crashed,
-            r.throughput,
-            r.mean_turnaround_s,
-            r.kernel_slowdown_pct,
-            r.worst_kernel_slowdown_pct,
+            float(r.throughput, 6),
+            float(r.mean_turnaround_s, 6),
+            float(r.kernel_slowdown_pct, 4),
+            float(r.worst_kernel_slowdown_pct, 4),
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

@@ -1,0 +1,68 @@
+//! Guarded float formatting for the crate's hand-rolled JSON emitters
+//! (the offline crate set has no serde).
+//!
+//! `format!("{x:.6}")` renders NaN and the infinities as the bare
+//! tokens `NaN` / `inf` / `-inf`, which are not JSON — one poisoned
+//! metric (a 0/0 rate on an empty row, a divide-by-zero speedup) used
+//! to corrupt a whole `BENCH_*.json` artifact and take the CI gates
+//! that parse it down with a JSON decode error instead of a named
+//! regression. Every float in `BENCH_SCALE.json`,
+//! `BENCH_INTERFERENCE.json`, and `BENCH_OVERLOAD.json` flows through
+//! this module.
+//!
+//! **Convention:** non-finite values render as the JSON-legal `null`.
+//! `null` round-trips through any JSON parser, is distinguishable from
+//! a genuine `0.0`, and makes downstream gates fail on the *row* that
+//! lost its metric rather than on the document. Emitters that have a
+//! semantically absent value (e.g. per-class attainment when the class
+//! shed every job) pass `f64::NAN` on purpose to get a `null`.
+
+/// `x` to `prec` decimal places, or `null` when non-finite.
+pub fn float(x: f64, prec: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.prec$}")
+    } else {
+        "null".into()
+    }
+}
+
+/// `x` in Rust's shortest round-trip form (no fixed precision), or
+/// `null` when non-finite. For config-like values (rates, multipliers)
+/// where trailing zeros would just be noise.
+pub fn float_g(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_finite_floats_round_trip_as_json_null() {
+        // The regression this module closes: every non-finite value
+        // must land as the legal token `null`, never as NaN/inf text.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(float(bad, 4), "null");
+            assert_eq!(float_g(bad), "null");
+        }
+        // Finite values keep their precision contract.
+        assert_eq!(float(30.125, 4), "30.1250");
+        assert_eq!(float(0.5, 6), "0.500000");
+        assert_eq!(float(-1.0 / 3.0, 3), "-0.333");
+        assert_eq!(float_g(0.35), "0.35");
+        // A document assembled from poisoned metrics stays parseable:
+        // no bare NaN/inf tokens, and every value slot is non-empty.
+        let doc = format!(
+            "{{\"a\": {}, \"b\": {}, \"c\": {}}}",
+            float(0.0 / 0.0, 6),
+            float(1.0 / 0.0, 2),
+            float_g(2.5)
+        );
+        assert_eq!(doc, "{\"a\": null, \"b\": null, \"c\": 2.5}");
+        assert!(!doc.contains("NaN") && !doc.contains("inf"));
+    }
+}

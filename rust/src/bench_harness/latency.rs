@@ -52,6 +52,8 @@ fn sweep_cfg_with(dispatch: &'static str, latency: LatencyModel) -> ClusterConfi
         dispatch,
         preempt: None,
         latency,
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 

@@ -71,6 +71,8 @@ fn cfg(migrate: &'static str, latency: LatencyModel) -> ClusterConfig {
         dispatch: "rr",
         preempt: Some(PreemptConfig { policy: "slo", migrate, ..Default::default() }),
         latency,
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 

@@ -13,9 +13,11 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod interference;
+pub mod json;
 mod latency;
 mod migrate;
 mod nn128;
+mod overload;
 mod preempt;
 mod scale;
 mod table2;
@@ -39,6 +41,10 @@ pub use latency::{
 };
 pub use migrate::{migrate, migrate_comparison, MIGRATE_RTT_SWEEP};
 pub use nn128::nn128;
+pub use overload::{
+    bench_overload_json, capacity_rate, overload, overload_row, overload_smoke, OverloadRow,
+    MULTIPLIERS, OVERLOAD_ALPHA, OVERLOAD_JOBS_PER_NODE, POLICIES,
+};
 pub use preempt::preempt;
 pub use scale::{
     bench_scale_json, calibration_events_per_s, run_point, scale, scale_smoke_point, ScalePoint,
@@ -166,6 +172,9 @@ pub fn run_experiment(name: &str, seed: u64) -> Option<Report> {
         // Not in `run_all` either: writes BENCH_INTERFERENCE.json at
         // the repo root as a side effect (`bench --exp interference`).
         "interference" => interference(seed),
+        // Same contract: writes BENCH_OVERLOAD.json at the repo root
+        // (`bench --exp overload`).
+        "overload" => overload(seed),
         _ => return None,
     })
 }

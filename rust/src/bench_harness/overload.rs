@@ -1,0 +1,323 @@
+//! `bench overload` — the overload-governance sweep behind the
+//! admission layer (ROADMAP "cluster frontend overload governance").
+//!
+//! The cluster's capacity for the committed heavy-tailed mix is
+//! measured first (batch-at-0 is service-limited end to end, so its
+//! throughput *is* the capacity — self-calibrating, no magic
+//! constants). The sweep then offers Poisson traffic at multiples of
+//! that capacity spanning the knee (0.5x under, 1x at, up to 3x past)
+//! under each admission policy — `off` (the ungoverned frontend),
+//! `token` (bucket refilled at the capacity rate), `util` (backlog
+//! threshold) — and records goodput, per-class SLO attainment, and the
+//! reject/degrade counts per row.
+//!
+//! The story the columns tell: past the knee the ungoverned frontend
+//! keeps accepting work it can only queue, so latency-sensitive
+//! attainment collapses while goodput plateaus at capacity; the
+//! governed rows shed or degrade best-effort/batch work instead, keep
+//! goodput on the same plateau (admission must not cost completions —
+//! `bench_smoke` gates on it), and hold the latency-sensitive class's
+//! attainment at or above the ungoverned row's.
+//!
+//! Like `bench scale` / `bench interference`, the full experiment
+//! writes a machine-readable artifact (`BENCH_OVERLOAD.json` at the
+//! repo root) and is kept out of `run_all` because of that side
+//! effect.
+
+use super::json::{float, float_g};
+use super::{mgb_workers, Report};
+use crate::coordinator::{run_cluster, ClusterConfig, RunResult, SchedMode};
+use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec};
+use crate::sched::{AdmissionConfig, SloClass};
+use crate::workloads::{heavy_tailed_mix, poisson_arrivals};
+
+/// Heavy-tailed jobs per node per row — enough that the elephants'
+/// share of total work is stable across seeds, small enough that the
+/// full sweep stays seconds, not minutes.
+pub const OVERLOAD_JOBS_PER_NODE: usize = 80;
+/// Pareto shape of the mix: 1.5 keeps the mean finite (just) while a
+/// handful of elephants still carry most of the offered work.
+pub const OVERLOAD_ALPHA: f64 = 1.5;
+/// Offered-load multipliers of measured capacity: below, at, and past
+/// the knee.
+pub const MULTIPLIERS: [f64; 5] = [0.5, 1.0, 1.5, 2.0, 3.0];
+/// The admission policies every multiplier is run under.
+pub const POLICIES: [&str; 3] = ["off", "token", "util"];
+
+/// One measured sweep row.
+#[derive(Clone, Debug)]
+pub struct OverloadRow {
+    pub policy: &'static str,
+    /// Offered load as a multiple of measured capacity.
+    pub multiplier: f64,
+    /// Offered Poisson rate, jobs/s.
+    pub offered_rate: f64,
+    pub jobs: usize,
+    pub rejected: u64,
+    pub degraded: u64,
+    /// Completions (non-crashed, non-rejected) per second of makespan.
+    pub goodput: f64,
+    pub reject_rate: f64,
+    /// Per-class SLO attainment; NaN when the class has no surviving
+    /// jobs (renders as JSON `null` through the guarded formatter).
+    pub ls_attainment: f64,
+    pub batch_attainment: f64,
+    pub be_attainment: f64,
+    pub mean_turnaround_s: f64,
+}
+
+impl OverloadRow {
+    fn from_result(policy: &'static str, multiplier: f64, offered_rate: f64, r: &RunResult) -> Self {
+        let att = |c| r.slo_attainment(c).unwrap_or(f64::NAN);
+        OverloadRow {
+            policy,
+            multiplier,
+            offered_rate,
+            jobs: r.jobs.len(),
+            rejected: r.rejected,
+            degraded: r.degraded,
+            goodput: r.throughput(),
+            reject_rate: r.reject_rate(),
+            ls_attainment: att(SloClass::LatencySensitive),
+            batch_attainment: att(SloClass::Batch),
+            be_attainment: att(SloClass::BestEffort),
+            mean_turnaround_s: r.mean_turnaround(),
+        }
+    }
+
+    fn line(&self) -> String {
+        format!(
+            "{:<5} mult={:<4} offered={:.2}j/s jobs={:<4} rejected={:<3} degraded={:<3} \
+             goodput={:.4}j/s reject_rate={:.3} ls_att={} batch_att={} be_att={} \
+             mean_turnaround={:.1}s",
+            self.policy,
+            self.multiplier,
+            self.offered_rate,
+            self.jobs,
+            self.rejected,
+            self.degraded,
+            self.goodput,
+            self.reject_rate,
+            float(self.ls_attainment, 3),
+            float(self.batch_attainment, 3),
+            float(self.be_attainment, 3),
+            self.mean_turnaround_s
+        )
+    }
+}
+
+fn overload_cfg(node: &NodeSpec, nodes: usize, admit: Option<AdmissionConfig>) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(node.clone(), nodes),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: mgb_workers(node),
+        dispatch: "least",
+        preempt: None,
+        latency: LatencyModel::off(),
+        admit,
+        frontend_q: "fifo",
+    }
+}
+
+/// Measured service capacity (jobs/s) of an `nodes`-node cluster for
+/// the committed mix: every job arrives at t=0, so the run is
+/// service-limited from the first event to the last and
+/// completions/makespan is the capacity itself. Deterministic per
+/// seed — the sweep's multipliers mean the same thing on every run.
+pub fn capacity_rate(seed: u64, nodes: usize) -> f64 {
+    let jobs = heavy_tailed_mix(nodes * OVERLOAD_JOBS_PER_NODE, OVERLOAD_ALPHA, seed);
+    let r = run_cluster(overload_cfg(&NodeSpec::v100x4(), nodes, None), jobs);
+    r.throughput()
+}
+
+fn admit_for(policy: &'static str, capacity: f64) -> Option<AdmissionConfig> {
+    match policy {
+        "off" => None,
+        // Bucket refilled at the capacity rate: the frontend admits
+        // (or degrades into the best-effort class) what the cluster
+        // can serve and sheds the best-effort excess.
+        "token" => Some(AdmissionConfig {
+            policy: "token",
+            rate_per_s: capacity,
+            burst: 8.0,
+            ..Default::default()
+        }),
+        // Backlog threshold: ten seconds of queued work per unit of
+        // cluster capacity before the frontend starts shedding.
+        "util" => Some(AdmissionConfig {
+            policy: "util",
+            util_threshold_s: 10.0,
+            ..Default::default()
+        }),
+        other => panic!("unknown overload policy '{other}'"),
+    }
+}
+
+/// Run one (policy, multiplier) sweep point.
+pub fn overload_row(
+    seed: u64,
+    nodes: usize,
+    policy: &'static str,
+    multiplier: f64,
+    capacity: f64,
+) -> OverloadRow {
+    let rate = multiplier * capacity;
+    let mut jobs = heavy_tailed_mix(nodes * OVERLOAD_JOBS_PER_NODE, OVERLOAD_ALPHA, seed);
+    poisson_arrivals(&mut jobs, rate, seed);
+    let r = run_cluster(
+        overload_cfg(&NodeSpec::v100x4(), nodes, admit_for(policy, capacity)),
+        jobs,
+    );
+    OverloadRow::from_result(policy, multiplier, rate, &r)
+}
+
+/// The fixed small point `bench_smoke` gates on: a 2-node cluster at
+/// 2x-capacity offered load, ungoverned vs token bucket. Returns
+/// `(knee, off_row, token_row)` where the knee is the best ungoverned
+/// goodput over {0.5x, 1x, 2x} — the capacity plateau the governed
+/// row must stay on.
+pub fn overload_smoke(seed: u64) -> (f64, OverloadRow, OverloadRow) {
+    let nodes = 2;
+    let cap = capacity_rate(seed, nodes);
+    let knee = [0.5, 1.0, 2.0]
+        .into_iter()
+        .map(|m| overload_row(seed, nodes, "off", m, cap).goodput)
+        .fold(f64::MIN, f64::max);
+    let off = overload_row(seed, nodes, "off", 2.0, cap);
+    let token = overload_row(seed, nodes, "token", 2.0, cap);
+    (knee, off, token)
+}
+
+/// Render the machine-readable `BENCH_OVERLOAD.json` document
+/// (hand-rolled like the rest of the crate's JSON; every float goes
+/// through the guarded formatter — absent attainments are `null`, not
+/// `NaN`).
+pub fn bench_overload_json(
+    provenance: &str,
+    seed: u64,
+    nodes: usize,
+    capacity: f64,
+    rows: &[OverloadRow],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"mgb-bench-overload-v1\",\n");
+    s.push_str(&format!("  \"provenance\": \"{provenance}\",\n"));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"nodes\": {nodes},\n"));
+    s.push_str(&format!("  \"capacity_jobs_per_s\": {},\n", float(capacity, 4)));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"multiplier\": {}, \"offered_rate\": {}, \
+             \"jobs\": {}, \"rejected\": {}, \"degraded\": {}, \"goodput\": {}, \
+             \"reject_rate\": {}, \"ls_attainment\": {}, \"batch_attainment\": {}, \
+             \"be_attainment\": {}, \"mean_turnaround_s\": {}}}{}\n",
+            r.policy,
+            float_g(r.multiplier),
+            float(r.offered_rate, 4),
+            r.jobs,
+            r.rejected,
+            r.degraded,
+            float(r.goodput, 6),
+            float(r.reject_rate, 4),
+            float(r.ls_attainment, 4),
+            float(r.batch_attainment, 4),
+            float(r.be_attainment, 4),
+            float(r.mean_turnaround_s, 3),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The `bench --exp overload` entry: measure capacity on a 4-node
+/// cluster, sweep every (policy, multiplier) point, write
+/// `BENCH_OVERLOAD.json` at the repo root. Deliberately not part of
+/// `run_all` (the JSON write is a side effect).
+pub fn overload(seed: u64) -> Report {
+    let nodes = 4;
+    let cap = capacity_rate(seed, nodes);
+    let mut lines = vec![format!(
+        "capacity={cap:.3}j/s ({nodes}n v100x4, {} heavy-tailed jobs batch-at-0)",
+        nodes * OVERLOAD_JOBS_PER_NODE
+    )];
+    let mut rows = Vec::with_capacity(POLICIES.len() * MULTIPLIERS.len());
+    for policy in POLICIES {
+        for m in MULTIPLIERS {
+            let row = overload_row(seed, nodes, policy, m, cap);
+            lines.push(row.line());
+            rows.push(row);
+        }
+    }
+    let json = bench_overload_json("measured", seed, nodes, cap, &rows);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_OVERLOAD.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => lines.push(format!("wrote {}", path.display())),
+        Err(e) => lines.push(format!("WARN: could not write {}: {e}", path.display())),
+    }
+    Report {
+        title: "Overload governance sweep (admission off vs token bucket vs util threshold)"
+            .into(),
+        lines,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_document_is_well_formed_enough_to_gate_on() {
+        let row = OverloadRow {
+            policy: "token",
+            multiplier: 2.0,
+            offered_rate: 1.25,
+            jobs: 160,
+            rejected: 40,
+            degraded: 12,
+            goodput: 0.61,
+            reject_rate: 0.25,
+            ls_attainment: 0.875,
+            batch_attainment: 0.5,
+            // The class that shed every job: must land as null.
+            be_attainment: f64::NAN,
+            mean_turnaround_s: 42.5,
+        };
+        let s = bench_overload_json("measured", 7, 2, 0.62, &[row]);
+        assert!(s.contains("\"schema\": \"mgb-bench-overload-v1\""));
+        assert!(s.contains("\"policy\": \"token\""));
+        assert!(s.contains("\"ls_attainment\": 0.8750"));
+        assert!(s.contains("\"be_attainment\": null"));
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn capacity_is_deterministic_and_positive() {
+        let a = capacity_rate(7, 2);
+        let b = capacity_rate(7, 2);
+        assert_eq!(a, b, "capacity calibration must replay exactly");
+        assert!(a > 0.0 && a.is_finite());
+    }
+
+    #[test]
+    fn off_rows_reject_nothing_and_governed_rows_only_shed_under_pressure() {
+        let cap = capacity_rate(7, 2);
+        let off = overload_row(7, 2, "off", 2.0, cap);
+        assert_eq!((off.rejected, off.degraded), (0, 0), "ungoverned frontend never sheds");
+        let under = overload_row(7, 2, "token", 0.5, cap);
+        let over = overload_row(7, 2, "token", 3.0, cap);
+        assert!(
+            over.rejected + over.degraded >= under.rejected + under.degraded,
+            "shedding must not decrease with offered load \
+             (under: {}+{}, over: {}+{})",
+            under.rejected,
+            under.degraded,
+            over.rejected,
+            over.degraded
+        );
+        assert!(over.rejected > 0, "3x capacity must trip the bucket");
+    }
+}

@@ -57,6 +57,8 @@ fn cfg(nodes: usize, preempt: Option<PreemptConfig>) -> ClusterConfig {
         dispatch: "least",
         preempt,
         latency: crate::gpu::LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 

@@ -18,6 +18,7 @@
 
 use std::time::Instant;
 
+use super::json::{float, float_g};
 use super::{mgb_workers, Report};
 use crate::coordinator::{run_cluster_on_backend, ClusterConfig, JobClass, JobSpec, SchedMode};
 use crate::gpu::{ClusterSpec, LatencyModel, NodeSpec};
@@ -131,6 +132,8 @@ fn point_config(p: &ScalePoint, node: &NodeSpec) -> ClusterConfig {
         dispatch: "rr",
         preempt: p.preempt.then(PreemptConfig::default),
         latency: if p.latency { LatencyModel::lan() } else { LatencyModel::off() },
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -213,31 +216,32 @@ pub fn calibration_events_per_s(seed: u64) -> f64 {
 
 /// Render the machine-readable `BENCH_SCALE.json` document (hand-
 /// rolled like the rest of the crate's JSON — the offline crate set
-/// has no serde).
+/// has no serde; floats go through the guarded `json` formatter so a
+/// poisoned metric lands as `null`, not a NaN token).
 pub fn bench_scale_json(provenance: &str, seed: u64, calib: f64, rows: &[ScaleRow]) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"mgb-bench-scale-v1\",\n");
     s.push_str(&format!("  \"provenance\": \"{provenance}\",\n"));
     s.push_str(&format!("  \"seed\": {seed},\n"));
-    s.push_str(&format!("  \"calibration_events_per_s\": {calib:.1},\n"));
+    s.push_str(&format!("  \"calibration_events_per_s\": {},\n", float(calib, 1)));
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"label\": \"{}\", \"nodes\": {}, \"jobs\": {}, \"rate_per_node\": {}, \
              \"preempt\": {}, \"latency\": {}, \"events\": {}, \"peak_events\": {}, \
-             \"baseline_events_per_s\": {:.1}, \"events_per_s\": {:.1}, \
-             \"speedup_vs_baseline\": {:.3}}}{}\n",
+             \"baseline_events_per_s\": {}, \"events_per_s\": {}, \
+             \"speedup_vs_baseline\": {}}}{}\n",
             r.label,
             r.nodes,
             r.jobs,
-            r.rate_per_node,
+            float_g(r.rate_per_node),
             r.preempt,
             r.latency,
             r.events,
             r.peak_events,
-            r.baseline_events_per_s,
-            r.events_per_s,
-            r.speedup_vs_baseline(),
+            float(r.baseline_events_per_s, 1),
+            float(r.events_per_s, 1),
+            float(r.speedup_vs_baseline(), 3),
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

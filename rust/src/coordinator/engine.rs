@@ -109,6 +109,26 @@
 //! With the all-zero model (the default) none of these events is ever
 //! pushed and every decision point is byte-identical to the free-
 //! frontend engine — enforced by the golden-trace harness.
+//!
+//! **Overload governance** (opt-in via [`ClusterConfig::admit`] /
+//! [`ClusterConfig::frontend_q`]; see `sched::admission`). At sustained
+//! arrival rate > capacity the ungoverned open system grows queues
+//! without bound; with an [`AdmissionConfig`] the frontend gates every
+//! *arrival* (restores and re-probes are already-admitted work and are
+//! never re-gated): a token bucket or utilization threshold decides
+//! whether the arrival is pressured, and pressured arrivals take the
+//! reject-or-degrade lattice — latency-sensitive admitted unchanged
+//! (protected, never charged a token), batch demoted to best-effort,
+//! best-effort/classless turned away with a terminal `AdmitReject`
+//! (ends rejected, not crashed, at its arrival instant; never consumes
+//! frontend service, a worker, or a reservation). Under a nonzero
+//! latency model `frontend_q` additionally replaces the frontend's
+//! FIFO backlog with per-class service (`"prio"` strict priority,
+//! `"wfq"` stride-scheduled weighted fair queueing) drained via
+//! `FrontendServe` events. With `admit: None` (or policy "off") and
+//! `frontend_q: "fifo"` neither event is ever pushed and every
+//! decision point is byte-identical — the same contract as the
+//! preemption and latency layers, enforced by the same goldens.
 
 use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
@@ -116,8 +136,9 @@ use super::placement::{NodePlacement, TaskLedger};
 use crate::gpu::{ClusterSpec, InterferenceProfile, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
 use crate::lazy::{JobTrace, TraceEvent};
 use crate::sched::{
-    canonical_dispatch, make_dispatcher, make_preempt_policy, Dispatcher, JobInfo, NodeLoadView,
-    PreemptConfig, PreemptPolicy, SloClass, TaskReq, VictimView,
+    canonical_dispatch, canonical_frontend_q, decide_under_pressure, make_dispatcher,
+    make_preempt_policy, AdmissionConfig, AdmitDecision, Dispatcher, FrontendQueue, JobInfo,
+    NodeLoadView, PreemptConfig, PreemptPolicy, SloClass, TaskReq, TokenBucket, VictimView,
 };
 use std::collections::HashMap;
 
@@ -164,6 +185,15 @@ pub struct ClusterConfig {
     /// all-zero model (`LatencyModel::off()`, the default) keeps the
     /// run bit-identical to the free-frontend engine.
     pub latency: LatencyModel,
+    /// Frontend admission control (see `sched::admission`). `None` —
+    /// or `Some` with policy "off" — disables overload governance and
+    /// keeps the run bit-identical to the ungoverned frontend.
+    pub admit: Option<AdmissionConfig>,
+    /// Frontend queueing discipline: "fifo" | "prio" | "wfq" (see
+    /// `sched::FrontendQueue`). Only meaningful under a nonzero latency
+    /// model (a zero-latency frontend never queues); "fifo" keeps the
+    /// PR-3 single-server path byte-identical.
+    pub frontend_q: &'static str,
 }
 
 /// One job of the batch.
@@ -395,6 +425,11 @@ struct JobRt {
     /// worker, and recycling its stale index would hand another node's
     /// (or another job's) worker to the queue.
     holds_worker: bool,
+    /// The admission controller turned this job away at arrival
+    /// (`AdmitReject`): terminal like `done`, but distinct from
+    /// `crashed` — the job never ran, never routed, and never held
+    /// anything. Always false with admission off.
+    rejected: bool,
 }
 
 struct Engine<'h> {
@@ -452,7 +487,26 @@ struct Engine<'h> {
     /// node depart in order and fly the same RTT, so FIFO holds). Each
     /// batch lists its member jobs, carrier first.
     ack_batch: Vec<std::collections::VecDeque<Vec<usize>>>,
+    /// Frontend admission controller; `None` = ungoverned (the off
+    /// path, structurally identical to the pre-admission engine).
+    admit: Option<AdmissionRt>,
+    /// Per-class frontend backlog (`--frontend-q prio|wfq` under a
+    /// nonzero latency model only); `None` = the PR-3 FIFO server.
+    fe_queue: Option<FrontendQueue>,
+    /// A `FrontendServe` event is outstanding for the current busy
+    /// span. Invariant: whenever `fe_queue` is non-empty, this is set —
+    /// the queue can never strand a job.
+    fe_serve_armed: bool,
     hook: Option<LaunchHook<'h>>,
+}
+
+/// Runtime state of the frontend admission controller (`--admit`).
+struct AdmissionRt {
+    cfg: AdmissionConfig,
+    /// Token state for the "token" policy (idle under "util").
+    bucket: TokenBucket,
+    /// Batch arrivals demoted to best-effort under pressure.
+    degraded: u64,
 }
 
 /// Runtime state of the preemption layer.
@@ -488,6 +542,8 @@ pub fn run_batch_with_hook(
         dispatch: "rr",
         preempt: None,
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     };
     run_cluster_with_hook(cluster_cfg, jobs, hook)
 }
@@ -622,6 +678,27 @@ fn run_cluster_inner(
         }),
         ckpt_inflight: vec![0; n_nodes],
         latency_off: latency.is_off(),
+        // Sanitize the admission knobs like the other opt-in layers; an
+        // off policy builds no runtime at all, so the ungoverned path
+        // is an is-none check away from the pre-admission engine.
+        admit: cfg
+            .admit
+            .map(|a| a.sanitized())
+            .filter(|a| a.enabled())
+            .map(|a| AdmissionRt { bucket: TokenBucket::new(&a), cfg: a, degraded: 0 }),
+        // A frontend queue only exists where frontend queueing can:
+        // under a nonzero latency model with a non-FIFO discipline.
+        fe_queue: {
+            let q = canonical_frontend_q(cfg.frontend_q).unwrap_or_else(|| {
+                panic!("unknown frontend queue discipline '{}'", cfg.frontend_q)
+            });
+            if q != "fifo" && !latency.is_off() {
+                Some(FrontendQueue::new(q))
+            } else {
+                None
+            }
+        },
+        fe_serve_armed: false,
         latency,
         frontend_busy: 0.0,
         daemon_busy: vec![0.0; n_nodes],
@@ -718,6 +795,145 @@ impl<'h> Engine<'h> {
         let s = t.max(self.daemon_busy[node]);
         self.daemon_busy[node] = s + self.latency.frontend_service_s;
         s
+    }
+
+    /// The frontend's admission verdict for `job` arriving at `t`:
+    /// `true` admits (possibly with the job demoted a class), `false`
+    /// rejects — the terminal `AdmitReject` is already pushed and the
+    /// caller must not route, queue, or serve the job. Ungoverned runs
+    /// (`admit: None`) return `true` unconditionally without touching
+    /// any state, keeping the off path bit-identical.
+    fn admit_arrival(&mut self, job: usize, t: f64) -> bool {
+        let Some(ad) = self.admit.as_mut() else {
+            return true;
+        };
+        let slo = self.jobs[job].slo;
+        let pressured = match ad.cfg.policy {
+            "token" => {
+                if SloClass::looseness(slo) == 0 {
+                    // Protected: latency-sensitive arrivals are neither
+                    // shed nor charged a token — they cannot starve the
+                    // bucket the looser classes are metered by.
+                    false
+                } else {
+                    !ad.bucket.try_take(t)
+                }
+            }
+            _ => {
+                // "util": pressured when the cluster's outstanding
+                // backlog exceeds the bound, in seconds of dedicated
+                // work per unit of compute capacity.
+                let backlog_s: f64 =
+                    self.outstanding_us.iter().map(|&u| u as f64 * 1e-6).sum();
+                let cap: f64 = self.nodes.iter().map(|n| n.compute_capacity).sum();
+                backlog_s / cap.max(1e-12) > ad.cfg.util_threshold_s
+            }
+        };
+        if !pressured {
+            return true;
+        }
+        match decide_under_pressure(slo) {
+            AdmitDecision::Admit => true,
+            AdmitDecision::Degrade => {
+                // Demoted one class: the job keeps running, but every
+                // later consumer of its SLO — task probes, SLO-aware
+                // victim selection, per-class attainment — sees
+                // best-effort from here on.
+                self.jobs[job].slo = Some(SloClass::BestEffort);
+                self.admit.as_mut().expect("admission on").degraded += 1;
+                true
+            }
+            AdmitDecision::Reject => {
+                self.evq.push(t, EvKind::AdmitReject { job });
+                false
+            }
+        }
+    }
+
+    /// Terminal admission rejection: the job ends at its arrival
+    /// instant, rejected (not crashed). It was never dispatched, never
+    /// landed, and never held a worker or reservation, so there is
+    /// nothing to release or recycle — `finish_job`'s machinery is
+    /// deliberately bypassed.
+    fn handle_admit_reject(&mut self, job: usize, t: f64) {
+        let rt = &mut self.rt[job];
+        debug_assert!(!rt.dispatched && !rt.holds_worker, "rejected jobs hold nothing");
+        if rt.done {
+            return; // force-failed by the drain fallback first
+        }
+        rt.done = true;
+        rt.rejected = true;
+        rt.ended = t;
+    }
+
+    /// An admitted arrival at the cluster frontend (latency mode): FIFO
+    /// runs claim a server slot immediately (the PR-3 path); under a
+    /// per-class discipline a busy server queues the job by class
+    /// instead, to be served at the next `FrontendServe`.
+    fn frontend_admit_or_queue(&mut self, job: usize, t: f64) {
+        if self.fe_queue.is_none() || t >= self.frontend_busy {
+            // Idle server (or FIFO): serve now. Under a discipline the
+            // backlog must be empty whenever the server is idle (the
+            // FrontendServe invariant), so serving directly cannot
+            // overtake a queued job.
+            let t_send = self.admit_frontend(t);
+            self.evq.push(t_send, EvKind::ProbeSent { job });
+        } else {
+            let slo = self.jobs[job].slo;
+            self.fe_queue.as_mut().expect("discipline active").push(job, slo);
+            if !self.fe_serve_armed {
+                self.fe_serve_armed = true;
+                self.evq.push(self.frontend_busy, EvKind::FrontendServe);
+            }
+        }
+    }
+
+    /// The frontend server freed up with a per-class backlog waiting:
+    /// serve the next routing probe by discipline. A FIFO-claiming RPC
+    /// (re-probe, migrating restore) may have extended the busy span
+    /// past this firing — re-arm at the new free instant rather than
+    /// double-booking the server.
+    fn handle_frontend_serve(&mut self, t: f64) {
+        self.fe_serve_armed = false;
+        if t < self.frontend_busy {
+            if self.fe_queue.as_ref().is_some_and(|q| !q.is_empty()) {
+                self.fe_serve_armed = true;
+                self.evq.push(self.frontend_busy, EvKind::FrontendServe);
+            }
+            return;
+        }
+        let job = loop {
+            match self.fe_queue.as_mut().and_then(|q| q.pop()) {
+                // Force-failed by the drain fallback while queued:
+                // nothing to route.
+                Some(j) if self.rt[j].done => continue,
+                Some(j) => break j,
+                None => return,
+            }
+        };
+        let t_send = self.admit_frontend(t); // server free: serves at t
+        self.evq.push(t_send, EvKind::ProbeSent { job });
+        if self.fe_queue.as_ref().is_some_and(|q| !q.is_empty()) {
+            self.fe_serve_armed = true;
+            self.evq.push(self.frontend_busy, EvKind::FrontendServe);
+        }
+    }
+
+    /// A job enters the system: admission verdict first (a rejection is
+    /// terminal and consumes nothing), then the zero-latency path
+    /// routes and lands it inline while the latency path sends it
+    /// through the frontend — the routing decision happens when its
+    /// probe is served (`ProbeSent`), not now.
+    fn handle_arrive(&mut self, job: usize, t: f64) {
+        if !self.admit_arrival(job, t) {
+            return;
+        }
+        if self.latency_off {
+            self.dispatch_job(job, t);
+            self.land_job(job, t);
+        } else {
+            self.frontend_admit_or_queue(job, t);
+        }
     }
 
     /// A probe RPC reached its server (latency mode only): the cluster
@@ -1033,11 +1249,16 @@ impl<'h> Engine<'h> {
             if latency_on {
                 // Every job reaches the cluster through the frontend:
                 // Arrive -> (queueing) ProbeSent -> ProbeAck ->
-                // DispatchArrive. Batch jobs arrive at t = 0.
+                // DispatchArrive. Batch jobs arrive at t = 0. The
+                // admission verdict waits for the Arrive firing.
                 self.evq.push(arr.max(0.0), EvKind::Arrive { job: j });
             } else if arr <= 0.0 {
-                let n = self.dispatch_job(j, 0.0);
-                self.nodes[n].job_q.push_back(j);
+                // Inline t=0 seeding: the admission gate applies here
+                // too (a rejected job is never dispatched or queued).
+                if self.admit_arrival(j, 0.0) {
+                    let n = self.dispatch_job(j, 0.0);
+                    self.nodes[n].job_q.push_back(j);
+                }
             } else {
                 self.evq.push(arr, EvKind::Arrive { job: j });
             }
@@ -1060,18 +1281,7 @@ impl<'h> Engine<'h> {
                             self.handle_completions(node, dev, ev.t);
                         }
                     }
-                    EvKind::Arrive { job } => {
-                        if self.latency_off {
-                            self.dispatch_job(job, ev.t);
-                            self.land_job(job, ev.t);
-                        } else {
-                            // The routing probe queues at the cluster
-                            // frontend; the decision happens when it is
-                            // served (ProbeSent), not now.
-                            let t_send = self.admit_frontend(ev.t);
-                            self.evq.push(t_send, EvKind::ProbeSent { job });
-                        }
-                    }
+                    EvKind::Arrive { job } => self.handle_arrive(job, ev.t),
                     EvKind::ProbeSent { job } => self.handle_probe_sent(job, ev.t),
                     EvKind::ProbeAck { job } => self.handle_probe_ack(job, ev.t),
                     EvKind::ReProbe { job } => self.handle_reprobe(job, ev.t),
@@ -1101,6 +1311,8 @@ impl<'h> Engine<'h> {
                         self.start_next_job(node, worker, ev.t);
                     }
                     EvKind::MigrateArrive { job } => self.handle_migrate_arrive(job, ev.t),
+                    EvKind::AdmitReject { job } => self.handle_admit_reject(job, ev.t),
+                    EvKind::FrontendServe => self.handle_frontend_serve(ev.t),
                 }
             }
             // Queue drained but some jobs never finished: their resource
@@ -1726,6 +1938,7 @@ impl<'h> Engine<'h> {
                 started: rt.started,
                 ended: rt.ended,
                 crashed: rt.crashed,
+                rejected: rt.rejected,
                 kernel_dedicated_s: rt.ded_s,
                 kernel_actual_s: rt.act_s,
                 n_kernels: rt.n_kernels,
@@ -1753,6 +1966,8 @@ impl<'h> Engine<'h> {
             ckpt_overhead_s: self.preempt.as_ref().map_or(0.0, |p| p.overhead_s),
             migrations: self.preempt.as_ref().map_or(0, |p| p.migrations),
             migrate_bytes: self.preempt.as_ref().map_or(0, |p| p.migrate_bytes),
+            rejected: self.rt.iter().filter(|r| r.rejected).count() as u64,
+            degraded: self.admit.as_ref().map_or(0, |a| a.degraded),
             events_fired: self.evq.events_fired(),
             peak_events: self.evq.peak_len(),
         }

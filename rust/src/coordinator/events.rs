@@ -100,6 +100,21 @@ pub(crate) enum EvKind {
     /// restores so traces distinguish migration landings; never pushed
     /// with migration off, which keeps `--migrate off` byte-identical.
     MigrateArrive { job: usize },
+    /// The frontend admission controller turned `job` away at the door
+    /// (`sched::AdmissionConfig`, `--admit token|util`): a *terminal*
+    /// verdict fired at the arrival instant. The job never consumes
+    /// frontend service, never routes, and never holds a worker or a
+    /// reservation — it ends rejected (not crashed) with `ended ==
+    /// arrival`. Never pushed when admission is off, which keeps
+    /// `--admit off` byte-identical to every committed golden.
+    AdmitReject { job: usize },
+    /// The cluster frontend's single server freed up with a per-class
+    /// backlog waiting (`--frontend-q prio|wfq` only): serve the next
+    /// queued routing probe by the configured discipline. Never pushed
+    /// under the FIFO discipline (or with the latency model off, where
+    /// no frontend queue can form), which keeps `--frontend-q fifo`
+    /// byte-identical to the PR-3 frontend.
+    FrontendServe,
 }
 
 #[derive(Clone, Copy, Debug)]

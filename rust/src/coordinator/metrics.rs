@@ -2,8 +2,14 @@
 //! throughput, job turnaround, crash percentage, kernel slowdown —
 //! plus the beyond-paper preemption measures (preemption count, wasted
 //! work, checkpoint overhead) the `bench preempt` experiment reports,
-//! and the migration/SLO measures (migration count, shipped image
-//! bytes, per-class SLO attainment) `bench migrate` reports.
+//! the migration/SLO measures (migration count, shipped image bytes,
+//! per-class SLO attainment) `bench migrate` reports, and the
+//! overload-governance measures (rejections, degradations, goodput)
+//! `bench overload` reports. Rejected jobs are terminal but distinct
+//! from crashes: they never ran, so they are excluded from every
+//! completion-derived measure (throughput/goodput, turnaround means,
+//! SLO attainment denominators) rather than counted as zero-cost
+//! successes.
 
 use crate::sched::SloClass;
 
@@ -31,6 +37,11 @@ pub struct JobOutcome {
     /// Virtual completion (or crash) time; jobs arrive at t = 0.
     pub ended: f64,
     pub crashed: bool,
+    /// The frontend admission controller turned the job away at
+    /// arrival (`--admit token|util` under pressure): terminal, with
+    /// `ended == arrival`, but the job never ran — neither a completion
+    /// nor a crash. Always false with admission off.
+    pub rejected: bool,
     /// Sum of dedicated kernel durations on the assigned device type.
     pub kernel_dedicated_s: f64,
     /// Sum of actual (co-scheduled) kernel durations.
@@ -88,6 +99,12 @@ pub struct RunResult {
     pub migrations: u64,
     /// Checkpoint-image bytes those migrations shipped across nodes.
     pub migrate_bytes: u64,
+    /// Arrivals the admission controller turned away (0 with `--admit
+    /// off`).
+    pub rejected: u64,
+    /// Batch arrivals the admission controller demoted to best-effort
+    /// under pressure (0 with `--admit off`).
+    pub degraded: u64,
     /// Discrete events the run's event queue fired — the numerator of
     /// `bench scale`'s events/sec column (wall time is measured by the
     /// harness; the engine itself never reads a host clock).
@@ -98,8 +115,11 @@ pub struct RunResult {
 }
 
 impl RunResult {
+    /// Jobs that actually finished their trace: neither crashed nor
+    /// turned away by admission (a rejected job never ran — counting it
+    /// here would let a shedding frontend inflate its own score).
     pub fn completed(&self) -> usize {
-        self.jobs.iter().filter(|j| !j.crashed).count()
+        self.jobs.iter().filter(|j| !j.crashed && !j.rejected).count()
     }
 
     pub fn crashed(&self) -> usize {
@@ -110,8 +130,18 @@ impl RunResult {
         100.0 * self.crashed() as f64 / self.jobs.len().max(1) as f64
     }
 
+    /// Fraction of arrivals the admission controller turned away.
+    pub fn reject_rate(&self) -> f64 {
+        self.rejected as f64 / self.jobs.len().max(1) as f64
+    }
+
     /// Jobs completed per second of makespan — the figure the paper
-    /// normalises against SA.
+    /// normalises against SA. Under admission control this is the
+    /// *goodput*: rejected arrivals are offered load that was never
+    /// served, so they count in the denominator of [`reject_rate`] but
+    /// never in the numerator here.
+    ///
+    /// [`reject_rate`]: RunResult::reject_rate
     pub fn throughput(&self) -> f64 {
         if self.makespan <= 0.0 {
             0.0
@@ -151,11 +181,15 @@ impl RunResult {
     /// completed with turnaround within `SloClass::stretch_bound()`
     /// times their dedicated kernel seconds (crashed jobs count as
     /// missed; jobs that ran no kernel only attain the unbounded
-    /// best-effort class). `None` when no job carries the class, so a
-    /// classless run prints nothing rather than a vacuous 100%.
+    /// best-effort class). Admission-rejected jobs are excluded from
+    /// the denominator entirely: they were shed, not served — without
+    /// the exclusion a rejected best-effort job would "attain" its
+    /// unbounded SLO with zero turnaround. `None` when no admitted job
+    /// carries the class, so a classless run prints nothing rather
+    /// than a vacuous 100%.
     pub fn slo_attainment(&self, class: SloClass) -> Option<f64> {
         let (mut n, mut met) = (0u32, 0u32);
-        for j in self.jobs.iter().filter(|j| j.slo == Some(class)) {
+        for j in self.jobs.iter().filter(|j| j.slo == Some(class) && !j.rejected) {
             n += 1;
             let bound = class.stretch_bound() * j.kernel_dedicated_s.max(1e-9);
             if !j.crashed && j.turnaround() <= bound {
@@ -171,9 +205,12 @@ impl RunResult {
 
     /// Mean turnaround over completed jobs matching `keep`; 0.0 when
     /// none match (the shared crash-filter/empty-set convention).
+    /// Rejected jobs never completed, so they are excluded like
+    /// crashes — their zero "turnaround" would otherwise drag the mean
+    /// toward whatever the frontend shed.
     fn mean_turnaround_where(&self, keep: impl Fn(&JobOutcome) -> bool) -> f64 {
         let (mut sum, mut n) = (0.0, 0u32);
-        for j in self.jobs.iter().filter(|&j| !j.crashed && keep(j)) {
+        for j in self.jobs.iter().filter(|&j| !j.crashed && !j.rejected && keep(j)) {
             sum += j.turnaround();
             n += 1;
         }
@@ -227,6 +264,7 @@ mod tests {
             started: 0.0,
             ended,
             crashed,
+            rejected: false,
             kernel_dedicated_s: ded,
             kernel_actual_s: act,
             n_kernels: 1,
@@ -249,9 +287,16 @@ mod tests {
             ckpt_overhead_s: 0.0,
             migrations: 0,
             migrate_bytes: 0,
+            rejected: 0,
+            degraded: 0,
             events_fired: 0,
             peak_events: 0,
         }
+    }
+
+    /// A rejected-at-the-door outcome: ended == arrival, never ran.
+    fn rejected_job() -> JobOutcome {
+        JobOutcome { rejected: true, n_kernels: 0, ..job(0.0, false, 0.0, 0.0) }
     }
 
     #[test]
@@ -330,6 +375,35 @@ mod tests {
         // Per-SLO-class turnaround means filter like the JobClass ones.
         assert!((r.mean_turnaround_of_slo(SloClass::LatencySensitive) - 40.0).abs() < 1e-12);
         assert_eq!(r.mean_turnaround_of_slo(SloClass::Batch), 0.0);
+    }
+
+    #[test]
+    fn rejected_jobs_are_neither_completions_nor_crashes() {
+        // A shed arrival must not inflate goodput (its zero-cost
+        // "completion"), drag turnaround means toward zero, or attain
+        // its SLO with zero turnaround.
+        let mut shed = rejected_job();
+        shed.slo = Some(SloClass::BestEffort);
+        let mut served = job(10.0, false, 1.0, 1.0);
+        served.slo = Some(SloClass::BestEffort);
+        let mut r = rr(vec![served, shed], 10.0);
+        r.rejected = 1;
+        assert_eq!(r.completed(), 1, "rejected is not completed");
+        assert_eq!(r.crashed(), 0, "rejected is not crashed");
+        assert!((r.throughput() - 0.1).abs() < 1e-12, "goodput counts served jobs only");
+        assert!((r.reject_rate() - 0.5).abs() < 1e-12);
+        assert!((r.mean_turnaround() - 10.0).abs() < 1e-12, "shed job excluded from the mean");
+        assert_eq!(
+            r.slo_attainment(SloClass::BestEffort),
+            Some(1.0),
+            "shed job excluded from the attainment denominator"
+        );
+        // A class whose every member was shed reports None, not 100%.
+        let mut only_shed = rejected_job();
+        only_shed.slo = Some(SloClass::Batch);
+        let r = rr(vec![only_shed], 0.0);
+        assert_eq!(r.slo_attainment(SloClass::Batch), None);
+        assert_eq!(r.reject_rate(), 0.0, "counter not set -> rate 0");
     }
 
     #[test]

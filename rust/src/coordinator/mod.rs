@@ -37,7 +37,7 @@ mod events;
 pub mod metrics;
 mod placement;
 
-pub use crate::sched::{PreemptConfig, SloClass};
+pub use crate::sched::{AdmissionConfig, PreemptConfig, SloClass};
 pub use engine::{
     run_batch, run_batch_with_hook, run_cluster, run_cluster_on_backend, run_cluster_traced,
     run_cluster_traced_on_backend, run_cluster_with_hook, ClusterConfig, JobSpec, RunConfig,
@@ -336,6 +336,8 @@ mod tests {
                     dispatch,
                     preempt: None,
                     latency: LatencyModel::off(),
+                    admit: None,
+                    frontend_q: "fifo",
                 },
                 jobs.clone(),
             );
@@ -363,6 +365,8 @@ mod tests {
                 dispatch: "rr",
                 preempt: None,
                 latency: LatencyModel::off(),
+                admit: None,
+                frontend_q: "fifo",
             },
             jobs,
         );
@@ -405,6 +409,8 @@ mod tests {
                     dispatch,
                     preempt: None,
                     latency: LatencyModel::off(),
+                    admit: None,
+                    frontend_q: "fifo",
                 },
                 jobs,
             )
@@ -434,6 +440,8 @@ mod tests {
             dispatch: "least",
             preempt: None,
             latency: LatencyModel::off(),
+            admit: None,
+            frontend_q: "fifo",
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -463,6 +471,8 @@ mod tests {
                 dispatch: "least",
                 preempt: None,
                 latency: LatencyModel::off(),
+                admit: None,
+                frontend_q: "fifo",
             },
             jobs,
         );
@@ -494,6 +504,8 @@ mod tests {
             dispatch: "rr",
             preempt,
             latency: LatencyModel::off(),
+            admit: None,
+            frontend_q: "fifo",
         }
     }
 
@@ -638,6 +650,8 @@ mod tests {
             dispatch: "least",
             preempt: Some(preempt_cfg("min-progress")),
             latency: LatencyModel::off(),
+            admit: None,
+            frontend_q: "fifo",
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);

@@ -184,25 +184,46 @@ impl GpuSpec {
         }
     }
 
-    /// A static MIG-style slice: 1/`k` of the device's SMs, memory, and
-    /// speed, with per-SM limits unchanged (arXiv 2105.10312's
-    /// partition-then-allocate alternative to sharing). Slices are
-    /// *isolation domains*: each becomes its own [`Device`], so kernels
-    /// on different slices of one physical GPU never co-reside and
-    /// never interfere — the predictability-for-peak-throughput trade
-    /// `--dispatch partition` measures. `k = 0` is treated as 1 (no
+    /// All `k` static MIG-style slices of the device, largest first:
+    /// 1/`k` of the SMs, memory, and speed each, with per-SM limits
+    /// unchanged (arXiv 2105.10312's partition-then-allocate
+    /// alternative to sharing). Slices are *isolation domains*: each
+    /// becomes its own [`Device`], so kernels on different slices of
+    /// one physical GPU never co-reside and never interfere — the
+    /// predictability-for-peak-throughput trade `--dispatch partition`
+    /// measures. When `sms` or `mem_bytes` isn't divisible by `k` the
+    /// remainder is spread one unit at a time across the *first*
+    /// slices, so the slices always sum back to the whole device —
+    /// truncating instead (the pre-fix behaviour) silently shrank
+    /// partitioned capacity and biased `bench interference` against
+    /// `--dispatch partition`. Speed follows each slice's SM share, so
+    /// total speed is conserved too. `k = 0` is treated as 1 (no
     /// slicing).
     ///
     /// [`Device`]: super::Device
+    pub fn slices(&self, k: usize) -> Vec<GpuSpec> {
+        let k = k.max(1);
+        let sm_base = self.sms / k as u32;
+        let sm_extra = (self.sms % k as u32) as usize;
+        let mem_base = self.mem_bytes / k as u64;
+        let mem_extra = (self.mem_bytes % k as u64) as usize;
+        (0..k)
+            .map(|i| {
+                let sms = (sm_base + (i < sm_extra) as u32).max(1);
+                GpuSpec {
+                    sms,
+                    mem_bytes: mem_base + (i < mem_extra) as u64,
+                    speed: self.speed * sms as f64 / self.sms.max(1) as f64,
+                    ..*self
+                }
+            })
+            .collect()
+    }
+
+    /// The first (largest) of the device's `k` slices — see
+    /// [`GpuSpec::slices`] for the remainder-distribution rule.
     pub fn slice(&self, k: usize) -> Self {
-        let k = k.max(1) as u32;
-        let sms = (self.sms / k).max(1);
-        GpuSpec {
-            sms,
-            mem_bytes: self.mem_bytes / k as u64,
-            speed: self.speed * sms as f64 / self.sms.max(1) as f64,
-            ..*self
-        }
+        self.slices(k)[0]
     }
 
     /// Total warp slots (the compute capacity the schedulers reason in).
@@ -252,15 +273,16 @@ impl NodeSpec {
     }
 
     /// The node with every GPU statically partitioned into `k`
-    /// MIG-style slices ([`GpuSpec::slice`]), in GPU order (slices of
-    /// GPU 0 first). `k <= 1` returns the node unchanged, so the
-    /// unpartitioned path stays bit-identical.
+    /// MIG-style slices ([`GpuSpec::slices`]), in GPU order (slices of
+    /// GPU 0 first, largest slice of each GPU first). `k <= 1` returns
+    /// the node unchanged, so the unpartitioned path stays
+    /// bit-identical.
     pub fn sliced(&self, k: usize) -> Self {
         if k <= 1 {
             return self.clone();
         }
         NodeSpec {
-            gpus: self.gpus.iter().flat_map(|g| (0..k).map(move |_| g.slice(k))).collect(),
+            gpus: self.gpus.iter().flat_map(|g| g.slices(k)).collect(),
             cpu_cores: self.cpu_cores,
             name: format!("{}/{k}", self.name),
         }
@@ -657,11 +679,54 @@ mod tests {
         // k = 0/1 are the identity.
         assert_eq!(v.slice(0), v);
         assert_eq!(v.slice(1), v);
-        // Odd split on the P100: SM count floors, speed follows it.
+        // Odd split on the P100: 56 = 19 + 19 + 18 — the two remainder
+        // SMs land on the first slices, speed follows each SM share.
         let p = GpuSpec::p100();
-        let third = p.slice(3);
-        assert_eq!(third.sms, 18);
-        assert!((third.speed - p.speed * 18.0 / 56.0).abs() < 1e-12);
+        let thirds = p.slices(3);
+        assert_eq!(thirds.iter().map(|s| s.sms).collect::<Vec<_>>(), vec![19, 19, 18]);
+        assert_eq!(p.slice(3).sms, 19, "slice(k) is the first (largest) slice");
+        assert!((thirds[2].speed - p.speed * 18.0 / 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slices_conserve_the_whole_device() {
+        // The regression the bugfix sweep closes: `sms / k` and
+        // `mem_bytes / k` truncated, so slices of an indivisible device
+        // summed to less than the whole — partitioned capacity silently
+        // shrank. Totals (SMs, bytes, speed) must now be exact.
+        for spec in [GpuSpec::p100(), GpuSpec::v100()] {
+            for k in [2usize, 3] {
+                let parts = spec.slices(k);
+                assert_eq!(parts.len(), k);
+                assert_eq!(parts.iter().map(|s| s.sms).sum::<u32>(), spec.sms, "SMs, k={k}");
+                assert_eq!(
+                    parts.iter().map(|s| s.mem_bytes).sum::<u64>(),
+                    spec.mem_bytes,
+                    "bytes, k={k}"
+                );
+                let speed: f64 = parts.iter().map(|s| s.speed).sum();
+                assert!((speed - spec.speed).abs() < 1e-12, "speed, k={k}");
+                // Largest-first: monotone non-increasing SM counts.
+                assert!(parts.windows(2).all(|w| w[0].sms >= w[1].sms));
+            }
+        }
+        // And at the node level, for the shapes `--dispatch partition`
+        // actually builds: sliced(k) totals equal the unsliced node's.
+        for node in [NodeSpec::p100x2(), NodeSpec::v100x4()] {
+            for k in [2usize, 3] {
+                let s = node.sliced(k);
+                assert_eq!(s.n_gpus(), node.n_gpus() * k);
+                assert_eq!(
+                    s.gpus.iter().map(|g| g.sms).sum::<u32>(),
+                    node.gpus.iter().map(|g| g.sms).sum::<u32>()
+                );
+                assert_eq!(
+                    s.gpus.iter().map(|g| g.mem_bytes).sum::<u64>(),
+                    node.gpus.iter().map(|g| g.mem_bytes).sum::<u64>()
+                );
+                assert!((s.compute_capacity() - node.compute_capacity()).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! Subcommands (hand-rolled parser; the offline crate set has no clap):
 //!
 //! ```text
-//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|all] [--seed N]
+//! mgb bench [--exp fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|overload|all] [--seed N]
 //! mgb run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
 //!           [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
+//!           [--arrivals poisson|mmpp|flash]
+//!           [--admit off|token|util] [--admit-rate JOBS_PER_S] [--admit-burst N]
+//!           [--admit-util SECONDS] [--frontend-q fifo|prio|wfq]
 //!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
 //!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
@@ -13,6 +16,9 @@
 //!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
 //!           [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
+//!           [--arrivals poisson|mmpp|flash]
+//!           [--admit off|token|util] [--admit-rate JOBS_PER_S] [--admit-burst N]
+//!           [--admit-util SECONDS] [--frontend-q fifo|prio|wfq]
 //!           [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
 //!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
@@ -30,25 +36,32 @@
 use mgb::bench_harness;
 use mgb::compiler::compile;
 use mgb::coordinator::{
-    run_cluster, run_cluster_with_hook, ClusterConfig, RunResult, SchedMode,
+    run_cluster, run_cluster_with_hook, AdmissionConfig, ClusterConfig, RunResult, SchedMode,
 };
 use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
 use mgb::ir::parse::parse_program;
 use mgb::runtime::KernelRegistry;
-use mgb::workloads::{nn_homogeneous, nn_mix, poisson_arrivals, NnTask, Workload};
+use mgb::workloads::{
+    flash_crowd_arrivals, mmpp_arrivals, nn_homogeneous, nn_mix, poisson_arrivals, NnTask,
+    Workload,
+};
 use std::collections::HashMap;
 
 /// Valid flags per subcommand — the single source the strict parser
 /// checks against (and the error message prints).
 const BENCH_FLAGS: &[&str] = &["exp", "seed"];
 const RUN_FLAGS: &[&str] = &[
-    "workload", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "workload", "node", "sched", "nodes", "dispatch", "rate", "arrivals",
+    "admit", "admit-rate", "admit-burst", "admit-util", "frontend-q",
+    "preempt", "ckpt-cost",
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed", "compute", "artifacts",
 ];
 const NN_FLAGS: &[&str] = &[
-    "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "preempt", "ckpt-cost",
+    "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "arrivals",
+    "admit", "admit-rate", "admit-burst", "admit-util", "frontend-q",
+    "preempt", "ckpt-cost",
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed",
@@ -88,9 +101,12 @@ fn main() {
 }
 
 const HELP: &str = "\
-  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|all> [--seed N]
+  bench --exp <fig4|fig5|fig6|table2|table3|table4|nn128|ablation|cluster|preempt|latency|migrate|scale|interference|overload|all> [--seed N]
   run   --workload W1..W8 [--node p100x2|v100x4] [--sched sa|cg|mgb2|mgb3|schedgpu|static]
         [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
+        [--arrivals poisson|mmpp|flash]
+        [--admit off|token|util] [--admit-rate JOBS_PER_S] [--admit-burst N]
+        [--admit-util SECONDS] [--frontend-q fifo|prio|wfq]
         [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
         [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
@@ -98,6 +114,9 @@ const HELP: &str = "\
         [--workers N] [--seed N] [--compute real] [--artifacts DIR]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
+        [--arrivals poisson|mmpp|flash]
+        [--admit off|token|util] [--admit-rate JOBS_PER_S] [--admit-burst N]
+        [--admit-util SECONDS] [--frontend-q fifo|prio|wfq]
         [--preempt [min-progress|max-mem|slo|never]] [--ckpt-cost SECONDS]
         [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
@@ -246,13 +265,41 @@ fn parse_interference(f: &HashMap<String, String>) -> Result<bool, String> {
     }
 }
 
-/// The validated run/nn option bundle: latency model, preemption
-/// config, SLO stamping, interference stamping — any invalid value is
-/// one error naming it.
-type RunOpts = (LatencyModel, Option<mgb::sched::PreemptConfig>, bool, bool);
+/// The validated run/nn option bundle — any invalid value is one
+/// error naming it.
+struct RunOpts {
+    latency: LatencyModel,
+    preempt: Option<mgb::sched::PreemptConfig>,
+    slo: bool,
+    interference: bool,
+    admit: Option<AdmissionConfig>,
+    frontend_q: &'static str,
+    /// `Some((rate, shape))` when `--rate` asked for open-system
+    /// traffic; the shape is one of "poisson" | "mmpp" | "flash".
+    arrivals: Option<(f64, &'static str)>,
+}
 
 fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
-    Ok((parse_latency(f)?, parse_preempt(f)?, parse_slo(f)?, parse_interference(f)?))
+    let latency = parse_latency(f)?;
+    let (admit, frontend_q) = parse_admit(f)?;
+    if frontend_q != "fifo" && latency.is_off() {
+        // A frontend discipline with no frontend latency never queues
+        // anything — the silent no-op misconfiguration this parser
+        // family rejects everywhere else.
+        return Err(format!(
+            "--frontend-q {frontend_q} requires a frontend latency model \
+             (--latency lan|wan, --probe-rtt, or --dispatch-cost)"
+        ));
+    }
+    Ok(RunOpts {
+        latency,
+        preempt: parse_preempt(f)?,
+        slo: parse_slo(f)?,
+        interference: parse_interference(f)?,
+        admit,
+        frontend_q,
+        arrivals: parse_arrivals(f)?,
+    })
 }
 
 fn parse_dispatch(f: &HashMap<String, String>) -> &'static str {
@@ -325,15 +372,107 @@ fn parse_latency(f: &HashMap<String, String>) -> Result<LatencyModel, String> {
     Ok(m)
 }
 
-/// `--rate R` stamps Poisson arrivals over the batch (open system).
-fn apply_rate(f: &HashMap<String, String>, jobs: &mut [mgb::coordinator::JobSpec], seed: u64) {
-    if let Some(rate) = f.get("rate").and_then(|s| s.parse::<f64>().ok()) {
-        if rate > 0.0 {
-            poisson_arrivals(jobs, rate, seed);
-        } else {
-            eprintln!("--rate must be positive; running batch-at-0");
+/// `--rate R` stamps open-system arrivals over the batch at an average
+/// of R jobs/s; `--arrivals poisson|mmpp|flash` picks the process
+/// shape (Poisson, two-phase diurnal MMPP, or clocked flash crowds —
+/// see `workloads::mixes`; requires `--rate`).
+///
+/// Invalid rates are hard errors, not warn-and-batch: `--rate 0` (or
+/// `--rate 12j/s`, which failed to parse) used to print a warning and
+/// then quietly measure the closed batch-at-0 system — the same silent
+/// misconfiguration `parse_latency` exists to close.
+fn parse_arrivals(f: &HashMap<String, String>) -> Result<Option<(f64, &'static str)>, String> {
+    let rate = match f.get("rate") {
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => Some(v),
+            _ => return Err(format!("invalid --rate '{s}' (positive jobs/s expected)")),
+        },
+    };
+    let shape: &'static str = match f.get("arrivals").map(String::as_str) {
+        None | Some("poisson") => "poisson",
+        Some("mmpp") | Some("diurnal") => "mmpp",
+        Some("flash") | Some("burst") => "flash",
+        Some(other) => {
+            return Err(format!("unknown arrival process '{other}' (valid: poisson mmpp flash)"))
         }
+    };
+    if f.contains_key("arrivals") && rate.is_none() {
+        return Err("--arrivals requires --rate".into());
     }
+    Ok(rate.map(|r| (r, shape)))
+}
+
+/// Stamp the arrival process chosen by [`parse_arrivals`]. The mmpp
+/// and flash shapes keep the same *average* rate as the plain Poisson
+/// one (mmpp: equal-dwell 1.8R/0.2R phases of 30 s mean; flash: 0.5R
+/// base with 5R bursts over 20% of a 30 s period = 1.4R offered in
+/// burst regimes), so `--rate` means the same thing under every shape.
+fn apply_arrivals(
+    jobs: &mut [mgb::coordinator::JobSpec],
+    rate: f64,
+    shape: &str,
+    seed: u64,
+) {
+    match shape {
+        "poisson" => poisson_arrivals(jobs, rate, seed),
+        "mmpp" => mmpp_arrivals(jobs, &[1.8 * rate, 0.2 * rate], 30.0, seed),
+        "flash" => flash_crowd_arrivals(jobs, 0.5 * rate, 5.0 * rate, 30.0, 0.2, seed),
+        other => unreachable!("parse_arrivals admitted shape '{other}'"),
+    }
+}
+
+/// `--admit off|token|util` enables the cluster frontend's admission
+/// controller (bare flag = token bucket; `off`, the default, replays
+/// bit-identically to not passing the flag). `--admit-rate R` /
+/// `--admit-burst B` tune the token bucket; `--admit-util S` sets the
+/// utilization policy's backlog threshold in seconds. `--frontend-q
+/// fifo|prio|wfq` picks the frontend queue discipline (needs a
+/// latency model to have a queue at all — checked in
+/// [`parse_run_opts`]). Tuning flags without an enabled `--admit`
+/// policy are errors, like the preemption family.
+fn parse_admit(
+    f: &HashMap<String, String>,
+) -> Result<(Option<AdmissionConfig>, &'static str), String> {
+    let fq = match f.get("frontend-q") {
+        None => "fifo",
+        Some(s) => mgb::sched::canonical_frontend_q(s)
+            .ok_or_else(|| format!("unknown frontend queue '{s}' (valid: fifo prio wfq)"))?,
+    };
+    let policy = match f.get("admit") {
+        None => None,
+        Some(s) => Some(mgb::sched::canonical_admit(s).ok_or_else(|| {
+            format!("unknown admission policy '{s}' (valid: off token util)")
+        })?),
+    };
+    if policy.is_none() || policy == Some("off") {
+        for dep in ["admit-rate", "admit-burst", "admit-util"] {
+            if f.contains_key(dep) {
+                return Err(format!("--{dep} requires an enabled --admit policy"));
+            }
+        }
+        return Ok((None, fq));
+    }
+    let mut cfg = AdmissionConfig { policy: policy.unwrap(), ..Default::default() };
+    if let Some(s) = f.get("admit-rate") {
+        cfg.rate_per_s = match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => v,
+            _ => return Err(format!("invalid --admit-rate '{s}' (positive jobs/s expected)")),
+        };
+    }
+    if let Some(s) = f.get("admit-burst") {
+        cfg.burst = match s.parse::<f64>() {
+            Ok(v) if v >= 1.0 && v.is_finite() => v,
+            _ => return Err(format!("invalid --admit-burst '{s}' (burst of >= 1 job expected)")),
+        };
+    }
+    if let Some(s) = f.get("admit-util") {
+        cfg.util_threshold_s = match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => v,
+            _ => return Err(format!("invalid --admit-util '{s}' (positive seconds expected)")),
+        };
+    }
+    Ok((Some(cfg), fq))
 }
 
 fn seed_of(f: &HashMap<String, String>) -> u64 {
@@ -376,6 +515,14 @@ fn print_result(r: &RunResult) {
             r.migrate_bytes as f64 / (1u64 << 30) as f64
         );
     }
+    if r.rejected > 0 || r.degraded > 0 {
+        println!(
+            "admission: rejected={} ({:.0}%) degraded={}",
+            r.rejected,
+            100.0 * r.reject_rate(),
+            r.degraded
+        );
+    }
     for class in mgb::sched::SloClass::ALL {
         if let Some(a) = r.slo_attainment(class) {
             println!(
@@ -411,7 +558,7 @@ fn cmd_bench(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_run(f: &HashMap<String, String>) -> i32 {
-    let (latency, preempt, slo, interference) = match parse_run_opts(f) {
+    let opts = match parse_run_opts(f) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("run: {e}");
@@ -431,20 +578,24 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| bench_harness::mgb_workers(&cluster.nodes[0]));
     let mut jobs = workload.jobs(seed);
-    if slo {
+    if opts.slo {
         mgb::workloads::assign_slo(&mut jobs);
     }
-    if interference {
+    if opts.interference {
         mgb::workloads::assign_interference(&mut jobs);
     }
-    apply_rate(f, &mut jobs, seed);
+    if let Some((rate, shape)) = opts.arrivals {
+        apply_arrivals(&mut jobs, rate, shape, seed);
+    }
     let cfg = ClusterConfig {
         cluster,
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
-        preempt,
-        latency,
+        preempt: opts.preempt,
+        latency: opts.latency,
+        admit: opts.admit,
+        frontend_q: opts.frontend_q,
     };
     let r = if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
@@ -492,7 +643,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
-    let (latency, preempt, slo, interference) = match parse_run_opts(f) {
+    let opts = match parse_run_opts(f) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("nn: {e}");
@@ -517,20 +668,24 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    if slo {
+    if opts.slo {
         mgb::workloads::assign_slo(&mut jobs);
     }
-    if interference {
+    if opts.interference {
         mgb::workloads::assign_interference(&mut jobs);
     }
-    apply_rate(f, &mut jobs, seed);
+    if let Some((rate, shape)) = opts.arrivals {
+        apply_arrivals(&mut jobs, rate, shape, seed);
+    }
     let cfg = ClusterConfig {
         cluster,
         mode,
         workers_per_node: workers,
         dispatch: parse_dispatch(f),
-        preempt,
-        latency,
+        preempt: opts.preempt,
+        latency: opts.latency,
+        admit: opts.admit,
+        frontend_q: opts.frontend_q,
     };
     let r = run_cluster(cfg, jobs);
     print_result(&r);
@@ -732,6 +887,111 @@ mod tests {
         assert_eq!(parse_dispatch(&f), "partition");
         let f = flags(&argv(&["--dispatch", "mig"]), NN_FLAGS).unwrap();
         assert_eq!(parse_dispatch(&f), "partition");
+    }
+
+    #[test]
+    fn invalid_rate_values_are_errors_not_warnings() {
+        // The regression: apply_rate used to warn on a non-positive
+        // rate and silently swallow an unparsable one, then run the
+        // closed batch-at-0 system either way.
+        for args in [
+            ["--rate", "0"],
+            ["--rate", "-1"],
+            ["--rate", "inf"],
+            ["--rate", "NaN"],
+            ["--rate", "12j/s"],
+        ] {
+            let f = flags(&argv(&args), RUN_FLAGS).unwrap();
+            let e = parse_arrivals(&f).unwrap_err();
+            assert!(e.contains(args[1]), "{args:?}: names the bad value: {e}");
+        }
+        // Happy paths: bare rate defaults to poisson; shapes select.
+        let f = flags(&argv(&["--rate", "2.5"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_arrivals(&f).unwrap(), Some((2.5, "poisson")));
+        let f = flags(&argv(&["--rate", "1", "--arrivals", "mmpp"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_arrivals(&f).unwrap(), Some((1.0, "mmpp")));
+        let f = flags(&argv(&["--rate", "1", "--arrivals", "flash"]), NN_FLAGS).unwrap();
+        assert_eq!(parse_arrivals(&f).unwrap(), Some((1.0, "flash")));
+        // A shape without a rate is the silent no-op; unknown shapes
+        // are typos.
+        let f = flags(&argv(&["--arrivals", "flash"]), RUN_FLAGS).unwrap();
+        assert!(parse_arrivals(&f).unwrap_err().contains("requires --rate"));
+        let f = flags(&argv(&["--arrivals", "bursty", "--rate", "1"]), RUN_FLAGS).unwrap();
+        assert!(parse_arrivals(&f).is_err());
+        // No flag at all: closed batch, no process.
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_arrivals(&f).unwrap(), None);
+    }
+
+    #[test]
+    fn admit_flags_parse_and_validate_like_preempt() {
+        // Happy path: explicit policy + tuned bucket.
+        let f = flags(
+            &argv(&["--admit", "token", "--admit-rate", "2", "--admit-burst", "4"]),
+            RUN_FLAGS,
+        )
+        .expect("new flags are in the valid set");
+        let (cfg, fq) = parse_admit(&f).unwrap();
+        let cfg = cfg.expect("enabled");
+        assert_eq!(cfg.policy, "token");
+        assert_eq!(cfg.rate_per_s, 2.0);
+        assert_eq!(cfg.burst, 4.0);
+        assert_eq!(fq, "fifo");
+        // Bare --admit means the token bucket; util takes a threshold.
+        let f = flags(&argv(&["--admit"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_admit(&f).unwrap().0.unwrap().policy, "token");
+        let f = flags(&argv(&["--admit", "util", "--admit-util", "10"]), NN_FLAGS).unwrap();
+        let cfg = parse_admit(&f).unwrap().0.unwrap();
+        assert_eq!((cfg.policy, cfg.util_threshold_s), ("util", 10.0));
+        // --admit off is the default: no config, bit-identical replay.
+        let f = flags(&argv(&["--admit", "off"]), RUN_FLAGS).unwrap();
+        assert!(parse_admit(&f).unwrap().0.is_none());
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert!(parse_admit(&f).unwrap().0.is_none());
+        // Tuning flags without an enabled policy are the silent no-op.
+        for dep in [["--admit-rate", "2"], ["--admit-burst", "4"], ["--admit-util", "10"]] {
+            let f = flags(&argv(&dep), RUN_FLAGS).unwrap();
+            assert!(parse_admit(&f).unwrap_err().contains("requires an enabled --admit"));
+            let mut with_off = vec!["--admit", "off"];
+            with_off.extend_from_slice(&dep);
+            let f = flags(&argv(&with_off), RUN_FLAGS).unwrap();
+            assert!(parse_admit(&f).is_err(), "{dep:?} under --admit off");
+        }
+        // Bad values are errors naming the value; bad policies too.
+        for args in [
+            vec!["--admit", "strict"],
+            vec!["--admit", "--admit-rate", "0"],
+            vec!["--admit", "--admit-rate", "-1"],
+            vec!["--admit", "--admit-rate", "fast"],
+            vec!["--admit", "--admit-burst", "0.5"],
+            vec!["--admit", "--admit-burst", "inf"],
+            vec!["--admit", "util", "--admit-util", "0"],
+            vec!["--admit", "util", "--admit-util", "NaN"],
+        ] {
+            let f = flags(&argv(&args), RUN_FLAGS).unwrap();
+            let e = parse_admit(&f).unwrap_err();
+            assert!(e.contains(args[args.len() - 1]), "{args:?}: names the bad value: {e}");
+        }
+        // Frontend disciplines canonicalise; typos are errors.
+        let f = flags(&argv(&["--frontend-q", "priority"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_admit(&f).unwrap().1, "prio");
+        let f = flags(&argv(&["--frontend-q", "lifo"]), RUN_FLAGS).unwrap();
+        assert!(parse_admit(&f).is_err());
+    }
+
+    #[test]
+    fn frontend_q_requires_a_latency_model() {
+        // A discipline with no frontend latency never queues anything
+        // — rejected as a silent no-op, not silently ignored.
+        let f = flags(&argv(&["--frontend-q", "wfq"]), RUN_FLAGS).unwrap();
+        let e = parse_run_opts(&f).unwrap_err();
+        assert!(e.contains("--frontend-q"), "{e}");
+        let f = flags(&argv(&["--frontend-q", "wfq", "--latency", "lan"]), RUN_FLAGS).unwrap();
+        let opts = parse_run_opts(&f).expect("lan gives the frontend a queue to order");
+        assert_eq!(opts.frontend_q, "wfq");
+        // fifo (the default) is always fine — it IS the ungoverned path.
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert_eq!(parse_run_opts(&f).unwrap().frontend_q, "fifo");
     }
 
     #[test]

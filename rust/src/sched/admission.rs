@@ -1,0 +1,420 @@
+//! Cluster-frontend admission control — the overload-governance layer
+//! (beyond the paper; ROADMAP "Frontend admission control + overload
+//! governance for open-system traffic").
+//!
+//! The paper's scheduler already gates admission at the *node*: a task
+//! blocks until a memory-safe placement exists (§III-B), and
+//! arXiv 1712.04495 builds its co-scheduling guarantee on the same
+//! memory-safety condition. The open-system cluster frontend had no
+//! such gate, so at sustained arrival rate > capacity the queues grow
+//! without bound and turnaround hockey-sticks. This module is the
+//! frontend's gate:
+//!
+//! * **Admission policies** ([`AdmissionConfig`], `--admit`): a
+//!   token-bucket rate limiter (`"token"` — arrivals spend tokens that
+//!   refill at the configured sustainable rate, with a burst allowance)
+//!   or a utilization threshold (`"util"` — arrivals are pressured when
+//!   the cluster's outstanding backlog exceeds a bound in seconds of
+//!   work per unit of compute capacity). `"off"` (the default) keeps
+//!   every run bit-identical to the ungoverned engine.
+//! * **Reject-or-degrade lattice** ([`decide_under_pressure`]): under
+//!   pressure, latency-sensitive arrivals are *protected* (admitted,
+//!   and never charged a token), batch arrivals are *degraded* one
+//!   class to best-effort, and best-effort / classless arrivals are
+//!   *rejected* — a new terminal state (`EvKind::AdmitReject`) that
+//!   never holds a worker, a reservation, or frontend service time.
+//! * **Per-class frontend queueing** ([`FrontendQueue`],
+//!   `--frontend-q`): under a nonzero latency model the frontend is a
+//!   single server; beyond the PR-3 FIFO it can serve the backlog
+//!   tightest-class-first (`"prio"`) or by weighted fair queueing
+//!   (`"wfq"`, stride scheduling with weights 4/2/1 for
+//!   latency-sensitive/batch/best-effort). `"fifo"` keeps the PR-3
+//!   path byte-identical.
+//!
+//! Everything here is deterministic (integer strides, index
+//! tie-breaks), so governed runs replay exactly — the same contract the
+//! preemption and latency layers honour.
+
+use super::SloClass;
+use std::collections::VecDeque;
+
+/// Frontend admission configuration carried by
+/// `coordinator::ClusterConfig`. `None` there — or `policy: "off"`
+/// here — disables governance and keeps the engine bit-identical to
+/// the ungoverned frontend.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// Admission policy: "off" | "token" | "util".
+    pub policy: &'static str,
+    /// Token-bucket refill rate, jobs/s (`--admit-rate`): the
+    /// sustainable admitted rate for non-protected arrivals.
+    pub rate_per_s: f64,
+    /// Token-bucket depth, jobs (`--admit-burst`): how large a flash
+    /// crowd is absorbed before the pressure lattice engages.
+    pub burst: f64,
+    /// Utilization-threshold bound, seconds (`--admit-util`): arrivals
+    /// are pressured when outstanding backlog exceeds this many seconds
+    /// of dedicated work per unit of cluster compute capacity.
+    pub util_threshold_s: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            policy: "token",
+            rate_per_s: 1.0,
+            burst: 8.0,
+            util_threshold_s: 30.0,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Whether the controller gates anything at all.
+    pub fn enabled(&self) -> bool {
+        self.policy != "off"
+    }
+
+    /// Copy of the config with every knob forced valid — the
+    /// construction-time guard `coordinator` applies (mirroring
+    /// `PreemptConfig::sanitized`). A zero/negative/NaN rate would
+    /// refill no tokens (rejecting everything forever) or poison the
+    /// refill arithmetic; such values degrade to the defaults. Unknown
+    /// policy aliases panic, exactly like `make_preempt_policy` on an
+    /// unknown policy name.
+    pub fn sanitized(&self) -> Self {
+        let pos = |v: f64, default: f64| if v.is_finite() && v > 0.0 { v } else { default };
+        let d = AdmissionConfig::default();
+        AdmissionConfig {
+            policy: canonical_admit(self.policy)
+                .unwrap_or_else(|| panic!("unknown admission policy '{}'", self.policy)),
+            rate_per_s: pos(self.rate_per_s, d.rate_per_s),
+            burst: pos(self.burst, d.burst),
+            util_threshold_s: pos(self.util_threshold_s, d.util_threshold_s),
+        }
+    }
+}
+
+/// Canonical admission-policy name, or `None` if unrecognised. Shared
+/// by the CLI parser and [`AdmissionConfig::sanitized`]; "true" (a bare
+/// `--admit` flag) selects the token bucket.
+pub fn canonical_admit(name: &str) -> Option<&'static str> {
+    match name {
+        "off" | "none" => Some("off"),
+        "token" | "token-bucket" | "tb" | "on" | "true" => Some("token"),
+        "util" | "utilization" | "threshold" => Some("util"),
+        _ => None,
+    }
+}
+
+/// Canonical frontend-queue discipline name, or `None` if
+/// unrecognised.
+pub fn canonical_frontend_q(name: &str) -> Option<&'static str> {
+    match name {
+        "fifo" => Some("fifo"),
+        "prio" | "priority" => Some("prio"),
+        "wfq" | "fair" => Some("wfq"),
+        _ => None,
+    }
+}
+
+/// What the frontend does with one arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Route it (possibly after queueing for frontend service).
+    Admit,
+    /// Admit it demoted one SLO class (batch -> best-effort): it keeps
+    /// running but yields its victim-selection and queueing priority.
+    Degrade,
+    /// Turn it away at the door: terminal, holds nothing, counted
+    /// against goodput but never against a worker or reservation.
+    Reject,
+}
+
+/// The reject-or-degrade lattice applied to a *pressured* arrival
+/// (bucket empty / backlog over threshold). Latency-sensitive work is
+/// protected — shedding the traffic whose turnaround is the product
+/// would defeat the point of governing; batch demotes to best-effort;
+/// best-effort (and classless — no SLO ranks loosest, as in victim
+/// selection) is shed.
+pub fn decide_under_pressure(slo: Option<SloClass>) -> AdmitDecision {
+    match SloClass::looseness(slo) {
+        0 => AdmitDecision::Admit,
+        1 => AdmitDecision::Degrade,
+        _ => AdmitDecision::Reject,
+    }
+}
+
+/// A standard token bucket over virtual time: `tokens` refill at
+/// `rate_per_s` up to `burst`. Protected (latency-sensitive) arrivals
+/// never call [`TokenBucket::try_take`], so they neither starve the
+/// bucket nor get shed by it.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenBucket {
+    tokens: f64,
+    last_t: f64,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (a cold frontend absorbs one burst).
+    pub fn new(cfg: &AdmissionConfig) -> Self {
+        TokenBucket { tokens: cfg.burst, last_t: 0.0, rate: cfg.rate_per_s, burst: cfg.burst }
+    }
+
+    /// Refill for the elapsed virtual time, then spend one token if one
+    /// is available. `false` = the arrival is pressured.
+    pub fn try_take(&mut self, t: f64) -> bool {
+        if t > self.last_t {
+            self.tokens = (self.tokens + (t - self.last_t) * self.rate).min(self.burst);
+            self.last_t = t;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently in the bucket (tests/telemetry).
+    pub fn level(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// WFQ stride per class, indexed by `SloClass::looseness` (tightest
+/// first). Strides are `LCM(weights) / weight` for weights 4/2/1, so a
+/// latency-sensitive job is served for every two batch and four
+/// best-effort jobs when all classes back up.
+const WFQ_STRIDE: [u64; 3] = [1, 2, 4];
+
+/// Per-class backlog at the cluster frontend, served one probe per
+/// service time by the configured discipline. Only built for
+/// `--frontend-q prio|wfq` under a nonzero latency model — FIFO (and
+/// every zero-latency run, where no frontend queue can form) keeps the
+/// PR-3 single-server path byte-identical.
+///
+/// Disciplines:
+/// * `"prio"` — strict priority: tightest non-empty class first, FIFO
+///   within a class. Starves loose classes under sustained tight load
+///   (that is the point of offering wfq too).
+/// * `"wfq"` — stride scheduling: each class carries a pass value
+///   advanced by its stride per service; the lowest pass among backed-
+///   up classes is served, ties to the tighter class. Deterministic
+///   integer arithmetic, so governed runs replay exactly.
+#[derive(Debug)]
+pub struct FrontendQueue {
+    discipline: &'static str,
+    classes: [VecDeque<usize>; 3],
+    /// WFQ pass per class (unused for "prio").
+    pass: [u64; 3],
+    /// Pass of the most recent service — newly-backed-up classes start
+    /// here so an idle class cannot bank credit while empty.
+    virtual_time: u64,
+}
+
+impl FrontendQueue {
+    /// Build for a canonical non-FIFO discipline.
+    pub fn new(discipline: &'static str) -> Self {
+        debug_assert!(discipline == "prio" || discipline == "wfq");
+        FrontendQueue {
+            discipline,
+            classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            pass: [0; 3],
+            virtual_time: 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.iter().all(|q| q.is_empty())
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.iter().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue `job` under its (possibly already degraded) class.
+    pub fn push(&mut self, job: usize, slo: Option<SloClass>) {
+        let c = SloClass::looseness(slo) as usize;
+        if self.classes[c].is_empty() {
+            // Re-activating class: no banked credit from its idle span.
+            self.pass[c] = self.pass[c].max(self.virtual_time);
+        }
+        self.classes[c].push_back(job);
+    }
+
+    /// Serve the next job by discipline, or `None` when idle.
+    pub fn pop(&mut self) -> Option<usize> {
+        let c = match self.discipline {
+            "prio" => (0..3).find(|&c| !self.classes[c].is_empty())?,
+            _ => {
+                // wfq: lowest pass among backed-up classes, ties to the
+                // tighter class (the iteration order).
+                let c = (0..3)
+                    .filter(|&c| !self.classes[c].is_empty())
+                    .min_by_key(|&c| (self.pass[c], c))?;
+                self.virtual_time = self.pass[c];
+                self.pass[c] += WFQ_STRIDE[c];
+                c
+            }
+        };
+        self.classes[c].pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_canonicalise() {
+        assert_eq!(canonical_admit("off"), Some("off"));
+        assert_eq!(canonical_admit("none"), Some("off"));
+        assert_eq!(canonical_admit("true"), Some("token"), "bare --admit = token bucket");
+        assert_eq!(canonical_admit("token-bucket"), Some("token"));
+        assert_eq!(canonical_admit("utilization"), Some("util"));
+        assert_eq!(canonical_admit("nope"), None);
+        assert_eq!(canonical_frontend_q("fifo"), Some("fifo"));
+        assert_eq!(canonical_frontend_q("priority"), Some("prio"));
+        assert_eq!(canonical_frontend_q("fair"), Some("wfq"));
+        assert_eq!(canonical_frontend_q("nope"), None);
+    }
+
+    #[test]
+    fn sanitized_defends_every_knob() {
+        let d = AdmissionConfig::default();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let cfg = AdmissionConfig { rate_per_s: bad, ..d }.sanitized();
+            assert_eq!(cfg.rate_per_s, d.rate_per_s, "rate degrades to the default");
+            let cfg = AdmissionConfig { burst: bad, ..d }.sanitized();
+            assert_eq!(cfg.burst, d.burst);
+            let cfg = AdmissionConfig { util_threshold_s: bad, ..d }.sanitized();
+            assert_eq!(cfg.util_threshold_s, d.util_threshold_s);
+        }
+        let cfg = AdmissionConfig { policy: "on", ..d }.sanitized();
+        assert_eq!(cfg.policy, "token");
+        assert!(cfg.enabled());
+        assert!(!AdmissionConfig { policy: "off", ..d }.enabled());
+        assert_eq!(d.sanitized(), d, "valid configs pass through unchanged");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown admission policy")]
+    fn sanitized_rejects_unknown_policy() {
+        let _ = AdmissionConfig { policy: "sideways", ..Default::default() }.sanitized();
+    }
+
+    #[test]
+    fn pressure_lattice_protects_tight_degrades_batch_sheds_loose() {
+        assert_eq!(
+            decide_under_pressure(Some(SloClass::LatencySensitive)),
+            AdmitDecision::Admit,
+            "latency-sensitive is protected"
+        );
+        assert_eq!(decide_under_pressure(Some(SloClass::Batch)), AdmitDecision::Degrade);
+        assert_eq!(decide_under_pressure(Some(SloClass::BestEffort)), AdmitDecision::Reject);
+        assert_eq!(decide_under_pressure(None), AdmitDecision::Reject, "classless ranks loosest");
+    }
+
+    #[test]
+    fn token_bucket_admits_at_rate_and_absorbs_bursts() {
+        let cfg = AdmissionConfig { rate_per_s: 2.0, burst: 3.0, ..Default::default() };
+        let mut b = TokenBucket::new(&cfg);
+        // Starts full: a 3-job flash crowd at t=0 is absorbed whole.
+        assert!(b.try_take(0.0) && b.try_take(0.0) && b.try_take(0.0));
+        assert!(!b.try_take(0.0), "the 4th same-instant arrival is pressured");
+        // Refill is rate * elapsed: 0.5 s at 2 jobs/s = 1 token.
+        assert!(b.try_take(0.5));
+        assert!(!b.try_take(0.5));
+        // At exactly-capacity spacing (1/rate) every arrival is
+        // admitted forever — the satellite-4 edge case.
+        let mut t = 1.0;
+        for _ in 0..100 {
+            t += 0.5;
+            assert!(b.try_take(t), "exactly-capacity arrival at t={t} admitted");
+        }
+        // The bucket never exceeds its depth.
+        assert!(TokenBucket::new(&cfg).level() <= cfg.burst);
+        let mut b = TokenBucket::new(&cfg);
+        let _ = b.try_take(1e6);
+        assert!(b.level() <= cfg.burst);
+    }
+
+    #[test]
+    fn token_bucket_ignores_time_running_backwards() {
+        // Same-instant and out-of-order calls must not refill: the
+        // engine's clock is monotone, but same-t arrivals are common.
+        let cfg = AdmissionConfig { rate_per_s: 1.0, burst: 1.0, ..Default::default() };
+        let mut b = TokenBucket::new(&cfg);
+        assert!(b.try_take(5.0));
+        assert!(!b.try_take(5.0));
+        assert!(!b.try_take(4.0), "earlier t refills nothing");
+    }
+
+    #[test]
+    fn prio_serves_tightest_first_fifo_within_class() {
+        let mut q = FrontendQueue::new("prio");
+        q.push(0, Some(SloClass::BestEffort));
+        q.push(1, Some(SloClass::Batch));
+        q.push(2, Some(SloClass::LatencySensitive));
+        q.push(3, Some(SloClass::LatencySensitive));
+        q.push(4, None); // classless queues with best-effort
+        assert_eq!(q.len(), 5);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![2, 3, 1, 0, 4]);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn wfq_interleaves_by_weight() {
+        let mut q = FrontendQueue::new("wfq");
+        for j in 0..8 {
+            q.push(j, Some(SloClass::LatencySensitive));
+        }
+        for j in 8..12 {
+            q.push(j, Some(SloClass::Batch));
+        }
+        for j in 12..14 {
+            q.push(j, Some(SloClass::BestEffort));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order.len(), 14);
+        // Weighted shares over the first 7 services (one full stride
+        // cycle of 4+2+1): 4 latency-sensitive, 2 batch, 1 best-effort.
+        let ls = order[..7].iter().filter(|&&j| j < 8).count();
+        let batch = order[..7].iter().filter(|&&j| (8..12).contains(&j)).count();
+        let be = order[..7].iter().filter(|&&j| j >= 12).count();
+        assert_eq!((ls, batch, be), (4, 2, 1), "4:2:1 service shares: {order:?}");
+        // Deterministic: the same pushes replay the same order.
+        let mut q2 = FrontendQueue::new("wfq");
+        for j in 0..8 {
+            q2.push(j, Some(SloClass::LatencySensitive));
+        }
+        for j in 8..12 {
+            q2.push(j, Some(SloClass::Batch));
+        }
+        for j in 12..14 {
+            q2.push(j, Some(SloClass::BestEffort));
+        }
+        let order2: Vec<usize> = std::iter::from_fn(|| q2.pop()).collect();
+        assert_eq!(order, order2);
+    }
+
+    #[test]
+    fn wfq_reactivated_class_banks_no_credit() {
+        let mut q = FrontendQueue::new("wfq");
+        // Drain a long best-effort run to advance its pass.
+        for j in 0..4 {
+            q.push(j, Some(SloClass::BestEffort));
+        }
+        while q.pop().is_some() {}
+        // A best-effort job arriving after the idle span must not be
+        // owed the whole span as credit against a fresh tight backlog.
+        q.push(100, Some(SloClass::BestEffort));
+        q.push(101, Some(SloClass::LatencySensitive));
+        assert_eq!(q.pop(), Some(101), "tight class served first despite the idle span");
+    }
+}

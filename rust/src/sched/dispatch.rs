@@ -483,7 +483,7 @@ mod tests {
         // job can NEVER start on node 0; the old peak-blind rule routed
         // it there anyway, where it sat forever. Node 1 holds it once
         // its backlog drains.
-        let big = JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 24 << 30 };
+        let big = JobInfo { peak_mem_bytes: 24 << 30, ..job() };
         let nodes = vec![cap_view(16 << 30, 0), cap_view(64 << 30, 52 << 30)];
         assert_eq!(d.route(&big, &nodes), 1, "capacity that can hold the peak wins");
         // Between two nodes that could both hold the peak eventually,
@@ -503,7 +503,7 @@ mod tests {
         let mut d = make_dispatcher("mem");
         // A 100 GB peak fits nowhere: degrade to the old max-headroom
         // rule (node 1 at 24 GB) and let the engine report the crash.
-        let huge = JobInfo { est_work_us: 1_000_000, peak_mem_bytes: 100 << 30 };
+        let huge = JobInfo { peak_mem_bytes: 100 << 30, ..job() };
         let nodes = vec![cap_view(64 << 30, 60 << 30), cap_view(64 << 30, 40 << 30)];
         assert_eq!(d.route(&huge, &nodes), 1);
     }
@@ -533,8 +533,8 @@ mod tests {
         let p100 = 2.0 * (3584.0 / 5120.0);
         let near_slow = NodeLoadView { compute_capacity: p100, ..lat_view(0, 0.0, 0.0) };
         let far_fast = lat_view(0, 0.3, 0.2);
-        let short = JobInfo { est_work_us: 100_000, peak_mem_bytes: 1 << 30 };
-        let long = JobInfo { est_work_us: 20_000_000, peak_mem_bytes: 1 << 30 };
+        let short = JobInfo { est_work_us: 100_000, ..job() };
+        let long = JobInfo { est_work_us: 20_000_000, ..job() };
         // short: 0.1s/1.4 = 71 ms near vs 0.5 s + 25 ms far -> near.
         assert_eq!(d.route(&short, &[near_slow, far_fast]), 0);
         // long: 20s/1.4 = 14.3 s near vs 0.5 s + 5 s far -> far.

@@ -31,13 +31,26 @@
 //! *migrate*: with `PreemptConfig::migrate = "cluster"` a checkpointed
 //! victim re-enters the cluster layer as a restore job and is routed
 //! by the active [`Dispatcher`] like any arrival.
+//!
+//! **Admission layer.** Above the dispatcher sits the cluster
+//! frontend's overload governor (see [`admission`]): an
+//! [`AdmissionConfig`] gates *arrivals* with a token bucket or a
+//! utilization threshold, sheds or degrades best-effort/batch work
+//! under pressure, and a [`FrontendQueue`] can serve the frontend
+//! backlog by class instead of FIFO. Off by default — with it disabled
+//! the engine is bit-identical to the ungoverned frontend.
 
+pub mod admission;
 pub mod alg2;
 pub mod alg3;
 pub mod dispatch;
 pub mod preempt;
 pub mod schedgpu;
 
+pub use admission::{
+    canonical_admit, canonical_frontend_q, decide_under_pressure, AdmissionConfig, AdmitDecision,
+    FrontendQueue, TokenBucket,
+};
 pub use alg2::MgbAlg2;
 pub use alg3::MgbAlg3;
 pub use dispatch::{

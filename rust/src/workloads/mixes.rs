@@ -220,6 +220,122 @@ pub fn open_system(workload: &Workload, rate_per_s: f64, seed: u64) -> Vec<JobSp
     jobs
 }
 
+/// Markov-modulated Poisson (diurnal) traffic: overwrite each job's
+/// `arrival` with a Poisson process whose rate cycles through
+/// `rates_per_s` — each phase lasts an exponential holding time of
+/// mean `phase_mean_s`. Two alternating rates give the classic
+/// day/night diurnal shape; more give arbitrary regimes. Exponential
+/// inter-arrivals are memoryless, so discarding the residual gap at a
+/// phase boundary and redrawing at the new rate is exact, not an
+/// approximation. Deterministic per seed.
+pub fn mmpp_arrivals(jobs: &mut [JobSpec], rates_per_s: &[f64], phase_mean_s: f64, seed: u64) {
+    assert!(!rates_per_s.is_empty(), "mmpp needs at least one phase rate");
+    for &r in rates_per_s {
+        assert!(r > 0.0 && r.is_finite(), "phase rates must be positive and finite");
+    }
+    assert!(
+        phase_mean_s > 0.0 && phase_mean_s.is_finite(),
+        "phase holding time must be positive and finite"
+    );
+    let mut rng = Rng::new(seed ^ 0xD1D4A1);
+    let mut phase = 0usize;
+    let mut t = 0.0;
+    let mut phase_end = rng.exp(phase_mean_s);
+    for j in jobs.iter_mut() {
+        loop {
+            let gap = rng.exp(1.0 / rates_per_s[phase]);
+            if t + gap <= phase_end {
+                t += gap;
+                break;
+            }
+            t = phase_end;
+            phase = (phase + 1) % rates_per_s.len();
+            phase_end = t + rng.exp(phase_mean_s);
+        }
+        j.arrival = t;
+    }
+}
+
+/// Flash-crowd traffic: a base-rate Poisson process with periodic burst
+/// windows. Time is cut into periods of `period_s`; the first
+/// `burst_frac` of each period arrives at `burst_rate_per_s`, the rest
+/// at `base_rate_per_s`. Unlike [`mmpp_arrivals`] the regime switches
+/// are *clocked*, not random — the overload bench wants the crowd to
+/// hit at known instants so policies can be compared on the same
+/// burst. Deterministic per seed.
+pub fn flash_crowd_arrivals(
+    jobs: &mut [JobSpec],
+    base_rate_per_s: f64,
+    burst_rate_per_s: f64,
+    period_s: f64,
+    burst_frac: f64,
+    seed: u64,
+) {
+    assert!(
+        base_rate_per_s > 0.0 && base_rate_per_s.is_finite(),
+        "base rate must be positive and finite"
+    );
+    assert!(
+        burst_rate_per_s >= base_rate_per_s && burst_rate_per_s.is_finite(),
+        "burst rate must be >= base rate and finite"
+    );
+    assert!(period_s > 0.0 && period_s.is_finite(), "period must be positive and finite");
+    assert!((0.0..1.0).contains(&burst_frac) && burst_frac > 0.0, "burst_frac must be in (0, 1)");
+    let mut rng = Rng::new(seed ^ 0xF1A5C0D);
+    let mut t = 0.0;
+    for j in jobs.iter_mut() {
+        loop {
+            let into = t - (t / period_s).floor() * period_s;
+            let burst_end = burst_frac * period_s;
+            let (rate, seg_end) = if into < burst_end {
+                (burst_rate_per_s, t - into + burst_end)
+            } else {
+                (base_rate_per_s, t - into + period_s)
+            };
+            let gap = rng.exp(1.0 / rate);
+            if t + gap <= seg_end {
+                t += gap;
+                break;
+            }
+            // Memoryless: jump to the segment boundary and redraw.
+            t = seg_end;
+        }
+        j.arrival = t;
+    }
+}
+
+/// Heavy-tailed overload mix: `n_jobs` synthetic single-task jobs whose
+/// service demand and footprint follow a bound-capped Pareto law
+/// (shape `alpha`, 20 ms / 256 MiB scales, capped at 20 s / 4 GiB), so
+/// a few elephants dominate total work while the mass of mice decides
+/// attainment. Jobs are classed 20% latency-sensitive / 40% batch /
+/// 40% best-effort — the class spread the admission lattice
+/// (protect / degrade / shed) needs to differentiate on. Arrivals are
+/// all 0; drive them with [`poisson_arrivals`], [`mmpp_arrivals`], or
+/// [`flash_crowd_arrivals`].
+pub fn heavy_tailed_mix(n_jobs: usize, alpha: f64, seed: u64) -> Vec<JobSpec> {
+    assert!(
+        alpha > 1.0 && alpha.is_finite(),
+        "pareto shape must exceed 1 (finite mean) and be finite"
+    );
+    let mut rng = Rng::new(seed ^ 0x0E7A11);
+    (0..n_jobs)
+        .map(|j| {
+            let work_us = (20_000.0 * rng.pareto(alpha, 1.0)).min(20_000_000.0) as u64;
+            let mem_bytes = ((256u64 << 20) as f64 * rng.pareto(alpha, 1.0))
+                .min((4u64 << 30) as f64) as u64;
+            let (class, slo) = match rng.below(5) {
+                0 => (JobClass::Large, SloClass::LatencySensitive),
+                1 | 2 => (JobClass::Small, SloClass::Batch),
+                _ => (JobClass::Small, SloClass::BestEffort),
+            };
+            let mut s = synthetic_job(&format!("ht#{j:03}"), class, mem_bytes, work_us, 0.0);
+            s.slo = Some(slo);
+            s
+        })
+        .collect()
+}
+
 /// §V-E first experiment: 8-job homogeneous workload per NN task type.
 pub fn nn_homogeneous(task: NnTask) -> Vec<JobSpec> {
     (0..8)
@@ -302,6 +418,93 @@ mod tests {
         poisson_arrivals(&mut d, 0.5, 43);
         assert!(a.iter().zip(&d).any(|(x, y)| x.arrival != y.arrival));
         assert_eq!(b.len(), a.len());
+    }
+
+    #[test]
+    fn mmpp_arrivals_are_increasing_and_deterministic() {
+        let mut a = WORKLOADS[4].jobs(3);
+        mmpp_arrivals(&mut a, &[2.0, 0.2], 5.0, 9);
+        let mut prev = 0.0;
+        for j in &a {
+            assert!(j.arrival > prev, "strictly increasing arrivals");
+            prev = j.arrival;
+        }
+        let mut b = WORKLOADS[4].jobs(3);
+        mmpp_arrivals(&mut b, &[2.0, 0.2], 5.0, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+        // A different phase plan produces a different process.
+        let mut c = WORKLOADS[4].jobs(3);
+        mmpp_arrivals(&mut c, &[0.2, 2.0], 5.0, 9);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_in_burst_windows() {
+        let mut jobs = nn_mix(256, 1);
+        let (period, frac) = (10.0, 0.2);
+        flash_crowd_arrivals(&mut jobs, 0.5, 20.0, period, frac, 21);
+        let mut prev = 0.0;
+        let (mut in_burst, mut outside) = (0usize, 0usize);
+        for j in &jobs {
+            assert!(j.arrival > prev, "strictly increasing arrivals");
+            prev = j.arrival;
+            let into = j.arrival - (j.arrival / period).floor() * period;
+            if into < frac * period {
+                in_burst += 1;
+            } else {
+                outside += 1;
+            }
+        }
+        // Burst windows cover 20% of the clock but a 40x rate ratio
+        // means they should capture the vast majority of arrivals.
+        assert!(
+            in_burst > 3 * outside,
+            "burst windows not dominant: {in_burst} in vs {outside} out"
+        );
+        // Deterministic replay.
+        let mut again = nn_mix(256, 1);
+        flash_crowd_arrivals(&mut again, 0.5, 20.0, period, frac, 21);
+        for (x, y) in jobs.iter().zip(&again) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_mix_spans_classes_and_has_a_tail() {
+        let jobs = heavy_tailed_mix(200, 1.5, 7);
+        assert_eq!(jobs.len(), 200);
+        for want in [SloClass::LatencySensitive, SloClass::Batch, SloClass::BestEffort] {
+            assert!(jobs.iter().any(|j| j.slo == Some(want)), "{want:?} missing");
+        }
+        // Heavy tail: the biggest service demand dwarfs the median.
+        let mut works: Vec<u64> = jobs
+            .iter()
+            .map(|j| {
+                j.trace
+                    .events
+                    .iter()
+                    .find_map(|e| match e {
+                        TraceEvent::Launch { work_us, .. } => Some(*work_us),
+                        _ => None,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        works.sort_unstable();
+        let median = works[works.len() / 2];
+        let max = *works.last().unwrap();
+        assert!(works[0] >= 20_000, "scale floor: smallest {}", works[0]);
+        assert!(max <= 20_000_000, "cap: largest {max}");
+        assert!(max > 10 * median, "no tail: max {max} vs median {median}");
+        // Deterministic replay.
+        let again = heavy_tailed_mix(200, 1.5, 7);
+        for (x, y) in jobs.iter().zip(&again) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.slo, y.slo);
+            assert_eq!(x.class, y.class);
+        }
     }
 
     #[test]

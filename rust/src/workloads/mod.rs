@@ -11,7 +11,8 @@ pub mod rodinia;
 
 pub use darknet::{NnTask, NN_TASKS};
 pub use mixes::{
-    assign_interference, assign_slo, nn_homogeneous, nn_mix, open_system, poisson_arrivals,
-    synthetic_job, synthetic_job_with_iv, MixRatio, Workload, RATIOS, WORKLOADS,
+    assign_interference, assign_slo, flash_crowd_arrivals, heavy_tailed_mix, mmpp_arrivals,
+    nn_homogeneous, nn_mix, open_system, poisson_arrivals, synthetic_job, synthetic_job_with_iv,
+    MixRatio, Workload, RATIOS, WORKLOADS,
 };
 pub use rodinia::{Bench, Combo, COMBOS};

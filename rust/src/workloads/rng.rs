@@ -61,6 +61,19 @@ impl Rng {
         -mean * u.ln()
     }
 
+    /// Pareto-distributed sample (inverse CDF): scale `xm`, shape
+    /// `alpha`. The heavy-tailed job-size law of the overload mixes —
+    /// a few elephants carry most of the total work. Always >= `xm`;
+    /// the mean is finite only for `alpha > 1` (callers wanting a
+    /// stable sample mean should bound-cap the draw).
+    pub fn pareto(&mut self, alpha: f64, xm: f64) -> f64 {
+        // Same midpoint trick as `exp`: u in (0, 1), so the power is
+        // finite and the sample strictly exceeds... well, reaches xm
+        // only in the limit; concretely it is always finite and > 0.
+        let u = ((self.next_u64() >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+        xm * u.powf(-1.0 / alpha)
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -132,6 +145,28 @@ mod tests {
         for &c in &counts {
             assert!((9_000..11_000).contains(&c), "skewed counts {counts:?}");
         }
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed_above_scale_and_deterministic() {
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut max = 0.0f64;
+        for _ in 0..n {
+            let x = a.pareto(3.0, 1.0);
+            assert_eq!(x, b.pareto(3.0, 1.0), "replay must be exact");
+            assert!(x >= 1.0 && x.is_finite(), "sample {x} below scale");
+            sum += x;
+            max = max.max(x);
+        }
+        // Pareto(alpha=3, xm=1) mean = alpha/(alpha-1) = 1.5.
+        let mean = sum / n as f64;
+        assert!((mean - 1.5).abs() < 0.1, "sample mean {mean}");
+        // Heavy tail: the largest of 20k draws dwarfs the mean in a
+        // way exponential samples with the same mean never would.
+        assert!(max > 5.0, "no tail: max {max}");
     }
 
     #[test]

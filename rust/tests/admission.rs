@@ -1,0 +1,163 @@
+//! Admission-layer edge cases (PR 8 satellite): the off-path
+//! bit-identity contract at event granularity, the exactly-at-capacity
+//! token bucket, class-ordered shedding under a same-instant burst, and
+//! the rejected-jobs-hold-nothing invariant.
+
+use mgb::coordinator::{
+    run_cluster, run_cluster_traced, AdmissionConfig, ClusterConfig, JobClass, JobSpec, SchedMode,
+};
+use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
+use mgb::sched::SloClass;
+use mgb::workloads::{poisson_arrivals, synthetic_job, Workload};
+
+fn cfg(admit: Option<AdmissionConfig>) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(NodeSpec::v100x4(), 1),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 8,
+        dispatch: "rr",
+        preempt: None,
+        latency: LatencyModel::off(),
+        admit,
+        frontend_q: "fifo",
+    }
+}
+
+fn token(rate_per_s: f64, burst: f64) -> Option<AdmissionConfig> {
+    Some(AdmissionConfig { policy: "token", rate_per_s, burst, ..Default::default() })
+}
+
+fn job(name: &str, slo: Option<SloClass>, arrival: f64) -> JobSpec {
+    let mut j = synthetic_job(name, JobClass::Small, 1 << 30, 2_000_000, arrival);
+    j.slo = slo;
+    j
+}
+
+#[test]
+fn off_policy_is_byte_identical_to_no_admission_at_event_granularity() {
+    // `--admit off` must take the exact ungoverned code paths: same
+    // fired-event stream byte for byte, no admission counters, no
+    // admission event kinds. (golden_trace.rs additionally pins the
+    // off path to the committed fixtures; this is the direct A/B.)
+    let mut jobs = Workload::by_id("W1").unwrap().jobs(7);
+    poisson_arrivals(&mut jobs, 1.0, 7);
+    let (a, ta) = run_cluster_traced(cfg(None), jobs.clone());
+    let off = Some(AdmissionConfig { policy: "off", ..Default::default() });
+    let (b, tb) = run_cluster_traced(cfg(off), jobs);
+    assert_eq!(ta, tb, "off policy must replay the ungoverned stream exactly");
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!((b.rejected, b.degraded), (0, 0));
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!((x.started, x.ended, x.node), (y.started, y.ended, y.node));
+    }
+}
+
+#[test]
+fn a_bucket_refilled_at_exactly_the_arrival_rate_admits_everything() {
+    // The boundary case: 1 token/s refill, depth 1, batch arrivals
+    // spaced at exactly 1 s. Every arrival finds exactly one token —
+    // any off-by-one in the refill arithmetic (refill-after-spend,
+    // strict instead of >= comparison) would shed work the configured
+    // rate can afford.
+    let jobs: Vec<JobSpec> = (0..12)
+        .map(|i| job(&format!("b{i}"), Some(SloClass::Batch), i as f64))
+        .collect();
+    let r = run_cluster(cfg(token(1.0, 1.0)), jobs);
+    assert_eq!((r.rejected, r.degraded), (0, 0), "exactly-capacity load sheds nothing");
+    assert_eq!(r.completed(), 12);
+}
+
+#[test]
+fn an_overdriven_burst_sheds_strictly_by_class() {
+    // A same-instant burst against a depth-2 bucket with negligible
+    // refill: the two batch arrivals drain the bucket, both best-effort
+    // arrivals are turned away, and the latency-sensitive pair is
+    // admitted without ever touching a token (they are protected, not
+    // metered).
+    let jobs = vec![
+        job("ls0", Some(SloClass::LatencySensitive), 0.0),
+        job("ls1", Some(SloClass::LatencySensitive), 0.0),
+        job("batch0", Some(SloClass::Batch), 0.0),
+        job("batch1", Some(SloClass::Batch), 0.0),
+        job("be0", Some(SloClass::BestEffort), 0.0),
+        job("be1", Some(SloClass::BestEffort), 0.0),
+    ];
+    let r = run_cluster(cfg(token(1e-6, 2.0)), jobs);
+    assert_eq!((r.rejected, r.degraded), (2, 0));
+    for j in &r.jobs {
+        match j.slo {
+            Some(SloClass::BestEffort) => assert!(j.rejected, "{} must be shed", j.name),
+            _ => assert!(!j.rejected, "{} must be admitted", j.name),
+        }
+    }
+    assert_eq!(r.completed(), 4, "every admitted job still completes");
+}
+
+#[test]
+fn pressured_batch_degrades_to_best_effort_instead_of_rejecting() {
+    // Depth-1 bucket, three same-instant arrivals: the first batch job
+    // takes the token, the second finds the bucket empty and is demoted
+    // one class (visible in its outcome's SLO), the best-effort job is
+    // shed outright.
+    let jobs = vec![
+        job("batch0", Some(SloClass::Batch), 0.0),
+        job("batch1", Some(SloClass::Batch), 0.0),
+        job("be0", Some(SloClass::BestEffort), 0.0),
+    ];
+    let r = run_cluster(cfg(token(1e-6, 1.0)), jobs);
+    assert_eq!((r.rejected, r.degraded), (1, 1));
+    assert_eq!(r.jobs[0].slo, Some(SloClass::Batch), "token holder keeps its class");
+    assert_eq!(r.jobs[1].slo, Some(SloClass::BestEffort), "demotion is recorded");
+    assert!(!r.jobs[1].rejected, "degraded jobs still run");
+    assert!(r.jobs[2].rejected);
+    assert_eq!(r.completed(), 2);
+}
+
+#[test]
+fn rejected_jobs_hold_no_worker_reservation_or_execution_state() {
+    // Over-drive a depth-1 bucket so every best-effort arrival is shed,
+    // then check the terminal shape of each rejection — ended at its
+    // own arrival instant, zero kernels, zero dedicated seconds — and
+    // conservation: admitted + crashed + rejected covers the batch.
+    let mut jobs = vec![
+        job("ls", Some(SloClass::LatencySensitive), 0.0),
+        job("batch", Some(SloClass::Batch), 0.0), // takes the only token
+    ];
+    for i in 0..6 {
+        jobs.push(job(&format!("be{i}"), Some(SloClass::BestEffort), 0.25 * i as f64));
+    }
+    let r = run_cluster(cfg(token(1e-6, 1.0)), jobs.clone());
+    assert_eq!(r.rejected, 6);
+    assert_eq!(
+        r.completed() + r.crashed() + r.rejected as usize,
+        r.jobs.len(),
+        "every job reaches exactly one terminal state"
+    );
+    for j in r.jobs.iter().filter(|j| j.rejected) {
+        assert_eq!(j.ended, j.arrival, "{}: terminal at its own arrival instant", j.name);
+        assert_eq!(j.n_kernels, 0, "{}: never launched a kernel", j.name);
+        assert_eq!(j.kernel_dedicated_s, 0.0);
+        assert_eq!(j.preemptions, 0, "{}: never preempted (never ran)", j.name);
+    }
+    // The stronger form of "holds nothing": re-run with the shed
+    // arrivals removed from the workload entirely. If a rejected job
+    // ever held a worker, a reservation, or frontend service time, the
+    // admitted jobs' timelines would shift; they must be unchanged.
+    let admitted: Vec<JobSpec> = jobs
+        .iter()
+        .zip(&r.jobs)
+        .filter(|(_, o)| !o.rejected)
+        .map(|(s, _)| s.clone())
+        .collect();
+    let b = run_cluster(cfg(None), admitted);
+    assert_eq!(b.jobs.len(), 2);
+    for (x, y) in r.jobs.iter().filter(|j| !j.rejected).zip(&b.jobs) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(
+            (x.started, x.ended, x.node),
+            (y.started, y.ended, y.node),
+            "{}: timeline must not depend on the shed arrivals",
+            x.name
+        );
+    }
+}

@@ -120,6 +120,43 @@ fn cluster_restore_never_worsens_turnaround_at_zero_rtt() {
 }
 
 #[test]
+fn admission_holds_the_knee_at_twice_capacity() {
+    // The overload PR's acceptance bound, on the fixed smoke point (a
+    // 2-node cluster at 2x measured capacity): the token-bucket
+    // frontend must (a) keep latency-sensitive attainment at or above
+    // the ungoverned frontend's — governance exists to protect that
+    // class — and (b) keep goodput within 5% of the capacity knee:
+    // shedding best-effort excess must not cost completions the
+    // cluster could have served.
+    let (knee, off, token) = bench_harness::overload_smoke(2);
+    assert!(knee > 0.0 && knee.is_finite(), "capacity knee: {knee}");
+    assert_eq!(
+        (off.rejected, off.degraded),
+        (0, 0),
+        "the ungoverned row never sheds"
+    );
+    // Latency-sensitive jobs are never rejected, so both attainments
+    // are real numbers, not the absent-class NaN.
+    assert!(
+        off.ls_attainment.is_finite() && token.ls_attainment.is_finite(),
+        "LS attainment must be measurable on both rows ({} / {})",
+        off.ls_attainment,
+        token.ls_attainment
+    );
+    assert!(
+        token.ls_attainment + 1e-12 >= off.ls_attainment,
+        "governed LS attainment {} fell below ungoverned {}",
+        token.ls_attainment,
+        off.ls_attainment
+    );
+    assert!(
+        token.goodput >= 0.95 * knee,
+        "governed goodput {} fell more than 5% below the capacity knee {knee}",
+        token.goodput
+    );
+}
+
+#[test]
 fn unknown_experiment_is_rejected() {
     assert!(bench_harness::run_experiment("latencyy", 2).is_none());
 }
@@ -188,6 +225,8 @@ fn interference_off_rows_reproduce_bench_cluster_numbers() {
             dispatch: "least",
             preempt: None,
             latency: LatencyModel::off(),
+            admit: None,
+            frontend_q: "fifo",
         },
         jobs,
     );

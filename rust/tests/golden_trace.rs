@@ -90,6 +90,8 @@ fn cfg(nodes: usize, dispatch: &'static str, latency: LatencyModel) -> ClusterCo
         dispatch,
         preempt: None,
         latency,
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -189,6 +191,36 @@ fn interference_vectors_change_the_stream_zero_vectors_do_not() {
     let (_, a) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), jobs);
     let (_, b) = run_cluster_traced(cfg(1, "rr", LatencyModel::off()), stamped);
     assert_eq!(a, b, "zero vectors must replay the legacy stream exactly");
+}
+
+// ---- admission off-path bit-identity (PR 8 tentpole acceptance) ------
+
+#[test]
+fn admit_off_policy_replays_every_golden_stream_byte_identically() {
+    // `--admit off` must be indistinguishable from "no admission config
+    // at all" at event granularity: the exact committed fixtures replay
+    // (check_golden compares byte-for-byte against the snapshots the
+    // admit-None tests above pin), and no admission-layer event kind
+    // ever crosses the queue on the off path.
+    for (name, id, nodes, dispatch, rate) in [
+        ("w1_1node_batch", "W1", 1usize, "rr", None),
+        ("w1_4node_open", "W1", 4usize, "least", Some(0.5)),
+        ("w2_1node_batch", "W2", 1usize, "rr", None),
+        ("w2_4node_open", "W2", 4usize, "least", Some(0.5)),
+    ] {
+        let mut c = cfg(nodes, dispatch, LatencyModel::off());
+        c.admit = Some(mgb::coordinator::AdmissionConfig { policy: "off", ..Default::default() });
+        let (r, tr) = run_cluster_traced(c, mix(id, rate));
+        assert_eq!(r.rejected, 0, "the off policy never rejects");
+        assert_eq!(r.degraded, 0, "the off policy never degrades");
+        for line in &tr {
+            assert!(
+                !line.contains("AdmitReject") && !line.contains("FrontendServe"),
+                "off-path run fired an admission event: {line}"
+            );
+        }
+        check_golden(name, &tr);
+    }
 }
 
 // ---- backend equivalence (calendar queue vs BinaryHeap reference) ----
@@ -370,6 +402,8 @@ fn stale_routing_uses_probe_time_snapshot() {
         dispatch: "least",
         preempt: None,
         latency,
+        admit: None,
+        frontend_q: "fifo",
     };
     let class = mgb::coordinator::JobClass::Small;
     let jobs = vec![

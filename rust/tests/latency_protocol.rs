@@ -22,6 +22,8 @@ fn two_small_nodes(dispatch: &'static str, latency: LatencyModel) -> ClusterConf
         dispatch,
         preempt: None,
         latency,
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -152,6 +154,8 @@ fn reprobe_chain_is_bounded_by_the_budget() {
         dispatch: "least",
         preempt: None,
         latency: lat.clone(),
+        admit: None,
+        frontend_q: "fifo",
     };
     let (a, ta) = run_cluster_traced(cfg(), jobs.clone());
     let (b, tb) = run_cluster_traced(cfg(), jobs);
@@ -190,6 +194,8 @@ fn coalesced_probes_share_one_probe_ack() {
             coalesce_window_s,
             ..LatencyModel::default()
         },
+        admit: None,
+        frontend_q: "fifo",
     };
     let (plain, tp) = run_cluster_traced(cfg(0.0), jobs());
     let (coal, tc) = run_cluster_traced(cfg(0.05), jobs());
@@ -223,6 +229,8 @@ fn latency_dispatcher_at_zero_rtt_is_bit_identical_to_least() {
         dispatch,
         preempt: None,
         latency,
+        admit: None,
+        frontend_q: "fifo",
     };
     for model in [
         LatencyModel::off(),

@@ -26,6 +26,8 @@ fn one_node_cfg(preempt: Option<PreemptConfig>) -> ClusterConfig {
         dispatch: "rr",
         preempt,
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -101,6 +103,8 @@ fn preempt_never_matches_disabled_on_heterogeneous_cluster() {
         dispatch: "least",
         preempt,
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     };
     let mut jobs: Vec<_> = (0..10)
         .map(|i| {
@@ -148,6 +152,8 @@ fn migration_cfg(migrate: &'static str) -> ClusterConfig {
         dispatch: "rr",
         preempt: Some(PreemptConfig { migrate, ..PreemptConfig::default() }),
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     }
 }
 
@@ -239,6 +245,8 @@ fn migrating_restore_never_routes_to_a_node_that_cannot_hold_it() {
         dispatch: "rr",
         preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     };
     let jobs = vec![
         synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
@@ -282,6 +290,8 @@ fn reprobe_guard_arms_over_a_migrating_restore_journey() {
         dispatch: "least",
         preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
         latency: lat.clone(),
+        admit: None,
+        frontend_q: "fifo",
     };
     let jobs = || {
         vec![
@@ -343,6 +353,8 @@ fn reprobe_redirects_a_migrating_restore_whose_target_stales() {
         dispatch: "least",
         preempt: Some(PreemptConfig { migrate: "cluster", ..PreemptConfig::default() }),
         latency: lat.clone(),
+        admit: None,
+        frontend_q: "fifo",
     };
     let jobs = || {
         vec![

@@ -308,6 +308,8 @@ fn prop_zero_vector_cluster_streams_are_replay_and_backend_identical() {
         dispatch,
         preempt: None,
         latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
     };
     for dispatch in ["least", "mem"] {
         let mut jobs = Workload::by_id("W1").unwrap().jobs(11);

@@ -47,6 +47,8 @@ fn seed_replay_open_system_cluster_is_bit_identical() {
             dispatch: "least",
             preempt: None,
             latency: LatencyModel::off(),
+            admit: None,
+            frontend_q: "fifo",
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -99,6 +101,8 @@ fn seed_replay_with_latency_and_preemption_is_bit_identical() {
                 frontend_service_s: 0.002,
                 ..LatencyModel::default()
             },
+            admit: None,
+            frontend_q: "fifo",
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
