@@ -14,8 +14,10 @@ pub mod defuse;
 pub mod dominators;
 pub mod inline;
 pub mod tasks;
+pub mod verify;
 
 pub use tasks::{build_gpu_tasks, GpuTask};
+pub use verify::{verify_compiled, Diagnostic, Severity, VerifyReport};
 
 use crate::ir::{OpId, Program};
 use std::collections::HashMap;

@@ -50,6 +50,12 @@ pub struct GpuTask {
     pub grid: Expr,
     /// Max threads-per-block over member launches.
     pub block: Expr,
+    /// Upper bound on device bytes this task *writes* per execution:
+    /// member Memset + H2D byte expressions, plus one full write of every
+    /// launch-argument object (kernels may store to any buffer they are
+    /// passed; def-use gives no finer grain here). Symbolic like
+    /// `mem_bytes`; groundwork for delta checkpoints (dirty-page sizing).
+    pub written_bytes: Expr,
     /// Probe insertion point: (block, op-index) immediately before which
     /// `task_begin` runs. `None` when the task is lazy (the lazy runtime
     /// conveys resources at kernelLaunchPrepare instead).
@@ -182,6 +188,25 @@ pub fn finalize_task(
     }
     let mem_bytes = mem_expr.unwrap_or(Expr::Const(0));
 
+    // Written-bytes bound: explicit stores (Memset, H2D) by the member
+    // ops, plus one full write of each launch-argument object — the
+    // def-use chain proves the kernel *can* reach those buffers, and
+    // without per-kernel store analysis a full overwrite is the sound
+    // assumption. Launch args are exactly `mem_objs`, whose malloc sizes
+    // already sum to `mem_bytes`.
+    let mut written = mem_bytes.clone();
+    for &o in &ops {
+        if let Some((op, _, _)) = f.op(o) {
+            match &op.kind {
+                OpKind::Memset { bytes, .. }
+                | OpKind::Memcpy { bytes, dir: CopyDir::HostToDevice, .. } => {
+                    written = written.add(Expr::v(*bytes));
+                }
+                _ => {}
+            }
+        }
+    }
+
     // Grid/block: max over member launches.
     let (mut grid_expr, mut block_expr): (Option<Expr>, Option<Expr>) = (None, None);
     for u in &group {
@@ -263,6 +288,7 @@ pub fn finalize_task(
         heap_bytes: heap,
         grid: grid_expr.unwrap_or(Expr::Const(0)),
         block: block_expr.unwrap_or(Expr::Const(0)),
+        written_bytes: written,
         probe_at,
         lazy,
     }
@@ -280,4 +306,131 @@ pub fn build_gpu_tasks(f: &Function) -> Vec<GpuTask> {
         .enumerate()
         .map(|(i, g)| finalize_task(i, f, &du, &dom, &pdom, g))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Program, ProgramBuilder};
+
+    fn build(program: fn(&mut crate::ir::FuncBuilder)) -> Program {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, program);
+        pb.finish()
+    }
+
+    #[test]
+    fn launch_arg_not_malloc_defined_makes_unit_lazy() {
+        // GETMEMARGS failure: passing a scalar Assign result where a
+        // memory object is expected defeats static binding.
+        let p = build(|f| {
+            let n = f.param(0);
+            let not_a_buf = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let (g, b, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, b, &[not_a_buf], w);
+        });
+        let tasks = build_gpu_tasks(p.main());
+        assert_eq!(tasks.len(), 1);
+        assert!(tasks[0].lazy, "non-malloc launch arg must defer to lazy runtime");
+        assert!(tasks[0].probe_at.is_none(), "lazy tasks carry no probe point");
+        assert!(tasks[0].mem_objs.is_empty());
+    }
+
+    #[test]
+    fn branch_guarded_free_fails_post_dominance_and_goes_lazy() {
+        let p = build(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let buf = f.malloc(sz);
+            f.h2d(buf, sz);
+            let (g, b, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, b, &[buf], w);
+            let cond = f.c(1);
+            // Free on only one arm: it neither dominates nor
+            // post-dominates the launch.
+            f.diamond(cond, |f| f.free(buf), |_| {});
+        });
+        let tasks = build_gpu_tasks(p.main());
+        assert_eq!(tasks.len(), 1);
+        assert!(tasks[0].lazy);
+        assert!(tasks[0].probe_at.is_none());
+    }
+
+    #[test]
+    fn shared_object_merges_units_and_dedups_member_ops() {
+        let p = build(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let shared = f.malloc(sz);
+            let only2 = f.malloc(sz);
+            f.h2d(shared, sz);
+            let (g, b, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k1", g, b, &[shared], w);
+            f.launch("k2", g, b, &[shared, only2], w);
+            f.free(shared);
+            f.free(only2);
+        });
+        let f = p.main();
+        let cfg = Cfg::build(f);
+        let dom = Dominators::dominators(f, &cfg);
+        let pdom = Dominators::post_dominators(f, &cfg);
+        let du = DefUse::build(f);
+        let units = build_unit_tasks(f, &du, &dom, &pdom);
+        assert_eq!(units.len(), 2);
+        let groups = merge_unit_tasks(units);
+        assert_eq!(groups.len(), 1, "shared object must merge the units");
+        let t = finalize_task(0, f, &du, &dom, &pdom, groups.into_iter().next().unwrap());
+        assert_eq!(t.launches.len(), 2);
+        assert_eq!(t.mem_objs.len(), 2);
+        // The shared object's malloc/h2d/free appear once despite being
+        // members of both pre-merge units.
+        let n_unique = t.ops.len();
+        let mut sorted = t.ops.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n_unique);
+        assert!(!t.lazy);
+        assert!(t.probe_at.is_some());
+    }
+
+    #[test]
+    fn written_bytes_counts_h2d_memset_and_arg_objects() {
+        let p = build(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let b_obj = f.malloc(sz);
+            f.h2d(a, sz);
+            f.memset(b_obj, sz);
+            let (g, b, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, b, &[a, b_obj], w);
+            f.free(a);
+            f.free(b_obj);
+        });
+        let tasks = build_gpu_tasks(p.main());
+        assert_eq!(tasks.len(), 1);
+        let t = &tasks[0];
+        // N = 100: sz = 400. mem = 2 objects = 800; written = mem (two
+        // arg-object overwrites) + one H2D (400) + one Memset (400).
+        let env = |v: ValueId| if v == 0 { 100 } else if v == 1 { 400 } else { 0 };
+        assert_eq!(t.mem_bytes.eval(&env), 800);
+        assert_eq!(t.written_bytes.eval(&env), 1600);
+    }
+
+    #[test]
+    fn task_with_no_h2d_writes_only_arg_objects() {
+        // srad-style: buffers allocated but never copied in still count
+        // as written (the kernel stores into them).
+        let p = build(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let (g, b, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, b, &[a], w);
+            f.free(a);
+        });
+        let tasks = build_gpu_tasks(p.main());
+        let t = &tasks[0];
+        let env = |v: ValueId| if v == 1 { 400 } else { 0 };
+        assert_eq!(t.written_bytes.eval(&env), t.mem_bytes.eval(&env));
+    }
 }

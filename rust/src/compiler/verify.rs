@@ -1,0 +1,1039 @@
+//! Static verification of compiled programs — the `lint` pass.
+//!
+//! The scheduler's memory-safety guarantee rests on the compiler's
+//! per-task resource summaries being *sound*: a task that under-declares
+//! `mem_bytes` can OOM a device the placement proved safe. Nothing in
+//! the pipeline checked that until this pass. Three layers:
+//!
+//! 1. **Memory-state dataflow** ([`verify_compiled`], first pass): a
+//!    forward may-analysis over the entry function's CFG tracking each
+//!    malloc-defined object through the lattice `{Unallocated, Live,
+//!    Freed}` (join = set union — a state is possible if it is possible
+//!    on *any* path). Reports use-after-free, double-free,
+//!    use/launch-before-malloc, and allocations still live on some path
+//!    to `ret` (leaks). Because the join over-approximates, a clean
+//!    report is a proof: no execution order permitted by the CFG can
+//!    reach a flagged state that the pass did not flag.
+//! 2. **Task-claim check**: every GPU op the compiler assigned to a
+//!    static task must only touch objects that task claims in
+//!    `mem_objs` — otherwise the probe's reservation does not cover the
+//!    op's footprint.
+//! 3. **Summary soundness**: each static task's declared
+//!    `mem_bytes`/`heap_bytes`/`grid`/`block`/`written_bytes` must
+//!    *dominate* (≥ on every path) the recomputed per-member-op
+//!    requirements. Domination is proved by syntactic equality of
+//!    Assign-resolved expressions, or by symbolic interval bounds
+//!    (`min(declared) ≥ max(actual)` with unresolved scalars widened to
+//!    `[0, i64::MAX]`). What cannot be proved is reported — the pass
+//!    never assumes soundness it cannot show.
+//!
+//! Size expressions are additionally evaluated with
+//! [`Expr::eval_checked`] wherever they resolve to constants, turning
+//! division-by-zero / overflow / negative byte counts into located
+//! diagnostics instead of downstream panics or wrapped reservations.
+//!
+//! Diagnostics carry `(function, block, op)` locations and render both
+//! human-readable ([`std::fmt::Display`]) and as JSON
+//! ([`VerifyReport::to_json`], same hand-rolled-JSON conventions as
+//! `bench_harness::json`).
+
+use super::cfg::Cfg;
+use super::defuse::DefUse;
+use super::dominators::{op_dominates, Dominators};
+use super::tasks::DEFAULT_DEVICE_HEAP;
+use super::CompiledProgram;
+use crate::ir::{
+    op_operands, BlockId, CopyDir, Expr, Function, OpId, OpKind, ValueId,
+};
+use std::collections::{HashMap, HashSet};
+
+/// How bad a finding is. `Error` findings make `lint` exit nonzero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding, anchored to `(function, block, op)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable machine code, e.g. `use-after-free` (what the corpus tests
+    /// match on).
+    pub code: &'static str,
+    pub func: String,
+    pub block: BlockId,
+    pub op: OpId,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}[{}] {} b{} op{}: {}",
+            self.severity.as_str(),
+            self.code,
+            self.func,
+            self.block,
+            self.op,
+            self.msg
+        )
+    }
+}
+
+/// Everything one lint run found, in (block, op) order.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    pub fn n_errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The distinct diagnostic codes present (sorted; for corpus tests).
+    pub fn codes(&self) -> Vec<&'static str> {
+        let mut c: Vec<&'static str> = self.diagnostics.iter().map(|d| d.code).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    fn push(
+        &mut self,
+        severity: Severity,
+        code: &'static str,
+        func: &str,
+        loc: (BlockId, usize),
+        op: OpId,
+        msg: String,
+    ) {
+        let _ = loc.1; // op index is implied by the op id; kept for call-site clarity
+        self.diagnostics.push(Diagnostic {
+            severity,
+            code,
+            func: func.to_string(),
+            block: loc.0,
+            op,
+            msg,
+        });
+    }
+
+    /// JSON document (hand-rolled like every other emitter in the crate:
+    /// no serde offline). Strings are escaped; the layout is stable so
+    /// CI artifacts diff cleanly.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"diagnostics\": [\n");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            let sep = if i + 1 == self.diagnostics.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"severity\": \"{}\", \"code\": \"{}\", \"func\": \"{}\", \"block\": {}, \"op\": {}, \"msg\": \"{}\"}}{sep}\n",
+                d.severity.as_str(),
+                d.code,
+                json_escape(&d.func),
+                d.block,
+                d.op,
+                json_escape(&d.msg)
+            ));
+        }
+        s.push_str(&format!(
+            "  ],\n  \"errors\": {},\n  \"warnings\": {}\n}}\n",
+            self.n_errors(),
+            self.n_warnings()
+        ));
+        s
+    }
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for d in &self.diagnostics {
+            writeln!(f, "{d}")?;
+        }
+        write!(
+            f,
+            "{} error(s), {} warning(s)",
+            self.n_errors(),
+            self.n_warnings()
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Memory-object dataflow lattice.
+
+const UNALLOC: u8 = 1;
+const LIVE: u8 = 2;
+const FREED: u8 = 4;
+
+/// Run every check over a compiled program. All tasks live in the
+/// (inlined) entry function, so that is the function analysed; helper
+/// bodies left behind by inlining are dead copies and would only
+/// duplicate findings.
+pub fn verify_compiled(c: &CompiledProgram) -> VerifyReport {
+    let f = c.program.main();
+    let cfg = Cfg::build(f);
+    let du = DefUse::build(f);
+    let mut rep = VerifyReport::default();
+    memory_state_pass(f, &cfg, &du, &mut rep);
+    claim_pass(f, c, &du, &mut rep);
+    eval_pass(f, &du, &mut rep);
+    summary_pass(f, &cfg, &du, c, &mut rep);
+    rep.diagnostics.sort_by(|a, b| {
+        (a.block, a.op, a.code, a.severity).cmp(&(b.block, b.op, b.code, b.severity))
+    });
+    rep
+}
+
+/// Forward may-analysis over malloc-defined objects. `in[entry]` is
+/// all-UNALLOC, join is bitwise union, transfer is `Malloc → {LIVE}`,
+/// `Free → {FREED}` (strong updates: an SSA object value names exactly
+/// one allocation site). Iterated to fixpoint, then one reporting sweep
+/// per block using the converged entry states.
+fn memory_state_pass(f: &Function, cfg: &Cfg, du: &DefUse, rep: &mut VerifyReport) {
+    let obj_ix: HashMap<ValueId, usize> =
+        du.mem_objs.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+    let n_objs = obj_ix.len();
+    let n_blocks = f.blocks.len();
+    let mut input: Vec<Vec<u8>> = vec![vec![0u8; n_objs]; n_blocks];
+    input[0] = vec![UNALLOC; n_objs];
+    let reachable = cfg.reachable();
+    // Fixpoint: monotone over a finite lattice (3 bits per object), so
+    // termination is immediate.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in &reachable {
+            let mut state = input[b as usize].clone();
+            transfer_block(f, &obj_ix, b, &mut state, None);
+            for &s in &cfg.succs[b as usize] {
+                let succ_in = &mut input[s as usize];
+                let mut grew = false;
+                for (si, &v) in succ_in.iter_mut().zip(&state) {
+                    let merged = *si | v;
+                    if merged != *si {
+                        *si = merged;
+                        grew = true;
+                    }
+                }
+                if grew {
+                    changed = true;
+                }
+            }
+        }
+    }
+    // Reporting sweep (each op visited exactly once → no duplicates).
+    let mut sink = Reporter { rep: &mut *rep, exit_live: vec![false; n_objs] };
+    for &b in &reachable {
+        let mut state = input[b as usize].clone();
+        transfer_block(f, &obj_ix, b, &mut state, Some(&mut sink));
+        if cfg.exits.contains(&b) {
+            for (i, &s) in state.iter().enumerate() {
+                if s & LIVE != 0 {
+                    sink.exit_live[i] = true;
+                }
+            }
+        }
+    }
+    let exit_live = sink.exit_live.clone();
+    for (i, leaked) in exit_live.into_iter().enumerate() {
+        if leaked {
+            let obj = du.mem_objs[i];
+            let def = du.def[&obj];
+            let loc = f.loc(def);
+            rep.push(
+                Severity::Error,
+                "leak",
+                &f.name,
+                loc,
+                def,
+                format!("v{obj} may still be allocated at function exit (device memory leak)"),
+            );
+        }
+    }
+}
+
+/// Diagnostic sink for the reporting sweep of the dataflow.
+struct Reporter<'a> {
+    rep: &'a mut VerifyReport,
+    exit_live: Vec<bool>,
+}
+
+/// A use-site check shared by memcpy/memset: warn on non-malloc objects,
+/// error when the freed/unallocated state is possible.
+fn check_obj_use(
+    f: &Function,
+    obj_ix: &HashMap<ValueId, usize>,
+    state: &[u8],
+    report: &mut Option<&mut Reporter<'_>>,
+    loc: (BlockId, usize),
+    op: OpId,
+    obj: ValueId,
+    verb: &str,
+) {
+    let Some(r) = report.as_deref_mut() else { return };
+    let Some(&i) = obj_ix.get(&obj) else {
+        r.rep.push(
+            Severity::Warning,
+            "not-mem-obj",
+            &f.name,
+            loc,
+            op,
+            format!("{verb} on v{obj}, which no malloc defines"),
+        );
+        return;
+    };
+    if state[i] & FREED != 0 {
+        r.rep.push(
+            Severity::Error,
+            "use-after-free",
+            &f.name,
+            loc,
+            op,
+            format!("{verb} on v{obj} may follow its free"),
+        );
+    }
+    if state[i] & UNALLOC != 0 {
+        r.rep.push(
+            Severity::Error,
+            "use-before-malloc",
+            &f.name,
+            loc,
+            op,
+            format!("{verb} on v{obj} may precede its malloc"),
+        );
+    }
+}
+
+/// Apply one block's ops to `state`; with a `Reporter`, emit diagnostics
+/// for every possibly-bad state encountered.
+fn transfer_block(
+    f: &Function,
+    obj_ix: &HashMap<ValueId, usize>,
+    b: BlockId,
+    state: &mut [u8],
+    mut report: Option<&mut Reporter<'_>>,
+) {
+    for (bi, op) in f.blocks[b as usize].ops.iter().enumerate() {
+        let loc = (b, bi);
+        match &op.kind {
+            OpKind::Malloc { .. } => {
+                let Some(&i) = op.result.as_ref().and_then(|r| obj_ix.get(r)) else {
+                    continue;
+                };
+                if let Some(r) = report.as_deref_mut() {
+                    if state[i] & LIVE != 0 {
+                        let obj = op.result.unwrap();
+                        r.rep.push(
+                            Severity::Error,
+                            "leak",
+                            &f.name,
+                            loc,
+                            op.id,
+                            format!(
+                                "v{obj} re-allocated while possibly still live \
+                                 (previous allocation leaks)"
+                            ),
+                        );
+                    }
+                }
+                state[i] = LIVE;
+            }
+            OpKind::Memcpy { obj, dir, .. } => {
+                let verb = match dir {
+                    CopyDir::HostToDevice => "h2d",
+                    CopyDir::DeviceToHost => "d2h",
+                };
+                check_obj_use(f, obj_ix, state, &mut report, loc, op.id, *obj, verb);
+            }
+            OpKind::Memset { obj, .. } => {
+                check_obj_use(f, obj_ix, state, &mut report, loc, op.id, *obj, "memset");
+            }
+            OpKind::Free { obj } => {
+                let Some(&i) = obj_ix.get(obj) else {
+                    if let Some(r) = report.as_deref_mut() {
+                        r.rep.push(
+                            Severity::Warning,
+                            "not-mem-obj",
+                            &f.name,
+                            loc,
+                            op.id,
+                            format!("free of v{obj}, which no malloc defines"),
+                        );
+                    }
+                    continue;
+                };
+                if let Some(r) = report.as_deref_mut() {
+                    if state[i] & FREED != 0 {
+                        r.rep.push(
+                            Severity::Error,
+                            "double-free",
+                            &f.name,
+                            loc,
+                            op.id,
+                            format!("v{obj} may already be freed (double free)"),
+                        );
+                    }
+                    if state[i] & UNALLOC != 0 {
+                        r.rep.push(
+                            Severity::Error,
+                            "use-before-malloc",
+                            &f.name,
+                            loc,
+                            op.id,
+                            format!("free of v{obj} may precede its malloc"),
+                        );
+                    }
+                }
+                state[i] = FREED;
+            }
+            OpKind::Launch { args, .. } => {
+                for a in args {
+                    let Some(&i) = obj_ix.get(a) else { continue };
+                    if let Some(r) = report.as_deref_mut() {
+                        if state[i] & FREED != 0 {
+                            r.rep.push(
+                                Severity::Error,
+                                "use-after-free",
+                                &f.name,
+                                loc,
+                                op.id,
+                                format!("launch argument v{a} may follow its free"),
+                            );
+                        }
+                        if state[i] & UNALLOC != 0 {
+                            r.rep.push(
+                                Severity::Error,
+                                "launch-before-malloc",
+                                &f.name,
+                                loc,
+                                op.id,
+                                format!("launch argument v{a} may precede its malloc"),
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Every op owned by a *static* task may only touch objects the task
+/// claims in `mem_objs` — the probe reserves exactly those, so an
+/// unclaimed object escapes the reservation the scheduler trusts.
+fn claim_pass(f: &Function, c: &CompiledProgram, du: &DefUse, rep: &mut VerifyReport) {
+    let claimed: Vec<HashSet<ValueId>> = c
+        .tasks
+        .iter()
+        .map(|t| t.mem_objs.iter().copied().collect())
+        .collect();
+    for t in &c.tasks {
+        if t.lazy {
+            continue; // the lazy runtime binds objects at launch-prepare
+        }
+        for &o in &t.ops {
+            let Some((op, b, i)) = f.op(o) else { continue };
+            for v in op_operands(&op.kind) {
+                if du.mem_objs.contains(&v) && !claimed[t.id].contains(&v) {
+                    rep.push(
+                        Severity::Error,
+                        "unclaimed-obj",
+                        &f.name,
+                        (b, i),
+                        o,
+                        format!(
+                            "op touches v{v}, which task {} does not claim in mem_objs",
+                            t.id
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Substitute pure Assign definitions into an expression until only
+/// parameters / non-Assign results remain. Cycles (a self-referential
+/// Assign would pass `validate`'s flow-insensitive check) and deep
+/// chains give up and keep the `Value` node — callers fall back to
+/// interval widening.
+fn resolve(e: &Expr, f: &Function, du: &DefUse, depth: usize) -> Expr {
+    if depth == 0 {
+        return e.clone();
+    }
+    let bin = |a: &Expr, b: &Expr| {
+        (
+            Box::new(resolve(a, f, du, depth - 1)),
+            Box::new(resolve(b, f, du, depth - 1)),
+        )
+    };
+    match e {
+        Expr::Const(c) => Expr::Const(*c),
+        Expr::Value(v) => {
+            if let Some(&d) = du.def.get(v) {
+                if let Some((op, _, _)) = f.op(d) {
+                    if let OpKind::Assign { expr } = &op.kind {
+                        return resolve(expr, f, du, depth - 1);
+                    }
+                }
+            }
+            Expr::Value(*v)
+        }
+        Expr::Add(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::Add(a, b)
+        }
+        Expr::Sub(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::Sub(a, b)
+        }
+        Expr::Mul(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::Mul(a, b)
+        }
+        Expr::CeilDiv(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::CeilDiv(a, b)
+        }
+        Expr::Max(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::Max(a, b)
+        }
+        Expr::Min(a, b) => {
+            let (a, b) = bin(a, b);
+            Expr::Min(a, b)
+        }
+    }
+}
+
+const RESOLVE_DEPTH: usize = 64;
+
+/// Symbolic interval bounds in saturating i128 (so i64-overflowing
+/// constants stay ordered instead of wrapping). Unresolved scalars —
+/// parameters, malloc results abused as scalars — widen to
+/// `[0, i64::MAX]`: byte counts and launch geometry are non-negative by
+/// the IR's conventions, and the verifier only *proves* with what it can
+/// pin down.
+fn interval(e: &Expr) -> (i128, i128) {
+    const WIDE: (i128, i128) = (0, i64::MAX as i128);
+    match e {
+        Expr::Const(c) => (*c as i128, *c as i128),
+        Expr::Value(_) => WIDE,
+        Expr::Add(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            (al.saturating_add(bl), ah.saturating_add(bh))
+        }
+        Expr::Sub(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            (al.saturating_sub(bh), ah.saturating_sub(bl))
+        }
+        Expr::Mul(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            let products = [
+                al.saturating_mul(bl),
+                al.saturating_mul(bh),
+                ah.saturating_mul(bl),
+                ah.saturating_mul(bh),
+            ];
+            (
+                products.iter().copied().min().unwrap(),
+                products.iter().copied().max().unwrap(),
+            )
+        }
+        Expr::CeilDiv(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            if bl == bh && bl > 0 {
+                // Exact positive divisor: ceil is monotone in the dividend.
+                let ceil = |x: i128| x.saturating_add(bl - 1).div_euclid(bl);
+                (ceil(al), ceil(ah))
+            } else {
+                // Unknown or zero-spanning divisor: no useful bound
+                // (the legacy eval defines x/0 == 0, so 0 stays in range).
+                (0.min(al), ah.max(0))
+            }
+        }
+        Expr::Max(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            (al.max(bl), ah.max(bh))
+        }
+        Expr::Min(a, b) => {
+            let (al, ah) = interval(a);
+            let (bl, bh) = interval(b);
+            (al.min(bl), ah.min(bh))
+        }
+    }
+}
+
+/// Can we prove `declared >= actual` on every path? Syntactic equality
+/// of Assign-resolved forms first (covers every builder idiom where the
+/// same size value feeds malloc and memcpy), then interval separation.
+fn dominates(declared: &Expr, actual: &Expr, f: &Function, du: &DefUse) -> bool {
+    if declared == actual {
+        return true;
+    }
+    let rd = resolve(declared, f, du, RESOLVE_DEPTH);
+    let ra = resolve(actual, f, du, RESOLVE_DEPTH);
+    if rd == ra {
+        return true;
+    }
+    let (dlo, _) = interval(&rd);
+    let (_, ahi) = interval(&ra);
+    dlo >= ahi
+}
+
+/// Whether a resolved expression contains no `Value` leaves (so
+/// `eval_checked` under a dummy environment is exact).
+fn is_const(e: &Expr) -> bool {
+    match e {
+        Expr::Const(_) => true,
+        Expr::Value(_) => false,
+        Expr::Add(a, b)
+        | Expr::Sub(a, b)
+        | Expr::Mul(a, b)
+        | Expr::CeilDiv(a, b)
+        | Expr::Max(a, b)
+        | Expr::Min(a, b) => is_const(a) && is_const(b),
+    }
+}
+
+/// Concretely evaluate every constant-resolvable size/geometry operand
+/// with `eval_checked`; faults land at the *defining* op of the scalar
+/// (satellite: typed eval errors become located diagnostics).
+fn eval_pass(f: &Function, du: &DefUse, rep: &mut VerifyReport) {
+    let mut seen: HashSet<ValueId> = HashSet::new();
+    for (b, i, op) in f.ops() {
+        let sizes: Vec<(ValueId, &'static str)> = match &op.kind {
+            OpKind::Malloc { bytes } => vec![(*bytes, "malloc size")],
+            OpKind::Memcpy { bytes, .. } => vec![(*bytes, "memcpy size")],
+            OpKind::Memset { bytes, .. } => vec![(*bytes, "memset size")],
+            OpKind::DeviceSetLimit { bytes } => vec![(*bytes, "heap limit")],
+            OpKind::Launch { grid, block, .. } => {
+                vec![(*grid, "grid size"), (*block, "block size")]
+            }
+            _ => vec![],
+        };
+        for (v, what) in sizes {
+            if !seen.insert(v) {
+                continue; // one report per scalar, however many uses
+            }
+            let resolved = resolve(&Expr::v(v), f, du, RESOLVE_DEPTH);
+            if !is_const(&resolved) {
+                continue;
+            }
+            // Anchor at the defining Assign when there is one, else at
+            // the using op (a const-resolvable value always has a def,
+            // but stay defensive).
+            let (anchor_op, anchor_loc) = match du.def.get(&v) {
+                Some(&d) => (d, f.loc(d)),
+                None => (op.id, (b, i)),
+            };
+            match resolved.eval_checked(&|_| 0) {
+                Err(e) => rep.push(
+                    Severity::Error,
+                    "eval-error",
+                    &f.name,
+                    anchor_loc,
+                    anchor_op,
+                    format!("{what} v{v}: {e}"),
+                ),
+                Ok(n) if n < 0 => rep.push(
+                    Severity::Error,
+                    "eval-error",
+                    &f.name,
+                    anchor_loc,
+                    anchor_op,
+                    format!("{what} v{v}: size expression evaluates to negative {n}"),
+                ),
+                Ok(_) => {}
+            }
+        }
+    }
+}
+
+/// Prove every static task's declared resource vector covers its member
+/// ops (the soundness the probe-driven reservation depends on), and that
+/// no member copy outruns its buffer.
+fn summary_pass(
+    f: &Function,
+    cfg: &Cfg,
+    du: &DefUse,
+    c: &CompiledProgram,
+    rep: &mut VerifyReport,
+) {
+    let dom = Dominators::dominators(f, cfg);
+    for t in &c.tasks {
+        if t.lazy {
+            continue; // lazy tasks declare exact resources at launch-prepare
+        }
+        let anchor = *t.launches.first().expect("task with no launches");
+        let anchor_loc = f.loc(anchor);
+
+        // Recompute what the summaries must cover, straight from the IR.
+        let mut expected_mem: Option<Expr> = None;
+        for &obj in &t.mem_objs {
+            if let Some(&d) = du.def.get(&obj) {
+                if let Some((op, _, _)) = f.op(d) {
+                    if let OpKind::Malloc { bytes } = op.kind {
+                        let e = Expr::v(bytes);
+                        expected_mem = Some(match expected_mem.take() {
+                            None => e,
+                            Some(acc) => acc.add(e),
+                        });
+                    }
+                }
+            }
+        }
+        let expected_mem = expected_mem.unwrap_or(Expr::Const(0));
+        let (mut expected_grid, mut expected_block): (Option<Expr>, Option<Expr>) = (None, None);
+        for &l in &t.launches {
+            if let Some((op, _, _)) = f.op(l) {
+                if let OpKind::Launch { grid, block, .. } = &op.kind {
+                    let g = Expr::v(*grid);
+                    let b = Expr::v(*block);
+                    expected_grid = Some(match expected_grid.take() {
+                        None => g,
+                        Some(acc) => acc.max(g),
+                    });
+                    expected_block = Some(match expected_block.take() {
+                        None => b,
+                        Some(acc) => acc.max(b),
+                    });
+                }
+            }
+        }
+        let mut expected_heap = Expr::Const(DEFAULT_DEVICE_HEAP);
+        for (_, _, op) in f.ops() {
+            if let OpKind::DeviceSetLimit { bytes } = op.kind {
+                let loc = f.loc(op.id);
+                if t.launches.iter().all(|&l| op_dominates(&dom, loc, f.loc(l))) {
+                    expected_heap = Expr::v(bytes);
+                }
+            }
+        }
+        let mut expected_written = expected_mem.clone();
+        for &o in &t.ops {
+            if let Some((op, _, _)) = f.op(o) {
+                match &op.kind {
+                    OpKind::Memset { bytes, .. }
+                    | OpKind::Memcpy { bytes, dir: CopyDir::HostToDevice, .. } => {
+                        expected_written = expected_written.add(Expr::v(*bytes));
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        let expected_grid = expected_grid.unwrap_or(Expr::Const(0));
+        let expected_block = expected_block.unwrap_or(Expr::Const(0));
+        let checks: [(&'static str, &Expr, &Expr); 5] = [
+            ("mem_bytes", &t.mem_bytes, &expected_mem),
+            ("heap_bytes", &t.heap_bytes, &expected_heap),
+            ("grid", &t.grid, &expected_grid),
+            ("block", &t.block, &expected_block),
+            ("written_bytes", &t.written_bytes, &expected_written),
+        ];
+        for (field, declared, actual) in checks {
+            if !dominates(declared, actual, f, du) {
+                rep.push(
+                    Severity::Error,
+                    "under-declared-summary",
+                    &f.name,
+                    anchor_loc,
+                    anchor,
+                    format!(
+                        "task {} declares {field} = {declared}, which may under-cover \
+                         its member ops (requires {actual})",
+                        t.id
+                    ),
+                );
+            }
+        }
+
+        // Per-member-op bound: a copy/set larger than its buffer means
+        // the footprint the probe reserved (the malloc sum) cannot
+        // contain the bytes this op moves.
+        for &o in &t.ops {
+            let Some((op, b, i)) = f.op(o) else { continue };
+            let (obj, bytes, verb) = match &op.kind {
+                OpKind::Memcpy { obj, bytes, dir } => (
+                    *obj,
+                    *bytes,
+                    match dir {
+                        CopyDir::HostToDevice => "h2d",
+                        CopyDir::DeviceToHost => "d2h",
+                    },
+                ),
+                OpKind::Memset { obj, bytes } => (*obj, *bytes, "memset"),
+                _ => continue,
+            };
+            let Some(&d) = du.def.get(&obj) else { continue };
+            let Some((def_op, _, _)) = f.op(d) else { continue };
+            let OpKind::Malloc { bytes: alloc_bytes } = def_op.kind else {
+                continue;
+            };
+            if !dominates(&Expr::v(alloc_bytes), &Expr::v(bytes), f, du) {
+                rep.push(
+                    Severity::Error,
+                    "under-declared-summary",
+                    &f.name,
+                    (b, i),
+                    o,
+                    format!(
+                        "{verb} of v{bytes} bytes into v{obj} may exceed its \
+                         allocation (v{alloc_bytes})"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::ir::{Program, ProgramBuilder};
+
+    fn build(body: fn(&mut crate::ir::FuncBuilder)) -> Program {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, body);
+        pb.finish()
+    }
+
+    fn lint(body: fn(&mut crate::ir::FuncBuilder)) -> VerifyReport {
+        verify_compiled(&compile(&build(body)))
+    }
+
+    #[test]
+    fn clean_vecadd_lints_clean() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let b = f.malloc(sz);
+            f.h2d(a, sz);
+            f.h2d(b, sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("vadd", g, blk, &[a, b], w);
+            f.d2h(b, sz);
+            f.free(a);
+            f.free(b);
+        });
+        assert!(rep.is_clean(), "{rep}");
+    }
+
+    #[test]
+    fn use_after_free_detected() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+            f.d2h(a, sz); // bug
+        });
+        assert_eq!(rep.codes(), vec!["use-after-free"], "{rep}");
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+            f.free(a); // bug
+        });
+        assert_eq!(rep.codes(), vec!["double-free"], "{rep}");
+    }
+
+    #[test]
+    fn leak_on_one_branch_detected() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            let cond = f.c(1);
+            f.diamond(cond, |f| f.free(a), |_| {}); // else-arm leaks
+        });
+        // The branch-guarded free also defeats static binding (lazy
+        // task), but the leak must still surface.
+        assert!(rep.codes().contains(&"leak"), "{rep}");
+    }
+
+    #[test]
+    fn loop_reallocation_without_free_is_a_leak() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let trips = f.c(3);
+            f.loop_n(trips, |f| {
+                let a = f.malloc(sz);
+                let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+                f.launch("k", g, blk, &[a], w);
+                // no free: next iteration re-allocates over a live object
+            });
+        });
+        assert!(rep.codes().contains(&"leak"), "{rep}");
+    }
+
+    #[test]
+    fn loop_with_balanced_malloc_free_is_clean() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let trips = f.c(3);
+            f.loop_n(trips, |f| {
+                let a = f.malloc(sz);
+                let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+                f.launch("k", g, blk, &[a], w);
+                f.free(a);
+            });
+        });
+        assert!(rep.is_clean(), "{rep}");
+    }
+
+    #[test]
+    fn oversized_copy_is_under_declared() {
+        let rep = lint(|f| {
+            let small = f.assign(Expr::c(1024));
+            let big = f.assign(Expr::c(4096));
+            let a = f.malloc(small);
+            f.h2d(a, big); // copies past the end of the buffer
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+        });
+        assert_eq!(rep.codes(), vec!["under-declared-summary"], "{rep}");
+    }
+
+    #[test]
+    fn tampered_task_summary_is_under_declared() {
+        let mut c = compile(&build(|f| {
+            let sz = f.assign(Expr::c(1 << 20));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+        }));
+        assert!(verify_compiled(&c).is_clean());
+        c.tasks[0].mem_bytes = Expr::Const(16); // probe now under-reserves
+        let rep = verify_compiled(&c);
+        assert!(rep.codes().contains(&"under-declared-summary"), "{rep}");
+    }
+
+    #[test]
+    fn unclaimed_object_in_static_task_detected() {
+        let mut c = compile(&build(|f| {
+            let sz = f.assign(Expr::c(4096));
+            let a = f.malloc(sz);
+            f.h2d(a, sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+        }));
+        c.tasks[0].mem_objs.clear(); // compiler "forgot" the claim
+        let rep = verify_compiled(&c);
+        assert!(rep.codes().contains(&"unclaimed-obj"), "{rep}");
+    }
+
+    #[test]
+    fn const_div_by_zero_and_negative_sizes_become_eval_errors() {
+        let rep = lint(|f| {
+            let bad = f.assign(Expr::c(4096).ceil_div(Expr::c(0)));
+            let neg = f.assign(Expr::c(0).sub(Expr::c(64)));
+            let a = f.malloc(bad);
+            let b = f.malloc(neg);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a, b], w);
+            f.free(a);
+            f.free(b);
+        });
+        let evals: Vec<_> = rep
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == "eval-error")
+            .collect();
+        assert_eq!(evals.len(), 2, "{rep}");
+        assert!(evals[0].msg.contains("division by zero"), "{rep}");
+        assert!(evals[1].msg.contains("negative"), "{rep}");
+    }
+
+    #[test]
+    fn json_rendering_is_escaped_and_structured() {
+        let rep = lint(|f| {
+            let n = f.param(0);
+            let sz = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let a = f.malloc(sz);
+            let (g, blk, w) = (f.c(8), f.c(128), f.c(100));
+            f.launch("k", g, blk, &[a], w);
+            f.free(a);
+            f.free(a);
+        });
+        let js = rep.to_json();
+        assert!(js.contains("\"code\": \"double-free\""), "{js}");
+        assert!(js.contains("\"errors\": 1"), "{js}");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn interval_bounds_are_conservative() {
+        // (v0 * 4) with v0 unknown: [0, MAX] scaled.
+        let e = Expr::v(0).mul(Expr::c(4));
+        let (lo, hi) = interval(&e);
+        assert_eq!(lo, 0);
+        assert!(hi >= i64::MAX as i128);
+        // Exact constants stay exact through ceil-div.
+        let c = Expr::c(1000).ceil_div(Expr::c(128));
+        assert_eq!(interval(&c), (8, 8));
+        // min() pins the upper bound even with an unknown side.
+        let m = Expr::v(0).min(Expr::c(512));
+        assert_eq!(interval(&m).1, 512);
+    }
+}

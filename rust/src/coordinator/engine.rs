@@ -498,6 +498,9 @@ struct Engine<'h> {
     /// the queue can never strand a job.
     fe_serve_armed: bool,
     hook: Option<LaunchHook<'h>>,
+    /// Debug sanitizer (`--sanitize`); `None` = unchecked (the default,
+    /// one branch per event away from the plain engine).
+    sanitizer: Option<SanitizerRt>,
 }
 
 /// Runtime state of the frontend admission controller (`--admit`).
@@ -522,6 +525,65 @@ struct PreemptRt {
     migrations: u64,
     /// Checkpoint-image bytes shipped across nodes by those restores.
     migrate_bytes: u64,
+}
+
+/// One invariant breach observed by the engine sanitizer.
+#[derive(Debug, Clone)]
+pub struct SanitizerViolation {
+    /// Virtual time of the event after which the breach was observed.
+    pub t: f64,
+    /// Human-readable description of the broken invariant.
+    pub what: String,
+}
+
+/// Result of a `--sanitize` run: the engine's conservation invariants,
+/// re-checked after every fired event. A clean report is a machine-
+/// checked proof that the run never double-released device memory,
+/// never handed one worker slot to two jobs, and never ran its virtual
+/// clock backwards — the properties the golden traces witness only
+/// indirectly.
+#[derive(Debug, Default)]
+pub struct SanitizerReport {
+    /// Events the sanitizer inspected (one check per fired event plus
+    /// one per drain-fallback force-finish).
+    pub events_checked: u64,
+    /// Observed breaches, in firing order (capped; see `suppressed`).
+    pub violations: Vec<SanitizerViolation>,
+    /// Violations beyond the recording cap. The first breach usually
+    /// cascades — broken conservation stays broken on every later
+    /// event — so the tail carries no extra signal.
+    pub suppressed: u64,
+}
+
+impl SanitizerReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.suppressed == 0
+    }
+}
+
+/// Runtime state of the `--sanitize` debug layer. `None` on the engine
+/// costs one branch per event; armed, every check is observational —
+/// it reads engine state and never writes it, so a sanitized run's
+/// scheduling decisions (and trace) are identical to a plain run's.
+#[derive(Default)]
+struct SanitizerRt {
+    /// Latest event time seen (events start at t >= 0).
+    last_t: f64,
+    report: SanitizerReport,
+}
+
+impl SanitizerRt {
+    /// Recording cap: keep the report bounded when an invariant breaks
+    /// early in a fleet-scale run and every later event re-reports it.
+    const MAX_VIOLATIONS: usize = 100;
+
+    fn fail(&mut self, t: f64, what: String) {
+        if self.report.violations.len() < Self::MAX_VIOLATIONS {
+            self.report.violations.push(SanitizerViolation { t, what });
+        } else {
+            self.report.suppressed += 1;
+        }
+    }
 }
 
 /// Run a batch of jobs under `cfg`; all jobs are queued at t = 0.
@@ -560,7 +622,8 @@ pub fn run_cluster(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> RunResult {
 /// order. The golden-trace test harness compares these streams
 /// byte-for-byte across runs and against committed fixtures.
 pub fn run_cluster_traced(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> (RunResult, Vec<String>) {
-    run_cluster_inner(cfg, jobs, None, true, false)
+    let (result, trace, _) = run_cluster_inner(cfg, jobs, None, true, false, false);
+    (result, trace)
 }
 
 /// `run_cluster` on an explicitly named event-queue backend: `"heap"`
@@ -570,7 +633,7 @@ pub fn run_cluster_traced(cfg: ClusterConfig, jobs: Vec<JobSpec>) -> (RunResult,
 /// overhaul's speedup is measured in one binary rather than asserted,
 /// and the golden-trace tests replay the two byte-for-byte.
 pub fn run_cluster_on_backend(cfg: ClusterConfig, jobs: Vec<JobSpec>, backend: &str) -> RunResult {
-    run_cluster_inner(cfg, jobs, None, false, backend == "heap").0
+    run_cluster_inner(cfg, jobs, None, false, backend == "heap", false).0
 }
 
 /// [`run_cluster_traced`] on a named event-queue backend
@@ -580,7 +643,8 @@ pub fn run_cluster_traced_on_backend(
     jobs: Vec<JobSpec>,
     backend: &str,
 ) -> (RunResult, Vec<String>) {
-    run_cluster_inner(cfg, jobs, None, true, backend == "heap")
+    let (result, trace, _) = run_cluster_inner(cfg, jobs, None, true, backend == "heap", false);
+    (result, trace)
 }
 
 /// `run_cluster` plus a real-compute hook invoked per artifact launch.
@@ -589,7 +653,22 @@ pub fn run_cluster_with_hook(
     jobs: Vec<JobSpec>,
     hook: Option<LaunchHook<'_>>,
 ) -> RunResult {
-    run_cluster_inner(cfg, jobs, hook, false, false).0
+    run_cluster_inner(cfg, jobs, hook, false, false, false).0
+}
+
+/// `run_cluster` with the debug sanitizer armed (`--sanitize`): after
+/// every fired event the engine re-checks its conservation invariants
+/// — per-node device memory is never negative and always equals
+/// capacity minus the sum of resident reservations/allocations, a
+/// worker slot is held by at most one live job, and event times are
+/// monotone. The checks are observational (read-only), so the run's
+/// results and trace are identical to `run_cluster`'s.
+pub fn run_cluster_sanitized(
+    cfg: ClusterConfig,
+    jobs: Vec<JobSpec>,
+) -> (RunResult, SanitizerReport) {
+    let (result, _, report) = run_cluster_inner(cfg, jobs, None, false, false, true);
+    (result, report)
 }
 
 fn run_cluster_inner(
@@ -598,7 +677,8 @@ fn run_cluster_inner(
     hook: Option<LaunchHook<'_>>,
     record_trace: bool,
     heap_backend: bool,
-) -> (RunResult, Vec<String>) {
+    sanitize: bool,
+) -> (RunResult, Vec<String>, SanitizerReport) {
     // Partition-then-allocate: under the partition dispatcher every
     // physical device is split into PARTITION_SLICES static MIG-style
     // isolation domains before the placement layer ever sees it — the
@@ -707,12 +787,14 @@ fn run_cluster_inner(
         nodes,
         jobs,
         hook,
+        sanitizer: sanitize.then(SanitizerRt::default),
     };
     if record_trace {
         eng.evq.record_trace();
     }
     let result = eng.run();
-    (result, eng.evq.take_trace())
+    let report = eng.sanitizer.take().map(|s| s.report).unwrap_or_default();
+    (result, eng.evq.take_trace(), report)
 }
 
 impl<'h> Engine<'h> {
@@ -1314,6 +1396,9 @@ impl<'h> Engine<'h> {
                     EvKind::AdmitReject { job } => self.handle_admit_reject(job, ev.t),
                     EvKind::FrontendServe => self.handle_frontend_serve(ev.t),
                 }
+                if self.sanitizer.is_some() {
+                    self.sanitize_event(ev.t);
+                }
             }
             // Queue drained but some jobs never finished: their resource
             // requests can never be satisfied on their node (e.g. a task
@@ -1321,11 +1406,82 @@ impl<'h> Engine<'h> {
             // real scheduler would reject such a request up front; the
             // failure may unblock (or start) other jobs.
             match (0..self.rt.len()).find(|&j| !self.rt[j].done) {
-                Some(j) => self.finish_job(j, self.evq.now(), true),
+                Some(j) => {
+                    let t = self.evq.now();
+                    self.finish_job(j, t, true);
+                    if self.sanitizer.is_some() {
+                        self.sanitize_event(t);
+                    }
+                }
                 None => break,
             }
         }
         self.collect()
+    }
+
+    /// Re-check the engine's conservation invariants after one fired
+    /// event (`--sanitize`). Strictly observational: every check reads
+    /// engine state and none writes it, so an armed run's scheduling
+    /// decisions — and its event trace — are bit-identical to a plain
+    /// run's.
+    fn sanitize_event(&mut self, t: f64) {
+        let san = self.sanitizer.as_mut().expect("sanitizer armed");
+        san.report.events_checked += 1;
+        // (1) The virtual clock never runs backwards: the event queue's
+        // (t, seq) total order must survive both backends.
+        if t < san.last_t {
+            san.fail(t, format!("event time ran backwards: {t} fired after {}", san.last_t));
+        }
+        san.last_t = san.last_t.max(t);
+        // (2) Per-node device-memory conservation: every byte missing
+        // from the free pool is held by exactly one job's ledger, and
+        // the free pool never exceeds capacity (a double release would
+        // mint memory out of thin air; a leaked reservation would lose
+        // it). Ledger attribution by `rt.node` is sound at event
+        // boundaries: a job's memory is fully released before any
+        // reroute (eviction, migration) changes its node.
+        for (n, node) in self.nodes.iter().enumerate() {
+            let free = node.free_mem();
+            let total = node.total_mem();
+            if free > total {
+                san.fail(
+                    t,
+                    format!("node {n}: free memory {free} exceeds capacity {total}"),
+                );
+            }
+            let held: u64 = self
+                .rt
+                .iter()
+                .filter(|r| r.node == n)
+                .map(|r| r.ledger.held_bytes_total())
+                .sum();
+            if free.saturating_add(held) != total {
+                san.fail(
+                    t,
+                    format!(
+                        "node {n}: memory conservation broken: \
+                         free {free} + held {held} != capacity {total}"
+                    ),
+                );
+            }
+        }
+        // (3) A (node, worker) slot is owned by at most one live job.
+        let mut owners: Vec<(usize, usize, usize)> = Vec::new();
+        for (j, r) in self.rt.iter().enumerate() {
+            if !r.holds_worker || r.done {
+                continue;
+            }
+            match owners.iter().find(|&&(n, w, _)| n == r.node && w == r.worker) {
+                Some(&(_, _, other)) => san.fail(
+                    t,
+                    format!(
+                        "jobs {other} and {j} both hold worker {}.{}",
+                        r.node, r.worker
+                    ),
+                ),
+                None => owners.push((r.node, r.worker, j)),
+            }
+        }
     }
 
     fn start_next_job(&mut self, node: usize, worker: usize, t: f64) {

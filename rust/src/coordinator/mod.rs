@@ -39,9 +39,9 @@ mod placement;
 
 pub use crate::sched::{AdmissionConfig, PreemptConfig, SloClass};
 pub use engine::{
-    run_batch, run_batch_with_hook, run_cluster, run_cluster_on_backend, run_cluster_traced,
-    run_cluster_traced_on_backend, run_cluster_with_hook, ClusterConfig, JobSpec, RunConfig,
-    SchedMode,
+    run_batch, run_batch_with_hook, run_cluster, run_cluster_on_backend, run_cluster_sanitized,
+    run_cluster_traced, run_cluster_traced_on_backend, run_cluster_with_hook, ClusterConfig,
+    JobSpec, RunConfig, SanitizerReport, SanitizerViolation, SchedMode,
 };
 pub use metrics::{JobClass, JobOutcome, RunResult};
 pub use placement::PARTITION_SLICES;
@@ -61,6 +61,7 @@ mod tests {
             heap_bytes: 0,
             grid: warps,
             block: 32,
+            written_bytes: 2 * mem,
             iv: crate::gpu::InterferenceProfile::ZERO,
         };
         JobSpec {
@@ -627,6 +628,29 @@ mod tests {
         let h2_twice = twice.jobs[2].turnaround();
         assert!(h2_twice < 50.0, "H2 admitted promptly on the second eviction: {h2_twice}");
         assert!(twice.wasted_work_s > once.wasted_work_s);
+    }
+
+    #[test]
+    fn sanitized_run_is_clean_and_matches_plain_run() {
+        // The sanitizer is observational: armed, it must report zero
+        // violations on a healthy engine and leave every observable
+        // output identical to the unarmed run. Exercised on the
+        // preemption scenario — eviction + restore is the hardest path
+        // for the memory-conservation invariant (release + re-place).
+        let jobs = hog_and_heavy(100_000_000, 20_000_000, 5.0);
+        let cfg = contended_cluster_cfg(Some(preempt_cfg("min-progress")));
+        let plain = run_cluster(cfg.clone(), jobs.clone());
+        let (sanitized, report) = run_cluster_sanitized(cfg, jobs);
+        assert!(report.is_clean(), "violations: {:?}", report.violations);
+        assert!(report.events_checked > 0);
+        assert_eq!(report.suppressed, 0);
+        assert_eq!(plain.makespan, sanitized.makespan);
+        assert_eq!(plain.preemptions, sanitized.preemptions);
+        for (x, y) in plain.jobs.iter().zip(&sanitized.jobs) {
+            assert_eq!(x.started, y.started);
+            assert_eq!(x.ended, y.ended);
+            assert_eq!(x.crashed, y.crashed);
+        }
     }
 
     #[test]

@@ -127,6 +127,17 @@ impl TaskLedger {
         self.reserved_entries().map(|(_, b)| b).sum()
     }
 
+    /// Every byte this ledger holds against the node's devices:
+    /// probe reservations plus raw allocations. This is the quantity
+    /// the engine sanitizer sums across jobs to check conservation
+    /// (`free + Σ held == total`), so it must mirror exactly what
+    /// `release_task` would hand back.
+    pub fn held_bytes_total(&self) -> u64 {
+        let raw: u64 =
+            self.alloc.iter().filter(|&&(d, _)| d != NO_SLOT).map(|&(_, b)| b).sum();
+        self.reserved_bytes_total() + raw
+    }
+
     /// Distinct tasks still holding memory, in stable ascending order
     /// (dense storage iterates in task-id order by construction).
     pub fn open_tasks(&self) -> Vec<usize> {
@@ -399,6 +410,9 @@ mod tests {
         assert_eq!(ledger.open_tasks(), vec![0, 1]);
         assert_eq!(ledger.reserved_bytes_total(), 4 << 30);
         assert_eq!(ledger.reserved_entries().collect::<Vec<_>>(), vec![(2, 4 << 30)]);
+        // Over-freed raw entry holds 0 bytes but stays open; held ==
+        // reservation only.
+        assert_eq!(ledger.held_bytes_total(), 4 << 30);
         // Growth on demand past the pre-sized bound.
         ledger.reserve(7, 0, 1 << 20);
         assert_eq!(ledger.open_tasks(), vec![0, 1, 7], "ascending task order");

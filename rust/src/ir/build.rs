@@ -262,3 +262,57 @@ impl FuncBuilder {
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_program() -> Program {
+        let mut pb = ProgramBuilder::new();
+        pb.func("main", 1, |f| {
+            let n = f.param(0);
+            let bytes = f.assign(Expr::v(n).mul(Expr::c(4)));
+            let buf = f.malloc(bytes);
+            let trips = f.c(3);
+            f.loop_n(trips, |f| {
+                let (g, b, w) = (f.c(8), f.c(128), f.c(1000));
+                f.launch("k", g, b, &[buf], w);
+            });
+            f.free(buf);
+        });
+        pb.finish()
+    }
+
+    #[test]
+    fn builder_output_passes_validate() {
+        // finish() already validates (panicking on failure); re-check
+        // explicitly so a future relaxation of finish() can't regress.
+        assert!(small_program().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_names_duplicate_definition() {
+        let mut p = small_program();
+        let f = &mut p.funcs[0];
+        // Clone the first defining op into the same block: two ops now
+        // claim the same result value.
+        let mut dup = f.blocks[0].ops[0].clone();
+        dup.id = 99;
+        f.blocks[0].ops.push(dup);
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("duplicate definition of v1"), "{err}");
+    }
+
+    #[test]
+    fn validate_names_never_defined_use() {
+        let mut p = small_program();
+        let f = &mut p.funcs[0];
+        // Widen the value space and reference a value no op defines.
+        f.n_values += 1;
+        let ghost = f.n_values - 1;
+        let id = f.n_ops() as OpId + 50;
+        f.blocks[0].ops.push(Op { id, result: None, kind: OpKind::Free { obj: ghost } });
+        let err = p.validate().unwrap_err();
+        assert!(err.contains(&format!("uses v{ghost}, which no op defines")), "{err}");
+    }
+}

@@ -17,5 +17,5 @@ pub mod parse;
 pub mod program;
 
 pub use build::{FuncBuilder, ProgramBuilder};
-pub use op::{CopyDir, Expr, Op, OpId, OpKind, Terminator, ValueId};
+pub use op::{CopyDir, EvalError, Expr, Op, OpId, OpKind, Terminator, ValueId};
 pub use program::{op_operands, Block, BlockId, FuncId, Function, Program};

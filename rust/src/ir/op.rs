@@ -94,6 +94,74 @@ impl Expr {
     }
 }
 
+/// Why a checked symbolic evaluation could not produce a usable byte
+/// count. The unchecked [`Expr::eval`] keeps the legacy wrapping/CeilDiv
+/// semantics the runtime relies on; the verifier uses
+/// [`Expr::eval_checked`] so a corrupt size expression becomes a
+/// diagnostic at its defining op instead of a panic (or a silently
+/// wrapped reservation) downstream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalError {
+    /// `ceil(a / b)` with `b == 0`.
+    DivByZero,
+    /// An intermediate or final value left the i64 range.
+    Overflow,
+    /// The final value is negative where a byte/geometry count is
+    /// required (carries the offending value).
+    Negative(i64),
+}
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::DivByZero => write!(f, "division by zero in size expression"),
+            EvalError::Overflow => write!(f, "size expression overflows i64"),
+            EvalError::Negative(v) => write!(f, "size expression evaluates to negative {v}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
+
+impl Expr {
+    /// [`Expr::eval`] with arithmetic faults surfaced as typed errors:
+    /// checked add/sub/mul (overflow), an explicit divide-by-zero on
+    /// `CeilDiv`, and no silent wrapping anywhere. Callers that require
+    /// a non-negative result (byte sizes, grid geometry) should map a
+    /// negative final value to [`EvalError::Negative`] themselves —
+    /// negativity of intermediates is legal (e.g. `(a - b) + c`).
+    pub fn eval_checked(&self, env: &dyn Fn(ValueId) -> i64) -> Result<i64, EvalError> {
+        match self {
+            Expr::Const(c) => Ok(*c),
+            Expr::Value(v) => Ok(env(*v)),
+            Expr::Add(a, b) => a
+                .eval_checked(env)?
+                .checked_add(b.eval_checked(env)?)
+                .ok_or(EvalError::Overflow),
+            Expr::Sub(a, b) => a
+                .eval_checked(env)?
+                .checked_sub(b.eval_checked(env)?)
+                .ok_or(EvalError::Overflow),
+            Expr::Mul(a, b) => a
+                .eval_checked(env)?
+                .checked_mul(b.eval_checked(env)?)
+                .ok_or(EvalError::Overflow),
+            Expr::CeilDiv(a, b) => {
+                let (a, b) = (a.eval_checked(env)?, b.eval_checked(env)?);
+                if b == 0 {
+                    return Err(EvalError::DivByZero);
+                }
+                b.checked_sub(1)
+                    .and_then(|bm1| a.checked_add(bm1))
+                    .and_then(|n| n.checked_div(b))
+                    .ok_or(EvalError::Overflow)
+            }
+            Expr::Max(a, b) => Ok(a.eval_checked(env)?.max(b.eval_checked(env)?)),
+            Expr::Min(a, b) => Ok(a.eval_checked(env)?.min(b.eval_checked(env)?)),
+        }
+    }
+}
+
 /// Direction of a memcpy, relative to the device.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CopyDir {
@@ -183,5 +251,40 @@ impl fmt::Display for Expr {
             Expr::Max(a, b) => write!(f, "max({a}, {b})"),
             Expr::Min(a, b) => write!(f, "min({a}, {b})"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_checked_matches_eval_on_sane_expressions() {
+        let env = |v: ValueId| (v as i64 + 1) * 10;
+        for e in [
+            Expr::c(4).mul(Expr::v(0)).add(Expr::c(3)),
+            Expr::v(1).ceil_div(Expr::c(7)),
+            Expr::v(2).sub(Expr::c(5)).max(Expr::c(0)).min(Expr::c(100)),
+        ] {
+            assert_eq!(e.eval_checked(&env).unwrap(), e.eval(&env));
+        }
+    }
+
+    #[test]
+    fn eval_checked_surfaces_div_by_zero_and_overflow() {
+        let env = |_: ValueId| 0i64;
+        // The unchecked legacy eval defines ceil(x/0) == 0 (the lazy
+        // runtime's CUDA-ish shrug); the checked form names the fault.
+        let div0 = Expr::c(42).ceil_div(Expr::c(0));
+        assert_eq!(div0.eval(&env), 0);
+        assert_eq!(div0.eval_checked(&env), Err(EvalError::DivByZero));
+        let ovf = Expr::c(i64::MAX).mul(Expr::c(2));
+        assert_eq!(ovf.eval_checked(&env), Err(EvalError::Overflow));
+        let ovf2 = Expr::c(i64::MAX).add(Expr::c(1));
+        assert_eq!(ovf2.eval_checked(&env), Err(EvalError::Overflow));
+        // Negative intermediates are fine; only the caller's final
+        // byte-count check turns negativity into EvalError::Negative.
+        let neg_mid = Expr::c(1).sub(Expr::c(5)).add(Expr::c(10));
+        assert_eq!(neg_mid.eval_checked(&env), Ok(6));
     }
 }

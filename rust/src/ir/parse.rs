@@ -378,4 +378,54 @@ b0:
         let p2 = parse_program(&p.to_string()).unwrap();
         assert_eq!(p.to_string(), p2.to_string());
     }
+
+    #[test]
+    fn duplicate_definition_rejected_by_name() {
+        let text = "\
+func main(1 params) [entry] {
+b0:
+  v1 = assign 64
+  v1 = assign 128
+  ret
+}
+";
+        let err = parse_program(text).unwrap_err().to_string();
+        assert!(err.contains("duplicate definition of v1"), "{err}");
+        assert!(err.contains("main"), "{err}");
+    }
+
+    #[test]
+    fn use_of_never_defined_value_rejected_by_name() {
+        // v9 is mentioned only as an operand, so the old max-value range
+        // check accepted it; validate()'s definedness pass must not.
+        let text = "\
+func main(1 params) [entry] {
+b0:
+  v1 = assign 64
+  v2 = malloc v9
+  free v2
+  ret
+}
+";
+        let err = parse_program(text).unwrap_err().to_string();
+        assert!(err.contains("uses v9, which no op defines"), "{err}");
+    }
+
+    #[test]
+    fn loop_on_never_defined_trip_count_rejected() {
+        let text = "\
+func main(1 params) [entry] {
+b0:
+  v1 = assign 3
+  br b1
+b1:
+  v2 = assign 10
+  loop v7 b1 b2
+b2:
+  ret
+}
+";
+        let err = parse_program(text).unwrap_err().to_string();
+        assert!(err.contains("loop terminator uses v7"), "{err}");
+    }
 }

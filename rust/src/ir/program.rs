@@ -78,11 +78,17 @@ impl Program {
     }
 
     /// Validate structural invariants: terminator targets in range,
-    /// operand values defined before use within a block-order walk
-    /// (approximate SSA check), op ids unique.
+    /// op ids unique, results in range and defined exactly once (SSA),
+    /// and every non-parameter operand defined by *some* op in the
+    /// function (flow-insensitive: branch-dependent definedness is the
+    /// verifier's job, but a value no op ever defines can only ever
+    /// misbehave downstream).
     pub fn validate(&self) -> Result<(), String> {
         for f in &self.funcs {
             let mut seen_ops = HashMap::new();
+            // ValueId -> defining OpId, for the duplicate-definition and
+            // never-defined checks below.
+            let mut def_op: HashMap<ValueId, OpId> = HashMap::new();
             for (b, i, op) in f.ops() {
                 if let Some(prev) = seen_ops.insert(op.id, (b, i)) {
                     return Err(format!("{}: duplicate op id {} at {:?}", f.name, op.id, prev));
@@ -90,6 +96,12 @@ impl Program {
                 if let Some(r) = op.result {
                     if r < f.n_params || r >= f.n_values {
                         return Err(format!("{}: op {} result v{} out of range", f.name, op.id, r));
+                    }
+                    if let Some(first) = def_op.insert(r, op.id) {
+                        return Err(format!(
+                            "{}: duplicate definition of v{r} (op {} redefines op {first}'s result)",
+                            f.name, op.id
+                        ));
                     }
                 }
                 for v in op_operands(&op.kind) {
@@ -100,6 +112,31 @@ impl Program {
                 if let OpKind::Call { callee, .. } = &op.kind {
                     if *callee as usize >= self.funcs.len() {
                         return Err(format!("{}: call to missing func {}", f.name, callee));
+                    }
+                }
+            }
+            // Second pass, after every definition is known: a use of a
+            // value in `n_params..n_values` that no op defines anywhere
+            // is an invalid program, not a latent interpreter fault.
+            for (_, _, op) in f.ops() {
+                for v in op_operands(&op.kind) {
+                    if v >= f.n_params && !def_op.contains_key(&v) {
+                        return Err(format!(
+                            "{}: op {} uses v{v}, which no op defines",
+                            f.name, op.id
+                        ));
+                    }
+                }
+            }
+            for blk in &f.blocks {
+                if let Terminator::CondBr { trips, .. } = &blk.term {
+                    if *trips >= f.n_values
+                        || (*trips >= f.n_params && !def_op.contains_key(trips))
+                    {
+                        return Err(format!(
+                            "{}: loop terminator uses v{trips}, which no op defines",
+                            f.name
+                        ));
                     }
                 }
             }

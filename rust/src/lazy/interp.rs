@@ -324,12 +324,29 @@ impl<'a> Interp<'a> {
                         .sum::<u64>()
                 })
                 .sum();
+            // Written bound: queued stores (H2D/Memset) plus one full
+            // write of every argument buffer — mirrors the static
+            // written-bytes analysis in `compiler::tasks`.
+            let stores: u64 = objs
+                .iter()
+                .map(|&o| {
+                    self.objs[o]
+                        .queued
+                        .iter()
+                        .map(|q| match q {
+                            Queued::H2D { bytes } | Queued::Memset { bytes } => *bytes,
+                            _ => 0,
+                        })
+                        .sum::<u64>()
+                })
+                .sum();
             let res = TaskResources {
                 static_dev: self.cur_device,
                 mem_bytes: mem,
                 heap_bytes: self.heap_limit,
                 grid,
                 block,
+                written_bytes: mem + stores,
                 iv: InterferenceProfile::ZERO,
             };
             self.emit(TraceEvent::TaskBegin { task, res });
@@ -395,6 +412,7 @@ impl<'a> Interp<'a> {
             heap_bytes: self.eval_expr(f, env, &t.heap_bytes)? as u64,
             grid: self.eval_expr(f, env, &t.grid)? as u64,
             block: self.eval_expr(f, env, &t.block)? as u64,
+            written_bytes: self.eval_expr(f, env, &t.written_bytes)? as u64,
             iv: InterferenceProfile::ZERO,
         };
         self.emit(TraceEvent::TaskBegin { task, res });

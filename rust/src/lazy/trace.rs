@@ -17,6 +17,12 @@ pub struct TaskResources {
     pub grid: u64,
     /// Threads per block of the widest member launch.
     pub block: u64,
+    /// Upper bound on device bytes the task writes per execution
+    /// (member H2D + Memset traffic plus one full store of every
+    /// launch-argument buffer). Groundwork for delta checkpoints; `0`
+    /// means "not tracked" (legacy/synthetic traces) and disables the
+    /// conformance check on written traffic.
+    pub written_bytes: u64,
     /// Resource-pressure profile of the task's kernels (memory
     /// bandwidth / L2 / SM occupancy). `ZERO` — the default for every
     /// trace source that predates interference modeling — means the
@@ -197,5 +203,218 @@ impl JobTrace {
             }
         }
         Ok(())
+    }
+
+    /// Dynamic conformance: replay the trace against each task's
+    /// declared [`TaskResources`] and reject any event that outruns its
+    /// declaration — the runtime counterpart of the static
+    /// summary-soundness check in `compiler::verify`. Subsumes
+    /// [`JobTrace::check_well_formed`] (so "event on an undeclared
+    /// task" is also caught), then enforces per open task:
+    ///
+    /// - cumulative `Malloc` bytes never exceed `reserve_bytes()`
+    /// - every `H2D`/`D2H` moves at most `mem_bytes`
+    /// - every `Free` returns at most the outstanding allocation
+    /// - launch geometry stays within the declared `grid`/`block`
+    /// - cumulative written traffic (H2D + Memset) stays within
+    ///   `written_bytes` when that bound is tracked (non-zero)
+    pub fn check_conformance(&self) -> Result<(), String> {
+        self.check_well_formed()?;
+        struct Open {
+            res: TaskResources,
+            allocated: u64,
+            outstanding: u64,
+            written: u64,
+        }
+        let mut open: std::collections::HashMap<usize, Open> = Default::default();
+        for (i, e) in self.events.iter().enumerate() {
+            // check_well_formed proved every op sits in an open task.
+            match e {
+                TraceEvent::TaskBegin { task, res } => {
+                    open.insert(
+                        *task,
+                        Open { res: *res, allocated: 0, outstanding: 0, written: 0 },
+                    );
+                }
+                TraceEvent::Malloc { task, bytes } => {
+                    let o = open.get_mut(task).expect("well-formed");
+                    o.allocated += bytes;
+                    o.outstanding += bytes;
+                    if o.allocated > o.res.reserve_bytes() {
+                        return Err(format!(
+                            "event {i}: task {task} cumulative malloc {} exceeds \
+                             declared reserve {}",
+                            o.allocated,
+                            o.res.reserve_bytes()
+                        ));
+                    }
+                }
+                TraceEvent::H2D { task, bytes } | TraceEvent::Memset { task, bytes } => {
+                    let o = open.get_mut(task).expect("well-formed");
+                    if *bytes > o.res.mem_bytes {
+                        return Err(format!(
+                            "event {i}: task {task} transfer of {bytes} bytes exceeds \
+                             declared mem_bytes {}",
+                            o.res.mem_bytes
+                        ));
+                    }
+                    o.written += bytes;
+                    if o.res.written_bytes > 0 && o.written > o.res.written_bytes {
+                        return Err(format!(
+                            "event {i}: task {task} cumulative written bytes {} exceed \
+                             declared written_bytes {}",
+                            o.written, o.res.written_bytes
+                        ));
+                    }
+                }
+                TraceEvent::D2H { task, bytes } => {
+                    let o = open.get(task).expect("well-formed");
+                    if *bytes > o.res.mem_bytes {
+                        return Err(format!(
+                            "event {i}: task {task} d2h of {bytes} bytes exceeds \
+                             declared mem_bytes {}",
+                            o.res.mem_bytes
+                        ));
+                    }
+                }
+                TraceEvent::Launch { task, grid, block, .. } => {
+                    let o = open.get(task).expect("well-formed");
+                    if *grid > o.res.grid || *block > o.res.block {
+                        return Err(format!(
+                            "event {i}: task {task} launch geometry {grid}x{block} \
+                             exceeds declared {}x{}",
+                            o.res.grid, o.res.block
+                        ));
+                    }
+                }
+                TraceEvent::Free { task, bytes } => {
+                    let o = open.get_mut(task).expect("well-formed");
+                    if *bytes > o.outstanding {
+                        return Err(format!(
+                            "event {i}: task {task} frees {bytes} bytes with only {} \
+                             outstanding",
+                            o.outstanding
+                        ));
+                    }
+                    o.outstanding -= bytes;
+                }
+                TraceEvent::TaskEnd { task } => {
+                    // Outstanding allocations here are an app-level leak;
+                    // the static verifier reports those, and the engine
+                    // reclaims the reservation wholesale at TaskEnd.
+                    open.remove(task);
+                }
+                TraceEvent::Host { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(mem: u64) -> TaskResources {
+        TaskResources {
+            static_dev: None,
+            mem_bytes: mem,
+            heap_bytes: 0,
+            grid: 8,
+            block: 128,
+            written_bytes: 2 * mem,
+            iv: InterferenceProfile::ZERO,
+        }
+    }
+
+    #[test]
+    fn conformant_trace_passes() {
+        let t = JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res: res(1024) },
+                TraceEvent::Malloc { task: 0, bytes: 1024 },
+                TraceEvent::H2D { task: 0, bytes: 1024 },
+                TraceEvent::Launch {
+                    task: 0,
+                    kernel: "k".into(),
+                    artifact: None,
+                    grid: 8,
+                    block: 128,
+                    work_us: 10,
+                },
+                TraceEvent::Free { task: 0, bytes: 1024 },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        };
+        assert!(t.check_conformance().is_ok());
+    }
+
+    #[test]
+    fn over_reserve_malloc_is_rejected() {
+        let t = JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res: res(1024) },
+                TraceEvent::Malloc { task: 0, bytes: 4096 },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        };
+        let err = t.check_conformance().unwrap_err();
+        assert!(err.contains("exceeds declared reserve"), "{err}");
+    }
+
+    #[test]
+    fn oversized_launch_geometry_is_rejected() {
+        let t = JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res: res(1024) },
+                TraceEvent::Launch {
+                    task: 0,
+                    kernel: "k".into(),
+                    artifact: None,
+                    grid: 9999,
+                    block: 128,
+                    work_us: 10,
+                },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        };
+        let err = t.check_conformance().unwrap_err();
+        assert!(err.contains("launch geometry"), "{err}");
+    }
+
+    #[test]
+    fn event_on_undeclared_task_is_rejected() {
+        let t = JobTrace {
+            events: vec![TraceEvent::Malloc { task: 7, bytes: 64 }],
+        };
+        assert!(t.check_conformance().is_err());
+    }
+
+    #[test]
+    fn written_bound_enforced_only_when_tracked() {
+        let mut r = res(1024);
+        r.written_bytes = 1024; // one H2D's worth
+        let t = JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res: r },
+                TraceEvent::H2D { task: 0, bytes: 1024 },
+                TraceEvent::Memset { task: 0, bytes: 1024 }, // over the bound
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        };
+        let err = t.check_conformance().unwrap_err();
+        assert!(err.contains("written"), "{err}");
+        // Untracked (0) disables the written check but keeps the rest.
+        let mut r0 = res(1024);
+        r0.written_bytes = 0;
+        let t0 = JobTrace {
+            events: vec![
+                TraceEvent::TaskBegin { task: 0, res: r0 },
+                TraceEvent::H2D { task: 0, bytes: 1024 },
+                TraceEvent::Memset { task: 0, bytes: 1024 },
+                TraceEvent::TaskEnd { task: 0 },
+            ],
+        };
+        assert!(t0.check_conformance().is_ok());
     }
 }

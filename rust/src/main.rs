@@ -13,7 +13,7 @@
 //!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
-//!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR]
+//!           [--workers N] [--seed N] [--compute real|modeled] [--artifacts DIR] [--sanitize]
 //! mgb nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ...] [--workers N]
 //!           [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
 //!           [--arrivals poisson|mmpp|flash]
@@ -23,7 +23,10 @@
 //!           [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
 //!           [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
 //!           [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
+//!           [--sanitize]
 //! mgb compile <file.gir> — run the compiler pass on an IR file, print tasks + probes
+//! mgb lint  [--builtin] [--json PATH] [file.gir ...] — static verifier over IR programs
+//!           (memory-state dataflow + task-summary soundness); exit 1 on any error
 //! mgb artifacts [--dir DIR] — list and smoke-execute the AOT artifacts
 //! ```
 //!
@@ -34,16 +37,17 @@
 //! valid ones.
 
 use mgb::bench_harness;
-use mgb::compiler::compile;
+use mgb::compiler::{compile, verify_compiled};
 use mgb::coordinator::{
-    run_cluster, run_cluster_with_hook, AdmissionConfig, ClusterConfig, RunResult, SchedMode,
+    run_cluster, run_cluster_sanitized, run_cluster_with_hook, AdmissionConfig, ClusterConfig,
+    RunResult, SanitizerReport, SchedMode,
 };
 use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
 use mgb::ir::parse::parse_program;
 use mgb::runtime::KernelRegistry;
 use mgb::workloads::{
     flash_crowd_arrivals, mmpp_arrivals, nn_homogeneous, nn_mix, poisson_arrivals, NnTask,
-    Workload,
+    Workload, COMBOS, NN_TASKS,
 };
 use std::collections::HashMap;
 
@@ -56,7 +60,7 @@ const RUN_FLAGS: &[&str] = &[
     "preempt", "ckpt-cost",
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
-    "coalesce-window", "workers", "seed", "compute", "artifacts",
+    "coalesce-window", "workers", "seed", "compute", "artifacts", "sanitize",
 ];
 const NN_FLAGS: &[&str] = &[
     "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "arrivals",
@@ -64,9 +68,12 @@ const NN_FLAGS: &[&str] = &[
     "preempt", "ckpt-cost",
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
-    "coalesce-window", "workers", "seed",
+    "coalesce-window", "workers", "seed", "sanitize",
 ];
 const ARTIFACTS_FLAGS: &[&str] = &["dir"];
+/// `lint` also takes positional `.gir` paths, parsed by `cmd_lint`
+/// itself (the strict pair parser has no positional concept).
+const LINT_FLAGS: &[&str] = &["builtin", "json"];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -92,8 +99,9 @@ fn main() {
             }
         }
         Some("compile") => cmd_compile(args.get(1).map(String::as_str)),
+        Some("lint") => cmd_lint(&args[1..]),
         _ => {
-            eprintln!("usage: mgb <bench|run|nn|compile|artifacts> [flags]\n{}", HELP);
+            eprintln!("usage: mgb <bench|run|nn|compile|lint|artifacts> [flags]\n{}", HELP);
             2
         }
     };
@@ -111,7 +119,7 @@ const HELP: &str = "\
         [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
-        [--workers N] [--seed N] [--compute real] [--artifacts DIR]
+        [--workers N] [--seed N] [--compute real] [--artifacts DIR] [--sanitize]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
         [--arrivals poisson|mmpp|flash]
@@ -121,7 +129,9 @@ const HELP: &str = "\
         [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
+        [--sanitize]
   compile <file.gir>
+  lint  [--builtin] [--json PATH] [file.gir ...]
   artifacts [--dir DIR]";
 
 /// Parse `--key value` / bare `--key` pairs, rejecting any key not in
@@ -265,6 +275,19 @@ fn parse_interference(f: &HashMap<String, String>) -> Result<bool, String> {
     }
 }
 
+/// `--sanitize` arms the engine's debug sanitizer: after every fired
+/// event the run re-checks its conservation invariants (device-memory
+/// conservation, worker-slot uniqueness, clock monotonicity) and exits
+/// nonzero on any violation. Observational only — results are
+/// identical to an unarmed run. Same bare-flag convention as `--slo`.
+fn parse_sanitize(f: &HashMap<String, String>) -> Result<bool, String> {
+    match f.get("sanitize").map(String::as_str) {
+        None | Some("off") => Ok(false),
+        Some("true") | Some("on") => Ok(true),
+        Some(other) => Err(format!("invalid --sanitize '{other}' (bare flag, on, or off)")),
+    }
+}
+
 /// The validated run/nn option bundle — any invalid value is one
 /// error naming it.
 struct RunOpts {
@@ -277,6 +300,7 @@ struct RunOpts {
     /// `Some((rate, shape))` when `--rate` asked for open-system
     /// traffic; the shape is one of "poisson" | "mmpp" | "flash".
     arrivals: Option<(f64, &'static str)>,
+    sanitize: bool,
 }
 
 fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
@@ -299,6 +323,7 @@ fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
         admit,
         frontend_q,
         arrivals: parse_arrivals(f)?,
+        sanitize: parse_sanitize(f)?,
     })
 }
 
@@ -597,7 +622,18 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         admit: opts.admit,
         frontend_q: opts.frontend_q,
     };
-    let r = if f.get("compute").map(String::as_str) == Some("real") {
+    let mut sanitizer: Option<SanitizerReport> = None;
+    let r = if opts.sanitize {
+        if f.get("compute").map(String::as_str) == Some("real") {
+            // run_cluster_sanitized takes no launch hook; refusing beats
+            // silently dropping the artifact executions.
+            eprintln!("run: --sanitize is incompatible with --compute real");
+            return 2;
+        }
+        let (r, rep) = run_cluster_sanitized(cfg, jobs);
+        sanitizer = Some(rep);
+        r
+    } else if f.get("compute").map(String::as_str) == Some("real") {
         let dir = f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
         let reg = match KernelRegistry::new(&dir) {
             Ok(r) => r,
@@ -639,7 +675,32 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
             preempted
         );
     }
-    0
+    print_sanitizer(sanitizer)
+}
+
+/// Print a `--sanitize` report (if one was produced): exit 0 on a
+/// clean run, 1 on any violation — so CI can gate on the invariants.
+fn print_sanitizer(report: Option<SanitizerReport>) -> i32 {
+    let Some(rep) = report else { return 0 };
+    let suppressed = if rep.suppressed > 0 {
+        format!(" (+{} suppressed)", rep.suppressed)
+    } else {
+        String::new()
+    };
+    println!(
+        "sanitizer: events_checked={} violations={}{}",
+        rep.events_checked,
+        rep.violations.len(),
+        suppressed
+    );
+    for v in &rep.violations {
+        println!("  t={:.6}s: {}", v.t, v.what);
+    }
+    if rep.is_clean() {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_nn(f: &HashMap<String, String>) -> i32 {
@@ -687,6 +748,11 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
         admit: opts.admit,
         frontend_q: opts.frontend_q,
     };
+    if opts.sanitize {
+        let (r, rep) = run_cluster_sanitized(cfg, jobs);
+        print_result(&r);
+        return print_sanitizer(Some(rep));
+    }
     let r = run_cluster(cfg, jobs);
     print_result(&r);
     0
@@ -720,8 +786,119 @@ fn cmd_compile(path: Option<&str>) -> i32 {
         );
         println!("  mem_bytes = {}", t.mem_bytes);
         println!("  grid = {}, block = {}, heap = {}", t.grid, t.block, t.heap_bytes);
+        println!("  written_bytes = {}", t.written_bytes);
     }
     0
+}
+
+/// `mgb lint [--builtin] [--json PATH] [file.gir ...]` — run the
+/// compiler-side verifier ([`verify_compiled`]) over IR programs:
+/// explicit `.gir` files, and with `--builtin` every built-in Rodinia
+/// combo and Darknet task program. Prints human-readable diagnostics
+/// per program; `--json PATH` additionally writes one machine-readable
+/// document covering all of them (the CI artifact). Exit 1 if any
+/// program fails to parse or lints with errors, 2 on usage errors.
+fn cmd_lint(args: &[String]) -> i32 {
+    let mut paths: Vec<String> = Vec::new();
+    let mut json_path: Option<String> = None;
+    let mut builtin = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--builtin" => {
+                builtin = true;
+                i += 1;
+            }
+            "--json" => match args.get(i + 1) {
+                Some(p) if !p.starts_with("--") => {
+                    json_path = Some(p.clone());
+                    i += 2;
+                }
+                _ => {
+                    eprintln!("lint: --json requires a path");
+                    return 2;
+                }
+            },
+            s if s.starts_with("--") => {
+                eprintln!(
+                    "lint: unknown flag '{s}' (valid flags: {})",
+                    LINT_FLAGS.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                );
+                return 2;
+            }
+            s => {
+                paths.push(s.to_string());
+                i += 1;
+            }
+        }
+    }
+    if !builtin && paths.is_empty() {
+        eprintln!("usage: mgb lint [--builtin] [--json PATH] <file.gir>...");
+        return 2;
+    }
+    let mut targets: Vec<(String, mgb::compiler::CompiledProgram)> = Vec::new();
+    for p in &paths {
+        let text = match std::fs::read_to_string(p) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{p}: {e}");
+                return 1;
+            }
+        };
+        let program = match parse_program(&text) {
+            Ok(prog) => prog,
+            Err(e) => {
+                eprintln!("{p}: parse error: {e:#}");
+                return 1;
+            }
+        };
+        targets.push((p.clone(), compile(&program)));
+    }
+    if builtin {
+        for c in COMBOS.iter() {
+            targets.push((format!("rodinia/{}", c.name), compile(&c.program())));
+        }
+        for t in NN_TASKS.iter() {
+            targets.push((format!("darknet/{}", t.profile().name), compile(&t.program())));
+        }
+    }
+    let mut failed = false;
+    let mut json = String::from("{\n  \"programs\": [\n");
+    let n_targets = targets.len();
+    for (i, (name, compiled)) in targets.iter().enumerate() {
+        let rep = verify_compiled(compiled);
+        if rep.is_clean() {
+            println!("{name}: clean");
+        } else {
+            println!("{name}:");
+            for d in &rep.diagnostics {
+                println!("  {d}");
+            }
+            println!("  {} error(s), {} warning(s)", rep.n_errors(), rep.n_warnings());
+        }
+        failed |= rep.n_errors() > 0;
+        // One entry per program; the report's own JSON is indented in.
+        let sep = if i + 1 == n_targets { "" } else { "," };
+        let body = rep.to_json();
+        let body = body.trim_end().replace('\n', "\n    ");
+        json.push_str(&format!(
+            "    {{\"program\": \"{}\", \"report\": {body}}}{sep}\n",
+            name.replace('\\', "\\\\").replace('"', "\\\"")
+        ));
+    }
+    json.push_str(&format!("  ],\n  \"failed\": {failed}\n}}\n"));
+    if let Some(p) = json_path {
+        if let Err(e) = std::fs::write(&p, &json) {
+            eprintln!("lint: writing {p}: {e}");
+            return 1;
+        }
+    }
+    println!("{n_targets} program(s) linted");
+    if failed {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_artifacts(f: &HashMap<String, String>) -> i32 {
@@ -887,6 +1064,23 @@ mod tests {
         assert_eq!(parse_dispatch(&f), "partition");
         let f = flags(&argv(&["--dispatch", "mig"]), NN_FLAGS).unwrap();
         assert_eq!(parse_dispatch(&f), "partition");
+    }
+
+    #[test]
+    fn sanitize_flag_parses_like_slo() {
+        // Bare flag, on, off — the same convention as --slo, in both
+        // the run and nn flag sets.
+        let f = flags(&argv(&["--sanitize"]), RUN_FLAGS).expect("flag in the valid set");
+        assert!(parse_sanitize(&f).expect("bare flag"));
+        let f = flags(&argv(&["--sanitize", "on"]), NN_FLAGS).unwrap();
+        assert!(parse_sanitize(&f).unwrap());
+        let f = flags(&argv(&["--sanitize", "off"]), RUN_FLAGS).unwrap();
+        assert!(!parse_sanitize(&f).unwrap());
+        // No flag, no sanitizer; unknown values are errors, not shrugs.
+        let f = flags(&argv(&["--workload", "W1"]), RUN_FLAGS).unwrap();
+        assert!(!parse_sanitize(&f).unwrap());
+        let f = flags(&argv(&["--sanitize", "hard"]), RUN_FLAGS).unwrap();
+        assert!(parse_sanitize(&f).is_err());
     }
 
     #[test]

@@ -97,6 +97,8 @@ pub fn synthetic_job(
         heap_bytes: 0,
         grid: 100,
         block: 32,
+        // One H2D of the buffer plus the kernel's stores into it.
+        written_bytes: 2 * mem_bytes,
         iv: InterferenceProfile::ZERO,
     };
     JobSpec {

@@ -14,8 +14,8 @@
 //! string diff.
 
 use mgb::coordinator::{
-    run_cluster, run_cluster_traced, run_cluster_traced_on_backend, ClusterConfig, JobSpec,
-    SchedMode,
+    run_cluster, run_cluster_sanitized, run_cluster_traced, run_cluster_traced_on_backend,
+    ClusterConfig, JobSpec, SchedMode,
 };
 use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
 use mgb::workloads::{poisson_arrivals, synthetic_job, Workload};
@@ -220,6 +220,39 @@ fn admit_off_policy_replays_every_golden_stream_byte_identically() {
             );
         }
         check_golden(name, &tr);
+    }
+}
+
+// ---- sanitizer: clean on every golden scenario, results untouched ----
+
+#[test]
+fn sanitizer_reports_zero_violations_on_every_golden_scenario() {
+    // The engine sanitizer re-checks memory conservation, worker-slot
+    // uniqueness, and clock monotonicity after every fired event. On
+    // the exact scenarios the golden fixtures pin it must find nothing
+    // — and because it is observational, the sanitized run's results
+    // must equal the plain run's bit-for-bit.
+    for (id, nodes, dispatch, rate) in [
+        ("W1", 1usize, "rr", None),
+        ("W1", 4usize, "least", Some(0.5)),
+        ("W2", 1usize, "rr", None),
+        ("W2", 4usize, "least", Some(0.5)),
+    ] {
+        let jobs = mix(id, rate);
+        let plain = run_cluster(cfg(nodes, dispatch, LatencyModel::off()), jobs.clone());
+        let (sanitized, report) =
+            run_cluster_sanitized(cfg(nodes, dispatch, LatencyModel::off()), jobs);
+        assert!(
+            report.is_clean(),
+            "{id}/{nodes}n/{dispatch}: sanitizer violations: {:?}",
+            report.violations
+        );
+        assert!(report.events_checked > 0);
+        assert_eq!(plain.makespan, sanitized.makespan, "{id}/{nodes}n/{dispatch}");
+        assert_eq!(plain.events_fired, sanitized.events_fired);
+        for (x, y) in plain.jobs.iter().zip(&sanitized.jobs) {
+            assert_eq!((x.started, x.ended, x.node, x.crashed), (y.started, y.ended, y.node, y.crashed));
+        }
     }
 }
 

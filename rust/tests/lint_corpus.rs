@@ -1,0 +1,82 @@
+//! Corpus-locked lint expectations.
+//!
+//! Every `.gir` under `tests/lint_corpus/` declares its expected
+//! outcome in its first line:
+//!
+//! * `// expect: clean` — the program must lint with no diagnostics;
+//! * `// expect: code[,code...]` — linting must yield exactly that set
+//!   of diagnostic codes (and at least one error);
+//! * `// expect-parse-error: <substring>` — the program must be
+//!   rejected at parse/validate time with an error naming the symbol.
+//!
+//! The corpus is the contract the verifier is held to across PRs: a
+//! seeded violation that stops being reported, a clean program that
+//! starts tripping a false positive, or a silently shrinking corpus
+//! all fail here.
+
+use mgb::compiler::{compile, verify_compiled};
+use mgb::ir::parse::parse_program;
+use std::fs;
+use std::path::PathBuf;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_corpus")
+}
+
+#[test]
+fn every_corpus_program_yields_exactly_its_expected_diagnostics() {
+    let mut entries: Vec<PathBuf> = fs::read_dir(corpus_dir())
+        .expect("tests/lint_corpus exists")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("gir"))
+        .collect();
+    entries.sort();
+    assert!(entries.len() >= 11, "corpus must not silently shrink: {} files", entries.len());
+    for path in entries {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let text = fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap_or("").trim().to_string();
+        if let Some(want) = header.strip_prefix("// expect-parse-error:") {
+            let want = want.trim();
+            let err = parse_program(&text)
+                .expect_err(&format!("{name}: must be rejected at parse time"))
+                .to_string();
+            assert!(err.contains(want), "{name}: parse error should name '{want}', got: {err}");
+            continue;
+        }
+        let want = header
+            .strip_prefix("// expect:")
+            .unwrap_or_else(|| panic!("{name}: first line must be `// expect: ...`"))
+            .trim();
+        let program =
+            parse_program(&text).unwrap_or_else(|e| panic!("{name}: parse failed: {e:#}"));
+        let rep = verify_compiled(&compile(&program));
+        if want == "clean" {
+            assert!(rep.is_clean(), "{name}: expected clean, got:\n{rep}");
+        } else {
+            let mut expected: Vec<&str> = want.split(',').map(str::trim).collect();
+            expected.sort_unstable();
+            expected.dedup();
+            assert_eq!(
+                rep.codes(),
+                expected,
+                "{name}: diagnostic codes mismatch; full report:\n{rep}"
+            );
+            assert!(rep.n_errors() > 0, "{name}: seeded violations must be errors:\n{rep}");
+        }
+    }
+}
+
+#[test]
+fn every_builtin_workload_lints_clean() {
+    // The acceptance bar the `mgb lint --builtin` CI step re-checks
+    // from the binary: no false positives on any shipped program.
+    for c in mgb::workloads::COMBOS.iter() {
+        let rep = verify_compiled(&compile(&c.program()));
+        assert!(rep.is_clean(), "rodinia/{} must lint clean:\n{rep}", c.name);
+    }
+    for t in mgb::workloads::NN_TASKS.iter() {
+        let rep = verify_compiled(&compile(&t.program()));
+        assert!(rep.is_clean(), "darknet/{} must lint clean:\n{rep}", t.profile().name);
+    }
+}

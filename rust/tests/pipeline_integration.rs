@@ -146,6 +146,7 @@ fn cg_crash_cleanup_releases_memory_for_survivors() {
             heap_bytes: 0,
             grid: 100,
             block: 32,
+            written_bytes: mem,
             iv: InterferenceProfile::ZERO,
         };
         JobTrace {
@@ -256,6 +257,7 @@ fn single_job_larger_than_any_gpu_crashes_everywhere() {
         heap_bytes: 0,
         grid: 10,
         block: 32,
+        written_bytes: 20 << 30,
         iv: InterferenceProfile::ZERO,
     };
     let job = mgb::coordinator::JobSpec {
