@@ -38,6 +38,7 @@ pub fn cluster_scale(seed: u64) -> Report {
                 latency: crate::gpu::LatencyModel::off(),
                 admit: None,
                 frontend_q: "fifo",
+                compile_traces: false,
             };
             let r = run_cluster(cfg, jobs.clone());
             lines.push(format!(

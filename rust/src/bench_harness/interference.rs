@@ -100,6 +100,7 @@ fn cluster_cfg(node: &NodeSpec, nodes: usize, dispatch: &'static str) -> Cluster
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

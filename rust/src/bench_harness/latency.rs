@@ -54,6 +54,7 @@ fn sweep_cfg_with(dispatch: &'static str, latency: LatencyModel) -> ClusterConfi
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

@@ -73,6 +73,7 @@ fn cfg(migrate: &'static str, latency: LatencyModel) -> ClusterConfig {
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

@@ -116,6 +116,7 @@ fn overload_cfg(node: &NodeSpec, nodes: usize, admit: Option<AdmissionConfig>) -
         latency: LatencyModel::off(),
         admit,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

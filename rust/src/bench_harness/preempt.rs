@@ -59,6 +59,7 @@ fn cfg(nodes: usize, preempt: Option<PreemptConfig>) -> ClusterConfig {
         latency: crate::gpu::LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

@@ -40,22 +40,31 @@ pub struct ScalePoint {
     pub synth_jobs_per_node: usize,
     pub preempt: bool,
     pub latency: bool,
+    /// Also run the row with `--compile-traces on` (both backends) and
+    /// record the compile columns. On by the issue's contract for the
+    /// 1000-node rows — the scale regime macro-stepping targets.
+    pub compile: bool,
 }
 
 /// The committed sweep: small mixed-trace rows, a mid tier toggling
 /// preemption and the latency model independently, and the 1000-node
-/// open-system rows the overhaul targets.
+/// open-system rows the overhaul targets (those also measure compiled
+/// trace replay).
 pub const SWEEP: [ScalePoint; 6] = [
-    ScalePoint { label: "w5-4n", nodes: 4, synth_jobs_per_node: 0, preempt: false, latency: false },
-    ScalePoint { label: "open-32n", nodes: 32, synth_jobs_per_node: 100, preempt: false, latency: false },
-    ScalePoint { label: "preempt-32n", nodes: 32, synth_jobs_per_node: 100, preempt: true, latency: false },
-    ScalePoint { label: "latency-32n", nodes: 32, synth_jobs_per_node: 100, preempt: false, latency: true },
-    ScalePoint { label: "open-1000n", nodes: 1000, synth_jobs_per_node: 100, preempt: false, latency: false },
-    ScalePoint { label: "full-1000n", nodes: 1000, synth_jobs_per_node: 100, preempt: true, latency: true },
+    ScalePoint { label: "w5-4n", nodes: 4, synth_jobs_per_node: 0, preempt: false, latency: false, compile: false },
+    ScalePoint { label: "open-32n", nodes: 32, synth_jobs_per_node: 100, preempt: false, latency: false, compile: false },
+    ScalePoint { label: "preempt-32n", nodes: 32, synth_jobs_per_node: 100, preempt: true, latency: false, compile: false },
+    ScalePoint { label: "latency-32n", nodes: 32, synth_jobs_per_node: 100, preempt: false, latency: true, compile: false },
+    ScalePoint { label: "open-1000n", nodes: 1000, synth_jobs_per_node: 100, preempt: false, latency: false, compile: true },
+    ScalePoint { label: "full-1000n", nodes: 1000, synth_jobs_per_node: 100, preempt: true, latency: true, compile: true },
 ];
 
 /// One measured sweep row: simulated-event throughput on both queue
-/// backends plus the run's event-queue pressure columns.
+/// backends plus the run's event-queue pressure columns. The
+/// `compile_*` columns are `None` on rows that did not run the
+/// compiled-replay pass ([`ScalePoint::compile`] false) and serialise
+/// as JSON `null`, keeping the `mgb-bench-scale-v1` schema row- and
+/// column-additive over committed baselines.
 #[derive(Clone, Debug)]
 pub struct ScaleRow {
     pub label: String,
@@ -69,10 +78,28 @@ pub struct ScaleRow {
     pub events: u64,
     /// Event-queue high-water mark (the peak-heap-size column).
     pub peak_events: usize,
+    /// Fired events on the observable subset (`EvKind::is_observable`)
+    /// — invariant under `--compile-traces`, asserted per row.
+    pub observable_events: u64,
     /// events/sec on the reference `BinaryHeap` backend.
     pub baseline_events_per_s: f64,
     /// events/sec on the calendar-queue backend.
     pub events_per_s: f64,
+    /// Total events the `--compile-traces on` run fired (calendar
+    /// backend; cross-backend-asserted). Usually below `events` — macro
+    /// segments collapse timer events and never add observable ones —
+    /// but an interrupted segment costs one stale `MacroSegment`
+    /// firing, so no strict inequality holds.
+    pub compile_events: Option<u64>,
+    /// *Effective* events/sec of the compile-on run on the calendar
+    /// backend: the compile-OFF event count divided by the compile-on
+    /// wall time. Keeping the numerator fixed makes the column a
+    /// same-workload wall-clock measure — the raw fired count shrinks
+    /// under macro-stepping, which would make a naive events/sec
+    /// *drop* exactly when compilation works best.
+    pub compile_events_per_s: Option<f64>,
+    /// Effective events/sec of the compile-on run on the heap backend.
+    pub compile_baseline_events_per_s: Option<f64>,
 }
 
 impl ScaleRow {
@@ -81,6 +108,19 @@ impl ScaleRow {
             0.0
         } else {
             self.events_per_s / self.baseline_events_per_s
+        }
+    }
+
+    /// Same-backend, same-workload compile-on / compile-off throughput
+    /// ratio (calendar): >= 1.0 means macro-stepping paid for itself.
+    /// The CI gate (`scripts/check_bench_scale.py`) holds this at 1.0
+    /// on the rows that record it.
+    pub fn compile_ratio(&self) -> Option<f64> {
+        let c = self.compile_events_per_s?;
+        if self.events_per_s <= 0.0 {
+            Some(0.0)
+        } else {
+            Some(c / self.events_per_s)
         }
     }
 }
@@ -124,7 +164,7 @@ fn point_jobs(p: &ScalePoint, seed: u64) -> Vec<JobSpec> {
     }
 }
 
-fn point_config(p: &ScalePoint, node: &NodeSpec) -> ClusterConfig {
+fn point_config(p: &ScalePoint, node: &NodeSpec, compile: bool) -> ClusterConfig {
     ClusterConfig {
         cluster: ClusterSpec::homogeneous(node.clone(), p.nodes),
         mode: SchedMode::Policy("mgb3"),
@@ -134,23 +174,28 @@ fn point_config(p: &ScalePoint, node: &NodeSpec) -> ClusterConfig {
         latency: if p.latency { LatencyModel::lan() } else { LatencyModel::off() },
         admit: None,
         frontend_q: "fifo",
+        compile_traces: compile,
     }
 }
 
 /// Run one sweep point on both backends and cross-check determinism:
 /// the calendar queue must fire exactly the events the heap fires, in
-/// an order that produces identical outcomes.
+/// an order that produces identical outcomes. Points with
+/// [`ScalePoint::compile`] set run a second `--compile-traces on`
+/// pair and additionally cross-check the compiled-replay contract:
+/// identical outcomes, bit-identical makespan, and an unchanged
+/// observable event stream count.
 pub fn run_point(p: &ScalePoint, seed: u64) -> ScaleRow {
     let node = NodeSpec::v100x4();
     let jobs = point_jobs(p, seed);
     let n_jobs = jobs.len();
 
     let t0 = Instant::now();
-    let heap = run_cluster_on_backend(point_config(p, &node), jobs.clone(), "heap");
+    let heap = run_cluster_on_backend(point_config(p, &node, false), jobs.clone(), "heap");
     let heap_s = t0.elapsed().as_secs_f64().max(1e-9);
 
     let t1 = Instant::now();
-    let cal = run_cluster_on_backend(point_config(p, &node), jobs, "calendar");
+    let cal = run_cluster_on_backend(point_config(p, &node, false), jobs.clone(), "calendar");
     let cal_s = t1.elapsed().as_secs_f64().max(1e-9);
 
     // Determinism contract: the backends are interchangeable down to
@@ -167,6 +212,45 @@ pub fn run_point(p: &ScalePoint, seed: u64) -> ScaleRow {
         heap.makespan
     );
 
+    let (mut compile_events, mut compile_eps, mut compile_base_eps) = (None, None, None);
+    if p.compile {
+        let t2 = Instant::now();
+        let cheap = run_cluster_on_backend(point_config(p, &node, true), jobs.clone(), "heap");
+        let cheap_s = t2.elapsed().as_secs_f64().max(1e-9);
+
+        let t3 = Instant::now();
+        let ccal = run_cluster_on_backend(point_config(p, &node, true), jobs, "calendar");
+        let ccal_s = t3.elapsed().as_secs_f64().max(1e-9);
+
+        // Backend determinism holds under macro-stepping too.
+        assert_eq!(ccal.events_fired, cheap.events_fired, "{}: compile events diverged", p.label);
+        assert_eq!(ccal.completed(), cheap.completed(), "{}: compile outcomes diverged", p.label);
+        // Compiled-replay contract vs the compile-off run: identical
+        // outcomes, bit-identical virtual time, identical observable
+        // stream. (Total fired events usually shrink — macro segments
+        // collapse timer events — but an interrupted segment costs one
+        // stale MacroSegment firing, so no inequality is asserted.)
+        assert_eq!(ccal.completed(), cal.completed(), "{}: compile changed outcomes", p.label);
+        assert!(
+            ccal.makespan == cal.makespan,
+            "{}: compile changed makespan ({} vs {})",
+            p.label,
+            ccal.makespan,
+            cal.makespan
+        );
+        assert_eq!(
+            ccal.observable_events, cal.observable_events,
+            "{}: compile changed the observable event stream",
+            p.label
+        );
+
+        compile_events = Some(ccal.events_fired);
+        // Effective throughput: the compile-OFF event count over the
+        // compile-on wall time (same simulated workload per second).
+        compile_eps = Some(cal.events_fired as f64 / ccal_s);
+        compile_base_eps = Some(heap.events_fired as f64 / cheap_s);
+    }
+
     ScaleRow {
         label: p.label.to_string(),
         nodes: p.nodes,
@@ -176,14 +260,19 @@ pub fn run_point(p: &ScalePoint, seed: u64) -> ScaleRow {
         latency: p.latency,
         events: cal.events_fired,
         peak_events: cal.peak_events,
+        observable_events: cal.observable_events,
         baseline_events_per_s: heap.events_fired as f64 / heap_s,
         events_per_s: cal.events_fired as f64 / cal_s,
+        compile_events,
+        compile_events_per_s: compile_eps,
+        compile_baseline_events_per_s: compile_base_eps,
     }
 }
 
 /// The tiny fixed point `bench_smoke` and `scheduler_micro` exercise:
 /// 2 nodes, 64 synthetic jobs, both features off. Fast enough for a
-/// test, still multi-node and open-system.
+/// test, still multi-node and open-system. Compile is on so the smoke
+/// path also exercises `run_point`'s compiled-replay cross-checks.
 pub fn scale_smoke_point(seed: u64) -> ScaleRow {
     let p = ScalePoint {
         label: "smoke-2n",
@@ -191,6 +280,7 @@ pub fn scale_smoke_point(seed: u64) -> ScaleRow {
         synth_jobs_per_node: 32,
         preempt: false,
         latency: false,
+        compile: true,
     };
     run_point(&p, seed)
 }
@@ -206,11 +296,12 @@ pub fn calibration_events_per_s(seed: u64) -> f64 {
         synth_jobs_per_node: 64,
         preempt: false,
         latency: false,
+        compile: false,
     };
     let node = NodeSpec::v100x4();
     let jobs = point_jobs(&p, seed);
     let t0 = Instant::now();
-    let r = run_cluster_on_backend(point_config(&p, &node), jobs, "heap");
+    let r = run_cluster_on_backend(point_config(&p, &node, false), jobs, "heap");
     r.events_fired as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
@@ -225,12 +316,20 @@ pub fn bench_scale_json(provenance: &str, seed: u64, calib: f64, rows: &[ScaleRo
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str(&format!("  \"calibration_events_per_s\": {},\n", float(calib, 1)));
     s.push_str("  \"rows\": [\n");
+    // Option columns serialise as `null` so rows that skipped the
+    // compile pass keep every key (column-additive schema: readers
+    // index by name, committed v1 baselines simply lack the keys).
+    let opt_u64 = |v: Option<u64>| v.map_or("null".to_string(), |v| v.to_string());
+    let opt_float = |v: Option<f64>, p: usize| v.map_or("null".to_string(), |v| float(v, p));
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"label\": \"{}\", \"nodes\": {}, \"jobs\": {}, \"rate_per_node\": {}, \
              \"preempt\": {}, \"latency\": {}, \"events\": {}, \"peak_events\": {}, \
+             \"observable_events\": {}, \
              \"baseline_events_per_s\": {}, \"events_per_s\": {}, \
-             \"speedup_vs_baseline\": {}}}{}\n",
+             \"speedup_vs_baseline\": {}, \
+             \"compile_events\": {}, \"compile_events_per_s\": {}, \
+             \"compile_baseline_events_per_s\": {}, \"compile_ratio\": {}}}{}\n",
             r.label,
             r.nodes,
             r.jobs,
@@ -239,9 +338,14 @@ pub fn bench_scale_json(provenance: &str, seed: u64, calib: f64, rows: &[ScaleRo
             r.latency,
             r.events,
             r.peak_events,
+            r.observable_events,
             float(r.baseline_events_per_s, 1),
             float(r.events_per_s, 1),
             float(r.speedup_vs_baseline(), 3),
+            opt_u64(r.compile_events),
+            opt_float(r.compile_events_per_s, 1),
+            opt_float(r.compile_baseline_events_per_s, 1),
+            opt_float(r.compile_ratio(), 3),
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -260,9 +364,15 @@ pub fn scale(seed: u64) -> Report {
     let mut lines = vec![format!("calibration_events_per_s={calib:.0} (heap backend, 4n x 256 jobs)")];
     for p in &SWEEP {
         let r = run_point(p, seed);
+        let compile_col = match (r.compile_events, r.compile_ratio()) {
+            (Some(ev), Some(ratio)) => {
+                format!(" compile_events={ev} compile_ratio={ratio:.2}x")
+            }
+            _ => String::new(),
+        };
         lines.push(format!(
             "{:<12} nodes={:<5} jobs={:<6} preempt={:<5} latency={:<5} events={:<9} \
-             peak_events={:<7} heap={:.0}ev/s calendar={:.0}ev/s speedup={:.2}x",
+             peak_events={:<7} heap={:.0}ev/s calendar={:.0}ev/s speedup={:.2}x{}",
             r.label,
             r.nodes,
             r.jobs,
@@ -272,7 +382,8 @@ pub fn scale(seed: u64) -> Report {
             r.peak_events,
             r.baseline_events_per_s,
             r.events_per_s,
-            r.speedup_vs_baseline()
+            r.speedup_vs_baseline(),
+            compile_col
         ));
         rows.push(r);
     }
@@ -295,16 +406,27 @@ mod tests {
     #[test]
     fn smoke_point_is_deterministic_and_backend_consistent() {
         // run_point itself asserts the cross-backend determinism
-        // contract; here we additionally pin the simulated columns
-        // across repeated runs (wall-clock columns may differ).
+        // contract AND (the smoke point has `compile: true`) the
+        // compiled-replay invariants; here we additionally pin the
+        // simulated columns across repeated runs (wall-clock columns
+        // may differ).
         let a = scale_smoke_point(7);
         let b = scale_smoke_point(7);
         assert_eq!(a.events, b.events);
         assert_eq!(a.peak_events, b.peak_events);
+        assert_eq!(a.observable_events, b.observable_events);
+        assert_eq!(a.compile_events, b.compile_events);
         assert_eq!(a.jobs, 64);
         assert_eq!(a.nodes, 2);
         assert!(a.events > 0 && a.peak_events > 0);
+        assert!(a.observable_events > 0 && a.observable_events < a.events);
         assert!(a.events_per_s > 0.0 && a.baseline_events_per_s > 0.0);
+        // The compile pass ran and recorded its columns.
+        assert!(a.compile_events.is_some());
+        assert!(a.compile_events.unwrap() > 0);
+        assert!(a.compile_events_per_s.unwrap() > 0.0);
+        assert!(a.compile_baseline_events_per_s.unwrap() > 0.0);
+        assert!(a.compile_ratio().unwrap() > 0.0);
     }
 
     #[test]
@@ -318,14 +440,32 @@ mod tests {
             latency: true,
             events: 1234,
             peak_events: 99,
+            observable_events: 300,
             baseline_events_per_s: 1000.0,
             events_per_s: 12000.0,
+            compile_events: Some(900),
+            compile_events_per_s: Some(24000.0),
+            compile_baseline_events_per_s: Some(2000.0),
         };
-        let s = bench_scale_json("measured", 7, 5e5, &[row]);
+        let no_compile = ScaleRow {
+            label: "y".into(),
+            compile_events: None,
+            compile_events_per_s: None,
+            compile_baseline_events_per_s: None,
+            ..row.clone()
+        };
+        let s = bench_scale_json("measured", 7, 5e5, &[row, no_compile]);
         assert!(s.contains("\"schema\": \"mgb-bench-scale-v1\""));
         assert!(s.contains("\"provenance\": \"measured\""));
         assert!(s.contains("\"speedup_vs_baseline\": 12.000"));
         assert!(s.contains("\"latency\": true"));
+        assert!(s.contains("\"observable_events\": 300"));
+        assert!(s.contains("\"compile_events\": 900"));
+        assert!(s.contains("\"compile_ratio\": 2.000"));
+        // Rows without a compile pass serialise the columns as null so
+        // every row carries every key.
+        assert!(s.contains("\"compile_events\": null"));
+        assert!(s.contains("\"compile_ratio\": null"));
         // Balanced braces/brackets — the cheap structural check the
         // hand-rolled emitter warrants.
         assert_eq!(s.matches('{').count(), s.matches('}').count());

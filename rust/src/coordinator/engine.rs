@@ -134,7 +134,7 @@ use super::events::{DevGens, EvKind, EventQueue};
 use super::metrics::{JobClass, JobOutcome, RunResult};
 use super::placement::{NodePlacement, TaskLedger};
 use crate::gpu::{ClusterSpec, InterferenceProfile, LatencyModel, NodeSpec, PCIE_BYTES_PER_SEC};
-use crate::lazy::{JobTrace, TraceEvent};
+use crate::lazy::{JobTrace, TraceEvent, TraceProgram};
 use crate::sched::{
     canonical_dispatch, canonical_frontend_q, decide_under_pressure, make_dispatcher,
     make_preempt_policy, AdmissionConfig, AdmitDecision, Dispatcher, FrontendQueue, JobInfo,
@@ -194,6 +194,15 @@ pub struct ClusterConfig {
     /// model (a zero-latency frontend never queues); "fifo" keeps the
     /// PR-3 single-server path byte-identical.
     pub frontend_q: &'static str,
+    /// Compiled trace replay (`--compile-traces`): macro-step compiled
+    /// steady-state trace segments (see `lazy::compile`) as one
+    /// calendar-queue event each instead of one event per kernel /
+    /// transfer / host sleep. The replay contract is exactness, not
+    /// approximation — metrics and the observable event subset are
+    /// byte-identical to fine-grained stepping, enforced by equivalence
+    /// tests. `false` (the default) never consults the compiler and
+    /// replays today's paths bit-for-bit.
+    pub compile_traces: bool,
 }
 
 /// One job of the batch.
@@ -326,6 +335,56 @@ enum JPhase {
     Restoring,
 }
 
+/// What one trace event inside a macro segment does when replayed.
+#[derive(Clone, Copy, Debug)]
+enum MacroItemKind {
+    /// A kernel launch: occupies the device from `start` to `end`.
+    /// Carries exactly the arguments the fine-grained Launch arm would
+    /// hand `Device::start_kernel_with`, plus the precomputed
+    /// dedicated-V100 seconds for the metrics credit.
+    Kernel { work_s: f64, warps: u64, ded: f64 },
+    /// A pure sleep (PCIe transfer or host compute): the job is off the
+    /// device from `start` to `end` and resumes past the event.
+    Sleep,
+    /// A zero-time pc step (reservation-covered Malloc/Free, Memset
+    /// Nop): no clock movement, no shared-state change.
+    Skip,
+}
+
+/// One trace event of an in-flight macro segment, with the virtual
+/// interval the dry run computed for it.
+#[derive(Clone, Copy, Debug)]
+struct MacroItem {
+    /// Index into the job's compacted trace (== raw-trace index).
+    pc: usize,
+    start: f64,
+    end: f64,
+    kind: MacroItemKind,
+}
+
+/// An in-flight compiled macro segment (`--compile-traces on` only).
+///
+/// Built by `try_enter_macro`'s dry run: a scratch *clone* of the (then
+/// idle) target device is driven through the exact call sequence the
+/// fine-grained path would make, recording each event's interval. The
+/// segment then rests as ONE pending `MacroSegment` event; firing it —
+/// or any side-exit decompiling it early — replays the same calls on
+/// the real device, which therefore lands in the bit-identical state
+/// (same floats, same kernel handles) fine-grained stepping would have
+/// produced.
+#[derive(Clone, Debug)]
+struct MacroRt {
+    node: usize,
+    dev: usize,
+    /// pc to resume fine-grained stepping at after a full replay
+    /// (the segment's exclusive end).
+    end_pc: usize,
+    /// The owning task's probe interference vector (every launch in a
+    /// segment belongs to one task, so one vector covers them all).
+    iv: InterferenceProfile,
+    items: Vec<MacroItem>,
+}
+
 #[derive(Debug, Default)]
 struct JobRt {
     pc: usize,
@@ -430,6 +489,15 @@ struct JobRt {
     /// `crashed` — the job never ran, never routed, and never held
     /// anything. Always false with admission off.
     rejected: bool,
+    /// The in-flight macro segment, if the job is macro-stepping
+    /// (`--compile-traces on` only; always `None` otherwise). While
+    /// set, `step_job` refuses to step the job — the pending
+    /// `MacroSegment` event (or an early decompile) owns its progress.
+    macro_rt: Option<MacroRt>,
+    /// Generation counter for this job's `MacroSegment` events: bumped
+    /// at every decompile, so the event a decompile orphans fires as a
+    /// stale no-op (the same pattern as `DevGens` for completions).
+    macro_gen: u32,
 }
 
 struct Engine<'h> {
@@ -497,6 +565,27 @@ struct Engine<'h> {
     /// span. Invariant: whenever `fe_queue` is non-empty, this is set —
     /// the queue can never strand a job.
     fe_serve_armed: bool,
+    /// Compiled trace replay is armed: `compile_traces` on and no
+    /// launch hook (a hook must observe every individual launch, so
+    /// macro-stepping is disabled under `--compute real`). `false`
+    /// keeps every macro branch off its bit-identical legacy path.
+    macro_ok: bool,
+    /// Per-job compiled trace programs (`lazy::compile`), shared with
+    /// the memoizing `JobTrace` via `Arc` — cloned specs of one
+    /// distinct trace compile once. Empty when `macro_ok` is false.
+    programs: Vec<std::sync::Arc<TraceProgram>>,
+    /// Per flat device (the `DevGens::flat` layout): the job currently
+    /// macro-stepping on it, if any. A macro segment's kernels are not
+    /// resident on the real device until replay, so this — not
+    /// `Device::n_kernels` — is the occupancy check that keeps two
+    /// macro segments (or a macro and a fine-grained launch) from
+    /// unknowingly sharing a device.
+    macro_on_dev: Vec<Option<usize>>,
+    /// Fired events on the observable subset (`EvKind::is_observable`)
+    /// — the stream the compiled-replay contract holds invariant, so
+    /// `bench scale` can cross-check it per row without arming the
+    /// (allocation-heavy) trace recorder.
+    observable_events: u64,
     hook: Option<LaunchHook<'h>>,
     /// Debug sanitizer (`--sanitize`); `None` = unchecked (the default,
     /// one branch per event away from the plain engine).
@@ -606,6 +695,7 @@ pub fn run_batch_with_hook(
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     run_cluster_with_hook(cluster_cfg, jobs, hook)
 }
@@ -716,18 +806,33 @@ fn run_cluster_inner(
     let rt: Vec<JobRt> = jobs
         .iter()
         .zip(&task_bound)
-        .map(|(j, &n_tasks)| JobRt {
-            est_work_us: j.trace.total_work_us() + j.trace.total_host_us(),
-            est_mem_bytes: j.trace.peak_reserved_bytes(),
-            est_iv: j.trace.peak_interference(),
-            task_iv: vec![InterferenceProfile::ZERO; n_tasks],
-            reprobe_left: latency.reprobe_budget,
-            task_dev: vec![NO_DEV; n_tasks],
-            task_req: vec![None; n_tasks],
-            ledger: TaskLedger::with_tasks(n_tasks),
-            ..JobRt::default()
+        .map(|(j, &n_tasks)| {
+            // One memoized summary read per job: cloned specs of one
+            // distinct trace share the computed-once walk.
+            let s = *j.trace.summary();
+            JobRt {
+                est_work_us: s.total_work_us + s.total_host_us,
+                est_mem_bytes: s.peak_reserved_bytes,
+                est_iv: s.peak_interference,
+                task_iv: vec![InterferenceProfile::ZERO; n_tasks],
+                reprobe_left: latency.reprobe_budget,
+                task_dev: vec![NO_DEV; n_tasks],
+                task_req: vec![None; n_tasks],
+                ledger: TaskLedger::with_tasks(n_tasks),
+                ..JobRt::default()
+            }
         })
         .collect();
+    // Compiled trace replay: compile once per distinct trace (the
+    // `JobTrace` memoizes the program behind an `Arc`), and only when
+    // the layer is armed — an off run never invokes the compiler. A
+    // launch hook disarms it: the hook must see every single launch.
+    let macro_ok = cfg.compile_traces && hook.is_none();
+    let programs: Vec<std::sync::Arc<TraceProgram>> = if macro_ok {
+        jobs.iter().map(|j| j.trace.compiled().clone()).collect()
+    } else {
+        Vec::new()
+    };
     let mut eng = Engine {
         mode: cfg.mode,
         cluster_name: cfg.cluster.name.clone(),
@@ -779,6 +884,10 @@ fn run_cluster_inner(
             }
         },
         fe_serve_armed: false,
+        macro_ok,
+        programs,
+        macro_on_dev: vec![None; n_devs],
+        observable_events: 0,
         latency,
         frontend_busy: 0.0,
         daemon_busy: vec![0.0; n_nodes],
@@ -1268,6 +1377,13 @@ impl<'h> Engine<'h> {
             None => {
                 self.nodes[node].push_waiter(job);
                 if self.preempt.is_some() {
+                    // Side-exit: under preemption, fine-grained
+                    // stepping wakes waiters at every kernel launch —
+                    // instants a macro segment would skip. Decompile
+                    // the node's macros (the waiter just queued keeps
+                    // them from re-entering), then scan for victims
+                    // over the reconstructed in-flight kernels.
+                    self.decompile_node_macros(node, t);
                     self.try_preempt(node, job, req, t);
                 }
                 false
@@ -1352,6 +1468,9 @@ impl<'h> Engine<'h> {
         }
         loop {
             while let Some(ev) = self.evq.pop() {
+                if ev.kind.is_observable() {
+                    self.observable_events += 1;
+                }
                 match ev.kind {
                     EvKind::Wake { job } => {
                         if !self.rt[job].done {
@@ -1395,6 +1514,9 @@ impl<'h> Engine<'h> {
                     EvKind::MigrateArrive { job } => self.handle_migrate_arrive(job, ev.t),
                     EvKind::AdmitReject { job } => self.handle_admit_reject(job, ev.t),
                     EvKind::FrontendServe => self.handle_frontend_serve(ev.t),
+                    EvKind::MacroSegment { job, gen } => {
+                        self.handle_macro_segment(job, gen, ev.t);
+                    }
                 }
                 if self.sanitizer.is_some() {
                     self.sanitize_event(ev.t);
@@ -1520,6 +1642,12 @@ impl<'h> Engine<'h> {
             // reservations would leak them forever.
             return;
         }
+        if self.rt[job].macro_rt.is_some() {
+            // Macro-stepping: the pending MacroSegment event (or an
+            // early decompile) owns this job's progress; a stray Wake
+            // stepping it here would replay trace events twice.
+            return;
+        }
         match self.rt[job].phase {
             JPhase::Normal => {}
             // Quiesced mid-checkpoint; CkptDone re-queues it.
@@ -1539,6 +1667,9 @@ impl<'h> Engine<'h> {
             if self.rt[job].pc >= self.compact[job].len() {
                 self.finish_job(job, t, false);
                 return;
+            }
+            if self.macro_ok && self.try_enter_macro(job, t) {
+                return; // segment entered; its MacroSegment event wakes us
             }
             let node = self.rt[job].node;
             let ev = self.compact[job][self.rt[job].pc];
@@ -1631,6 +1762,24 @@ impl<'h> Engine<'h> {
                     let dev = self.rt[job].task_dev[task];
                     debug_assert_ne!(dev, NO_DEV, "task placed");
                     let dev = dev as usize;
+                    // Side-exit: launching onto a macro-occupied device
+                    // is a membership change its dry run did not price.
+                    // Decompile the occupant first — its in-flight
+                    // kernel becomes resident, and the sharing math
+                    // below sees exactly the fine-grained device.
+                    if let Some(occ) = self.macro_on_dev[self.gens.flat(node, dev)] {
+                        if occ != job {
+                            // Suppress macro re-entry while the
+                            // occupant unwinds: if its replay completes
+                            // at exactly `t` it steps on inline, and
+                            // re-entering a fresh segment on this
+                            // device would race the launch below.
+                            let ok = self.macro_ok;
+                            self.macro_ok = false;
+                            self.decompile_macro(occ, t);
+                            self.macro_ok = ok;
+                        }
+                    }
                     if artifact != NO_ARTIFACT {
                         if let Some(hook) = self.hook.as_mut() {
                             hook(&self.artifact_names[artifact as usize]);
@@ -1970,6 +2119,9 @@ impl<'h> Engine<'h> {
             }
             self.rt[job].saved = saved;
             self.nodes[node].push_waiter(job);
+            // try_restore only runs in preempt mode: the new waiter
+            // must see fine-grained launches (see probe_place).
+            self.decompile_node_macros(node, t);
             return;
         }
         let mut held = 0u64;
@@ -2036,6 +2188,212 @@ impl<'h> Engine<'h> {
         }
     }
 
+    /// Try to macro-step the job from its current pc (`--compile-traces
+    /// on` only): if the compiled program has a steady-state segment
+    /// starting here and the runtime conditions hold — task placed,
+    /// memory ops covered by a live reservation, target device idle and
+    /// not already macro-occupied, and (under preemption) no waiters on
+    /// the node whose per-launch wakes a macro would skip — dry-run the
+    /// segment on a scratch clone of the device and rest the whole run
+    /// as ONE pending `MacroSegment` event. Returns whether a segment
+    /// was entered (the caller must stop stepping).
+    ///
+    /// The dry run drives the clone through the *exact* call sequence
+    /// the fine-grained loop would make (`advance_to` /
+    /// `start_kernel_with` / `next_completion` / `remove_kernel`), so
+    /// the recorded intervals — and the replay of the same calls on the
+    /// real device at decompile time — are bit-identical to fine-
+    /// grained stepping by construction, including the device model's
+    /// self-interference knee that a closed-form `work/speed` sum would
+    /// get wrong.
+    fn try_enter_macro(&mut self, job: usize, t: f64) -> bool {
+        let pc = self.rt[job].pc;
+        let prog = self.programs[job].clone();
+        let Some(seg) = prog.segment_starting_at(pc) else {
+            return false;
+        };
+        let node = self.rt[job].node;
+        let task = seg.task;
+        let dev = match self.rt[job].task_dev.get(task) {
+            Some(&d) if d != NO_DEV => d as usize,
+            _ => return false,
+        };
+        // Malloc/Free replay as zero-time pc steps only under a live
+        // probe reservation; raw allocations touch device free_mem and
+        // can OOM-crash — fine-grained territory.
+        if seg.has_memops && !self.rt[job].ledger.has_reservation(task) {
+            return false;
+        }
+        let fi = self.gens.flat(node, dev);
+        if self.macro_on_dev[fi].is_some() || self.nodes[node].devices[dev].n_kernels() != 0 {
+            // Shared device: processor-sharing rates depend on the
+            // co-resident membership at every completion — step it
+            // fine-grained.
+            return false;
+        }
+        if self.preempt.is_some() && self.nodes[node].has_waiters() {
+            // Fine-grained launches wake this node's waiters (eviction
+            // opportunities, §try_preempt); a macro would skip those
+            // instants.
+            return false;
+        }
+        let iv = self.rt[job].task_iv[task];
+        let mut scratch = self.nodes[node].devices[dev].clone();
+        let mut items: Vec<MacroItem> = Vec::with_capacity(seg.len());
+        let mut cursor = t;
+        for pc2 in seg.start..seg.end {
+            match self.compact[job][pc2] {
+                CEv::Launch { grid, block, work_us, .. } => {
+                    let warps = grid * block.div_ceil(32);
+                    let work_s = work_us as f64 * 1e-6;
+                    scratch.advance_to(cursor);
+                    let h = scratch.start_kernel_with(cursor, work_s, warps, iv);
+                    let ded = work_s / scratch.spec.speed;
+                    let Some((tf, _)) = scratch.next_completion(cursor) else {
+                        return false; // unreachable: the kernel is resident
+                    };
+                    let end = tf.max(cursor);
+                    scratch.advance_to(end);
+                    scratch.remove_kernel(end, h);
+                    items.push(MacroItem {
+                        pc: pc2,
+                        start: cursor,
+                        end,
+                        kind: MacroItemKind::Kernel { work_s, warps, ded },
+                    });
+                    cursor = end;
+                }
+                CEv::Xfer { bytes } => {
+                    let end = cursor + bytes as f64 / PCIE_BYTES_PER_SEC;
+                    items.push(MacroItem {
+                        pc: pc2,
+                        start: cursor,
+                        end,
+                        kind: MacroItemKind::Sleep,
+                    });
+                    cursor = end;
+                }
+                CEv::Host { micros } => {
+                    let end = cursor + micros as f64 * 1e-6;
+                    items.push(MacroItem {
+                        pc: pc2,
+                        start: cursor,
+                        end,
+                        kind: MacroItemKind::Sleep,
+                    });
+                    cursor = end;
+                }
+                CEv::Malloc { .. } | CEv::Free { .. } | CEv::Nop => {
+                    items.push(MacroItem {
+                        pc: pc2,
+                        start: cursor,
+                        end: cursor,
+                        kind: MacroItemKind::Skip,
+                    });
+                }
+                // compile_trace never puts TaskBegin/TaskEnd/etc inside
+                // a segment; refuse rather than trust it.
+                _ => return false,
+            }
+        }
+        let gen = self.rt[job].macro_gen;
+        self.evq.push(cursor, EvKind::MacroSegment { job, gen });
+        self.macro_on_dev[fi] = Some(job);
+        self.rt[job].macro_rt = Some(MacroRt { node, dev, end_pc: seg.end, iv, items });
+        true
+    }
+
+    /// A macro segment ran to its end undisturbed: replay it in full
+    /// and resume fine-grained stepping. Stale firings (an early
+    /// side-exit already decompiled the segment and bumped the
+    /// generation) are no-ops, like stale `DevCompletion`s.
+    fn handle_macro_segment(&mut self, job: usize, gen: u32, t: f64) {
+        if self.rt[job].done || gen != self.rt[job].macro_gen {
+            return;
+        }
+        debug_assert!(self.rt[job].macro_rt.is_some(), "live gen implies a live segment");
+        self.decompile_macro(job, t);
+    }
+
+    /// Replay the job's macro segment onto the real device up to `t`,
+    /// reconstructing exactly the state fine-grained stepping would
+    /// have at this instant, then drop back to fine-grained. The dry
+    /// run made these same device calls on a clone starting from the
+    /// same state, so every float and kernel handle matches:
+    ///
+    /// * items ending at or before `t` replay as launch + advance +
+    ///   remove, crediting the same `act_s`/`ded_s`/`n_kernels` deltas
+    ///   the fine-grained completion arm would have;
+    /// * a kernel in flight at `t` replays its launch, re-registers
+    ///   with the kernel-owner slab, and re-enters the normal
+    ///   `DevCompletion` machinery (pc resting on its Launch event);
+    /// * a pending sleep re-arms its `Wake` with pc past the event —
+    ///   exactly the fine-grained Xfer/Host arm;
+    /// * with everything replayed (`t` is the segment's own
+    ///   `MacroSegment` instant), pc jumps to the segment end and the
+    ///   job steps on inline, matching the fine-grained continuation.
+    fn decompile_macro(&mut self, job: usize, t: f64) {
+        let Some(m) = self.rt[job].macro_rt.take() else {
+            return;
+        };
+        // Orphan the pending MacroSegment event.
+        self.rt[job].macro_gen = self.rt[job].macro_gen.wrapping_add(1);
+        let MacroRt { node, dev, end_pc, iv, items } = m;
+        let fi = self.gens.flat(node, dev);
+        self.macro_on_dev[fi] = None;
+        for item in &items {
+            match item.kind {
+                MacroItemKind::Kernel { work_s, warps, ded } => {
+                    let d = &mut self.nodes[node].devices[dev];
+                    d.advance_to(item.start);
+                    let h = d.start_kernel_with(item.start, work_s, warps, iv);
+                    if item.end <= t {
+                        d.advance_to(item.end);
+                        d.remove_kernel(item.end, h);
+                        let rt = &mut self.rt[job];
+                        rt.act_s += item.end - item.start;
+                        rt.ded_s += ded;
+                        rt.n_kernels += 1;
+                    } else {
+                        self.kernel_owner[fi].push((h, job as u32));
+                        let rt = &mut self.rt[job];
+                        rt.kernel_started = item.start;
+                        rt.kernel_ded = ded;
+                        rt.kernel_work_s = work_s;
+                        rt.inflight = Some((dev, h));
+                        rt.pc = item.pc;
+                        let gen = self.gens.bump(node, dev);
+                        self.evq.push(item.end, EvKind::DevCompletion { node, dev, gen });
+                        return;
+                    }
+                }
+                MacroItemKind::Sleep => {
+                    if item.end > t {
+                        self.rt[job].pc = item.pc + 1;
+                        self.evq.push(item.end, EvKind::Wake { job });
+                        return;
+                    }
+                }
+                MacroItemKind::Skip => {}
+            }
+        }
+        self.rt[job].pc = end_pc;
+        self.step_job(job, t);
+    }
+
+    /// Decompile every macro segment on `node` — the waiter-creation
+    /// side-exit under preemption: the victim scan needs the in-flight
+    /// kernels resident (a macro-stepping job has `inflight: None` and
+    /// would be invisibly unpreemptable), and every later launch must
+    /// wake the new waiter fine-grained.
+    fn decompile_node_macros(&mut self, node: usize, t: f64) {
+        for dev in 0..self.nodes[node].devices.len() {
+            if let Some(occ) = self.macro_on_dev[self.gens.flat(node, dev)] {
+                self.decompile_macro(occ, t);
+            }
+        }
+    }
+
     fn finish_job(&mut self, job: usize, t: f64, crashed: bool) {
         {
             let rt = &mut self.rt[job];
@@ -2045,6 +2403,15 @@ impl<'h> Engine<'h> {
             rt.done = true;
             rt.crashed = crashed;
             rt.ended = t;
+        }
+        // Defensive: a macro-stepping job cannot normally reach here
+        // (its pending MacroSegment keeps the queue non-empty and
+        // step_job refuses it), but if it ever does, drop the segment
+        // without replay — its kernels were never resident — and free
+        // the device slot.
+        if let Some(m) = self.rt[job].macro_rt.take() {
+            self.rt[job].macro_gen = self.rt[job].macro_gen.wrapping_add(1);
+            self.macro_on_dev[self.gens.flat(m.node, m.dev)] = None;
         }
         if self.rt[job].phase == JPhase::Checkpointing {
             // Force-failed mid-checkpoint (drain fallback): the pending
@@ -2126,6 +2493,7 @@ impl<'h> Engine<'h> {
             degraded: self.admit.as_ref().map_or(0, |a| a.degraded),
             events_fired: self.evq.events_fired(),
             peak_events: self.evq.peak_len(),
+            observable_events: self.observable_events,
         }
     }
 }

@@ -115,6 +115,35 @@ pub(crate) enum EvKind {
     /// no frontend queue can form), which keeps `--frontend-q fifo`
     /// byte-identical to the PR-3 frontend.
     FrontendServe,
+    /// A compiled steady-state segment of `job`'s trace runs to its end
+    /// (`--compile-traces on` only): the engine macro-stepped a run of
+    /// launches/sleeps as this single event instead of one event per
+    /// trace op. Stale — the segment was *decompiled* back to
+    /// fine-grained stepping by a side-exit (preemption scan, another
+    /// job launching onto the segment's device) — if `gen` no longer
+    /// matches the job's macro generation. Never pushed with
+    /// compilation off, which keeps `--compile-traces off` runs
+    /// byte-identical to every committed golden.
+    MacroSegment { job: usize, gen: u32 },
+}
+
+impl EvKind {
+    /// Whether this event belongs to the *observable* stream: the
+    /// protocol-level events a real deployment could watch on the wire
+    /// (arrivals, probe/dispatch RPCs, the preemption protocol,
+    /// admission verdicts, frontend service). `Wake`, `DevCompletion`
+    /// and `MacroSegment` are engine timers — how the simulator chooses
+    /// to advance the clock, not something the cluster does. The
+    /// compiled-replay equivalence contract is stated over this subset:
+    /// `--compile-traces on` must fire the identical observable stream
+    /// (same kinds, times, payloads, order) as off, while the timer
+    /// events it fires may differ — collapsing them is the whole point.
+    pub fn is_observable(&self) -> bool {
+        !matches!(
+            self,
+            EvKind::Wake { .. } | EvKind::DevCompletion { .. } | EvKind::MacroSegment { .. }
+        )
+    }
 }
 
 #[derive(Clone, Copy, Debug)]

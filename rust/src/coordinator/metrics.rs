@@ -112,6 +112,13 @@ pub struct RunResult {
     /// High-water mark of the event queue's length over the run (the
     /// peak-heap-size column of `bench scale`).
     pub peak_events: usize,
+    /// Fired events on the *observable* subset (arrivals, probe and
+    /// dispatch RPCs, preemption protocol, admission verdicts) —
+    /// everything except the engine's own timers (`Wake`,
+    /// `DevCompletion`, `MacroSegment`). Invariant across
+    /// `--compile-traces` on/off by the compiled-replay contract, where
+    /// `events_fired` deliberately is not.
+    pub observable_events: u64,
 }
 
 impl RunResult {
@@ -291,6 +298,7 @@ mod tests {
             degraded: 0,
             events_fired: 0,
             peak_events: 0,
+            observable_events: 0,
         }
     }
 

@@ -69,24 +69,22 @@ mod tests {
             class: JobClass::Small,
             arrival: 0.0,
             slo: None,
-            trace: JobTrace {
-                events: vec![
-                    TraceEvent::TaskBegin { task: 0, res },
-                    TraceEvent::Malloc { task: 0, bytes: mem },
-                    TraceEvent::H2D { task: 0, bytes: mem },
-                    TraceEvent::Launch {
-                        task: 0,
-                        kernel: "k".into(),
-                        artifact: None,
-                        grid: warps,
-                        block: 32,
-                        work_us,
-                    },
-                    TraceEvent::D2H { task: 0, bytes: mem },
-                    TraceEvent::Free { task: 0, bytes: mem },
-                    TraceEvent::TaskEnd { task: 0 },
-                ],
-            },
+            trace: JobTrace::new(vec![
+                TraceEvent::TaskBegin { task: 0, res },
+                TraceEvent::Malloc { task: 0, bytes: mem },
+                TraceEvent::H2D { task: 0, bytes: mem },
+                TraceEvent::Launch {
+                    task: 0,
+                    kernel: "k".into(),
+                    artifact: None,
+                    grid: warps,
+                    block: 32,
+                    work_us,
+                },
+                TraceEvent::D2H { task: 0, bytes: mem },
+                TraceEvent::Free { task: 0, bytes: mem },
+                TraceEvent::TaskEnd { task: 0 },
+            ]),
         }
     }
 
@@ -339,6 +337,7 @@ mod tests {
                     latency: LatencyModel::off(),
                     admit: None,
                     frontend_q: "fifo",
+                    compile_traces: false,
                 },
                 jobs.clone(),
             );
@@ -368,6 +367,7 @@ mod tests {
                 latency: LatencyModel::off(),
                 admit: None,
                 frontend_q: "fifo",
+                compile_traces: false,
             },
             jobs,
         );
@@ -412,6 +412,7 @@ mod tests {
                     latency: LatencyModel::off(),
                     admit: None,
                     frontend_q: "fifo",
+                    compile_traces: false,
                 },
                 jobs,
             )
@@ -443,6 +444,7 @@ mod tests {
             latency: LatencyModel::off(),
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -474,6 +476,7 @@ mod tests {
                 latency: LatencyModel::off(),
                 admit: None,
                 frontend_q: "fifo",
+                compile_traces: false,
             },
             jobs,
         );
@@ -507,6 +510,7 @@ mod tests {
             latency: LatencyModel::off(),
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         }
     }
 
@@ -676,6 +680,7 @@ mod tests {
             latency: LatencyModel::off(),
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);

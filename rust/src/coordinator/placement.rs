@@ -283,6 +283,14 @@ impl NodePlacement {
         }
     }
 
+    /// Whether any job is queued to retry placement on this node. The
+    /// compiled-replay layer refuses macro entry on a node with waiters
+    /// under preemption: fine-grained stepping wakes them at every
+    /// kernel launch, and a macro segment would skip those instants.
+    pub fn has_waiters(&self) -> bool {
+        !self.wait_q.is_empty()
+    }
+
     /// Drain the wait queue (the engine turns these into Wake events).
     pub fn take_waiters(&mut self) -> Vec<usize> {
         for &job in &self.wait_q {

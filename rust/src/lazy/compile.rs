@@ -1,0 +1,362 @@
+//! Trace compilation: compact steady-state segments of a [`JobTrace`]
+//! into macro-step plans the engine can replay as one event each.
+//!
+//! A *segment* is a maximal run of events, inside one open task, that
+//! the engine can step without consulting the scheduler: kernel
+//! launches on the task's already-reserved device, host/transfer
+//! sleeps, and reservation-covered `Malloc`/`Free`/`Memset` (which the
+//! fine-grained stepper treats as pure `pc += 1` when the task holds a
+//! probe reservation). Everything that can *block* or change placement
+//! state is a side-exit boundary and never enters a segment:
+//!
+//! - `TaskBegin` — a probe that may block on placement (and an
+//!   SLO-class boundary: admission/latency decisions hang off it);
+//! - `TaskEnd` — releases the reservation and wakes waiters;
+//! - any op on a different task than the segment's.
+//!
+//! Whether a `Malloc`/`Free` actually changes held bytes is a *runtime*
+//! property (it depends on the task holding a reservation), so segments
+//! containing them are marked `has_memops` and the engine only enters
+//! such a segment when the reservation is live — otherwise it falls
+//! back to fine-grained stepping, where the raw-allocation (crashable)
+//! path runs exactly as before.
+//!
+//! The plan is static: event-index ranges plus precomputed totals
+//! (dedicated work, host time, transfer bytes, written bytes). Exact
+//! per-kernel timing is *not* precomputed here — the engine dry-runs
+//! the segment against a scratch clone of the target device at entry
+//! time, guaranteeing bit-identical float math with fine-grained
+//! stepping by construction.
+//!
+//! Indices are in raw trace-event space, which the engine's compact
+//! (`CEv`) stream mirrors 1:1, so the same plan drives both.
+
+use super::trace::TraceEvent;
+
+/// Sentinel in [`TraceProgram::starts`]: no segment starts here.
+const NO_SEG: u32 = u32::MAX;
+
+/// One compiled steady-state segment: events `[start, end)` of the
+/// trace, all within open task `task`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    /// First event index of the segment.
+    pub start: usize,
+    /// One past the last event index.
+    pub end: usize,
+    /// The single task whose ops the segment contains.
+    pub task: usize,
+    /// Kernel launches inside the segment.
+    pub n_kernels: usize,
+    /// Total dedicated kernel time (microseconds).
+    pub work_us: u64,
+    /// Total host-phase time (microseconds).
+    pub host_us: u64,
+    /// Total H2D + D2H transfer bytes (each occupies the PCIe link for
+    /// `bytes / PCIE_BYTES_PER_SEC` seconds of the segment).
+    pub xfer_bytes: u64,
+    /// Device bytes written (H2D + Memset traffic) — the delta a
+    /// checkpoint taken after the segment must account for.
+    pub written_bytes: u64,
+    /// Net resource deltas the segment would apply *without* a
+    /// reservation: raw Malloc / Free byte totals. Under a live
+    /// reservation both are absorbed by the up-front reserve and the
+    /// segment is device-state-pure.
+    pub alloc_bytes: u64,
+    pub free_bytes: u64,
+    /// Whether the segment contains Malloc/Free at all. If so, entering
+    /// it requires the task's probe reservation to be live (the
+    /// condition that makes those ops pure).
+    pub has_memops: bool,
+}
+
+impl Segment {
+    /// Events covered.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+
+    /// Nominal (dedicated, interference-free, reference-speed) duration
+    /// of the segment given the simulator's PCIe bandwidth — a summary
+    /// for reporting, not the replay clock (the engine's entry-time
+    /// dry-run computes exact times).
+    pub fn nominal_duration_s(&self, pcie_bytes_per_sec: f64) -> f64 {
+        self.work_us as f64 * 1e-6
+            + self.host_us as f64 * 1e-6
+            + self.xfer_bytes as f64 / pcie_bytes_per_sec
+    }
+}
+
+/// The compiled segment plan of one trace: the segments plus a dense
+/// event-index → segment lookup for the engine's stepping loop.
+#[derive(Clone, Debug, Default)]
+pub struct TraceProgram {
+    pub segments: Vec<Segment>,
+    /// `starts[i]` = index into `segments` of the segment starting at
+    /// event `i`, or `NO_SEG`.
+    starts: Vec<u32>,
+}
+
+impl TraceProgram {
+    /// The segment starting exactly at event index `pc`, if any.
+    #[inline]
+    pub fn segment_starting_at(&self, pc: usize) -> Option<&Segment> {
+        match self.starts.get(pc) {
+            Some(&s) if s != NO_SEG => Some(&self.segments[s as usize]),
+            _ => None,
+        }
+    }
+
+    /// Events covered by any segment (for reporting/tests).
+    pub fn covered_events(&self) -> usize {
+        self.segments.iter().map(Segment::len).sum()
+    }
+}
+
+/// Compile `events` into a [`TraceProgram`]. A candidate run must span
+/// at least two events and contain at least one kernel launch to
+/// become a segment — shorter runs cost one calendar event either way,
+/// so compacting them buys nothing.
+pub fn compile_trace(events: &[TraceEvent]) -> TraceProgram {
+    struct Run {
+        start: usize,
+        task: Option<usize>,
+        n_kernels: usize,
+        work_us: u64,
+        host_us: u64,
+        xfer_bytes: u64,
+        written_bytes: u64,
+        alloc_bytes: u64,
+        free_bytes: u64,
+        has_memops: bool,
+    }
+    impl Run {
+        fn fresh(start: usize) -> Self {
+            Run {
+                start,
+                task: None,
+                n_kernels: 0,
+                work_us: 0,
+                host_us: 0,
+                xfer_bytes: 0,
+                written_bytes: 0,
+                alloc_bytes: 0,
+                free_bytes: 0,
+                has_memops: false,
+            }
+        }
+    }
+
+    let mut prog = TraceProgram {
+        segments: Vec::new(),
+        starts: vec![NO_SEG; events.len()],
+    };
+    let mut run = Run::fresh(0);
+    let mut flush = |run: &mut Run, end: usize, prog: &mut TraceProgram| {
+        let qualifies = run.task.is_some() && run.n_kernels >= 1 && end - run.start >= 2;
+        if qualifies {
+            prog.starts[run.start] = prog.segments.len() as u32;
+            prog.segments.push(Segment {
+                start: run.start,
+                end,
+                task: run.task.expect("qualifying run has a task"),
+                n_kernels: run.n_kernels,
+                work_us: run.work_us,
+                host_us: run.host_us,
+                xfer_bytes: run.xfer_bytes,
+                written_bytes: run.written_bytes,
+                alloc_bytes: run.alloc_bytes,
+                free_bytes: run.free_bytes,
+                has_memops: run.has_memops,
+            });
+        }
+        *run = Run::fresh(end);
+    };
+
+    for (i, e) in events.iter().enumerate() {
+        // Boundary events: flush the open run, then skip past them.
+        let task = match e {
+            TraceEvent::TaskBegin { .. } | TraceEvent::TaskEnd { .. } => {
+                flush(&mut run, i, &mut prog);
+                run.start = i + 1;
+                continue;
+            }
+            TraceEvent::Malloc { task, .. }
+            | TraceEvent::H2D { task, .. }
+            | TraceEvent::D2H { task, .. }
+            | TraceEvent::Memset { task, .. }
+            | TraceEvent::Launch { task, .. }
+            | TraceEvent::Free { task, .. } => Some(*task),
+            TraceEvent::Host { .. } => None,
+        };
+        // A different task's op ends the run and starts a new one here.
+        if let (Some(t), Some(open)) = (task, run.task) {
+            if t != open {
+                flush(&mut run, i, &mut prog);
+            }
+        }
+        if run.task.is_none() {
+            run.task = task;
+        }
+        match e {
+            TraceEvent::Malloc { bytes, .. } => {
+                run.alloc_bytes += bytes;
+                run.has_memops = true;
+            }
+            TraceEvent::Free { bytes, .. } => {
+                run.free_bytes += bytes;
+                run.has_memops = true;
+            }
+            TraceEvent::H2D { bytes, .. } => {
+                run.xfer_bytes += bytes;
+                run.written_bytes += bytes;
+            }
+            TraceEvent::D2H { bytes, .. } => run.xfer_bytes += bytes,
+            TraceEvent::Memset { bytes, .. } => run.written_bytes += bytes,
+            TraceEvent::Launch { work_us, .. } => {
+                run.n_kernels += 1;
+                run.work_us += work_us;
+            }
+            TraceEvent::Host { micros } => run.host_us += micros,
+            TraceEvent::TaskBegin { .. } | TraceEvent::TaskEnd { .. } => unreachable!(),
+        }
+    }
+    flush(&mut run, events.len(), &mut prog);
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::InterferenceProfile;
+    use crate::lazy::{JobTrace, TaskResources};
+
+    fn res() -> TaskResources {
+        TaskResources {
+            static_dev: None,
+            mem_bytes: 1 << 20,
+            heap_bytes: 0,
+            grid: 8,
+            block: 128,
+            written_bytes: 0,
+            iv: InterferenceProfile::ZERO,
+        }
+    }
+
+    fn launch(task: usize, work_us: u64) -> TraceEvent {
+        TraceEvent::Launch {
+            task,
+            kernel: "k".into(),
+            artifact: None,
+            grid: 8,
+            block: 128,
+            work_us,
+        }
+    }
+
+    #[test]
+    fn steady_state_run_compacts_into_one_segment() {
+        let events = vec![
+            TraceEvent::TaskBegin { task: 0, res: res() },
+            TraceEvent::Malloc { task: 0, bytes: 100 },
+            TraceEvent::H2D { task: 0, bytes: 1000 },
+            launch(0, 10),
+            TraceEvent::Host { micros: 5 },
+            launch(0, 20),
+            TraceEvent::D2H { task: 0, bytes: 500 },
+            TraceEvent::Free { task: 0, bytes: 100 },
+            TraceEvent::TaskEnd { task: 0 },
+        ];
+        let p = compile_trace(&events);
+        assert_eq!(p.segments.len(), 1);
+        let s = &p.segments[0];
+        assert_eq!((s.start, s.end), (1, 8), "everything between begin and end");
+        assert_eq!(s.task, 0);
+        assert_eq!(s.n_kernels, 2);
+        assert_eq!(s.work_us, 30);
+        assert_eq!(s.host_us, 5);
+        assert_eq!(s.xfer_bytes, 1500);
+        assert_eq!(s.written_bytes, 1000);
+        assert_eq!((s.alloc_bytes, s.free_bytes), (100, 100));
+        assert!(s.has_memops);
+        assert!(p.segment_starting_at(1).is_some());
+        assert!(p.segment_starting_at(2).is_none(), "only the start index maps");
+        assert!(p.segment_starting_at(0).is_none());
+        let nominal = s.nominal_duration_s(1e9);
+        assert!((nominal - (30e-6 + 5e-6 + 1500.0 / 1e9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn boundaries_and_short_runs_do_not_compact() {
+        // A lone launch (1 event) and a probe boundary split: no segment
+        // may cross TaskBegin/TaskEnd, and singletons don't qualify.
+        let events = vec![
+            TraceEvent::TaskBegin { task: 0, res: res() },
+            launch(0, 10),
+            TraceEvent::TaskEnd { task: 0 },
+            TraceEvent::TaskBegin { task: 1, res: res() },
+            launch(1, 10),
+            launch(1, 20),
+            TraceEvent::TaskEnd { task: 1 },
+        ];
+        let p = compile_trace(&events);
+        assert_eq!(p.segments.len(), 1, "only the two-launch run qualifies");
+        assert_eq!((p.segments[0].start, p.segments[0].end), (4, 6));
+        assert_eq!(p.segments[0].task, 1);
+        assert_eq!(p.covered_events(), 2);
+    }
+
+    #[test]
+    fn kernel_free_runs_do_not_qualify() {
+        // Pure transfer/host runs stay fine-grained: without a launch
+        // there is no device residency to batch.
+        let events = vec![
+            TraceEvent::TaskBegin { task: 0, res: res() },
+            TraceEvent::H2D { task: 0, bytes: 10 },
+            TraceEvent::Host { micros: 5 },
+            TraceEvent::D2H { task: 0, bytes: 10 },
+            TraceEvent::TaskEnd { task: 0 },
+        ];
+        assert!(compile_trace(&events).segments.is_empty());
+    }
+
+    #[test]
+    fn interleaved_tasks_split_segments_per_task() {
+        // Ops of two concurrently-open tasks interleave: each maximal
+        // same-task run is its own candidate.
+        let events = vec![
+            TraceEvent::TaskBegin { task: 0, res: res() },
+            TraceEvent::TaskBegin { task: 1, res: res() },
+            launch(0, 10),
+            launch(0, 10),
+            launch(1, 20),
+            launch(1, 20),
+            TraceEvent::TaskEnd { task: 0 },
+            TraceEvent::TaskEnd { task: 1 },
+        ];
+        let p = compile_trace(&events);
+        assert_eq!(p.segments.len(), 2);
+        assert_eq!((p.segments[0].start, p.segments[0].end, p.segments[0].task), (2, 4, 0));
+        assert_eq!((p.segments[1].start, p.segments[1].end, p.segments[1].task), (4, 6, 1));
+    }
+
+    #[test]
+    fn job_trace_memoizes_the_program_across_clones() {
+        let t = JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res: res() },
+            launch(0, 10),
+            launch(0, 20),
+            TraceEvent::TaskEnd { task: 0 },
+        ]);
+        let a = t.compiled().clone();
+        assert_eq!(a.segments.len(), 1);
+        // Same Arc on every call, shared by clones (no recompile per job).
+        assert!(std::sync::Arc::ptr_eq(&a, t.compiled()));
+        let c = t.clone();
+        assert!(std::sync::Arc::ptr_eq(&a, c.compiled()));
+    }
+}

@@ -13,8 +13,10 @@
 //! is computed from the replayed allocations — so the scheduler always
 //! learns a task's full needs before any device op executes.
 
+pub mod compile;
 mod interp;
 mod trace;
 
+pub use compile::{compile_trace, Segment, TraceProgram};
 pub use interp::{interpret, InterpError};
-pub use trace::{JobTrace, TaskResources, TraceEvent};
+pub use trace::{JobTrace, TaskResources, TraceEvent, TraceSummary};

@@ -85,41 +85,107 @@ pub enum TraceEvent {
     Host { micros: u64 },
 }
 
+/// Derived summary numbers of one [`JobTrace`], computed in a single
+/// walk and memoized. These feed the engine's per-job load estimates
+/// and every dispatcher probe — paths hot enough that re-walking the
+/// event vector per call (the old accessor behaviour) showed up at
+/// fleet scale.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Distinct tasks in the trace.
+    pub n_tasks: usize,
+    /// Total dedicated kernel time (microseconds) across all launches.
+    pub total_work_us: u64,
+    /// Total host time (microseconds).
+    pub total_host_us: u64,
+    /// Peak simultaneous reserved memory, assuming each task's
+    /// reservation is held from TaskBegin to TaskEnd.
+    pub peak_reserved_bytes: u64,
+    /// Componentwise-max interference profile over all task probes.
+    pub peak_interference: InterferenceProfile,
+}
+
+impl TraceSummary {
+    fn compute(events: &[TraceEvent]) -> Self {
+        let mut s = TraceSummary::default();
+        let mut cur = 0u64;
+        let mut held: std::collections::HashMap<usize, u64> = Default::default();
+        for e in events {
+            match e {
+                TraceEvent::TaskBegin { task, res } => {
+                    s.n_tasks += 1;
+                    s.peak_interference = s.peak_interference.max(&res.iv);
+                    held.insert(*task, res.reserve_bytes());
+                    cur += res.reserve_bytes();
+                    s.peak_reserved_bytes = s.peak_reserved_bytes.max(cur);
+                }
+                TraceEvent::TaskEnd { task } => {
+                    cur -= held.remove(task).unwrap_or(0);
+                }
+                TraceEvent::Launch { work_us, .. } => s.total_work_us += work_us,
+                TraceEvent::Host { micros } => s.total_host_us += micros,
+                _ => {}
+            }
+        }
+        s
+    }
+}
+
 /// The full trace of one job, plus derived summary numbers.
+///
+/// The summary and the compiled segment plan are computed once and
+/// memoized; clones carry the memo (job batches clone one cached
+/// master trace per distinct program, so the walk happens once per
+/// *program*, not once per job). `events` stays public for trace
+/// builders and in-place stampers — any code that mutates it after a
+/// summary may have been read must call
+/// [`JobTrace::invalidate_derived`].
 #[derive(Clone, Debug, Default)]
 pub struct JobTrace {
     pub events: Vec<TraceEvent>,
+    summary: std::sync::OnceLock<TraceSummary>,
+    compiled: std::sync::OnceLock<std::sync::Arc<super::compile::TraceProgram>>,
 }
 
 impl JobTrace {
+    /// A trace over `events` with empty (lazily computed) memos.
+    pub fn new(events: Vec<TraceEvent>) -> Self {
+        JobTrace { events, ..Default::default() }
+    }
+
+    /// The memoized one-walk summary.
+    pub fn summary(&self) -> &TraceSummary {
+        self.summary.get_or_init(|| TraceSummary::compute(&self.events))
+    }
+
+    /// The memoized compiled segment plan (see [`super::compile`]).
+    /// Clones share it through the `Arc`.
+    pub fn compiled(&self) -> &std::sync::Arc<super::compile::TraceProgram> {
+        self.compiled
+            .get_or_init(|| std::sync::Arc::new(super::compile::compile_trace(&self.events)))
+    }
+
+    /// Drop the memoized summary and segment plan after an in-place
+    /// mutation of `events` (e.g. interference stamping), so the next
+    /// accessor call recomputes from the current events.
+    pub fn invalidate_derived(&mut self) {
+        self.summary = std::sync::OnceLock::new();
+        self.compiled = std::sync::OnceLock::new();
+    }
+
     /// Number of distinct tasks in the trace.
     pub fn n_tasks(&self) -> usize {
-        self.events
-            .iter()
-            .filter(|e| matches!(e, TraceEvent::TaskBegin { .. }))
-            .count()
+        self.summary().n_tasks
     }
 
     /// Total dedicated kernel time (microseconds) across all launches.
     pub fn total_work_us(&self) -> u64 {
-        self.events
-            .iter()
-            .map(|e| match e {
-                TraceEvent::Launch { work_us, .. } => *work_us,
-                _ => 0,
-            })
-            .sum()
+        self.summary().total_work_us
     }
 
     /// Total host time (microseconds).
     pub fn total_host_us(&self) -> u64 {
-        self.events
-            .iter()
-            .map(|e| match e {
-                TraceEvent::Host { micros } => *micros,
-                _ => 0,
-            })
-            .sum()
+        self.summary().total_host_us
     }
 
     /// Componentwise-max interference profile over all task probes —
@@ -128,35 +194,13 @@ impl JobTrace {
     /// (the per-task vectors refine it at TaskBegin). All-zero for
     /// interference-free traces.
     pub fn peak_interference(&self) -> InterferenceProfile {
-        let mut peak = InterferenceProfile::ZERO;
-        for e in &self.events {
-            if let TraceEvent::TaskBegin { res, .. } = e {
-                peak = peak.max(&res.iv);
-            }
-        }
-        peak
+        self.summary().peak_interference
     }
 
     /// Peak simultaneous reserved memory implied by the trace, assuming
     /// each task's reservation is held from TaskBegin to TaskEnd.
     pub fn peak_reserved_bytes(&self) -> u64 {
-        let mut cur = 0u64;
-        let mut peak = 0u64;
-        let mut held: std::collections::HashMap<usize, u64> = Default::default();
-        for e in &self.events {
-            match e {
-                TraceEvent::TaskBegin { task, res } => {
-                    held.insert(*task, res.reserve_bytes());
-                    cur += res.reserve_bytes();
-                    peak = peak.max(cur);
-                }
-                TraceEvent::TaskEnd { task } => {
-                    cur -= held.remove(task).unwrap_or(0);
-                }
-                _ => {}
-            }
-        }
-        peak
+        self.summary().peak_reserved_bytes
     }
 
     /// Structural sanity: every task begins once, ends once, and all its
@@ -329,8 +373,7 @@ mod tests {
 
     #[test]
     fn conformant_trace_passes() {
-        let t = JobTrace {
-            events: vec![
+        let t = JobTrace::new(vec![
                 TraceEvent::TaskBegin { task: 0, res: res(1024) },
                 TraceEvent::Malloc { task: 0, bytes: 1024 },
                 TraceEvent::H2D { task: 0, bytes: 1024 },
@@ -344,28 +387,24 @@ mod tests {
                 },
                 TraceEvent::Free { task: 0, bytes: 1024 },
                 TraceEvent::TaskEnd { task: 0 },
-            ],
-        };
+            ]);
         assert!(t.check_conformance().is_ok());
     }
 
     #[test]
     fn over_reserve_malloc_is_rejected() {
-        let t = JobTrace {
-            events: vec![
+        let t = JobTrace::new(vec![
                 TraceEvent::TaskBegin { task: 0, res: res(1024) },
                 TraceEvent::Malloc { task: 0, bytes: 4096 },
                 TraceEvent::TaskEnd { task: 0 },
-            ],
-        };
+            ]);
         let err = t.check_conformance().unwrap_err();
         assert!(err.contains("exceeds declared reserve"), "{err}");
     }
 
     #[test]
     fn oversized_launch_geometry_is_rejected() {
-        let t = JobTrace {
-            events: vec![
+        let t = JobTrace::new(vec![
                 TraceEvent::TaskBegin { task: 0, res: res(1024) },
                 TraceEvent::Launch {
                     task: 0,
@@ -376,17 +415,14 @@ mod tests {
                     work_us: 10,
                 },
                 TraceEvent::TaskEnd { task: 0 },
-            ],
-        };
+            ]);
         let err = t.check_conformance().unwrap_err();
         assert!(err.contains("launch geometry"), "{err}");
     }
 
     #[test]
     fn event_on_undeclared_task_is_rejected() {
-        let t = JobTrace {
-            events: vec![TraceEvent::Malloc { task: 7, bytes: 64 }],
-        };
+        let t = JobTrace::new(vec![TraceEvent::Malloc { task: 7, bytes: 64 }]);
         assert!(t.check_conformance().is_err());
     }
 
@@ -394,27 +430,73 @@ mod tests {
     fn written_bound_enforced_only_when_tracked() {
         let mut r = res(1024);
         r.written_bytes = 1024; // one H2D's worth
-        let t = JobTrace {
-            events: vec![
+        let t = JobTrace::new(vec![
                 TraceEvent::TaskBegin { task: 0, res: r },
                 TraceEvent::H2D { task: 0, bytes: 1024 },
                 TraceEvent::Memset { task: 0, bytes: 1024 }, // over the bound
                 TraceEvent::TaskEnd { task: 0 },
-            ],
-        };
+            ]);
         let err = t.check_conformance().unwrap_err();
         assert!(err.contains("written"), "{err}");
         // Untracked (0) disables the written check but keeps the rest.
         let mut r0 = res(1024);
         r0.written_bytes = 0;
-        let t0 = JobTrace {
-            events: vec![
+        let t0 = JobTrace::new(vec![
                 TraceEvent::TaskBegin { task: 0, res: r0 },
                 TraceEvent::H2D { task: 0, bytes: 1024 },
                 TraceEvent::Memset { task: 0, bytes: 1024 },
                 TraceEvent::TaskEnd { task: 0 },
-            ],
-        };
+            ]);
         assert!(t0.check_conformance().is_ok());
+    }
+
+    #[test]
+    fn summary_is_one_walk_and_matches_accessors() {
+        let t = JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res: res(1024) },
+            TraceEvent::Launch {
+                task: 0,
+                kernel: "k".into(),
+                artifact: None,
+                grid: 8,
+                block: 128,
+                work_us: 10,
+            },
+            TraceEvent::Host { micros: 5 },
+            TraceEvent::TaskEnd { task: 0 },
+            TraceEvent::TaskBegin { task: 1, res: res(2048) },
+            TraceEvent::TaskEnd { task: 1 },
+        ]);
+        let s = *t.summary();
+        assert_eq!(s.n_tasks, 2);
+        assert_eq!(s.total_work_us, 10);
+        assert_eq!(s.total_host_us, 5);
+        // Tasks do not overlap: peak is the larger single reservation.
+        assert_eq!(s.peak_reserved_bytes, 2048);
+        assert_eq!(t.n_tasks(), s.n_tasks);
+        assert_eq!(t.total_work_us(), s.total_work_us);
+        assert_eq!(t.total_host_us(), s.total_host_us);
+        assert_eq!(t.peak_reserved_bytes(), s.peak_reserved_bytes);
+        assert_eq!(t.peak_interference(), s.peak_interference);
+        // The memo is stable (same pointer on every call)...
+        assert!(std::ptr::eq(t.summary(), t.summary()));
+        // ...and clones carry it without recomputing.
+        let c = t.clone();
+        assert_eq!(*c.summary(), s);
+    }
+
+    #[test]
+    fn invalidate_derived_recomputes_after_mutation() {
+        let mut t = JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res: res(1024) },
+            TraceEvent::TaskEnd { task: 0 },
+        ]);
+        assert!(t.peak_interference().is_zero());
+        // In-place stamp (what workloads::assign_interference does).
+        if let TraceEvent::TaskBegin { res, .. } = &mut t.events[0] {
+            res.iv = InterferenceProfile::new(0.5, 0.1, 0.2);
+        }
+        t.invalidate_derived();
+        assert!(!t.peak_interference().is_zero(), "memo must not go stale");
     }
 }

@@ -61,6 +61,7 @@ const RUN_FLAGS: &[&str] = &[
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
     "coalesce-window", "workers", "seed", "compute", "artifacts", "sanitize",
+    "compile-traces",
 ];
 const NN_FLAGS: &[&str] = &[
     "task", "jobs", "node", "sched", "nodes", "dispatch", "rate", "arrivals",
@@ -68,7 +69,7 @@ const NN_FLAGS: &[&str] = &[
     "preempt", "ckpt-cost",
     "migrate", "migrate-bw", "slo", "interference",
     "latency", "probe-rtt", "dispatch-cost", "reprobe-after", "reprobe-budget",
-    "coalesce-window", "workers", "seed", "sanitize",
+    "coalesce-window", "workers", "seed", "sanitize", "compile-traces",
 ];
 const ARTIFACTS_FLAGS: &[&str] = &["dir"];
 /// `lint` also takes positional `.gir` paths, parsed by `cmd_lint`
@@ -120,6 +121,7 @@ const HELP: &str = "\
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
         [--workers N] [--seed N] [--compute real] [--artifacts DIR] [--sanitize]
+        [--compile-traces]
   nn    [--task predict|train|detect|generate|mix] [--jobs N] [--sched ..] [--workers N]
         [--nodes N] [--dispatch rr|least|mem|latency|partition] [--rate JOBS_PER_S]
         [--arrivals poisson|mmpp|flash]
@@ -129,7 +131,7 @@ const HELP: &str = "\
         [--migrate off|cluster] [--migrate-bw BYTES_PER_S] [--slo] [--interference]
         [--latency off|lan|wan] [--probe-rtt SECONDS] [--dispatch-cost SECONDS]
         [--reprobe-after SECONDS] [--reprobe-budget N] [--coalesce-window SECONDS]
-        [--sanitize]
+        [--sanitize] [--compile-traces]
   compile <file.gir>
   lint  [--builtin] [--json PATH] [file.gir ...]
   artifacts [--dir DIR]";
@@ -288,6 +290,24 @@ fn parse_sanitize(f: &HashMap<String, String>) -> Result<bool, String> {
     }
 }
 
+/// `--compile-traces` turns on compiled trace replay: steady-state
+/// trace segments are compacted (`lazy::compile`) and macro-stepped as
+/// one event each, decompiling back to fine-grained stepping at every
+/// side-exit. Exactness, not approximation: metrics and the observable
+/// event subset are byte-identical to an off run (enforced by
+/// equivalence tests); only the event count changes. Off by default —
+/// the engine then never consults the trace compiler. Same bare-flag
+/// convention as `--slo`.
+fn parse_compile_traces(f: &HashMap<String, String>) -> Result<bool, String> {
+    match f.get("compile-traces").map(String::as_str) {
+        None | Some("off") => Ok(false),
+        Some("true") | Some("on") => Ok(true),
+        Some(other) => {
+            Err(format!("invalid --compile-traces '{other}' (bare flag, on, or off)"))
+        }
+    }
+}
+
 /// The validated run/nn option bundle — any invalid value is one
 /// error naming it.
 struct RunOpts {
@@ -301,6 +321,7 @@ struct RunOpts {
     /// traffic; the shape is one of "poisson" | "mmpp" | "flash".
     arrivals: Option<(f64, &'static str)>,
     sanitize: bool,
+    compile_traces: bool,
 }
 
 fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
@@ -324,6 +345,7 @@ fn parse_run_opts(f: &HashMap<String, String>) -> Result<RunOpts, String> {
         frontend_q,
         arrivals: parse_arrivals(f)?,
         sanitize: parse_sanitize(f)?,
+        compile_traces: parse_compile_traces(f)?,
     })
 }
 
@@ -621,6 +643,7 @@ fn cmd_run(f: &HashMap<String, String>) -> i32 {
         latency: opts.latency,
         admit: opts.admit,
         frontend_q: opts.frontend_q,
+        compile_traces: opts.compile_traces,
     };
     let mut sanitizer: Option<SanitizerReport> = None;
     let r = if opts.sanitize {
@@ -747,6 +770,7 @@ fn cmd_nn(f: &HashMap<String, String>) -> i32 {
         latency: opts.latency,
         admit: opts.admit,
         frontend_q: opts.frontend_q,
+        compile_traces: opts.compile_traces,
     };
     if opts.sanitize {
         let (r, rep) = run_cluster_sanitized(cfg, jobs);
@@ -862,6 +886,11 @@ fn cmd_lint(args: &[String]) -> i32 {
             targets.push((format!("darknet/{}", t.profile().name), compile(&t.program())));
         }
     }
+    // Verify once per distinct program key: repeating a path (or a
+    // builtin name colliding with one) must not re-run the verifier —
+    // the same dedup contract the engine's trace cache gives job specs.
+    let mut seen = std::collections::HashSet::new();
+    targets.retain(|(name, _)| seen.insert(name.clone()));
     let mut failed = false;
     let mut json = String::from("{\n  \"programs\": [\n");
     let n_targets = targets.len();

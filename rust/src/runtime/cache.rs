@@ -1,0 +1,178 @@
+//! Keyed, capacity-bounded `Arc` cache shared by the runtime layers.
+//!
+//! Promoted out of `runtime/registry.rs` (where it was a private
+//! executable cache) so the lazy layer can reuse the exact same
+//! contract for compiled job traces: hits hand back a clone of the
+//! *same* `Arc` (no recompile, no reallocation), lookups tolerate lock
+//! poisoning, and — new with the promotion — the cache is bounded, so
+//! a long-lived process sweeping many distinct keys can no longer grow
+//! it without limit. Eviction is insertion-ordered (FIFO): the oldest
+//! *distinct* key is dropped when a new one would exceed capacity.
+//! That is deliberately simpler than LRU — every caller here keys a
+//! handful of hot artifacts or program traces, so recency tracking
+//! would buy nothing over the bound itself.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Default capacity: comfortably above the distinct artifact / program
+/// count of every built-in workload, small enough that a runaway key
+/// sweep stays bounded.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// Lock `m`, recovering the guard when a previous holder panicked. The
+/// caches guarded here are maps of completed values, so a poisoned
+/// lock never exposes a half-written entry — recovering beats
+/// propagating an unrelated thread's panic into every later lookup.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct CacheState<V> {
+    map: HashMap<String, Arc<V>>,
+    /// Distinct keys in insertion order (front = oldest = next victim).
+    order: VecDeque<String>,
+}
+
+/// A name-addressed cache of shared values. See the module docs for
+/// the contract (same-`Arc` hits, poison tolerance, FIFO bound).
+pub struct ArcCache<V> {
+    inner: Mutex<CacheState<V>>,
+    capacity: usize,
+}
+
+impl<V> ArcCache<V> {
+    /// A cache bounded at [`DEFAULT_CAPACITY`] distinct keys.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// A cache bounded at `capacity` distinct keys (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        ArcCache {
+            inner: Mutex::new(CacheState { map: HashMap::new(), order: VecDeque::new() }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The cached value for `name`, if present (same `Arc` every hit).
+    pub fn get(&self, name: &str) -> Option<Arc<V>> {
+        lock_unpoisoned(&self.inner).map.get(name).cloned()
+    }
+
+    /// Cache `value` under `name`. Last writer wins (benign for every
+    /// caller here: racing writers built the same value from the same
+    /// key). Inserting a *new* key at capacity evicts the oldest key;
+    /// overwriting an existing key keeps its original insertion slot.
+    pub fn insert(&self, name: &str, value: Arc<V>) {
+        let mut st = lock_unpoisoned(&self.inner);
+        if !st.map.contains_key(name) {
+            if st.order.len() >= self.capacity {
+                if let Some(victim) = st.order.pop_front() {
+                    st.map.remove(&victim);
+                }
+            }
+            st.order.push_back(name.to_string());
+        }
+        st.map.insert(name.to_string(), value);
+    }
+
+    /// Hit-or-build: return the cached `Arc` for `name`, building and
+    /// caching it with `build` on a miss. `build` runs *outside* the
+    /// lock, so concurrent misses may build twice — last writer wins,
+    /// and both callers hold a usable value either way.
+    pub fn get_or_insert_with(&self, name: &str, build: impl FnOnce() -> V) -> Arc<V> {
+        if let Some(v) = self.get(name) {
+            return v;
+        }
+        let v = Arc::new(build());
+        self.insert(name, v.clone());
+        v
+    }
+
+    /// Distinct keys currently cached.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<V> Default for ArcCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hit_returns_the_same_arc() {
+        let c: ArcCache<String> = ArcCache::new();
+        assert!(c.get("k").is_none());
+        let v = Arc::new("compiled".to_string());
+        c.insert("k", v.clone());
+        let a = c.get("k").expect("hit");
+        let b = c.get("k").expect("hit");
+        // Identity, not just equality: a hit must not rebuild anything.
+        assert!(Arc::ptr_eq(&a, &v));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(c.get("other").is_none());
+    }
+
+    #[test]
+    fn cache_survives_a_poisoned_lock() {
+        let c = std::sync::Arc::new(ArcCache::<u32>::new());
+        c.insert("k", Arc::new(7));
+        // Panic while holding the lock on another thread: the mutex is
+        // now poisoned.
+        let c2 = c.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.inner.lock().unwrap();
+            panic!("poison the cache lock");
+        })
+        .join();
+        assert!(c.inner.lock().is_err(), "lock must actually be poisoned");
+        // The poison-tolerant accessors keep working.
+        assert_eq!(c.get("k").as_deref(), Some(&7));
+        c.insert("j", Arc::new(9));
+        assert_eq!(c.get("j").as_deref(), Some(&9));
+        assert_eq!(*c.get_or_insert_with("k", || 0), 7, "hit, not a rebuild");
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_key_first() {
+        let c: ArcCache<u32> = ArcCache::with_capacity(2);
+        c.insert("a", Arc::new(1));
+        c.insert("b", Arc::new(2));
+        // Overwriting an existing key is not an insertion: nothing is
+        // evicted and "a" keeps its (oldest) slot.
+        c.insert("b", Arc::new(20));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get("a").as_deref(), Some(&1));
+        // A third distinct key evicts the oldest ("a"), not "b".
+        c.insert("c", Arc::new(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get("a").is_none(), "oldest key evicted");
+        assert_eq!(c.get("b").as_deref(), Some(&20));
+        assert_eq!(c.get("c").as_deref(), Some(&3));
+        // And the eviction order rolls forward: "b" is now oldest.
+        c.insert("d", Arc::new(4));
+        assert!(c.get("b").is_none());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn get_or_insert_builds_once_per_key() {
+        let c: ArcCache<u32> = ArcCache::new();
+        let a = c.get_or_insert_with("k", || 41);
+        let b = c.get_or_insert_with("k", || panic!("hit must not rebuild"));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*a, 41);
+        assert_eq!(c.len(), 1);
+    }
+}

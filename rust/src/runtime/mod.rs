@@ -5,8 +5,10 @@
 //! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids. See `/opt/xla-example`.
 
+pub mod cache;
 mod client;
 pub mod registry;
 
+pub use cache::ArcCache;
 pub use client::{Executable, PjrtRuntime};
 pub use registry::KernelRegistry;

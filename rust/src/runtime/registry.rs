@@ -4,42 +4,11 @@
 //! by name; artifacts are compiled lazily on first use and cached, so the
 //! request path never recompiles.
 
+use super::cache::ArcCache;
 use super::{Executable, PjrtRuntime};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
-
-/// Lock `m`, recovering the guard when a previous holder panicked. The
-/// caches guarded here are insert-only maps of completed values, so a
-/// poisoned lock never exposes a half-written entry — recovering beats
-/// propagating an unrelated thread's panic into every later launch.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// A name-addressed, insert-only cache of shared values: hits hand
-/// back a clone of the *same* `Arc` (no recompile, no reallocation),
-/// and lookups tolerate lock poisoning. Kept generic so the cache
-/// contract is testable without a PJRT runtime behind it.
-struct ArcCache<V>(Mutex<HashMap<String, Arc<V>>>);
-
-impl<V> ArcCache<V> {
-    fn new() -> Self {
-        ArcCache(Mutex::new(HashMap::new()))
-    }
-
-    /// The cached value for `name`, if present (same `Arc` every hit).
-    fn get(&self, name: &str) -> Option<Arc<V>> {
-        lock_unpoisoned(&self.0).get(name).cloned()
-    }
-
-    /// Cache `value` under `name`. Last writer wins (benign for the
-    /// compile cache: both writers built the same artifact).
-    fn insert(&self, name: &str, value: Arc<V>) {
-        lock_unpoisoned(&self.0).insert(name.to_string(), value);
-    }
-}
+use std::sync::Arc;
 
 /// Lazily-compiled, name-addressed store of PJRT executables.
 pub struct KernelRegistry {
@@ -152,40 +121,5 @@ impl KernelRegistry {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn cache_hit_returns_the_same_arc() {
-        let c: ArcCache<String> = ArcCache::new();
-        assert!(c.get("k").is_none());
-        let v = Arc::new("compiled".to_string());
-        c.insert("k", v.clone());
-        let a = c.get("k").expect("hit");
-        let b = c.get("k").expect("hit");
-        // Identity, not just equality: a hit must not rebuild anything.
-        assert!(Arc::ptr_eq(&a, &v));
-        assert!(Arc::ptr_eq(&a, &b));
-        assert!(c.get("other").is_none());
-    }
-
-    #[test]
-    fn cache_survives_a_poisoned_lock() {
-        let c = std::sync::Arc::new(ArcCache::<u32>::new());
-        c.insert("k", Arc::new(7));
-        // Panic while holding the lock on another thread: the mutex is
-        // now poisoned.
-        let c2 = c.clone();
-        let _ = std::thread::spawn(move || {
-            let _guard = c2.0.lock().unwrap();
-            panic!("poison the cache lock");
-        })
-        .join();
-        assert!(c.0.lock().is_err(), "lock must actually be poisoned");
-        // The poison-tolerant accessors keep working.
-        assert_eq!(c.get("k").as_deref(), Some(&7));
-        c.insert("j", Arc::new(9));
-        assert_eq!(c.get("j").as_deref(), Some(&9));
-    }
-}
+// The cache contract tests (same-`Arc` hits, poison tolerance,
+// capacity eviction) live with the promoted cache in `runtime/cache.rs`.

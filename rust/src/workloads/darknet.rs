@@ -131,11 +131,16 @@ impl NnTask {
         pb.finish()
     }
 
+    /// Trace built once per task profile via the process-wide cache
+    /// (programs take no interpreter arguments, so the profile name is
+    /// the key) and cloned per job with derived views pre-warmed.
     pub fn job_spec(&self) -> JobSpec {
-        let compiled = compile(&self.program());
-        let trace = interpret(&compiled, &[]).expect("nn workload interprets");
-        debug_assert!(trace.check_well_formed().is_ok());
-        JobSpec { name: self.profile().name.to_string(), class: JobClass::Nn, trace, arrival: 0.0, slo: None }
+        let name = self.profile().name;
+        let trace = super::cached_trace(name, || {
+            let compiled = compile(&self.program());
+            interpret(&compiled, &[]).expect("nn workload interprets")
+        });
+        JobSpec { name: name.to_string(), class: JobClass::Nn, trace, arrival: 0.0, slo: None }
     }
 
     /// Per-task resource-pressure profile (memory bandwidth / L2 / SM).

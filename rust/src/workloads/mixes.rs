@@ -106,24 +106,22 @@ pub fn synthetic_job(
         class,
         arrival,
         slo: None,
-        trace: JobTrace {
-            events: vec![
-                TraceEvent::TaskBegin { task: 0, res },
-                TraceEvent::Malloc { task: 0, bytes: mem_bytes },
-                TraceEvent::H2D { task: 0, bytes: mem_bytes },
-                TraceEvent::Launch {
-                    task: 0,
-                    kernel: "k".into(),
-                    artifact: None,
-                    grid: 100,
-                    block: 32,
-                    work_us,
-                },
-                TraceEvent::D2H { task: 0, bytes: mem_bytes },
-                TraceEvent::Free { task: 0, bytes: mem_bytes },
-                TraceEvent::TaskEnd { task: 0 },
-            ],
-        },
+        trace: JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res },
+            TraceEvent::Malloc { task: 0, bytes: mem_bytes },
+            TraceEvent::H2D { task: 0, bytes: mem_bytes },
+            TraceEvent::Launch {
+                task: 0,
+                kernel: "k".into(),
+                artifact: None,
+                grid: 100,
+                block: 32,
+                work_us,
+            },
+            TraceEvent::D2H { task: 0, bytes: mem_bytes },
+            TraceEvent::Free { task: 0, bytes: mem_bytes },
+            TraceEvent::TaskEnd { task: 0 },
+        ]),
     }
 }
 
@@ -151,6 +149,10 @@ fn stamp_iv(spec: &mut JobSpec, iv: InterferenceProfile) {
             res.iv = iv.sanitized();
         }
     }
+    // The trace's derived summaries may already have been read (and
+    // memoized) off the pre-stamp events; drop them so the next read
+    // sees the stamped vectors.
+    spec.trace.invalidate_derived();
 }
 
 /// Stamp per-benchmark interference vectors onto a job mix — the

@@ -16,3 +16,53 @@ pub use mixes::{
     MixRatio, Workload, RATIOS, WORKLOADS,
 };
 pub use rodinia::{Bench, Combo, COMBOS};
+
+use crate::lazy::JobTrace;
+use crate::runtime::ArcCache;
+
+/// Process-wide trace cache keyed by (program, args). Every built-in
+/// workload program takes no interpreter arguments, so the combo /
+/// profile name alone is the key. A batch of N cloned jobs of one
+/// benchmark compiles, interprets, and well-formedness-checks its
+/// trace ONCE; each clone carries the memoized summary and compiled
+/// segment program along (their `OnceLock`s clone initialized).
+fn trace_cache() -> &'static ArcCache<JobTrace> {
+    static CACHE: std::sync::OnceLock<ArcCache<JobTrace>> = std::sync::OnceLock::new();
+    CACHE.get_or_init(ArcCache::new)
+}
+
+/// Hit-or-build `key`'s trace, warming every derived view so per-job
+/// clones never recompute them: the well-formedness check (debug
+/// builds), the summary walk, and the macro-segment compilation (the
+/// clones then share one `Arc<TraceProgram>`).
+pub(crate) fn cached_trace(key: &str, build: impl FnOnce() -> JobTrace) -> JobTrace {
+    let arc = trace_cache().get_or_insert_with(key, || {
+        let trace = build();
+        debug_assert!(trace.check_well_formed().is_ok(), "workload trace well-formed");
+        let _ = trace.summary();
+        let _ = trace.compiled();
+        trace
+    });
+    (*arc).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_job_specs_share_compiled_program() {
+        // Two jobs of the same combo must come from one cache build:
+        // their clones share a single Arc'd segment program, so the
+        // compile/interpret/verify front half ran once, not per job.
+        let a = COMBOS[0].job_spec();
+        let b = COMBOS[0].job_spec();
+        assert!(std::sync::Arc::ptr_eq(a.trace.compiled(), b.trace.compiled()));
+
+        let nn_a = NN_TASKS[0].job_spec();
+        let nn_b = NN_TASKS[0].job_spec();
+        assert!(std::sync::Arc::ptr_eq(nn_a.trace.compiled(), nn_b.trace.compiled()));
+        // Distinct keys stay distinct.
+        assert!(!std::sync::Arc::ptr_eq(a.trace.compiled(), nn_a.trace.compiled()));
+    }
+}

@@ -135,12 +135,15 @@ impl Combo {
     }
 
     /// Build the IR program for this combo and run the compiler + lazy
-    /// runtime to obtain the schedulable trace.
+    /// runtime to obtain the schedulable trace. The trace is built once
+    /// per combo (all built-in programs take no interpreter arguments,
+    /// so the combo name keys the process-wide cache) and cloned per
+    /// job with its summary and compiled segments pre-warmed.
     pub fn job_spec(&self) -> JobSpec {
-        let program = self.program();
-        let compiled = compile(&program);
-        let trace = interpret(&compiled, &[]).expect("workload interprets");
-        debug_assert!(trace.check_well_formed().is_ok());
+        let trace = super::cached_trace(self.name, || {
+            let compiled = compile(&self.program());
+            interpret(&compiled, &[]).expect("workload interprets")
+        });
         JobSpec { name: self.name.to_string(), class: self.class(), trace, arrival: 0.0, slo: None }
     }
 

@@ -20,6 +20,7 @@ fn cfg(admit: Option<AdmissionConfig>) -> ClusterConfig {
         latency: LatencyModel::off(),
         admit,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 

@@ -227,6 +227,7 @@ fn interference_off_rows_reproduce_bench_cluster_numbers() {
             latency: LatencyModel::off(),
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         },
         jobs,
     );

@@ -1,0 +1,292 @@
+//! Compiled trace replay equivalence suite (the `--compile-traces`
+//! contract): macro-stepping is a pure *performance* transformation.
+//! A compile-on run must be observationally indistinguishable from the
+//! same run compiled off — identical `RunResult` metrics (the
+//! event-pressure counters `events_fired` / `peak_events` excepted,
+//! since collapsing timer events is the whole point) and an identical
+//! observable event stream — across random seeds and every engine
+//! feature that interacts with macro entry or decompilation:
+//! preemption, the latency model, admission control, interference.
+//!
+//! The observable subset is `EvKind::is_observable`: everything except
+//! the engine's own timers (`Wake`, `DevCompletion`, `MacroSegment`).
+//! Streams are compared with the queue-global `seq` column stripped —
+//! macro-stepping changes how many timer events are ever pushed, so
+//! sequence numbers differ between modes even where the observable
+//! events are identical in kind, payload, time, and relative order.
+
+use mgb::coordinator::{
+    run_cluster, run_cluster_sanitized, run_cluster_traced, AdmissionConfig, ClusterConfig,
+    JobClass, JobSpec, RunResult, SchedMode,
+};
+use mgb::gpu::{ClusterSpec, LatencyModel, NodeSpec};
+use mgb::sched::PreemptConfig;
+use mgb::workloads::{assign_interference, poisson_arrivals, synthetic_job, Workload};
+use std::fs;
+use std::path::PathBuf;
+
+/// Event kinds of the observable stream (see `EvKind::is_observable`;
+/// the engine cannot export the list directly because `EvKind` is
+/// crate-private, so the golden-style tests match serialised names).
+const OBSERVABLE: [&str; 11] = [
+    "Arrive",
+    "CkptBegin",
+    "CkptDone",
+    "Restart",
+    "ProbeSent",
+    "ProbeAck",
+    "DispatchArrive",
+    "ReProbe",
+    "MigrateArrive",
+    "AdmitReject",
+    "FrontendServe",
+];
+
+/// Project a recorded full stream ("t=.. seq=.. Kind { .. }") onto the
+/// observable subset with the `seq` column stripped.
+fn observable(lines: &[String]) -> Vec<String> {
+    lines
+        .iter()
+        .filter_map(|l| {
+            let mut it = l.splitn(3, ' ');
+            let t = it.next()?;
+            let _seq = it.next()?;
+            let rest = it.next()?;
+            let kind = rest.split([' ', '{']).next().unwrap_or("");
+            if OBSERVABLE.contains(&kind) {
+                Some(format!("{t} {rest}"))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+fn cfg(preempt: bool, latency: bool, admit: bool, compile: bool) -> ClusterConfig {
+    ClusterConfig {
+        cluster: ClusterSpec::homogeneous(NodeSpec::v100x4(), 4),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 16,
+        dispatch: "least",
+        preempt: preempt.then(PreemptConfig::default),
+        latency: if latency { LatencyModel::lan() } else { LatencyModel::off() },
+        // A tight token bucket so admission actually rejects under the
+        // open-system arrival rate (an idle controller would leave the
+        // AdmitReject path untested).
+        admit: admit.then(|| AdmissionConfig {
+            policy: "token",
+            rate_per_s: 0.2,
+            burst: 2.0,
+            ..Default::default()
+        }),
+        frontend_q: "fifo",
+        compile_traces: compile,
+    }
+}
+
+/// W1 open-system stream: real multi-kernel Rodinia traces with
+/// Poisson arrivals, optionally stamped with per-benchmark
+/// interference vectors.
+fn stream(seed: u64, interference: bool) -> Vec<JobSpec> {
+    let mut jobs = Workload::by_id("W1").unwrap().jobs(seed);
+    poisson_arrivals(&mut jobs, 0.5, seed);
+    if interference {
+        assign_interference(&mut jobs);
+    }
+    jobs
+}
+
+/// Everything in `RunResult` that the compiled-replay contract holds
+/// invariant (i.e. all of it except the event-pressure counters).
+fn assert_results_equal(label: &str, off: &RunResult, on: &RunResult) {
+    assert_eq!(off.makespan, on.makespan, "{label}: makespan");
+    assert_eq!(off.preemptions, on.preemptions, "{label}: preemptions");
+    assert_eq!(off.wasted_work_s, on.wasted_work_s, "{label}: wasted work");
+    assert_eq!(off.ckpt_overhead_s, on.ckpt_overhead_s, "{label}: ckpt overhead");
+    assert_eq!(off.migrations, on.migrations, "{label}: migrations");
+    assert_eq!(off.migrate_bytes, on.migrate_bytes, "{label}: migrate bytes");
+    assert_eq!(off.rejected, on.rejected, "{label}: rejected");
+    assert_eq!(off.degraded, on.degraded, "{label}: degraded");
+    assert_eq!(off.observable_events, on.observable_events, "{label}: observable events");
+    assert_eq!(off.jobs.len(), on.jobs.len(), "{label}: job count");
+    for (x, y) in off.jobs.iter().zip(&on.jobs) {
+        assert_eq!(x.name, y.name, "{label}: job order");
+        assert_eq!(x.started, y.started, "{label}/{}: started", x.name);
+        assert_eq!(x.ended, y.ended, "{label}/{}: ended", x.name);
+        assert_eq!(x.node, y.node, "{label}/{}: node", x.name);
+        assert_eq!(x.crashed, y.crashed, "{label}/{}: crashed", x.name);
+        assert_eq!(x.rejected, y.rejected, "{label}/{}: rejected", x.name);
+        assert_eq!(x.n_kernels, y.n_kernels, "{label}/{}: n_kernels", x.name);
+        assert_eq!(x.preemptions, y.preemptions, "{label}/{}: preemptions", x.name);
+        assert_eq!(x.wasted_s, y.wasted_s, "{label}/{}: wasted_s", x.name);
+        assert_eq!(
+            x.kernel_dedicated_s, y.kernel_dedicated_s,
+            "{label}/{}: kernel_dedicated_s",
+            x.name
+        );
+        assert_eq!(x.kernel_actual_s, y.kernel_actual_s, "{label}/{}: kernel_actual_s", x.name);
+    }
+}
+
+/// First index where two observable streams disagree, for a readable
+/// panic instead of a giant Vec diff.
+fn assert_streams_equal(label: &str, off: &[String], on: &[String]) {
+    let n = off.len().max(on.len());
+    for i in 0..n {
+        let (e, a) = (off.get(i), on.get(i));
+        if e != a {
+            panic!(
+                "{label}: observable streams diverged at event {}:\n  \
+                 compile-off: {}\n  compile-on:  {}",
+                i + 1,
+                e.map_or("<eof>", |s| s.as_str()),
+                a.map_or("<eof>", |s| s.as_str()),
+            );
+        }
+    }
+}
+
+fn assert_equiv(label: &str, cfg_off: ClusterConfig, cfg_on: ClusterConfig, jobs: Vec<JobSpec>) {
+    let (off, tr_off) = run_cluster_traced(cfg_off, jobs.clone());
+    let (on, tr_on) = run_cluster_traced(cfg_on, jobs);
+    assert_results_equal(label, &off, &on);
+    assert_streams_equal(label, &observable(&tr_off), &observable(&tr_on));
+}
+
+#[test]
+fn compile_on_matches_off_across_seeds_and_features() {
+    // The property sweep: every feature axis that interacts with macro
+    // entry (preemption's victim scans and waiter wakes, the latency
+    // model's probe protocol, admission's arrival-time verdicts,
+    // interference's launch-time iv arithmetic), alone and combined,
+    // over several arrival seeds.
+    for seed in [3u64, 11, 42] {
+        for &(label, preempt, latency, admit, interference) in &[
+            ("plain", false, false, false, false),
+            ("preempt", true, false, false, false),
+            ("latency", false, true, false, false),
+            ("admission", false, false, true, false),
+            ("interference", false, false, false, true),
+            ("everything", true, true, true, true),
+        ] {
+            let jobs = stream(seed, interference);
+            assert_equiv(
+                &format!("{label}/seed{seed}"),
+                cfg(preempt, latency, admit, false),
+                cfg(preempt, latency, admit, true),
+                jobs,
+            );
+        }
+    }
+}
+
+#[test]
+fn admission_sweep_actually_rejects_somewhere() {
+    // Guard against the admission axis of the property sweep going
+    // vacuous: at least one swept seed must drive the token bucket to
+    // an actual rejection.
+    let any = [3u64, 11, 42].iter().any(|&seed| {
+        run_cluster(cfg(false, false, true, false), stream(seed, false)).rejected > 0
+    });
+    assert!(any, "no swept seed triggered admission — tighten the bucket");
+}
+
+#[test]
+fn macro_stepping_actually_collapses_events() {
+    // Guard against the whole suite passing because macros never
+    // enter. Four solo synthetic jobs on one 4-GPU node, batch at
+    // t = 0: each job runs alone on its device, the steady-state
+    // segment covers its whole trace body, and the compile-on run must
+    // fire strictly fewer events than fine-grained stepping.
+    let jobs: Vec<JobSpec> = (0..4)
+        .map(|i| synthetic_job(&format!("solo{i}"), JobClass::Small, 1 << 30, 2_000_000, 0.0))
+        .collect();
+    let mk = |compile| ClusterConfig {
+        cluster: ClusterSpec::single(NodeSpec::v100x4()),
+        mode: SchedMode::Policy("mgb3"),
+        workers_per_node: 4,
+        dispatch: "rr",
+        preempt: None,
+        latency: LatencyModel::off(),
+        admit: None,
+        frontend_q: "fifo",
+        compile_traces: compile,
+    };
+    let (off, tr_off) = run_cluster_traced(mk(false), jobs.clone());
+    let (on, tr_on) = run_cluster_traced(mk(true), jobs);
+    assert_results_equal("solo", &off, &on);
+    assert_streams_equal("solo", &observable(&tr_off), &observable(&tr_on));
+    assert!(
+        on.events_fired < off.events_fired,
+        "macro-stepping never engaged: {} events on vs {} off",
+        on.events_fired,
+        off.events_fired
+    );
+}
+
+#[test]
+fn sanitizer_stays_observational_under_macro_stepping() {
+    // `--sanitize --compile-traces on`: the invariant checks must hold
+    // mid-macro (segments only enter with their memory reservation in
+    // place, so conservation is unperturbed) and the sanitized run's
+    // results must equal both the unsanitized compile-on run and the
+    // compile-off run bit-for-bit.
+    let jobs = stream(5, false);
+    let plain_on = run_cluster(cfg(false, false, false, true), jobs.clone());
+    let (sanitized, report) = run_cluster_sanitized(cfg(false, false, false, true), jobs.clone());
+    assert!(report.is_clean(), "sanitizer violations under macro-stepping: {:?}", report.violations);
+    assert!(report.events_checked > 0);
+    assert_eq!(plain_on.makespan, sanitized.makespan);
+    assert_eq!(plain_on.events_fired, sanitized.events_fired);
+    assert_eq!(plain_on.observable_events, sanitized.observable_events);
+    let off = run_cluster(cfg(false, false, false, false), jobs);
+    assert_results_equal("sanitized-vs-off", &off, &sanitized);
+}
+
+// ---- golden fixture, replayed in both modes --------------------------
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/compile_observable.trace")
+}
+
+#[test]
+fn observable_golden_fixture_replays_in_both_modes() {
+    // The committed observable stream of one reference scenario (W1 x
+    // 4 nodes, open system, seed 7) must replay byte-for-byte with
+    // compilation off AND on. Same fixture protocol as golden_trace.rs:
+    // bootstrap-on-missing for dev convenience, hard failure in CI
+    // unless bootstrapping is explicitly requested, UPDATE_GOLDEN=1
+    // rewrites after an intentional engine change.
+    let jobs = stream(7, false);
+    let (_, tr_off) = run_cluster_traced(cfg(false, false, false, false), jobs.clone());
+    let (_, tr_on) = run_cluster_traced(cfg(false, false, false, true), jobs);
+    let obs = observable(&tr_off);
+    assert!(!obs.is_empty(), "an open-system run must fire observable events");
+    assert_streams_equal("fixture", &obs, &observable(&tr_on));
+
+    let actual = obs.join("\n") + "\n";
+    let path = fixture_path();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !path.exists() {
+        let ci = std::env::var_os("CI").is_some();
+        let bootstrap_ok = std::env::var_os("MGB_BOOTSTRAP_GOLDEN").is_some();
+        if !path.exists() && ci && !bootstrap_ok && std::env::var_os("UPDATE_GOLDEN").is_none() {
+            panic!(
+                "golden fixture missing in CI: {} (commit it, or set \
+                 MGB_BOOTSTRAP_GOLDEN=1 to bootstrap deliberately)",
+                path.display()
+            );
+        }
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, &actual).unwrap();
+        eprintln!("golden: wrote {} ({} events)", path.display(), obs.len());
+        return;
+    }
+    let expected = fs::read_to_string(&path).unwrap();
+    if expected == actual {
+        return;
+    }
+    fs::write(path.with_extension("trace.actual"), &actual).unwrap();
+    let exp: Vec<String> = expected.lines().map(str::to_string).collect();
+    assert_streams_equal("committed-fixture", &exp, &obs);
+    unreachable!("streams differ only in trailing whitespace");
+}

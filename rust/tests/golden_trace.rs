@@ -92,6 +92,7 @@ fn cfg(nodes: usize, dispatch: &'static str, latency: LatencyModel) -> ClusterCo
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 
@@ -437,6 +438,7 @@ fn stale_routing_uses_probe_time_snapshot() {
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let class = mgb::coordinator::JobClass::Small;
     let jobs = vec![

@@ -24,6 +24,7 @@ fn two_small_nodes(dispatch: &'static str, latency: LatencyModel) -> ClusterConf
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 
@@ -156,6 +157,7 @@ fn reprobe_chain_is_bounded_by_the_budget() {
         latency: lat.clone(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let (a, ta) = run_cluster_traced(cfg(), jobs.clone());
     let (b, tb) = run_cluster_traced(cfg(), jobs);
@@ -196,6 +198,7 @@ fn coalesced_probes_share_one_probe_ack() {
         },
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let (plain, tp) = run_cluster_traced(cfg(0.0), jobs());
     let (coal, tc) = run_cluster_traced(cfg(0.05), jobs());
@@ -231,6 +234,7 @@ fn latency_dispatcher_at_zero_rtt_is_bit_identical_to_least() {
         latency,
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     for model in [
         LatencyModel::off(),

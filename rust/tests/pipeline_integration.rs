@@ -149,22 +149,20 @@ fn cg_crash_cleanup_releases_memory_for_survivors() {
             written_bytes: mem,
             iv: InterferenceProfile::ZERO,
         };
-        JobTrace {
-            events: vec![
-                TraceEvent::TaskBegin { task: 0, res },
-                TraceEvent::Malloc { task: 0, bytes: mem },
-                TraceEvent::Launch {
-                    task: 0,
-                    kernel: "k".into(),
-                    artifact: None,
-                    grid: 100,
-                    block: 32,
-                    work_us: 1_000_000,
-                },
-                TraceEvent::Free { task: 0, bytes: mem },
-                TraceEvent::TaskEnd { task: 0 },
-            ],
-        }
+        JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res },
+            TraceEvent::Malloc { task: 0, bytes: mem },
+            TraceEvent::Launch {
+                task: 0,
+                kernel: "k".into(),
+                artifact: None,
+                grid: 100,
+                block: 32,
+                work_us: 1_000_000,
+            },
+            TraceEvent::Free { task: 0, bytes: mem },
+            TraceEvent::TaskEnd { task: 0 },
+        ])
     };
     // 8 jobs of 9 GB on ONE 16 GB device, 4 pinned workers: first two
     // co-resident jobs fit 9+? -> second malloc OOMs; survivors keep
@@ -265,13 +263,11 @@ fn single_job_larger_than_any_gpu_crashes_everywhere() {
         class: JobClass::Large,
         arrival: 0.0,
         slo: None,
-        trace: JobTrace {
-            events: vec![
-                TraceEvent::TaskBegin { task: 0, res },
-                TraceEvent::Malloc { task: 0, bytes: res.mem_bytes },
-                TraceEvent::TaskEnd { task: 0 },
-            ],
-        },
+        trace: JobTrace::new(vec![
+            TraceEvent::TaskBegin { task: 0, res },
+            TraceEvent::Malloc { task: 0, bytes: res.mem_bytes },
+            TraceEvent::TaskEnd { task: 0 },
+        ]),
     };
     let cg = run_batch(
         RunConfig { node: NodeSpec::v100x4(), mode: SchedMode::Cg, workers: 4 },

@@ -28,6 +28,7 @@ fn one_node_cfg(preempt: Option<PreemptConfig>) -> ClusterConfig {
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 
@@ -105,6 +106,7 @@ fn preempt_never_matches_disabled_on_heterogeneous_cluster() {
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let mut jobs: Vec<_> = (0..10)
         .map(|i| {
@@ -154,6 +156,7 @@ fn migration_cfg(migrate: &'static str) -> ClusterConfig {
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     }
 }
 
@@ -247,6 +250,7 @@ fn migrating_restore_never_routes_to_a_node_that_cannot_hold_it() {
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let jobs = vec![
         synthetic_job("hog", JobClass::Small, 12 << 30, 120_000_000, 0.0),
@@ -292,6 +296,7 @@ fn reprobe_guard_arms_over_a_migrating_restore_journey() {
         latency: lat.clone(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let jobs = || {
         vec![
@@ -355,6 +360,7 @@ fn reprobe_redirects_a_migrating_restore_whose_target_stales() {
         latency: lat.clone(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     let jobs = || {
         vec![

@@ -310,6 +310,7 @@ fn prop_zero_vector_cluster_streams_are_replay_and_backend_identical() {
         latency: LatencyModel::off(),
         admit: None,
         frontend_q: "fifo",
+        compile_traces: false,
     };
     for dispatch in ["least", "mem"] {
         let mut jobs = Workload::by_id("W1").unwrap().jobs(11);

@@ -49,6 +49,7 @@ fn seed_replay_open_system_cluster_is_bit_identical() {
             latency: LatencyModel::off(),
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);
@@ -103,6 +104,7 @@ fn seed_replay_with_latency_and_preemption_is_bit_identical() {
             },
             admit: None,
             frontend_q: "fifo",
+            compile_traces: false,
         };
         let a = run_cluster(cfg.clone(), jobs.clone());
         let b = run_cluster(cfg, jobs);

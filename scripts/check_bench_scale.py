@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Gate the `bench scale` sweep (BENCH_SCALE.json) in CI.
 
-Two checks, per rust/src/bench_harness/scale.rs:
+Three checks, per rust/src/bench_harness/scale.rs:
 
 1. In-run backend gate (always on): every row's calendar-queue
    events/sec must be >= MIN_SPEEDUP x the BinaryHeap reference
@@ -19,6 +19,19 @@ Two checks, per rust/src/bench_harness/scale.rs:
    not "measured" (the bootstrap placeholder, hand-estimated before
    the first toolchain run) only produces a notice: commit the freshly
    measured file to arm the gate.
+
+3. Compiled-replay gate (rows that carry non-null compile_* columns,
+   i.e. the sweep points run with `--compile-traces on`): the
+   compile-on run must process the same simulated workload at >=
+   MIN_COMPILE_RATIO x the compile-off events/sec of the same run
+   (compile_events_per_s uses the compile-OFF event count over the
+   compile-on wall time, so the ratio is a pure wall-clock measure —
+   the raw fired count shrinks under macro-stepping). In-run, same
+   machine, no calibration needed. The row's observable_events column
+   must also be present: the engine asserts observable-stream
+   invariance between the modes at bench time, and this script
+   re-checks the column against the committed baseline's when both
+   record it (observable counts are simulated, machine-independent).
 
 Usage:
   check_bench_scale.py --fresh BENCH_SCALE.json [--committed baseline.json]
@@ -38,6 +51,11 @@ MIN_SPEEDUP = 0.8
 # Gate 2: >20% drop of normalised events/sec vs the committed baseline
 # fails the build (the ISSUE's regression threshold).
 TOLERANCE = 0.20
+# Gate 3: compiled replay must not slow the same workload down — the
+# issue's contract is a hard >= 1.0x on the rows that measure it (both
+# sides of the ratio are measured back-to-back in one process, so the
+# usual cross-runner noise allowance does not apply).
+MIN_COMPILE_RATIO = 1.0
 
 
 def load(path):
@@ -88,6 +106,27 @@ def main():
                 f"{row['label']}: calendar {cur:.0f} ev/s < "
                 f"{MIN_SPEEDUP}x heap reference {base:.0f} ev/s")
 
+    # -- gate 3: compiled replay vs compile-off, in-run ---------------
+    for row in fresh["rows"]:
+        ceps = row.get("compile_events_per_s")
+        if ceps is None:
+            continue
+        cur = row["events_per_s"]
+        ratio = ceps / cur if cur > 0 else 0.0
+        mark = "ok" if ratio >= MIN_COMPILE_RATIO else "FAIL"
+        print(f"  [{mark}] {row['label']:<12} compile-off={cur:>12.0f} ev/s  "
+              f"compile-on={ceps:>12.0f} ev/s  ratio={ratio:6.2f}x  "
+              f"compile_events={row.get('compile_events')}")
+        if ratio < MIN_COMPILE_RATIO:
+            failures.append(
+                f"{row['label']}: compiled replay {ceps:.0f} ev/s < "
+                f"{MIN_COMPILE_RATIO}x compile-off {cur:.0f} ev/s")
+        if row.get("observable_events") is None:
+            failures.append(
+                f"{row['label']}: compile columns present but "
+                f"observable_events missing — cannot audit the "
+                f"observable-stream invariance")
+
     # -- gate 2: normalised trajectory vs committed baseline ----------
     if args.committed:
         committed = load(args.committed)
@@ -128,6 +167,17 @@ def main():
                         f"{row['label']}: fired {row['events']} events, "
                         f"committed baseline fired {old['events']} "
                         f"(determinism drift)")
+                # The observable subset is likewise simulated and
+                # machine-independent; older baselines predate the
+                # column, so only compare when both sides record it.
+                if (row.get("observable_events") is not None
+                        and old.get("observable_events") is not None
+                        and row["observable_events"] != old["observable_events"]):
+                    failures.append(
+                        f"{row['label']}: {row['observable_events']} "
+                        f"observable events, committed baseline "
+                        f"{old['observable_events']} (observable-stream "
+                        f"drift)")
 
     if failures:
         print("\ncheck_bench_scale: FAIL")
